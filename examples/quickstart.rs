@@ -1,0 +1,60 @@
+//! Quickstart: generate text from the trained model with a 1-bit
+//! channel-coupled KV cache.
+//!
+//!     make artifacts && cargo build --release
+//!     cargo run --release --example quickstart
+//!
+//! Trains + calibrates on first run (if `runs/small/` is empty), learns
+//! CQ-8c8b codebooks, then serves one request through the full stack:
+//! router → prefill → quantized cache → fused Pallas decode kernel.
+
+use anyhow::Result;
+use cq::bench_support::Pipeline;
+use cq::coordinator::{Request, ServeConfig, ServeHandle};
+use cq::quant::cq::CqSpec;
+use cq::util::human_bytes;
+
+fn main() -> Result<()> {
+    // 1. Make sure a trained checkpoint + calibration + codebooks exist.
+    let pipe = Pipeline::ensure("small")?;
+    let codec = pipe.cq_codec(CqSpec::new(8, 8), true, 40)?; // 1 bit/FPN
+    println!(
+        "model 'small' ready; CQ-8c8b codebooks: {} params, {:.1}s learning",
+        codec.books.centroid_param_count(),
+        codec.books.learn_secs
+    );
+    drop(pipe); // release the PJRT engine before the serve loop makes its own
+
+    // 2. Serve a request over the quantized cache.
+    let cfg = ServeConfig {
+        model: "small".into(),
+        cq: Some("8c8b".into()),
+        batch: 1,
+        cache_budget: None,
+        codebook_path: Some(cq::train::ckpt_dir("small").join("cq_8c8b.cqb")),
+        params_path: cq::train::ckpt_dir("small").join("params.bin"),
+        kernel: ServeConfig::default_kernel(),
+    };
+    let handle = ServeHandle::start(cfg);
+    let req = Request::greedy(1, "The castle of Aldenport ", 64);
+    let resp = handle.submit(req)?;
+    println!("\nprompt  : The castle of Aldenport ");
+    println!("output  : {}", resp.text);
+    println!(
+        "tokens  : {} prompt + {} generated",
+        resp.prompt_tokens, resp.gen_tokens
+    );
+    println!(
+        "cache   : {} at 1 bit/FPN (fp16 would be {})",
+        human_bytes(resp.cache_bytes),
+        human_bytes(resp.cache_bytes * 16)
+    );
+    println!(
+        "latency : prefill {:.1} ms, decode {:.1} ms ({:.1} tok/s)",
+        resp.prefill_ms,
+        resp.decode_ms,
+        resp.gen_tokens as f64 / (resp.decode_ms / 1e3).max(1e-9)
+    );
+    handle.shutdown()?;
+    Ok(())
+}

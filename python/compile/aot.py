@@ -1,0 +1,227 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+Runs ONCE at build time (``make artifacts``); the Rust coordinator then loads
+``artifacts/*.hlo.txt`` through the PJRT CPU client and Python never appears
+on the request path again.
+
+HLO **text** (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs
+-------
+artifacts/<model>.<entry>.hlo.txt   one per artifact
+artifacts/init_<model>.bin          initial flat f32 parameter vector (LE)
+artifacts/manifest.json             input/output specs + model metadata
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .config import (DECODE_BATCHES, EVAL_BATCH, MODELS, SERVE_CQ, TRAIN_BATCH,
+                     CqCfg, ModelCfg, dump_manifest, manifest_entry)
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32, I32 = "f32", "i32"
+
+
+def spec(dtype: str, shape):
+    jdt = {F32: jnp.float32, I32: jnp.int32}[dtype]
+    return jax.ShapeDtypeStruct(tuple(shape), jdt)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default printer elides big
+    # constant payloads as `{...}`, which xla_extension 0.5.1's text parser
+    # silently reads back as ZEROS — e.g. the RoPE cos/sin tables would
+    # vanish and every artifact would run with positional encoding disabled.
+    # (Found via rust/src/bin/hlo_probe.rs; see EXPERIMENTS.md §Notes.)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_one(outdir: str, name: str, fn, inputs, outputs, meta=None):
+    """Lower fn at the given input specs, write HLO text, return manifest row."""
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*[spec(dt, sh) for _, (dt, sh) in inputs])
+    text = to_hlo_text(lowered)
+    path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name:40s} {len(text)/1e6:7.2f} MB  {time.time()-t0:6.1f}s",
+          flush=True)
+    return manifest_entry(name, inputs, outputs, meta)
+
+
+def kv_shape(cfg: ModelCfg, b: int, t: int):
+    return (cfg.n_layers, b, cfg.n_heads, t, cfg.head_dim)
+
+
+def artifacts_for_model(outdir: str, cfg: ModelCfg, full: bool) -> list:
+    """Lower the artifact set for one model.  ``full`` adds the serving
+    (prefill/decode) artifacts; the ablation model only needs train/eval."""
+    n = cfg.param_count()
+    rows = []
+    L, H, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+
+    # --- train_step ---------------------------------------------------
+    bt, tt = TRAIN_BATCH, cfg.train_ctx + 1
+    rows.append(lower_one(
+        outdir, f"{cfg.name}.train_step", M.build_train_step(cfg, bt, tt),
+        inputs=[("params", (F32, (n,))), ("m", (F32, (n,))), ("v", (F32, (n,))),
+                ("step", (F32, ())), ("lr", (F32, ())),
+                ("tokens", (I32, (bt, tt)))],
+        outputs=[("params", (F32, (n,))), ("m", (F32, (n,))),
+                 ("v", (F32, (n,))), ("loss", (F32, ()))],
+        meta={"batch": bt, "ctx": tt},
+    ))
+
+    # --- eval_kv -------------------------------------------------------
+    be, te = EVAL_BATCH, cfg.eval_ctx
+    kvs = kv_shape(cfg, be, te)
+    rows.append(lower_one(
+        outdir, f"{cfg.name}.eval_kv", M.build_eval_kv(cfg, be, te),
+        inputs=[("params", (F32, (n,))), ("tokens", (I32, (be, te))),
+                ("khat", (F32, kvs)), ("vhat", (F32, kvs)),
+                ("use_q", (F32, (L,)))],
+        outputs=[("nll", (F32, (be, te - 1))), ("k", (F32, kvs)),
+                 ("v", (F32, kvs))],
+        meta={"batch": be, "ctx": te},
+    ))
+
+    # --- calib_grads ----------------------------------------------------
+    rows.append(lower_one(
+        outdir, f"{cfg.name}.calib_grads", M.build_calib_grads(cfg, be, te),
+        inputs=[("params", (F32, (n,))), ("tokens", (I32, (be, te)))],
+        outputs=[("k", (F32, kvs)), ("v", (F32, kvs)),
+                 ("gk", (F32, kvs)), ("gv", (F32, kvs))],
+        meta={"batch": be, "ctx": te},
+    ))
+
+    if not full:
+        return rows
+
+    # --- prefill (bucketed: short prompts use a cheap small-T variant) -----
+    for tp in sorted({32, 64, cfg.eval_ctx}):
+        kvp = kv_shape(cfg, 1, tp)
+        suffix = "" if tp == cfg.eval_ctx else f"_t{tp}"
+        rows.append(lower_one(
+            outdir, f"{cfg.name}.prefill{suffix}", M.build_prefill(cfg, tp),
+            inputs=[("params", (F32, (n,))), ("tokens", (I32, (1, tp)))],
+            outputs=[("logits", (F32, (1, tp, cfg.vocab))),
+                     ("k", (F32, kvp)), ("v", (F32, kvp))],
+            meta={"ctx": tp},
+        ))
+
+    # --- decode over fp cache (baseline) ----------------------------------
+    tmax = cfg.serve_ctx
+    for b in DECODE_BATCHES:
+        kvc = kv_shape(cfg, b, tmax)
+        rows.append(lower_one(
+            outdir, f"{cfg.name}.decode_fp_b{b}", M.build_decode_fp(cfg, b, tmax),
+            inputs=[("params", (F32, (n,))), ("k_cache", (F32, kvc)),
+                    ("v_cache", (F32, kvc)), ("pos", (I32, (b,))),
+                    ("tok", (I32, (b,)))],
+            outputs=[("logits", (F32, (b, cfg.vocab))),
+                     ("k_new", (F32, (L, b, H, hd))),
+                     ("v_new", (F32, (L, b, H, hd)))],
+            meta={"batch": b, "tmax": tmax},
+        ))
+
+    # --- kernel ablation: ADC value-path variant of the 1-bit config -------
+    cq1 = SERVE_CQ[-1]
+    g1 = cq1.n_groups(hd)
+    rows.append(lower_one(
+        outdir, f"{cfg.name}.decode_cq_adc_{cq1.tag}_b8",
+        M.build_decode_cq(cfg, cq1, 8, tmax, kernel="adc"),
+        inputs=[("params", (F32, (n,))),
+                ("ck", (F32, (L, H, g1, cq1.n_centroids, cq1.channels))),
+                ("cv", (F32, (L, H, g1, cq1.n_centroids, cq1.channels))),
+                ("k_codes", (I32, (L, 8, H, tmax, g1))),
+                ("v_codes", (I32, (L, 8, H, tmax, g1))),
+                ("pos", (I32, (8,))), ("tok", (I32, (8,)))],
+        outputs=[("logits", (F32, (8, cfg.vocab))),
+                 ("k_new_codes", (I32, (L, 8, H, g1))),
+                 ("v_new_codes", (I32, (L, 8, H, g1)))],
+        meta={"batch": 8, "tmax": tmax, "adc": True,
+              "cq_channels": cq1.channels, "cq_bits": cq1.bits},
+    ))
+
+    # --- decode over CQ cache (the paper's hot path) -----------------------
+    # Two kernel lowerings per config: the L1 pallas kernel (interpret mode,
+    # correctness/TPU path) and the XLA-fused variant (fast CPU serving) —
+    # see EXPERIMENTS.md §Perf.
+    for cq in SERVE_CQ:
+        g = cq.n_groups(hd)
+        cshape = (L, H, g, cq.n_centroids, cq.channels)
+        for b in DECODE_BATCHES:
+            for kern, kname in [("pallas", ""), ("xla", "xla_")]:
+                codes = (L, b, H, tmax, g)
+                rows.append(lower_one(
+                    outdir, f"{cfg.name}.decode_cq_{kname}{cq.tag}_b{b}",
+                    M.build_decode_cq(cfg, cq, b, tmax, kernel=kern),
+                    inputs=[("params", (F32, (n,))), ("ck", (F32, cshape)),
+                            ("cv", (F32, cshape)), ("k_codes", (I32, codes)),
+                            ("v_codes", (I32, codes)), ("pos", (I32, (b,))),
+                            ("tok", (I32, (b,)))],
+                    outputs=[("logits", (F32, (b, cfg.vocab))),
+                             ("k_new_codes", (I32, (L, b, H, g))),
+                             ("v_new_codes", (I32, (L, b, H, g)))],
+                    meta={"batch": b, "tmax": tmax, "cq_channels": cq.channels,
+                          "cq_bits": cq.bits, "kernel": kern,
+                          "bits_per_fpn": cq.bits_per_fpn},
+                ))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--models", default="small,tiny",
+                    help="comma-separated subset of: " + ",".join(MODELS))
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    rows = []
+    model_meta = {}
+    for name in args.models.split(","):
+        cfg = MODELS[name]
+        full = name == "small"   # tiny: ablation-only artifact set
+        print(f"[aot] lowering model '{name}' "
+              f"(params={cfg.param_count():,}, full={full})", flush=True)
+        rows += artifacts_for_model(args.outdir, cfg, full)
+        init = M.init_params(cfg, seed=0)
+        init.tofile(os.path.join(args.outdir, f"init_{name}.bin"))
+        model_meta[name] = {
+            "param_count": cfg.param_count(),
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim, "d_ffn": cfg.d_ffn,
+            "train_ctx": cfg.train_ctx, "eval_ctx": cfg.eval_ctx,
+            "serve_ctx": cfg.serve_ctx, "rope_theta": cfg.rope_theta,
+            "init_file": f"init_{name}.bin",
+            "serve_cq": [dict(channels=c.channels, bits=c.bits, tag=c.tag)
+                         for c in SERVE_CQ],
+            "decode_batches": list(DECODE_BATCHES),
+        }
+    dump_manifest(os.path.join(args.outdir, "manifest.json"), rows, model_meta)
+    print(f"[aot] wrote {len(rows)} artifacts + manifest to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

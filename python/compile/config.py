@@ -1,0 +1,130 @@
+"""Model and quantization configuration shared by the L2 graph builders and
+the AOT pipeline.
+
+Everything here is *build-time only*: the Rust coordinator learns shapes from
+``artifacts/manifest.json``; it never imports this module.
+
+Parameter flattening
+--------------------
+All model parameters travel through every artifact as ONE flat f32 vector
+(a single PJRT input).  ``param_layout`` defines the canonical order; the
+in-graph ``unpack`` in model.py consumes slices in exactly this order, and
+checkpoints on the Rust side are the raw little-endian f32 bytes of the same
+vector.  Keep the order stable: changing it invalidates checkpoints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """LLaMA-style decoder-only transformer configuration."""
+
+    name: str
+    vocab: int = 256          # byte-level
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 64
+    d_ffn: int = 704          # SwiGLU inner width (~8/3 * d_model, /64 aligned)
+    train_ctx: int = 128      # training sequence length
+    eval_ctx: int = 256       # teacher-forced eval sequence length
+    serve_ctx: int = 512      # decode-time Tmax (cache capacity)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def d_attn(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def param_layout(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Canonical (name, shape) list defining the flat parameter vector."""
+        lay: List[Tuple[str, Tuple[int, ...]]] = []
+        lay.append(("embed", (self.vocab, self.d_model)))
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            lay.append((p + "attn_norm", (self.d_model,)))
+            lay.append((p + "wq", (self.d_model, self.d_attn)))
+            lay.append((p + "wk", (self.d_model, self.d_attn)))
+            lay.append((p + "wv", (self.d_model, self.d_attn)))
+            lay.append((p + "wo", (self.d_attn, self.d_model)))
+            lay.append((p + "ffn_norm", (self.d_model,)))
+            lay.append((p + "w_gate", (self.d_model, self.d_ffn)))
+            lay.append((p + "w_up", (self.d_model, self.d_ffn)))
+            lay.append((p + "w_down", (self.d_ffn, self.d_model)))
+        lay.append(("final_norm", (self.d_model,)))
+        lay.append(("lm_head", (self.d_model, self.vocab)))
+        return lay
+
+    def param_count(self) -> int:
+        return sum(math.prod(s) for _, s in self.param_layout())
+
+
+@dataclasses.dataclass(frozen=True)
+class CqCfg:
+    """A CQ-<c>c<b>b configuration: groups of ``channels`` contiguous
+    channels share one ``bits``-bit code (paper §3.2)."""
+
+    channels: int             # c: coupled channels per group
+    bits: int                 # b: bits per group code
+
+    @property
+    def n_centroids(self) -> int:
+        return 1 << self.bits
+
+    def n_groups(self, head_dim: int) -> int:
+        assert head_dim % self.channels == 0, (head_dim, self.channels)
+        return head_dim // self.channels
+
+    @property
+    def bits_per_fpn(self) -> float:
+        return self.bits / self.channels
+
+    @property
+    def tag(self) -> str:
+        return f"{self.channels}c{self.bits}b"
+
+
+# Model zoo. `small` is the default serving model; `tiny` exists for the
+# Table-4 two-model ablation and for fast tests.
+SMALL = ModelCfg(name="small")
+TINY = ModelCfg(
+    name="tiny", d_model=128, n_layers=2, n_heads=4, head_dim=32, d_ffn=352,
+    train_ctx=64, eval_ctx=128, serve_ctx=256,
+)
+MODELS: Dict[str, ModelCfg] = {m.name: m for m in (SMALL, TINY)}
+
+# CQ configurations compiled into decode artifacts (serving path). The eval
+# path (Tables 1-4) covers every configuration via the generic eval_kv
+# artifact + Rust-side codecs, so it is not limited to this list.
+SERVE_CQ: List[CqCfg] = [CqCfg(2, 8), CqCfg(4, 8), CqCfg(8, 8)]
+
+# Batch sizes the decode artifacts are compiled for.
+DECODE_BATCHES = (1, 8)
+
+# Shared batch shapes for eval/calibration artifacts.
+EVAL_BATCH = 4
+TRAIN_BATCH = 16
+
+
+def manifest_entry(name: str, inputs, outputs, meta=None) -> dict:
+    """One artifact record for artifacts/manifest.json."""
+    def spec(x):
+        dt, shape = x
+        return {"dtype": dt, "shape": list(shape)}
+    return {
+        "name": name,
+        "inputs": [dict(spec(x), name=n) for n, x in inputs],
+        "outputs": [dict(spec(x), name=n) for n, x in outputs],
+        "meta": meta or {},
+    }
+
+
+def dump_manifest(path: str, entries: List[dict], models: Dict[str, dict]) -> None:
+    with open(path, "w") as f:
+        json.dump({"version": 1, "models": models, "artifacts": entries}, f, indent=1)

@@ -1,0 +1,125 @@
+"""L1: fused CQ dequant-attention decode kernel (Pallas).
+
+This is the paper's serving hot-spot.  During decode, attention is
+bandwidth-bound (§2.2 of the paper): the whole KV cache must cross the
+memory boundary once per generated token.  With coupled quantization the
+cache crosses as b/c-bit codes instead of 16-bit floats, and dequantization
+is fused into the attention kernel so full-precision K/V never exist in
+slow memory.
+
+Hardware mapping (see DESIGN.md §7): one grid program per (batch, head);
+the code tile [T, G] and the per-head codebooks [G, K, C] live in
+VMEM-equivalent kernel memory; dequantized tiles are produced in registers/
+VMEM and fed straight into the QK^T and AV contractions (MXU-shaped).  On
+this CPU image the kernel runs under ``interpret=True`` — correctness is
+validated against ``ref.py``; TPU performance is analysed statically in
+EXPERIMENTS.md §Perf.
+
+Two variants:
+  * ``cq_decode_attention``      — gather-dequant both K and V (default).
+  * ``cq_decode_attention_adc``  — ADC value path: accumulate softmax mass
+    per (group, centroid) bin, then mix centroids once.  O(T*G + K*C) value
+    work instead of O(T*D); wins when T >> K.  Benchmarked as an ablation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_tile(codes, cent):
+    """codes [T, G] int32, cent [G, K, C] -> [T, G*C] float32."""
+    t, g = codes.shape
+    _, k, c = cent.shape
+    picked = jnp.take_along_axis(
+        jnp.swapaxes(cent, 0, 1)[None],     # [1, K, G, C] -> gather over K
+        codes[:, None, :, None],            # [T, 1, G, 1]
+        axis=1,
+    )                                       # [T, 1, G, C]
+    return picked.reshape(t, g * c)
+
+
+def _rope_tile(x, cos, sin):
+    """x [T, D], cos/sin [T, D//2] -> rotated [T, D]."""
+    x0 = x[:, 0::2]
+    x1 = x[:, 1::2]
+    r0 = x0 * cos - x1 * sin
+    r1 = x0 * sin + x1 * cos
+    return jnp.stack([r0, r1], axis=-1).reshape(x.shape)
+
+
+def _attn_kernel(q_ref, kc_ref, vc_ref, ck_ref, cv_ref, pos_ref, cos_ref,
+                 sin_ref, o_ref, *, adc: bool):
+    """One (batch, head) program: fused dequant -> RoPE -> QK^T -> softmax -> AV."""
+    q = q_ref[0, 0]                  # [D]
+    k_codes = kc_ref[0, 0]           # [T, G]
+    v_codes = vc_ref[0, 0]           # [T, G]
+    ck = ck_ref[0]                   # [G, K, C]
+    cv = cv_ref[0]                   # [G, K, C]
+    pos = pos_ref[0]                 # scalar int32
+    cos = cos_ref[...]               # [T, D//2]
+    sin = sin_ref[...]
+
+    t, g = k_codes.shape
+    _, kk, c = ck.shape
+    d = g * c
+
+    khat = _dequant_tile(k_codes, ck)                  # [T, D]
+    krot = _rope_tile(khat, cos, sin)
+    scores = krot @ q * (1.0 / jnp.sqrt(jnp.float32(d)))   # [T]
+    mask = jnp.arange(t) <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    m = jnp.max(scores)
+    e = jnp.exp(scores - m)
+    a = e / jnp.sum(e)                                  # [T]
+
+    if adc:
+        # Accumulate softmax mass per (group, centroid) bin, then one
+        # centroid mix: out[g*C:(g+1)*C] = sum_k mass[g,k] * cv[g,k,:].
+        onehot = (v_codes[:, :, None] == jnp.arange(kk)).astype(a.dtype)  # [T,G,K]
+        mass = jnp.einsum("t,tgk->gk", a, onehot)       # [G, K]
+        out = jnp.einsum("gk,gkc->gc", mass, cv).reshape(d)
+    else:
+        vhat = _dequant_tile(v_codes, cv)               # [T, D]
+        out = a @ vhat                                  # [D]
+    o_ref[0, 0] = out
+
+
+def _build(adc: bool):
+    @functools.partial(jax.jit, static_argnames=())
+    def run(q, k_codes, v_codes, ck, cv, pos, cos, sin):
+        b, h, d = q.shape
+        t, g = k_codes.shape[2], k_codes.shape[3]
+        kk, c = ck.shape[2], ck.shape[3]
+        kernel = functools.partial(_attn_kernel, adc=adc)
+        return pl.pallas_call(
+            kernel,
+            grid=(b, h),
+            in_specs=[
+                pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),          # q
+                pl.BlockSpec((1, 1, t, g), lambda i, j: (i, j, 0, 0)),    # k_codes
+                pl.BlockSpec((1, 1, t, g), lambda i, j: (i, j, 0, 0)),    # v_codes
+                pl.BlockSpec((1, g, kk, c), lambda i, j: (j, 0, 0, 0)),   # ck
+                pl.BlockSpec((1, g, kk, c), lambda i, j: (j, 0, 0, 0)),   # cv
+                pl.BlockSpec((1,), lambda i, j: (i,)),                    # pos
+                pl.BlockSpec((t, d // 2), lambda i, j: (0, 0)),           # cos
+                pl.BlockSpec((t, d // 2), lambda i, j: (0, 0)),           # sin
+            ],
+            out_specs=pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+            interpret=True,
+        )(q, k_codes, v_codes, ck, cv, pos, cos, sin)
+
+    return run
+
+
+#: q [B,H,D], k/v_codes [B,H,T,G] i32, ck/cv [H,G,K,C], pos [B] i32,
+#: cos/sin [T,D//2]  ->  [B,H,D]
+cq_decode_attention = _build(adc=False)
+
+#: ADC value-path variant; same signature and semantics.
+cq_decode_attention_adc = _build(adc=True)

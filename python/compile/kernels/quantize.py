@@ -1,0 +1,49 @@
+"""L1: coupled nearest-centroid assignment kernel (Pallas).
+
+Quantizes a fresh key/value embedding to CQ codes at decode time: each group
+of ``C`` contiguous channels is assigned the index of the nearest (L2)
+centroid in its per-head, per-group codebook — the encode half of the paper's
+Eq. 5 quantizer.
+
+MXU-friendly formulation: argmin_k ||x_g - C_{g,k}||^2 is computed as
+argmin_k (||C_{g,k}||^2 - 2 x_g . C_{g,k}); the x-dependent term is a [G,C] x
+[G,C,K] contraction (a batched matvec that maps onto the systolic array on
+TPU), replacing the CUDA-style per-token warp reduction.  ||x||^2 is constant
+in k and omitted.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(x_ref, cent_ref, o_ref):
+    """One (batch, head) program."""
+    x = x_ref[0, 0]          # [D]
+    cent = cent_ref[0]       # [G, K, C]
+    g, k, c = cent.shape
+    xg = x.reshape(g, c)
+    # scores[g, k] = ||cent[g,k]||^2 - 2 * x_g . cent[g,k]
+    c2 = jnp.sum(cent * cent, axis=-1)                  # [G, K]
+    xc = jnp.einsum("gc,gkc->gk", xg, cent)             # [G, K]
+    o_ref[0, 0] = jnp.argmin(c2 - 2.0 * xc, axis=-1).astype(jnp.int32)
+
+
+@jax.jit
+def cq_assign(x, cent):
+    """x [B, H, D], cent [H, G, K, C] -> codes [B, H, G] int32."""
+    b, h, d = x.shape
+    _, g, k, c = cent.shape
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, g, k, c), lambda i, j: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, g), jnp.int32),
+        interpret=True,
+    )(x, cent)

@@ -1,0 +1,116 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness reference for pytest (python/tests/test_kernels.py):
+every Pallas kernel must match its oracle to float tolerance across a
+hypothesis-driven sweep of shapes / group sizes / bit widths.
+
+Shapes use the decode-step convention:
+  q          [B, H, D]        current-token queries (RoPE already applied)
+  k_codes    [B, H, T, G]     int32 coupled-channel codes for cached keys
+  v_codes    [B, H, T, G]     int32 codes for cached values
+  ck, cv     [H, G, K, C]     per-head, per-group centroid tables
+  pos        [B]              index of the newest valid cache entry per
+                              sequence (attention covers t in [0, pos],
+                              inclusive: the caller has already scattered the
+                              current token's codes at index pos)
+  cos, sin   [T, D//2]        rotary tables for cached positions
+with G * C == D and K == 2**bits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dequant_ref(codes, cent):
+    """Decode coupled-channel codes back to float embeddings.
+
+    codes: [..., G] int32, cent: [G, K, C]  ->  [..., G*C] float32.
+    """
+    g, k, c = cent.shape
+    flat = codes.reshape(-1, g)                      # [N, G]
+    picked = jnp.take_along_axis(
+        cent[None], flat[:, :, None, None], axis=2  # [N, G, 1, C]
+    )
+    return picked.reshape(codes.shape[:-1] + (g * c,))
+
+
+def rope_ref(x, cos, sin):
+    """Rotate channel pairs (x_{2i}, x_{2i+1}) by position-dependent angles.
+
+    x: [..., T, D], cos/sin: [T, D//2] (broadcast over leading dims).
+    """
+    x0 = x[..., 0::2]
+    x1 = x[..., 1::2]
+    r0 = x0 * cos - x1 * sin
+    r1 = x0 * sin + x1 * cos
+    return jnp.stack([r0, r1], axis=-1).reshape(x.shape)
+
+
+def cq_assign_ref(x, cent):
+    """Coupled nearest-centroid assignment (the paper's Eq. 5 quantizer).
+
+    x: [B, H, D], cent: [H, G, K, C] -> codes [B, H, G] int32.
+    Ties break toward the lowest centroid index (argmin semantics).
+    """
+    b, h, d = x.shape
+    _, g, k, c = cent.shape
+    xg = x.reshape(b, h, g, 1, c)
+    d2 = jnp.sum((xg - cent[None]) ** 2, axis=-1)    # [B, H, G, K]
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _dequant_per_head(codes, cent):
+    """codes [B, H, T, G], cent [H, G, K, C] -> [B, H, T, G*C]."""
+    h = codes.shape[1]
+    return jnp.stack([dequant_ref(codes[:, i], cent[i]) for i in range(h)], axis=1)
+
+
+def cq_decode_attention_ref(q, k_codes, v_codes, ck, cv, pos, cos, sin):
+    """Fused dequant-attention oracle.
+
+    Returns [B, H, D]: softmax(q . rope(dequant(k)) / sqrt(D)) . dequant(v)
+    over cache entries t <= pos[b].  Keys are stored pre-RoPE (paper §3.2),
+    so RoPE is applied after dequantization at each cached position.
+    """
+    b, h, d = q.shape
+    t = k_codes.shape[2]
+    khat = _dequant_per_head(k_codes, ck)            # [B, H, T, D]
+    vhat = _dequant_per_head(v_codes, cv)
+    krot = rope_ref(khat, cos, sin)
+    scores = jnp.einsum("bhd,bhtd->bht", q, krot) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.arange(t)[None, :] <= pos[:, None]    # [B, T]
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    a = _softmax(scores)
+    return jnp.einsum("bht,bhtd->bhd", a, vhat)
+
+
+def cq_decode_attention_adc_ref(q, k_codes, v_codes, ck, cv, pos, cos, sin):
+    """ADC-variant oracle: identical math, but the value-side reduction
+    accumulates softmax mass per (group, centroid) bin first:
+
+        sum_t a_t vhat_t == sum_{g,k} (sum_{t: code_{t,g}=k} a_t) * cv[g,k]
+
+    Matches cq_decode_attention_ref up to float-summation order.  This is the
+    product-quantization ADC trick applied to the value side — O(T*G + K*C)
+    accumulation instead of O(T*D)."""
+    b, h, d = q.shape
+    t = k_codes.shape[2]
+    _, g, k, c = cv.shape
+    khat = _dequant_per_head(k_codes, ck)
+    krot = rope_ref(khat, cos, sin)
+    scores = jnp.einsum("bhd,bhtd->bht", q, krot) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.arange(t)[None, :] <= pos[:, None]
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    a = _softmax(scores)                             # [B, H, T]
+    onehot = (v_codes[..., None] == jnp.arange(k)).astype(a.dtype)  # [B,H,T,G,K]
+    mass = jnp.einsum("bht,bhtgk->bhgk", a, onehot)
+    out = jnp.einsum("bhgk,hgkc->bhgc", mass, cv)
+    return out.reshape(b, h, g * c)

@@ -1,0 +1,366 @@
+"""L2: LLaMA-style transformer graph builders (build-time JAX).
+
+Defines the model forward pass plus every AOT entry point the Rust
+coordinator executes through PJRT:
+
+  * ``train_step``    — Adam step on the next-byte LM loss.
+  * ``eval_kv``       — the workhorse for all quantization experiments:
+                        forward pass in which layer i's attention keys/values
+                        are swapped for caller-provided (quantized) tensors
+                        when ``use_q[i]`` is set; always returns per-token nll
+                        AND the clean pre-RoPE K / V of every layer.  One
+                        artifact therefore serves FP eval, KV extraction, and
+                        exact progressive quantized eval (see DESIGN.md §3.1).
+  * ``calib_grads``   — K, V and dL/dK, dL/dV for Fisher-guided centroid
+                        learning (paper Eq. 6).
+  * ``prefill``       — full-context forward returning logits and pre-RoPE
+                        K/V for the serving prefill path.
+  * ``decode_cq``     — single-token decode over a channel-coupled quantized
+                        cache; contains the L1 Pallas kernels.
+  * ``decode_fp``     — single-token decode over an fp cache (baseline).
+
+Keys are cached PRE-RoPE and rotated after dequantization, matching the
+paper (§3.2) and KVQuant.  Parameters travel as one flat f32 vector.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import CqCfg, ModelCfg
+from .kernels.cq_attention import cq_decode_attention
+from .kernels.quantize import cq_assign
+
+
+# --------------------------------------------------------------------------
+# Parameter packing
+# --------------------------------------------------------------------------
+
+def unpack(cfg: ModelCfg, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Slice the flat parameter vector into named tensors (static slices)."""
+    out: Dict[str, jnp.ndarray] = {}
+    off = 0
+    for name, shape in cfg.param_layout():
+        n = math.prod(shape)
+        out[name] = jax.lax.slice(flat, (off,), (off + n,)).reshape(shape)
+        off += n
+    return out
+
+
+def init_params(cfg: ModelCfg, seed: int = 0) -> np.ndarray:
+    """Scaled-normal init, packed into the canonical flat vector."""
+    rng = np.random.default_rng(seed)
+    parts: List[np.ndarray] = []
+    for name, shape in cfg.param_layout():
+        if name.endswith("norm"):
+            w = np.ones(shape, dtype=np.float32)
+        elif name == "embed":
+            w = rng.standard_normal(shape).astype(np.float32) * 0.02
+        else:
+            fan_in = shape[0]
+            w = rng.standard_normal(shape).astype(np.float32) / math.sqrt(fan_in)
+            if name.endswith(("wo", "w_down")):
+                w /= math.sqrt(2.0 * cfg.n_layers)   # GPT-2-style residual scaling
+        parts.append(w.reshape(-1))
+    return np.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope_tables(cfg: ModelCfg, t: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    inv = 1.0 / (cfg.rope_theta ** (np.arange(0, cfg.head_dim, 2) / cfg.head_dim))
+    ang = np.arange(t)[:, None] * inv[None, :]
+    return jnp.asarray(np.cos(ang), jnp.float32), jnp.asarray(np.sin(ang), jnp.float32)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., T, D]; cos/sin [T, D//2] (broadcast over leading dims)."""
+    x0 = x[..., 0::2]
+    x1 = x[..., 1::2]
+    r0 = x0 * cos - x1 * sin
+    r1 = x0 * sin + x1 * cos
+    return jnp.stack([r0, r1], axis=-1).reshape(x.shape)
+
+
+def _attention_full(q, k_rot, v, scale):
+    """Causal attention. q,k_rot,v: [B, H, T, hd] -> [B, H, T, hd]."""
+    t = q.shape[2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_rot) * scale
+    # iota-based mask (not a materialized tril constant) keeps HLO text small
+    causal = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    scores = jnp.where(causal, scores, -1e30)
+    a = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", a, v)
+
+
+def _layer_proj(p, i, x_norm, cfg):
+    """Project hidden states to per-head q, k, v: each [B, H, T, hd]."""
+    b, t, _ = x_norm.shape
+    def split(w):
+        y = x_norm @ w                                     # [B, T, H*hd]
+        return y.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    return (split(p[f"layer{i}.wq"]), split(p[f"layer{i}.wk"]),
+            split(p[f"layer{i}.wv"]))
+
+
+def _ffn(p, i, x, cfg):
+    h = rmsnorm(x, p[f"layer{i}.ffn_norm"], cfg.norm_eps)
+    gate = jax.nn.silu(h @ p[f"layer{i}.w_gate"])
+    up = h @ p[f"layer{i}.w_up"]
+    return x + (gate * up) @ p[f"layer{i}.w_down"]
+
+
+def forward_with_kv_override(cfg: ModelCfg, flat, tokens, khat, vhat, use_q):
+    """Forward pass; layer i attends over use_q[i] ? (khat[i], vhat[i])
+    : its own freshly computed K/V.  khat is PRE-RoPE.
+
+    tokens [B, T] i32; khat/vhat [L, B, H, T, hd]; use_q [L] f32 (0/1).
+    Returns (logits [B,T,V], K [L,B,H,T,hd] pre-RoPE, V [L,B,H,T,hd]).
+    """
+    p = unpack(cfg, flat)
+    b, t = tokens.shape
+    cos, sin = rope_tables(cfg, t)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    x = p["embed"][tokens]                                  # [B, T, d]
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        xn = rmsnorm(x, p[f"layer{i}.attn_norm"], cfg.norm_eps)
+        q, k, v = _layer_proj(p, i, xn, cfg)
+        ks.append(k)
+        vs.append(v)
+        u = use_q[i]
+        k_eff = u * khat[i] + (1.0 - u) * k
+        v_eff = u * vhat[i] + (1.0 - u) * v
+        q_rot = apply_rope(q, cos, sin)
+        k_rot = apply_rope(k_eff, cos, sin)
+        attn = _attention_full(q_rot, k_rot, v_eff, scale)  # [B,H,T,hd]
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_attn)
+        x = x + attn @ p[f"layer{i}.wo"]
+        x = _ffn(p, i, x, cfg)
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    logits = x @ p["lm_head"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def nll_from_logits(logits, tokens):
+    """Per-position next-token nll: [B, T-1] (position j predicts token j+1)."""
+    lsm = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    return -jnp.take_along_axis(lsm, tgt[..., None], axis=-1)[..., 0]
+
+
+# --------------------------------------------------------------------------
+# AOT entry points
+# --------------------------------------------------------------------------
+
+def build_eval_kv(cfg: ModelCfg, batch: int, ctx: int):
+    def eval_kv(flat, tokens, khat, vhat, use_q):
+        logits, k, v = forward_with_kv_override(cfg, flat, tokens, khat, vhat, use_q)
+        return (nll_from_logits(logits, tokens), k, v)
+    return eval_kv
+
+
+def build_calib_grads(cfg: ModelCfg, batch: int, ctx: int):
+    """Returns (K, V, dL/dK, dL/dV); L = mean nll.  Gradients are taken via
+    zero-valued additive injections on each layer's K/V (paper Eq. 6 needs
+    g(A) = dL/dA at the actual activations)."""
+    def loss_with_injection(flat, tokens, dk, dv):
+        p = unpack(cfg, flat)
+        b, t = tokens.shape
+        cos, sin = rope_tables(cfg, t)
+        scale = 1.0 / math.sqrt(cfg.head_dim)
+        x = p["embed"][tokens]
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            xn = rmsnorm(x, p[f"layer{i}.attn_norm"], cfg.norm_eps)
+            q, k, v = _layer_proj(p, i, xn, cfg)
+            k = k + dk[i]
+            v = v + dv[i]
+            ks.append(k)
+            vs.append(v)
+            attn = _attention_full(apply_rope(q, cos, sin),
+                                   apply_rope(k, cos, sin), v, scale)
+            attn = attn.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_attn)
+            x = x + attn @ p[f"layer{i}.wo"]
+            x = _ffn(p, i, x, cfg)
+        x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+        logits = x @ p["lm_head"]
+        loss = jnp.mean(nll_from_logits(logits, tokens))
+        return loss, (jnp.stack(ks), jnp.stack(vs))
+
+    def calib(flat, tokens):
+        zshape = (cfg.n_layers, batch, cfg.n_heads, ctx, cfg.head_dim)
+        zk = jnp.zeros(zshape, jnp.float32)
+        zv = jnp.zeros(zshape, jnp.float32)
+        (_, (k, v)), (gk, gv) = jax.value_and_grad(
+            loss_with_injection, argnums=(2, 3), has_aux=True
+        )(flat, tokens, zk, zv)
+        return k, v, gk, gv
+    return calib
+
+
+def build_train_step(cfg: ModelCfg, batch: int, ctx: int):
+    """Adam with linear-warmup hyperparameters supplied at runtime.
+
+    Inputs: flat params, m, v (same length), step (f32 >= 1), lr, tokens.
+    Outputs: new params, m, v, mean loss.
+    """
+    b1, b2, eps = 0.9, 0.95, 1e-8
+
+    def loss_fn(flat, tokens):
+        dummy = jnp.zeros((cfg.n_layers, batch, cfg.n_heads, ctx, cfg.head_dim))
+        logits, _, _ = forward_with_kv_override(
+            cfg, flat, tokens, dummy, dummy, jnp.zeros((cfg.n_layers,)))
+        return jnp.mean(nll_from_logits(logits, tokens))
+
+    def train_step(flat, m, v, step, lr, tokens):
+        loss, g = jax.value_and_grad(loss_fn)(flat, tokens)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / (1 - b1 ** step)
+        vhat = v2 / (1 - b2 ** step)
+        new = flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return new, m2, v2, loss
+    return train_step
+
+
+def build_prefill(cfg: ModelCfg, ctx: int):
+    """Single-sequence full-context forward for serving prefill.
+    tokens [1, ctx] -> (logits [1, ctx, V], K/V [L, 1, H, ctx, hd])."""
+    def prefill(flat, tokens):
+        l = cfg.n_layers
+        dummy = jnp.zeros((l, 1, cfg.n_heads, ctx, cfg.head_dim))
+        logits, k, v = forward_with_kv_override(
+            cfg, flat, tokens, dummy, dummy, jnp.zeros((l,)))
+        return logits, k, v
+    return prefill
+
+
+def _decode_common(cfg: ModelCfg, p, tok, pos, tmax, attend):
+    """Shared decode-step skeleton.  ``attend(i, q_rot, k_new, v_new)`` must
+    return (ctx_vec [B, H, hd], extras_i) where extras are cache updates.
+
+    tok [B] i32, pos [B] i32 (index at which the new token is written).
+    """
+    b = tok.shape[0]
+    cos, sin = rope_tables(cfg, tmax)
+    x = p["embed"][tok]                                     # [B, d]
+    extras = []
+    for i in range(cfg.n_layers):
+        xn = rmsnorm(x, p[f"layer{i}.attn_norm"], cfg.norm_eps)
+        def proj(w):
+            return (xn @ w).reshape(b, cfg.n_heads, cfg.head_dim)
+        q = proj(p[f"layer{i}.wq"])
+        k_new = proj(p[f"layer{i}.wk"])                     # pre-RoPE
+        v_new = proj(p[f"layer{i}.wv"])
+        # RoPE for the single query at its own position.
+        cos_q = cos[pos]                                    # [B, hd/2]
+        sin_q = sin[pos]
+        q0, q1 = q[..., 0::2], q[..., 1::2]
+        q_rot = jnp.stack(
+            [q0 * cos_q[:, None, :] - q1 * sin_q[:, None, :],
+             q0 * sin_q[:, None, :] + q1 * cos_q[:, None, :]], axis=-1
+        ).reshape(q.shape)
+        ctx_vec, ex = attend(i, q_rot, k_new, v_new)
+        extras.append(ex)
+        x = x + ctx_vec.reshape(b, cfg.d_attn) @ p[f"layer{i}.wo"]
+        x = _ffn(p, i, x[:, None, :], cfg)[:, 0]            # reuse [B,T,d] ffn
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return x @ p["lm_head"], extras
+
+
+def build_decode_cq(cfg: ModelCfg, cq: CqCfg, batch: int, tmax: int,
+                    kernel: str = "pallas"):
+    """CQ decode step (the L1 Pallas hot path).
+
+    Inputs:  flat, ck/cv [L, H, G, K, C], k_codes/v_codes [L, B, H, Tmax, G]
+             i32, pos [B] i32, tok [B] i32.
+    The new token's K/V are quantized in-graph (cq_assign kernel), scattered
+    into the code tensors at index pos, and attention runs over t <= pos via
+    the fused cq_decode_attention kernel.  Outputs: logits [B, V] and the new
+    codes [L, B, H, G] for the Rust cache manager to append.
+    """
+    from .kernels import ref
+    from .kernels.cq_attention import cq_decode_attention_adc
+
+    g = cq.n_groups(cfg.head_dim)
+    cos, sin = rope_tables(cfg, tmax)
+    # Kernel selection (DESIGN.md §8 / EXPERIMENTS.md §Perf):
+    #   pallas — the L1 kernel under interpret=True (correctness path; on a
+    #            real TPU this is the Mosaic-compiled hot kernel);
+    #   adc    — pallas with the ADC value-path ablation;
+    #   xla    — the same math as straight jnp, letting XLA's CPU fusion
+    #            produce the fast host executable (production CPU serving).
+    attn_kernel = {
+        "pallas": cq_decode_attention,
+        "adc": cq_decode_attention_adc,
+        "xla": ref.cq_decode_attention_ref,
+    }[kernel]
+    assign = ref.cq_assign_ref if kernel == "xla" else cq_assign
+
+    def decode(flat, ck, cv, k_codes, v_codes, pos, tok):
+        p = unpack(cfg, flat)
+        b = tok.shape[0]
+
+        def attend(i, q_rot, k_new, v_new):
+            kc_new = assign(k_new, ck[i])                   # [B, H, G]
+            vc_new = assign(v_new, cv[i])
+            # Scatter the fresh codes at column `pos` (per batch element).
+            bidx = jnp.arange(b)
+            kcods = k_codes[i].at[bidx, :, pos].set(kc_new)
+            vcods = v_codes[i].at[bidx, :, pos].set(vc_new)
+            out = attn_kernel(q_rot, kcods, vcods, ck[i], cv[i],
+                              pos, cos, sin)
+            return out, (kc_new, vc_new)
+
+        logits, extras = _decode_common(cfg, p, tok, pos, tmax, attend)
+        kc = jnp.stack([e[0] for e in extras])              # [L, B, H, G]
+        vc = jnp.stack([e[1] for e in extras])
+        return logits, kc, vc
+    return decode
+
+
+def build_decode_fp(cfg: ModelCfg, batch: int, tmax: int):
+    """FP-cache decode step (serving baseline).
+
+    k_cache is PRE-RoPE; RoPE is applied on the fly, mirroring the CQ path so
+    the two artifacts differ only in cache representation.
+    Outputs: logits, plus the new k/v rows [L, B, H, hd].
+    """
+    cos, sin = rope_tables(cfg, tmax)
+
+    def decode(flat, k_cache, v_cache, pos, tok):
+        p = unpack(cfg, flat)
+        b = tok.shape[0]
+        scale = 1.0 / math.sqrt(cfg.head_dim)
+
+        def attend(i, q_rot, k_new, v_new):
+            bidx = jnp.arange(b)
+            kc = k_cache[i].at[bidx, :, pos].set(k_new)     # [B, H, T, hd]
+            vc = v_cache[i].at[bidx, :, pos].set(v_new)
+            k_rot = apply_rope(kc, cos, sin)
+            scores = jnp.einsum("bhd,bhtd->bht", q_rot, k_rot) * scale
+            mask = jnp.arange(tmax)[None, :] <= pos[:, None]
+            scores = jnp.where(mask[:, None, :], scores, -1e30)
+            a = jax.nn.softmax(scores, axis=-1)
+            return jnp.einsum("bht,bhtd->bhd", a, vc), (k_new, v_new)
+
+        logits, extras = _decode_common(cfg, p, tok, pos, tmax, attend)
+        kn = jnp.stack([e[0] for e in extras])
+        vn = jnp.stack([e[1] for e in extras])
+        return logits, kn, vn
+    return decode

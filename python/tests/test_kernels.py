@@ -1,0 +1,138 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, group sizes and bit widths; assert_allclose against
+ref.py.  Everything runs under interpret=True on CPU.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.cq_attention import cq_decode_attention, cq_decode_attention_adc
+from compile.kernels.quantize import cq_assign
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_case(rng, b, h, t, d, c, bits):
+    g = d // c
+    k = 1 << bits
+    q = rng.standard_normal((b, h, d), dtype=np.float32)
+    kc = rng.integers(0, k, size=(b, h, t, g)).astype(np.int32)
+    vc = rng.integers(0, k, size=(b, h, t, g)).astype(np.int32)
+    ck = rng.standard_normal((h, g, k, c), dtype=np.float32)
+    cv = rng.standard_normal((h, g, k, c), dtype=np.float32)
+    pos = rng.integers(0, t, size=(b,)).astype(np.int32)
+    inv = 1.0 / (10000.0 ** (np.arange(0, d, 2) / d))
+    ang = np.arange(t)[:, None] * inv[None, :]
+    cos = np.cos(ang).astype(np.float32)
+    sin = np.sin(ang).astype(np.float32)
+    return q, kc, vc, ck, cv, pos, cos, sin
+
+
+shape_strategy = st.tuples(
+    st.sampled_from([1, 2, 3]),          # B
+    st.sampled_from([1, 2, 4]),          # H
+    st.sampled_from([4, 7, 16]),         # T
+    st.sampled_from([8, 16, 32]),        # D
+    st.sampled_from([1, 2, 4, 8]),       # C (coupled channels)
+    st.sampled_from([1, 2, 4, 6]),       # bits
+    st.integers(0, 2**31 - 1),           # seed
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_decode_attention_matches_ref(params):
+    b, h, t, d, c, bits, seed = params
+    if d % c:
+        c = 1
+    case = make_case(np.random.default_rng(seed), b, h, t, d, c, bits)
+    got = np.asarray(cq_decode_attention(*case))
+    want = np.asarray(ref.cq_decode_attention_ref(*map(jnp.asarray, case)))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape_strategy)
+def test_decode_attention_adc_matches_ref(params):
+    b, h, t, d, c, bits, seed = params
+    if d % c:
+        c = 1
+    case = make_case(np.random.default_rng(seed), b, h, t, d, c, bits)
+    got = np.asarray(cq_decode_attention_adc(*case))
+    want = np.asarray(ref.cq_decode_attention_ref(*map(jnp.asarray, case)))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_assign_matches_ref(params):
+    b, h, _, d, c, bits, seed = params
+    if d % c:
+        c = 1
+    rng = np.random.default_rng(seed)
+    k = 1 << bits
+    g = d // c
+    x = rng.standard_normal((b, h, d), dtype=np.float32)
+    cent = rng.standard_normal((h, g, k, c), dtype=np.float32)
+    got = np.asarray(cq_assign(x, cent))
+    want = np.asarray(ref.cq_assign_ref(jnp.asarray(x), jnp.asarray(cent)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_assign_roundtrip_exact():
+    """Embeddings that ARE centroids must map to themselves (zero error)."""
+    rng = np.random.default_rng(0)
+    h, g, k, c = 2, 4, 8, 4
+    cent = rng.standard_normal((h, g, k, c), dtype=np.float32) * 3.0
+    codes = rng.integers(0, k, size=(5, h, g)).astype(np.int32)
+    x = np.stack(
+        [ref.dequant_ref(jnp.asarray(codes[:, i]), jnp.asarray(cent[i])) for i in range(h)],
+        axis=1,
+    )
+    got = np.asarray(cq_assign(jnp.asarray(x), jnp.asarray(cent)))
+    np.testing.assert_array_equal(got, codes)
+
+
+def test_attention_masks_future_entries():
+    """Entries beyond pos must not influence the output."""
+    rng = np.random.default_rng(1)
+    case = list(make_case(rng, 2, 2, 8, 16, 4, 3))
+    case[5] = np.array([3, 5], dtype=np.int32)
+    base = np.asarray(cq_decode_attention(*case))
+    kc2 = case[1].copy()
+    vc2 = case[2].copy()
+    kc2[0, :, 4:] = (kc2[0, :, 4:] + 1) % 8   # mutate masked-out region only
+    vc2[0, :, 6:] = (vc2[0, :, 6:] + 3) % 8
+    case2 = list(case)
+    case2[1], case2[2] = kc2, vc2
+    got = np.asarray(cq_decode_attention(*case2))
+    np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-6)
+
+
+def test_attention_uniform_when_single_entry():
+    """pos=0: output must equal dequant+RoPE-independent v at t=0."""
+    rng = np.random.default_rng(2)
+    q, kc, vc, ck, cv, _, cos, sin = make_case(rng, 1, 2, 6, 8, 2, 2)
+    pos = np.zeros((1,), dtype=np.int32)
+    got = np.asarray(cq_decode_attention(q, kc, vc, ck, cv, pos, cos, sin))
+    # softmax over one entry is 1 -> output == dequant(v at t=0)
+    want = np.stack(
+        [np.asarray(ref.dequant_ref(jnp.asarray(vc[0, i, 0]), jnp.asarray(cv[i]))) for i in range(2)]
+    )[None]
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [1, 8, 10])
+def test_wide_bitwidths(bits):
+    """1-bit (paper headline) and 10-bit (CQ-8c10b) codebooks round-trip."""
+    rng = np.random.default_rng(3)
+    case = make_case(rng, 1, 1, 5, 16, 8, bits)
+    got = np.asarray(cq_decode_attention(*case))
+    want = np.asarray(ref.cq_decode_attention_ref(*map(jnp.asarray, case)))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

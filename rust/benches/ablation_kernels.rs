@@ -1,0 +1,108 @@
+//! Kernel ablation (DESIGN.md §3.2): gather-dequant value path vs the
+//! ADC-style value path (accumulate softmax mass per centroid bin, then mix
+//! centroids once) in the fused CQ decode attention kernel, at 1 bit/FPN.
+//!
+//! Both artifacts compute identical attention (validated against ref.py in
+//! python/tests); this bench checks numerical agreement through the full
+//! stack and compares host wall-clock plus the analytical op counts that
+//! decide the winner on real hardware (ADC value work: O(T·G + K·C) vs
+//! gather O(T·D)).
+//!
+//!     cargo bench --bench ablation_kernels  [-- --steps 8]
+
+use cq::bench_support::Pipeline;
+use cq::quant::cq::CqSpec;
+use cq::quant::KvKind;
+use cq::runtime::Value;
+use cq::tensor::{TensorF, TensorI};
+use cq::util::bench::{fmt_secs, time_fn, Table};
+use cq::util::cli::Args;
+use cq::util::rng::Pcg64;
+
+fn main() {
+    let args = Args::parse(
+        &std::env::args().skip(1).filter(|a| a != "--bench").collect::<Vec<_>>(),
+    )
+    .unwrap();
+    let iters = args.usize("steps", 6);
+
+    let pipe = Pipeline::ensure("small").expect("pipeline");
+    let mm = pipe.engine.manifest.model("small").unwrap().clone();
+    let spec = CqSpec::new(8, 8);
+    let codec = pipe.cq_codec(spec, true, 40).expect("codebooks");
+    let books = &codec.books;
+    let (l, h, hd, tmax, b) = (mm.n_layers, mm.n_heads, mm.head_dim, mm.serve_ctx, 8);
+    let g = spec.n_groups(hd);
+
+    // Random-but-valid inputs: codes uniform over the codebook, positions
+    // mid-cache so the kernels sweep half the lane.
+    let mut rng = Pcg64::seed(7);
+    let codes = |rng: &mut Pcg64| {
+        TensorI::from_vec(
+            &[l, b, h, tmax, g],
+            (0..l * b * h * tmax * g)
+                .map(|_| rng.below(spec.n_centroids()) as i32)
+                .collect(),
+        )
+        .unwrap()
+    };
+    let k_codes = codes(&mut rng);
+    let v_codes = codes(&mut rng);
+    let pos = TensorI::from_vec(&[b], vec![(tmax / 2) as i32; b]).unwrap();
+    let tok = TensorI::from_vec(&[b], (0..b as i32).collect()).unwrap();
+    let inputs = vec![
+        Value::F(pipe.params.clone()),
+        Value::F(books.export_tensor(KvKind::Key)),
+        Value::F(books.export_tensor(KvKind::Value)),
+        Value::I(k_codes),
+        Value::I(v_codes),
+        Value::I(pos),
+        Value::I(tok),
+    ];
+
+    let mut table = Table::new(
+        "Kernel ablation: gather-dequant vs ADC value path (CQ-8c8b, B=8, T=512)",
+        &["kernel", "decode step (p50)", "logits match",
+          "value-path ops / (b,h)", "note"],
+    );
+    let mut logits: Vec<TensorF> = Vec::new();
+    for (label, art) in [
+        ("gather-dequant", "small.decode_cq_8c8b_b8"),
+        ("ADC value path", "small.decode_cq_adc_8c8b_b8"),
+    ] {
+        let exe = pipe.engine.executable(art).expect("artifact");
+        let mut out = None;
+        let t = time_fn(2, iters, || {
+            out = Some(exe.run(&inputs).expect("run"));
+        });
+        logits.push(out.unwrap()[0].as_f().unwrap().clone());
+        let ops = if label.starts_with("ADC") {
+            // mass accumulation T*G + centroid mix K*C
+            format!("{} (T·G + 2^b·c)", tmax * g + spec.n_centroids() * spec.channels)
+        } else {
+            format!("{} (T·D)", tmax * hd)
+        };
+        eprintln!("  {label}: p50 {}", fmt_secs(t.p50));
+        table.row(vec![
+            label.to_string(),
+            fmt_secs(t.p50),
+            "-".into(),
+            ops,
+            if label.starts_with("ADC") {
+                format!("wins when T >> 2^b·c/G = {}", spec.n_centroids() * spec.channels / g)
+            } else {
+                "baseline".into()
+            },
+        ]);
+    }
+    // Numerical agreement between the two kernels through the whole stack.
+    let max_diff = logits[0]
+        .data
+        .iter()
+        .zip(&logits[1].data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |logit diff| gather vs ADC: {max_diff:.2e}");
+    assert!(max_diff < 1e-3, "kernels must agree");
+    table.emit("ablation_kernels");
+}

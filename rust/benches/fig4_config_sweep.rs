@@ -1,0 +1,66 @@
+//! Figure 4: perplexity and key/value quantization errors across CQ
+//! configurations at 1-bit and 2-bit budgets, uniform vs Fisher-guided
+//! centroids.
+//!
+//! Expected shape (paper Fig. 4): at fixed bits/FPN, both ppl and quant
+//! error fall as coupling grows; Fisher-guided centroids *raise* raw
+//! quantization error slightly but *lower* perplexity (they spend precision
+//! on salient activations).
+//!
+//!     cargo bench --bench fig4_config_sweep  [-- --batches 4]
+
+use cq::bench_support::Pipeline;
+use cq::data::corpus::CorpusKind;
+use cq::eval::{perplexity, PplMode};
+use cq::quant::cq::CqSpec;
+use cq::util::bench::Table;
+use cq::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(
+        &std::env::args().skip(1).filter(|a| a != "--bench").collect::<Vec<_>>(),
+    )
+    .unwrap();
+    let n_batches = args.usize("batches", 3);
+    let iters = args.usize("iters", 40);
+
+    let pipe = Pipeline::ensure("small").expect("pipeline");
+    let batches = pipe.eval_set(CorpusKind::Wiki2s, n_batches);
+
+    // 1-bit series: 1c1b, 2c2b, 4c4b, 8c8b.  2-bit series: 1c2b, 2c4b, 4c8b.
+    let one_bit = [CqSpec::new(1, 1), CqSpec::new(2, 2), CqSpec::new(4, 4), CqSpec::new(8, 8)];
+    let two_bit = [CqSpec::new(1, 2), CqSpec::new(2, 4), CqSpec::new(4, 8)];
+
+    let mut table = Table::new(
+        "Figure 4: ppl + quant error vs CQ config (uniform vs Fisher)",
+        &["bits/FPN", "config", "centroids", "ppl", "k_err", "v_err"],
+    );
+    for (budget, specs) in [("1.00", &one_bit[..]), ("2.00", &two_bit[..])] {
+        for &spec in specs {
+            for fisher in [false, true] {
+                let codec = pipe.cq_codec(spec, fisher, iters).expect("codec");
+                let r = perplexity(
+                    &pipe.engine, &pipe.model, &pipe.params,
+                    &codec, &batches, PplMode::Fast,
+                )
+                .expect("ppl");
+                let cname = if fisher { "fisher" } else { "uniform" };
+                eprintln!(
+                    "  {budget}b {:<5} {cname:<8} ppl {:>10.3} kerr {:>9.1}",
+                    spec.tag(),
+                    r.ppl(),
+                    r.k_err
+                );
+                table.row(vec![
+                    budget.to_string(),
+                    format!("CQ-{}", spec.tag()),
+                    cname.to_string(),
+                    format!("{:.3}", r.ppl()),
+                    format!("{:.1}", r.k_err),
+                    format!("{:.1}", r.v_err),
+                ]);
+            }
+        }
+    }
+    table.emit("fig4_config_sweep");
+}

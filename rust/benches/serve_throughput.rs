@@ -1,0 +1,124 @@
+//! Serving bench (paper §2.2 von-Neumann argument, extra to the tables):
+//! decode-step latency, end-to-end throughput, cache footprint and modelled
+//! memory traffic for the fp16 cache vs CQ caches at batch 1 and 8.
+//!
+//! On this CPU-interpret testbed the *measured* decode time is compute-bound
+//! (XLA CPU is not bandwidth-starved at these sizes), so the table reports
+//! both the measured times AND the bandwidth-bound traffic model that
+//! governs real accelerators: bytes-touched-per-token ratios are exact.
+//!
+//!     cargo bench --bench serve_throughput  [-- --requests 8 --max-tokens 16]
+
+use std::time::Instant;
+
+use cq::bench_support::Pipeline;
+use cq::coordinator::{Request, ServeConfig, ServeHandle};
+use cq::metrics::TrafficModel;
+use cq::quant::cq::CqSpec;
+use cq::util::bench::Table;
+use cq::util::cli::Args;
+
+struct ModeResult {
+    label: String,
+    bits: f64,
+    tokens_per_s: f64,
+    decode_p50_ms: f64,
+    cache_bytes: usize,
+}
+
+fn run_mode(cq: Option<&str>, batch: usize, n_req: usize, max_new: usize) -> ModeResult {
+    let label = cq.unwrap_or("fp16").to_string();
+    let cfg = ServeConfig {
+        model: "small".into(),
+        cq: cq.map(|s| s.to_string()),
+        batch,
+        cache_budget: None,
+        codebook_path: cq.map(|t| cq::train::ckpt_dir("small").join(format!("cq_{t}.cqb"))),
+        params_path: cq::train::ckpt_dir("small").join("params.bin"),
+        kernel: ServeConfig::default_kernel(),
+    };
+    let handle = ServeHandle::start(cfg);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| {
+            handle
+                .submit_async(Request::greedy(i as u64, "The castle of Aldenport ", max_new))
+                .unwrap()
+        })
+        .collect();
+    let mut tokens = 0;
+    let mut cache = 0;
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        tokens += r.gen_tokens;
+        cache += r.cache_bytes;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let bits = match cq {
+        None => 16.0,
+        Some(t) => {
+            let spec: Vec<&str> = t.split('c').collect();
+            let c: f64 = spec[0].parse().unwrap();
+            let b: f64 = spec[1].trim_end_matches('b').parse().unwrap();
+            b / c
+        }
+    };
+    let res = ModeResult {
+        label,
+        bits,
+        tokens_per_s: tokens as f64 / wall,
+        decode_p50_ms: handle.metrics.decode_step_latency.percentile_ms(0.5),
+        cache_bytes: cache,
+    };
+    handle.shutdown().unwrap();
+    res
+}
+
+fn main() {
+    let args = Args::parse(
+        &std::env::args().skip(1).filter(|a| a != "--bench").collect::<Vec<_>>(),
+    )
+    .unwrap();
+    let max_new = args.usize("max-tokens", 12);
+
+    // Ensure checkpoint + all serve codebooks exist.
+    {
+        let pipe = Pipeline::ensure("small").expect("pipeline");
+        for spec in [CqSpec::new(2, 8), CqSpec::new(4, 8), CqSpec::new(8, 8)] {
+            pipe.cq_codec(spec, true, 40).expect("codebooks");
+        }
+    }
+
+    let mut table = Table::new(
+        "Serving: decode latency / throughput / cache bytes, fp16 vs CQ",
+        &["cache", "bits/FPN", "batch", "tok/s", "decode p50 (ms)",
+          "cache bytes", "traffic/token @T=512", "bw-bound speedup ceiling"],
+    );
+    for batch in [1usize, 8] {
+        let n_req = args.usize("requests", batch.max(4));
+        for mode in [None, Some("2c8b"), Some("4c8b"), Some("8c8b")] {
+            let r = run_mode(mode, batch, n_req, max_new);
+            let tm = TrafficModel {
+                n_layers: 4,
+                n_heads: 4,
+                head_dim: 64,
+                bits_per_fpn: r.bits,
+            };
+            eprintln!(
+                "  {:<5} b{batch}: {:.1} tok/s, p50 {:.1} ms, cache {}",
+                r.label, r.tokens_per_s, r.decode_p50_ms, r.cache_bytes
+            );
+            table.row(vec![
+                r.label.clone(),
+                format!("{:.2}", r.bits),
+                batch.to_string(),
+                format!("{:.1}", r.tokens_per_s),
+                format!("{:.2}", r.decode_p50_ms),
+                r.cache_bytes.to_string(),
+                format!("{:.0} B", tm.bytes_per_decode(512)),
+                format!("{:.1}x", tm.speedup_vs_fp16()),
+            ]);
+        }
+    }
+    table.emit("serve_throughput");
+}

@@ -1,0 +1,21 @@
+//! Table 1: perplexity on the WikiText-2-style corpus under every KV-cache
+//! quantization method at 4 / 2 / 1 bits per FPN.
+//!
+//! Regenerates the paper's rows (INT, NF, KVQuant +/- 1% outliers, CQ)
+//! through the shared eval harness; expected *shape* (DESIGN.md §4):
+//! CQ-2c8b ~ FP16; INT2/NF2 collapse; CQ-4c8b <= KVQuant-2b-1% without the
+//! sparse path; at 1 bit only CQ-8c8b and KVQuant-1b-1% stay usable, CQ
+//! ahead.
+//!
+//!     cargo bench --bench table1_ppl_wiki  [-- --batches 6 --iters 40 --exact]
+
+use cq::bench_support::run_ppl_table;
+use cq::data::corpus::CorpusKind;
+
+fn main() {
+    run_ppl_table(
+        CorpusKind::Wiki2s,
+        "table1_ppl_wiki",
+        "Table 1: perplexity on wiki2s (WikiText-2-style) by codec",
+    );
+}

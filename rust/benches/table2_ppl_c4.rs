@@ -1,0 +1,16 @@
+//! Table 2: perplexity on the C4-style corpus (distribution shift: codecs
+//! stay calibrated on wiki2s-train, exactly as the paper calibrates on
+//! WikiText-2 and evaluates on C4).
+//!
+//!     cargo bench --bench table2_ppl_c4
+
+use cq::bench_support::run_ppl_table;
+use cq::data::corpus::CorpusKind;
+
+fn main() {
+    run_ppl_table(
+        CorpusKind::C4s,
+        "table2_ppl_c4",
+        "Table 2: perplexity on c4s (C4-style) by codec — calibrated on wiki2s",
+    );
+}

@@ -1,0 +1,64 @@
+//! Table 3: zero-shot accuracy on the three synthetic suites (WinoGrande /
+//! PIQA / ARC analogues) under the paper's codec set at 4 / 2 / 1 bits.
+//!
+//! Expected shape: 4-bit rows ≈ FP16; KVQuant-2b degrades sharply while
+//! KVQuant-2b-1% and CQ-4c8b hold; at 1 bit KVQuant-1b collapses to chance
+//! and CQ-8c8b stays measurably above it; CQ-8c10b > CQ-8c8b.
+//!
+//!     cargo bench --bench table3_accuracy  [-- --items 120]
+
+use cq::bench_support::Pipeline;
+use cq::eval::tasks::{task_accuracy, TaskKind, TaskSet};
+use cq::util::bench::Table;
+use cq::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(
+        &std::env::args().skip(1).filter(|a| a != "--bench").collect::<Vec<_>>(),
+    )
+    .unwrap();
+    let items = args.usize("items", 48);
+    let iters = args.usize("iters", 40);
+
+    let pipe = Pipeline::ensure("small").expect("pipeline");
+    let rows = [
+        "fp16",
+        "kvquant-4b", "kvquant-4b-1%", "cq-2c8b",
+        "kvquant-2b", "kvquant-2b-1%", "cq-4c8b",
+        "kvquant-1b", "kvquant-1b-1%", "cq-8c8b", "cq-8c10b",
+    ];
+    let sets: Vec<TaskSet> = TaskKind::all()
+        .into_iter()
+        .map(|k| TaskSet::generate(k, items, 42))
+        .collect();
+
+    let mut table = Table::new(
+        "Table 3: zero-shot accuracy by codec (small model)",
+        &["codec", "bits/FPN", "agree%", "affinity%", "arith%"],
+    );
+    for name in rows {
+        let codec = pipe.codec(name, true, iters).expect("codec");
+        let mut accs = Vec::new();
+        for set in &sets {
+            let a = task_accuracy(&pipe.engine, &pipe.model, &pipe.params, codec.as_ref(), set)
+                .expect("accuracy");
+            accs.push(a);
+        }
+        eprintln!(
+            "  {:<16} agree {:>5.1} affinity {:>5.1} arith {:>5.1}",
+            codec.name(),
+            accs[0] * 100.0,
+            accs[1] * 100.0,
+            accs[2] * 100.0
+        );
+        table.row(vec![
+            codec.name(),
+            format!("{:.2}", codec.bits_per_fpn()),
+            format!("{:.1}", accs[0] * 100.0),
+            format!("{:.1}", accs[1] * 100.0),
+            format!("{:.1}", accs[2] * 100.0),
+        ]);
+    }
+    println!("({} items/task, 2 options each; chance = 50%)", items);
+    table.emit("table3_accuracy");
+}

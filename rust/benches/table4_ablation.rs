@@ -1,0 +1,58 @@
+//! Table 4 (ablation): at a fixed 2-bit/FPN budget, sweep the number of
+//! coupled channels c ∈ {1, 2, 4} (CQ-1c2b / 2c4b / 4c8b) × {uniform,
+//! Fisher-guided} centroids, on BOTH models (paper: Mistral-7b and
+//! LLaMA-2-13b; here: `small` and `tiny`).
+//!
+//! Expected shape: perplexity improves monotonically with c under either
+//! centroid scheme, and Fisher < uniform at every c (paper Table 4).
+//!
+//!     cargo bench --bench table4_ablation  [-- --batches 4]
+
+use cq::bench_support::Pipeline;
+use cq::data::corpus::CorpusKind;
+use cq::eval::{perplexity, PplMode};
+use cq::quant::cq::CqSpec;
+use cq::util::bench::Table;
+use cq::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(
+        &std::env::args().skip(1).filter(|a| a != "--bench").collect::<Vec<_>>(),
+    )
+    .unwrap();
+    let n_batches = args.usize("batches", 4);
+    let iters = args.usize("iters", 40);
+
+    let mut table = Table::new(
+        "Table 4: ablation — coupled channels × Fisher centroids @ 2 bits/FPN",
+        &["model", "config", "coupled c", "fisher", "ppl", "k_err"],
+    );
+    for model in ["small", "tiny"] {
+        let pipe = Pipeline::ensure(model).expect("pipeline");
+        let batches = pipe.eval_set(CorpusKind::Wiki2s, n_batches);
+        for fisher in [false, true] {
+            for spec in [CqSpec::new(1, 2), CqSpec::new(2, 4), CqSpec::new(4, 8)] {
+                let codec = pipe.cq_codec(spec, fisher, iters).expect("codec");
+                let r = perplexity(
+                    &pipe.engine, &pipe.model, &pipe.params,
+                    &codec, &batches, PplMode::Fast,
+                )
+                .expect("ppl");
+                eprintln!(
+                    "  {model:<6} {:<6} fisher={fisher:<5} ppl {:>10.3}",
+                    spec.tag(),
+                    r.ppl()
+                );
+                table.row(vec![
+                    model.to_string(),
+                    format!("CQ-{}", spec.tag()),
+                    spec.channels.to_string(),
+                    if fisher { "yes".into() } else { "no".into() },
+                    format!("{:.3}", r.ppl()),
+                    format!("{:.1}", r.k_err),
+                ]);
+            }
+        }
+    }
+    table.emit("table4_ablation");
+}

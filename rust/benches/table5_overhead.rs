@@ -1,0 +1,60 @@
+//! Table 5: centroid-learning wall time and centroid parameter counts for
+//! CQ-2c8b / 4c8b / 8c8b on both models.
+//!
+//! The paper's structure holds by construction: parameter count
+//! l × 2 × h × hd × 2^b is independent of c, and learning time *drops* as c
+//! grows (fewer k-means problems of higher dimension, same total work per
+//! Lloyd pass but better cache behaviour / earlier convergence).
+//!
+//!     cargo bench --bench table5_overhead  [-- --iters 100]
+
+use cq::bench_support::Pipeline;
+use cq::quant::cq::{CqCodebooks, CqSpec, LearnCfg};
+use cq::util::bench::Table;
+use cq::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(
+        &std::env::args().skip(1).filter(|a| a != "--bench").collect::<Vec<_>>(),
+    )
+    .unwrap();
+    // Paper §4.3 runs 100 k-means iterations; we keep that cap (early-stop
+    // on converged assignments still applies).
+    let iters = args.usize("iters", 100);
+
+    let mut table = Table::new(
+        "Table 5: CQ centroid learning time + storage overhead",
+        &["model", "config", "learn time (s)", "kmeans problems",
+          "centroid params", "% of model params"],
+    );
+    for model in ["small", "tiny"] {
+        let pipe = Pipeline::ensure(model).expect("pipeline");
+        let model_params = pipe.params.numel();
+        for spec in [CqSpec::new(2, 8), CqSpec::new(4, 8), CqSpec::new(8, 8)] {
+            let books = CqCodebooks::learn(
+                spec,
+                &pipe.calib.k,
+                &pipe.calib.v,
+                Some(&pipe.calib.gk),
+                Some(&pipe.calib.gv),
+                LearnCfg { fisher: true, max_iters: iters, seed: 0 },
+            );
+            let n_problems = books.n_layers * 2 * books.n_heads * spec.n_groups(books.head_dim);
+            eprintln!(
+                "  {model:<6} {:<5} {:>7.1}s  {} params",
+                spec.tag(),
+                books.learn_secs,
+                books.centroid_param_count()
+            );
+            table.row(vec![
+                model.to_string(),
+                format!("CQ-{}", spec.tag()),
+                format!("{:.1}", books.learn_secs),
+                n_problems.to_string(),
+                books.centroid_param_count().to_string(),
+                format!("{:.2}%", 100.0 * books.centroid_param_count() as f64 / model_params as f64),
+            ]);
+        }
+    }
+    table.emit("table5_overhead");
+}

@@ -1,0 +1,161 @@
+//! Shared scaffolding for `benches/` and `examples/`: guarantees a trained
+//! checkpoint + calibration data exist (training on demand if needed) and
+//! caches learned CQ codebooks on disk so repeated bench runs are cheap.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::calib::{calibrate, CalibData};
+use crate::data::corpus::{CorpusKind, CorpusSpec, Split};
+use crate::data::{eval_batches, Dataset};
+use crate::quant::cq::{CqCodebooks, CqCodec, CqSpec, LearnCfg};
+use crate::quant::factory::{build_codec, needs_calibration, FactoryCfg};
+use crate::quant::Codec;
+use crate::runtime::Engine;
+use crate::tensor::{TensorF, TensorI};
+use crate::train::{ckpt_dir, load_checkpoint, save_checkpoint, train, TrainCfg};
+use crate::eval::{perplexity, PplMode};
+use crate::quant::factory::table_rows;
+use crate::util::bench::Table;
+use crate::util::cli::Args;
+
+/// A ready-to-measure pipeline for one model.
+pub struct Pipeline {
+    pub engine: Engine,
+    pub model: String,
+    pub params: TensorF,
+    pub calib: CalibData,
+    pub dir: PathBuf,
+}
+
+impl Pipeline {
+    /// Load (or create) the trained + calibrated state for `model`.
+    /// Training steps are only spent when no checkpoint exists.
+    pub fn ensure(model: &str) -> Result<Pipeline> {
+        let engine = Engine::load_default()?;
+        let dir = ckpt_dir(model);
+        let params = match load_checkpoint(&engine, model, &dir) {
+            Ok(p) => p,
+            Err(_) => {
+                eprintln!("[bench_support] no checkpoint for '{model}', training…");
+                let ds = Dataset::from_corpus(
+                    CorpusSpec::new(CorpusKind::Wiki2s, Split::Train),
+                    2_000_000,
+                );
+                let steps = if model == "tiny" { 250 } else { 350 };
+                let r = train(&engine, model, engine.init_params(model)?, &ds,
+                              &TrainCfg { steps, ..Default::default() })?;
+                save_checkpoint(&dir, model, &r.params, &r.losses)?;
+                r.params
+            }
+        };
+        let calib = match CalibData::load(&dir) {
+            Ok(c) => c,
+            Err(_) => {
+                eprintln!("[bench_support] no calibration for '{model}', capturing…");
+                let ds = Dataset::from_corpus(
+                    CorpusSpec::new(CorpusKind::Wiki2s, Split::Train),
+                    2_000_000,
+                );
+                let c = calibrate(&engine, model, &params, &ds, 16)?;
+                c.save(&dir)?;
+                c
+            }
+        };
+        Ok(Pipeline { engine, model: model.to_string(), params, calib, dir })
+    }
+
+    /// Deterministic eval batches of the given corpus test split.
+    pub fn eval_set(&self, kind: CorpusKind, n_batches: usize) -> Vec<TensorI> {
+        let mm = self.engine.manifest.model(&self.model).unwrap();
+        let ds = Dataset::from_corpus(
+            CorpusSpec::new(kind, Split::Test),
+            n_batches * 4 * mm.eval_ctx + 4096,
+        );
+        eval_batches(&ds, 4, mm.eval_ctx, n_batches)
+    }
+
+    /// Build a codec by table-row name; CQ codebooks are cached on disk
+    /// (keyed by spec + fisher flag) since centroid learning dominates.
+    pub fn codec(&self, name: &str, fisher: bool, iters: usize) -> Result<Box<dyn Codec>> {
+        let lname = name.to_lowercase();
+        if let Some(rest) = lname.strip_prefix("cq-") {
+            let spec = crate::quant::factory::parse_cq(rest)?;
+            return Ok(Box::new(self.cq_codec(spec, fisher, iters)?));
+        }
+        let calib = needs_calibration(&lname).then_some(&self.calib);
+        build_codec(&lname, calib, FactoryCfg { fisher, max_iters: iters, seed: 0 })
+    }
+
+    /// CQ codec with disk-cached codebooks.
+    pub fn cq_codec(&self, spec: CqSpec, fisher: bool, iters: usize) -> Result<CqCodec> {
+        let suffix = if fisher { "" } else { "_uniform" };
+        let path = self.dir.join(format!("cq_{}{}.cqb", spec.tag(), suffix));
+        if let Ok(books) = CqCodebooks::load(&path) {
+            if books.spec == spec {
+                let codec = if fisher {
+                    CqCodec::new(books)
+                } else {
+                    CqCodec::with_label(books, &format!("CQ-{}-uniform", spec.tag()))
+                };
+                return Ok(codec);
+            }
+        }
+        let books = CqCodebooks::learn(
+            spec,
+            &self.calib.k,
+            &self.calib.v,
+            fisher.then_some(&self.calib.gk),
+            fisher.then_some(&self.calib.gv),
+            LearnCfg { fisher, max_iters: iters, seed: 0 },
+        );
+        books.save(&path)?;
+        let codec = if fisher {
+            CqCodec::new(books)
+        } else {
+            CqCodec::with_label(books, &format!("CQ-{}-uniform", spec.tag()))
+        };
+        Ok(codec)
+    }
+}
+
+/// Shared driver for the Table-1/2 perplexity benches.
+pub fn run_ppl_table(kind: CorpusKind, slug: &str, title: &str) {
+    let args = Args::parse(
+        &std::env::args().skip(1).filter(|a| a != "--bench").collect::<Vec<_>>(),
+    )
+    .unwrap();
+    let n_batches = args.usize("batches", 4);
+    let iters = args.usize("iters", 40);
+    let mode = if args.flag("exact") { PplMode::Exact } else { PplMode::Fast };
+
+    let pipe = Pipeline::ensure("small").expect("pipeline");
+    let batches = pipe.eval_set(kind, n_batches);
+    let mut table = Table::new(title, &["codec", "bits/FPN", "ppl", "k_err", "v_err"]);
+    for name in table_rows() {
+        let t0 = std::time::Instant::now();
+        let codec = pipe.codec(name, true, iters).expect("codec");
+        let r = perplexity(&pipe.engine, &pipe.model, &pipe.params, codec.as_ref(), &batches, mode)
+            .expect("ppl");
+        eprintln!(
+            "  {:<16} ppl {:>10.3}   ({:.1}s)",
+            codec.name(),
+            r.ppl(),
+            t0.elapsed().as_secs_f64()
+        );
+        table.row(vec![
+            codec.name(),
+            format!("{:.2}", codec.bits_per_fpn()),
+            format!("{:.3}", r.ppl()),
+            format!("{:.1}", r.k_err),
+            format!("{:.1}", r.v_err),
+        ]);
+    }
+    println!(
+        "(model=small, corpus={}, {} eval tokens, mode={mode:?})",
+        kind.name(),
+        n_batches * 4 * 255
+    );
+    table.emit(slug);
+}

@@ -1,0 +1,19 @@
+//! Debug probe: run a single-input f32[4,8] -> 1-tuple HLO text file from
+//! /tmp/probe_<name>.hlo.txt and compare against /tmp/probe_<name>.ref.bin.
+//! Used to bisect xla_extension numerical issues (see EXPERIMENTS.md notes).
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap();
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(format!("/tmp/probe_{name}.hlo.txt"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let x: Vec<f32> = (0..32).map(|i| i as f32).collect();
+    let lit = xla::Literal::vec1(&x).reshape(&[4, 8])?;
+    let out = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+    let got = out.to_tuple1()?.to_vec::<f32>()?;
+    let refb = std::fs::read(format!("/tmp/probe_{name}.ref.bin"))?;
+    let want: Vec<f32> = refb.chunks_exact(4).map(|c| f32::from_le_bytes([c[0],c[1],c[2],c[3]])).collect();
+    let maxd = got.iter().zip(&want).map(|(a,b)| (a-b).abs()).fold(0.0f32, f32::max);
+    println!("{name}: got[0..4]={:?} want[0..4]={:?} maxdiff={maxd}", &got[..4], &want[..4]);
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Fisher calibration: capture KV activations and their loss gradients on a
+//! calibration set (paper §3.2.1 / Eq. 6).
+//!
+//! Mirrors the paper's setup: 16 sequences of eval-context length from the
+//! training split of the calibration corpus, one backward pass each through
+//! the AOT `calib_grads` artifact; the squared gradients form the diagonal
+//! Fisher weights for centroid learning.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::data::Dataset;
+use crate::runtime::{Engine, Value};
+use crate::tensor::{TensorF, TensorI};
+
+/// Captured calibration tensors, all `[L, B_total, H, T, hd]`.
+pub struct CalibData {
+    pub k: TensorF,
+    pub v: TensorF,
+    pub gk: TensorF,
+    pub gv: TensorF,
+}
+
+/// Concatenate KV-shaped tensors along the batch axis (axis 1).
+fn concat_batch(parts: &[TensorF]) -> TensorF {
+    assert!(!parts.is_empty());
+    let s0 = &parts[0].shape;
+    let (l, h, t, hd) = (s0[0], s0[2], s0[3], s0[4]);
+    let b_total: usize = parts.iter().map(|p| p.shape[1]).sum();
+    let mut out = TensorF::zeros(&[l, b_total, h, t, hd]);
+    let inner = h * t * hd;
+    let mut b_off = 0;
+    for p in parts {
+        let b = p.shape[1];
+        for li in 0..l {
+            let src = li * b * inner;
+            let dst = (li * b_total + b_off) * inner;
+            out.data[dst..dst + b * inner].copy_from_slice(&p.data[src..src + b * inner]);
+        }
+        b_off += b;
+    }
+    out
+}
+
+/// Run calibration: `n_seqs` sequences drawn deterministically from the
+/// head of `ds`, through `<model>.calib_grads`.
+pub fn calibrate(
+    engine: &Engine,
+    model: &str,
+    params: &TensorF,
+    ds: &Dataset,
+    n_seqs: usize,
+) -> Result<CalibData> {
+    let art = format!("{model}.calib_grads");
+    let spec = engine.manifest.artifact(&art)?.clone();
+    let batch = spec.meta.num_or("batch", 4.0) as usize;
+    let ctx = spec.meta.num_or("ctx", 128.0) as usize;
+    let n_calls = n_seqs.div_ceil(batch);
+    anyhow::ensure!(
+        ds.len() >= n_calls * batch * ctx,
+        "calibration corpus too small"
+    );
+
+    let (mut ks, mut vs, mut gks, mut gvs) = (vec![], vec![], vec![], vec![]);
+    let mut off = 0;
+    for _ in 0..n_calls {
+        let mut data = Vec::with_capacity(batch * ctx);
+        for _ in 0..batch {
+            data.extend_from_slice(&ds.tokens[off..off + ctx]);
+            off += ctx;
+        }
+        let tokens = TensorI::from_vec(&[batch, ctx], data)?;
+        let out = engine.run(&art, &[Value::F(params.clone()), Value::I(tokens)])?;
+        let mut it = out.into_iter();
+        ks.push(it.next().context("k")?.into_f()?);
+        vs.push(it.next().context("v")?.into_f()?);
+        gks.push(it.next().context("gk")?.into_f()?);
+        gvs.push(it.next().context("gv")?.into_f()?);
+    }
+    Ok(CalibData {
+        k: concat_batch(&ks),
+        v: concat_batch(&vs),
+        gk: concat_batch(&gks),
+        gv: concat_batch(&gvs),
+    })
+}
+
+impl CalibData {
+    /// Persist to four raw f32 files + a shape header.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let shape_line = self
+            .k
+            .shape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        std::fs::write(dir.join("calib_shape.txt"), shape_line)?;
+        self.k.write_f32_file(&dir.join("calib_k.bin"))?;
+        self.v.write_f32_file(&dir.join("calib_v.bin"))?;
+        self.gk.write_f32_file(&dir.join("calib_gk.bin"))?;
+        self.gv.write_f32_file(&dir.join("calib_gv.bin"))?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<CalibData> {
+        let shape: Vec<usize> = std::fs::read_to_string(dir.join("calib_shape.txt"))
+            .with_context(|| format!("calibration data in {} (run `cq-serve calibrate`)", dir.display()))?
+            .trim()
+            .split(',')
+            .map(|s| s.parse().context("shape parse"))
+            .collect::<Result<_>>()?;
+        Ok(CalibData {
+            k: TensorF::read_f32_file(&dir.join("calib_k.bin"), &shape)?,
+            v: TensorF::read_f32_file(&dir.join("calib_v.bin"), &shape)?,
+            gk: TensorF::read_f32_file(&dir.join("calib_gk.bin"), &shape)?,
+            gv: TensorF::read_f32_file(&dir.join("calib_gv.bin"), &shape)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat_batch_stacks_along_axis1() {
+        let mut a = TensorF::zeros(&[2, 1, 1, 2, 2]);
+        let mut b = TensorF::zeros(&[2, 2, 1, 2, 2]);
+        a.data.iter_mut().for_each(|x| *x = 1.0);
+        b.data.iter_mut().for_each(|x| *x = 2.0);
+        let c = concat_batch(&[a, b]);
+        assert_eq!(c.shape, vec![2, 3, 1, 2, 2]);
+        assert_eq!(c.at(&[0, 0, 0, 0, 0]), 1.0);
+        assert_eq!(c.at(&[0, 1, 0, 0, 0]), 2.0);
+        assert_eq!(c.at(&[1, 0, 0, 1, 1]), 1.0);
+        assert_eq!(c.at(&[1, 2, 0, 1, 1]), 2.0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("cq_calib_test");
+        let t = |seed: f32| {
+            let mut x = TensorF::zeros(&[1, 2, 1, 2, 2]);
+            x.data.iter_mut().enumerate().for_each(|(i, v)| *v = seed + i as f32);
+            x
+        };
+        let cd = CalibData { k: t(0.0), v: t(100.0), gk: t(200.0), gv: t(300.0) };
+        cd.save(&dir).unwrap();
+        let re = CalibData::load(&dir).unwrap();
+        assert_eq!(re.k, cd.k);
+        assert_eq!(re.gv, cd.gv);
+    }
+}

@@ -1,0 +1,239 @@
+//! Continuous batcher: slot lifecycle + FIFO admission + step bookkeeping.
+//!
+//! The batcher is engine-agnostic (it never touches PJRT), which makes its
+//! invariants property-testable: FIFO admission, no token loss, slot
+//! conservation, and cache-byte accounting (see tests).  `serve_loop` binds
+//! it to the real decode artifacts.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::kvcache::{CacheGeom, PackedSeqCache};
+
+use super::{Request, Response};
+
+/// One running sequence occupying a batch lane.
+pub struct SeqRun {
+    pub req: Request,
+    pub respond: Option<Sender<Response>>,
+    pub prompt_tokens: usize,
+    /// Generated token ids (the last one is the next decode input).
+    pub generated: Vec<i32>,
+    pub packed: PackedSeqCache,
+    pub enqueued_at: Instant,
+    pub prefill_ms: f64,
+    pub decode_started: Option<Instant>,
+}
+
+impl SeqRun {
+    /// Total sequence length currently cached (prompt + generated-but-cached).
+    pub fn cached_len(&self) -> usize {
+        self.packed.len
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.req.max_new
+    }
+}
+
+/// Continuous batcher over `batch` lanes.
+pub struct Batcher {
+    pub batch: usize,
+    pub geom: CacheGeom,
+    queue: VecDeque<SeqRun>,
+    slots: Vec<Option<SeqRun>>,
+    pub total_admitted: usize,
+    pub total_completed: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, geom: CacheGeom) -> Batcher {
+        Batcher {
+            batch,
+            geom,
+            queue: VecDeque::new(),
+            slots: (0..batch).map(|_| None).collect(),
+            total_admitted: 0,
+            total_completed: 0,
+        }
+    }
+
+    pub fn enqueue(&mut self, run: SeqRun) {
+        self.queue.push_back(run);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active() == 0 && self.queue.is_empty()
+    }
+
+    /// Admit queued sequences into free slots (FIFO).  Returns the slots
+    /// filled this call so the serve loop can stage their caches.
+    pub fn admit(&mut self) -> Vec<usize> {
+        let mut filled = Vec::new();
+        for i in 0..self.batch {
+            if self.slots[i].is_none() {
+                if let Some(run) = self.queue.pop_front() {
+                    // Capacity guard: a sequence that can never fit is a
+                    // protocol error caught at submit time; here we only
+                    // check remaining room.
+                    debug_assert!(run.cached_len() < self.geom.tmax);
+                    self.slots[i] = Some(run);
+                    self.total_admitted += 1;
+                    filled.push(i);
+                } else {
+                    break;
+                }
+            }
+        }
+        filled
+    }
+
+    pub fn slot(&self, i: usize) -> Option<&SeqRun> {
+        self.slots[i].as_ref()
+    }
+
+    pub fn slot_mut(&mut self, i: usize) -> Option<&mut SeqRun> {
+        self.slots[i].as_mut()
+    }
+
+    /// Occupied slot indices.
+    pub fn occupied(&self) -> Vec<usize> {
+        (0..self.batch).filter(|&i| self.slots[i].is_some()).collect()
+    }
+
+    /// Remove a finished sequence from its slot.
+    pub fn take(&mut self, i: usize) -> Option<SeqRun> {
+        self.total_completed += self.slots[i].is_some() as usize;
+        self.slots[i].take()
+    }
+
+    /// A sequence must also stop when its cache lane is full.
+    pub fn must_stop(&self, i: usize) -> bool {
+        self.slot(i)
+            .map(|r| r.done() || r.cached_len() + 1 >= self.geom.tmax)
+            .unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+    use crate::util::rng::Pcg64;
+
+    fn geom() -> CacheGeom {
+        CacheGeom { n_layers: 1, n_heads: 1, groups: 2, bits: 4, tmax: 16 }
+    }
+
+    fn mk_run(id: u64, prompt_len: usize, max_new: usize) -> SeqRun {
+        let mut packed = PackedSeqCache::new(geom());
+        for _ in 0..prompt_len {
+            packed.append(&[0, 1], &[2, 3]).unwrap();
+        }
+        SeqRun {
+            req: Request::greedy(id, "x", max_new),
+            respond: None,
+            prompt_tokens: prompt_len,
+            generated: vec![7],
+            packed,
+            enqueued_at: Instant::now(),
+            prefill_ms: 0.0,
+            decode_started: None,
+        }
+    }
+
+    #[test]
+    fn fifo_admission() {
+        let mut b = Batcher::new(2, geom());
+        for id in 0..4 {
+            b.enqueue(mk_run(id, 2, 4));
+        }
+        let filled = b.admit();
+        assert_eq!(filled, vec![0, 1]);
+        assert_eq!(b.slot(0).unwrap().req.id, 0);
+        assert_eq!(b.slot(1).unwrap().req.id, 1);
+        assert_eq!(b.queue_len(), 2);
+        // Finish slot 0; next admit pulls request 2 into slot 0.
+        b.take(0);
+        let filled = b.admit();
+        assert_eq!(filled, vec![0]);
+        assert_eq!(b.slot(0).unwrap().req.id, 2);
+    }
+
+    #[test]
+    fn done_and_must_stop() {
+        let mut b = Batcher::new(1, geom());
+        b.enqueue(mk_run(0, 2, 2));
+        b.admit();
+        assert!(!b.must_stop(0));
+        b.slot_mut(0).unwrap().generated.push(8);
+        assert!(b.must_stop(0), "max_new reached");
+        // Cache-full stop: fill the lane.
+        let mut b2 = Batcher::new(1, geom());
+        b2.enqueue(mk_run(1, 14, 100));
+        b2.admit();
+        let r = b2.slot_mut(0).unwrap();
+        r.packed.append(&[0, 0], &[0, 0]).unwrap(); // len 15, tmax 16
+        assert!(b2.must_stop(0), "cache lane nearly full");
+    }
+
+    #[test]
+    fn prop_slot_conservation_under_random_schedule() {
+        run_prop(25, 31, |rng: &mut Pcg64| {
+            let batch = 1 + rng.below(4);
+            let mut b = Batcher::new(batch, geom());
+            let total = 10 + rng.below(20);
+            let mut submitted = 0usize;
+            let mut completed = 0usize;
+            let mut next_id = 0u64;
+            while completed < total {
+                // Random interleave of submit / step / finish.
+                match rng.below(3) {
+                    0 if submitted < total => {
+                        b.enqueue(mk_run(next_id, 1 + rng.below(4), 1 + rng.below(3)));
+                        next_id += 1;
+                        submitted += 1;
+                    }
+                    1 => {
+                        b.admit();
+                    }
+                    _ => {
+                        for i in b.occupied() {
+                            let r = b.slot_mut(i).unwrap();
+                            r.generated.push(1);
+                            if r.done() {
+                                b.take(i);
+                                completed += 1;
+                            }
+                        }
+                    }
+                }
+                if b.active() > batch {
+                    return Err("more active than lanes".into());
+                }
+                if submitted == total && b.is_idle() && completed < total {
+                    // Everything admitted and finished must tally.
+                    b.admit();
+                    if b.is_idle() {
+                        return Err(format!(
+                            "lost sequences: completed {completed}/{total}"
+                        ));
+                    }
+                }
+            }
+            if b.total_admitted != total {
+                return Err(format!("admitted {} != {total}", b.total_admitted));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,61 @@
+//! Serving coordinator: request routing, continuous batching and the decode
+//! scheduler — the Layer-3 system that turns the paper's quantized cache
+//! into a serving win (vLLM-router-style architecture, DESIGN.md §3.3).
+//!
+//! Threading model: PJRT handles are not `Send`, so the [`serve_loop`] owns
+//! the [`crate::runtime::Engine`] on a dedicated thread; the TCP frontend
+//! (`server`) and in-process clients talk to it over an mpsc channel.
+
+pub mod batcher;
+pub mod sampler;
+pub mod serve_loop;
+
+pub use batcher::{Batcher, SeqRun};
+pub use sampler::{sample, SampleCfg};
+pub use serve_loop::{serve_loop, ServeConfig, ServeHandle};
+
+use std::sync::mpsc::Sender;
+
+/// An inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Request {
+    pub fn greedy(id: u64, prompt: &str, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt: prompt.to_string(),
+            max_new,
+            temperature: 0.0,
+            top_k: 0,
+            seed: id,
+        }
+    }
+}
+
+/// A completed response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+    pub queue_ms: f64,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub cache_bytes: usize,
+}
+
+/// Messages into the serve loop.
+pub enum Inbound {
+    Submit(Request, Sender<Response>),
+    /// Drain in-flight work and exit.
+    Shutdown,
+}

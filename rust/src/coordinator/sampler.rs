@@ -1,0 +1,92 @@
+//! Token sampling: greedy / temperature / top-k, allocation-light.
+
+use crate::util::rng::Pcg64;
+
+/// Sampling configuration; `temperature == 0` means greedy.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleCfg {
+    pub temperature: f32,
+    pub top_k: usize,
+}
+
+impl SampleCfg {
+    pub fn greedy() -> SampleCfg {
+        SampleCfg { temperature: 0.0, top_k: 0 }
+    }
+}
+
+/// Sample a token id from a logits row.
+pub fn sample(logits: &[f32], cfg: SampleCfg, rng: &mut Pcg64) -> i32 {
+    if cfg.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Top-k restriction (0 = all).
+    let k = if cfg.top_k == 0 { logits.len() } else { cfg.top_k.min(logits.len()) };
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap()
+    });
+    idx.truncate(k);
+    // Softmax over the candidate set at the given temperature.
+    let inv_t = 1.0 / cfg.temperature;
+    let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - m) * inv_t) as f64).exp())
+        .collect();
+    idx[rng.weighted(&weights)] as i32
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Pcg64::seed(0);
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        assert_eq!(sample(&logits, SampleCfg::greedy(), &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Pcg64::seed(1);
+        let logits = vec![5.0, 4.9, -100.0, -100.0];
+        for _ in 0..50 {
+            let t = sample(&logits, SampleCfg { temperature: 1.0, top_k: 2 }, &mut rng);
+            assert!(t == 0 || t == 1);
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Pcg64::seed(2);
+        let logits = vec![1.0, 0.0, 0.5];
+        let picks: Vec<i32> = (0..100)
+            .map(|_| sample(&logits, SampleCfg { temperature: 0.05, top_k: 0 }, &mut rng))
+            .collect();
+        assert!(picks.iter().filter(|&&t| t == 0).count() > 95);
+    }
+
+    #[test]
+    fn high_temperature_spreads() {
+        let mut rng = Pcg64::seed(3);
+        let logits = vec![1.0, 0.9, 0.8];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            let t = sample(&logits, SampleCfg { temperature: 5.0, top_k: 0 }, &mut rng);
+            seen[t as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

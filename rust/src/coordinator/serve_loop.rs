@@ -1,0 +1,675 @@
+//! The serve loop: binds the batcher to the PJRT decode artifacts.
+//!
+//! One thread owns the [`Engine`] (PJRT handles are not `Send`) and runs:
+//!
+//! ```text
+//! loop {
+//!   drain inbound channel -> prefill + enqueue      (router)
+//!   admit queued sequences into free lanes          (batcher)
+//!   if any lane active: one fused decode step       (decode_cq / decode_fp)
+//!   sample, append codes, complete finished lanes
+//! }
+//! ```
+//!
+//! Cache representation is selected by [`ServeConfig::cq`]: `Some(tag)` uses
+//! the channel-coupled quantized cache (the paper's system); `None` the fp
+//! baseline.  Both run the same batcher, so the serve-throughput bench
+//! isolates exactly the cache effect.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::tokenizer::{ByteTokenizer, Tokenizer};
+use crate::kvcache::{BatchStage, CacheGeom, CacheManager, PackedSeqCache};
+use crate::metrics::ServeMetrics;
+use crate::quant::cq::CqCodebooks;
+use crate::quant::KvKind;
+use crate::runtime::{engine::{Arg, DevBuf}, Engine, Value};
+use crate::tensor::{TensorF, TensorI};
+use crate::util::rng::Pcg64;
+
+use super::batcher::{Batcher, SeqRun};
+use super::sampler::{sample, SampleCfg};
+use super::{Inbound, Request, Response};
+
+/// Serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub model: String,
+    /// CQ tag ("2c8b" | "4c8b" | "8c8b") or None for the fp cache baseline.
+    pub cq: Option<String>,
+    pub batch: usize,
+    /// Global cache budget in bytes (None = unlimited).
+    pub cache_budget: Option<usize>,
+    /// Path to learned codebooks (required when `cq` is set).
+    pub codebook_path: Option<std::path::PathBuf>,
+    /// Path to trained parameters.
+    pub params_path: std::path::PathBuf,
+    /// Decode kernel lowering: "pallas" (L1 interpret kernel) or "xla"
+    /// (XLA-fused CPU fast path) — see EXPERIMENTS.md §Perf.
+    pub kernel: String,
+}
+
+impl ServeConfig {
+    /// Default kernel selection: measured on this substrate the pallas
+    /// interpret lowering beats the jnp/XLA one at batch 1 (63.6 vs 91.2
+    /// ms/token, EXPERIMENTS.md §Perf), so it is the default; pass "xla"
+    /// for the alternative lowering.
+    pub fn default_kernel() -> String {
+        "pallas".to_string()
+    }
+}
+
+enum CacheMode {
+    Cq {
+        books: CqCodebooks,
+        stage: BatchStage,
+        /// Centroid tables resident on device (uploaded once).
+        ck_buf: DevBuf,
+        cv_buf: DevBuf,
+        art: String,
+    },
+    Fp {
+        k_cache: TensorF,
+        v_cache: TensorF,
+        pos: Vec<i32>,
+        art: String,
+        tmax: usize,
+    },
+}
+
+/// Everything the loop needs per model.
+struct Ctx {
+    engine: Engine,
+    /// Parameter vector resident on device (uploaded once).
+    params_buf: DevBuf,
+    mode: CacheMode,
+    geom: CacheGeom,
+    batch: usize,
+    /// (ctx, artifact) pairs sorted ascending — bucketed prefill.
+    prefills: Vec<(usize, String)>,
+    head_dim: usize,
+    vocab: usize,
+}
+
+fn build_ctx(cfg: &ServeConfig) -> Result<Ctx> {
+    let engine = Engine::load_default()?;
+    let mm = engine.manifest.model(&cfg.model)?.clone();
+    let params = Value::F(
+        TensorF::read_f32_file(&cfg.params_path, &[mm.param_count])
+            .with_context(|| format!("params at {}", cfg.params_path.display()))?,
+    );
+    let batch = cfg.batch;
+    anyhow::ensure!(
+        mm.decode_batches.contains(&batch),
+        "batch {batch} not compiled (available: {:?})",
+        mm.decode_batches
+    );
+    let (mode, geom) = match &cfg.cq {
+        Some(tag) => {
+            let path = cfg
+                .codebook_path
+                .clone()
+                .ok_or_else(|| anyhow!("--codebooks required for CQ serving"))?;
+            let books = CqCodebooks::load(&path)?;
+            anyhow::ensure!(
+                books.spec.tag() == *tag,
+                "codebook file is {} but serving {tag}",
+                books.spec.tag()
+            );
+            let geom = CacheGeom {
+                n_layers: mm.n_layers,
+                n_heads: mm.n_heads,
+                groups: books.spec.n_groups(mm.head_dim),
+                bits: books.spec.bits as u32,
+                tmax: mm.serve_ctx,
+            };
+            let stage = BatchStage::new(geom, batch);
+            let ck_buf = engine.upload(&Value::F(books.export_tensor(KvKind::Key)))?;
+            let cv_buf = engine.upload(&Value::F(books.export_tensor(KvKind::Value)))?;
+            let kprefix = if cfg.kernel == "xla" { "xla_" } else { "" };
+            let art = format!("{}.decode_cq_{kprefix}{tag}_b{batch}", cfg.model);
+            engine.manifest.artifact(&art)?;
+            (CacheMode::Cq { books, stage, ck_buf, cv_buf, art }, geom)
+        }
+        None => {
+            let geom = CacheGeom {
+                n_layers: mm.n_layers,
+                n_heads: mm.n_heads,
+                groups: mm.head_dim, // 1 channel per "group"
+                bits: 16,
+                tmax: mm.serve_ctx,
+            };
+            let shape = [mm.n_layers, batch, mm.n_heads, mm.serve_ctx, mm.head_dim];
+            let art = format!("{}.decode_fp_b{batch}", cfg.model);
+            engine.manifest.artifact(&art)?;
+            (
+                CacheMode::Fp {
+                    k_cache: TensorF::zeros(&shape),
+                    v_cache: TensorF::zeros(&shape),
+                    pos: vec![0; batch],
+                    art,
+                    tmax: mm.serve_ctx,
+                },
+                geom,
+            )
+        }
+    };
+    let params_buf = engine.upload(&params)?;
+    // Bucketed prefill: every "<model>.prefill*" artifact, smallest first.
+    let mut prefills: Vec<(usize, String)> = engine
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|(k, _)| k.starts_with(&format!("{}.prefill", cfg.model)))
+        .map(|(k, a)| (a.meta.num_or("ctx", 0.0) as usize, k.clone()))
+        .collect();
+    prefills.sort();
+    anyhow::ensure!(!prefills.is_empty(), "no prefill artifact for {}", cfg.model);
+    Ok(Ctx {
+        engine,
+        params_buf,
+        mode,
+        geom,
+        batch,
+        prefills,
+        head_dim: mm.head_dim,
+        vocab: mm.vocab,
+    })
+}
+
+/// Prefill one request: returns a ready [`SeqRun`] with its first sampled
+/// token and (for CQ) a populated packed cache.
+fn prefill(
+    ctx: &Ctx,
+    req: &Request,
+    respond: Option<Sender<Response>>,
+    metrics: &ServeMetrics,
+) -> Result<SeqRun> {
+    let t0 = Instant::now();
+    let tok = ByteTokenizer;
+    let mut prompt = tok.encode(&req.prompt);
+    if prompt.is_empty() {
+        prompt.push(b'\n' as i32);
+    }
+    let max_ctx = ctx.prefills.last().unwrap().0;
+    if prompt.len() > max_ctx {
+        // Router policy: keep the tail (most recent context), like a
+        // sliding-window chat server.
+        prompt = prompt[prompt.len() - max_ctx..].to_vec();
+    }
+    let p = prompt.len();
+    // Smallest compiled prefill bucket that fits the prompt.
+    let (bucket_ctx, art) = ctx
+        .prefills
+        .iter()
+        .find(|(t, _)| *t >= p)
+        .unwrap_or_else(|| ctx.prefills.last().unwrap());
+    let mut padded = prompt.clone();
+    padded.resize(*bucket_ctx, b' ' as i32);
+    let tokens = Value::I(TensorI::from_vec(&[1, *bucket_ctx], padded)?);
+    let out = ctx
+        .engine
+        .executable(art)?
+        .run_mixed(&[Arg::B(&ctx.params_buf), Arg::V(&tokens)])?;
+    let logits = out[0].as_f()?;
+    let k = out[1].as_f()?;
+    let v = out[2].as_f()?;
+
+    let mut packed = match &ctx.mode {
+        CacheMode::Cq { books, .. } => {
+            let mut packed = PackedSeqCache::new(ctx.geom);
+            let d = crate::quant::KvDims::of(k);
+            let per_side = ctx.geom.n_layers * ctx.geom.n_heads * ctx.geom.groups;
+            let mut kc = Vec::with_capacity(per_side);
+            let mut vc = Vec::with_capacity(per_side);
+            for t in 0..p {
+                kc.clear();
+                vc.clear();
+                for l in 0..d.l {
+                    for h in 0..d.h {
+                        let off = d.vec_off(l, 0, h, t);
+                        kc.extend(books.encode_vec(l, KvKind::Key, h, &k.data[off..off + d.hd]));
+                        vc.extend(books.encode_vec(l, KvKind::Value, h, &v.data[off..off + d.hd]));
+                    }
+                }
+                packed.append(&kc, &vc)?;
+            }
+            packed
+        }
+        CacheMode::Fp { .. } => {
+            let mut packed = PackedSeqCache::new_unstored(ctx.geom);
+            for _ in 0..p {
+                packed.append_unstored()?;
+            }
+            packed
+        }
+    };
+    // Stash prefill K/V for fp mode staging at admission time.
+    if let CacheMode::Fp { .. } = &ctx.mode {
+        packed.fp_seed = Some((k.clone(), v.clone()));
+    }
+
+    // First generated token from the last prompt position.
+    let row = &logits.data[(p - 1) * ctx.vocab..p * ctx.vocab];
+    let mut rng = Pcg64::seed(req.seed);
+    let t0_tok = sample(
+        row,
+        SampleCfg { temperature: req.temperature, top_k: req.top_k },
+        &mut rng,
+    );
+    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+    metrics.prefill_latency.record(t0.elapsed());
+
+    Ok(SeqRun {
+        req: req.clone(),
+        respond,
+        prompt_tokens: p,
+        generated: vec![t0_tok],
+        packed,
+        enqueued_at: Instant::now(),
+        prefill_ms,
+        decode_started: None,
+    })
+}
+
+/// Stage a newly admitted sequence into its lane.
+fn stage_admitted(ctx: &mut Ctx, slot: usize, batcher: &Batcher) {
+    let run = batcher.slot(slot).expect("admitted slot");
+    match &mut ctx.mode {
+        CacheMode::Cq { stage, .. } => {
+            stage.load_sequence(slot, &run.packed);
+            stage.pos[slot] = run.packed.len as i32; // next write position
+        }
+        CacheMode::Fp { k_cache, v_cache, pos, tmax, .. } => {
+            let (k, v) = run.packed.fp_seed.as_ref().expect("fp prefill seed");
+            let d = crate::quant::KvDims::of(k);
+            let hd = d.hd;
+            let b = ctx.batch;
+            for l in 0..d.l {
+                for h in 0..d.h {
+                    for t in 0..run.packed.len {
+                        let src = d.vec_off(l, 0, h, t);
+                        let dst = (((l * b + slot) * d.h + h) * *tmax + t) * hd;
+                        k_cache.data[dst..dst + hd].copy_from_slice(&k.data[src..src + hd]);
+                        v_cache.data[dst..dst + hd].copy_from_slice(&v.data[src..src + hd]);
+                    }
+                }
+            }
+            pos[slot] = run.packed.len as i32;
+        }
+    }
+}
+
+/// One fused decode step over all lanes.  Returns per-slot logits rows.
+fn decode_step(ctx: &mut Ctx, batcher: &Batcher) -> Result<Vec<Vec<f32>>> {
+    let b = ctx.batch;
+    let mut tok = vec![0i32; b];
+    let mut pos = vec![0i32; b];
+    for i in batcher.occupied() {
+        let run = batcher.slot(i).unwrap();
+        tok[i] = *run.generated.last().unwrap();
+        pos[i] = run.packed.len as i32;
+    }
+    let pos_t = Value::I(TensorI::from_vec(&[b], pos.clone())?);
+    let tok_t = Value::I(TensorI::from_vec(&[b], tok)?);
+
+    let (logits, updates) = match &ctx.mode {
+        CacheMode::Cq { stage, ck_buf, cv_buf, art, .. } => {
+            // Staging code tensors are moved (not cloned): run_mixed borrows.
+            let kc = Value::I(stage.k_codes.clone());
+            let vc = Value::I(stage.v_codes.clone());
+            let out = ctx.engine.executable(art)?.run_mixed(&[
+                Arg::B(&ctx.params_buf),
+                Arg::B(ck_buf),
+                Arg::B(cv_buf),
+                Arg::V(&kc),
+                Arg::V(&vc),
+                Arg::V(&pos_t),
+                Arg::V(&tok_t),
+            ])?;
+            let logits = out[0].as_f()?.clone();
+            let kn = out[1].as_i()?.clone();
+            let vn = out[2].as_i()?.clone();
+            (logits, StepUpdate::Cq(kn, vn))
+        }
+        CacheMode::Fp { k_cache, v_cache, art, .. } => {
+            let kc = Value::F(k_cache.clone());
+            let vc = Value::F(v_cache.clone());
+            let out = ctx.engine.executable(art)?.run_mixed(&[
+                Arg::B(&ctx.params_buf),
+                Arg::V(&kc),
+                Arg::V(&vc),
+                Arg::V(&pos_t),
+                Arg::V(&tok_t),
+            ])?;
+            let logits = out[0].as_f()?.clone();
+            let kn = out[1].as_f()?.clone();
+            let vn = out[2].as_f()?.clone();
+            (logits, StepUpdate::Fp(kn, vn))
+        }
+    };
+
+    // Apply cache updates for occupied lanes.
+    apply_updates(ctx, batcher, &pos, updates)?;
+
+    let v = ctx.vocab;
+    Ok((0..b)
+        .map(|i| logits.data[i * v..(i + 1) * v].to_vec())
+        .collect())
+}
+
+enum StepUpdate {
+    /// New codes `[L, B, H, G]` for keys and values.
+    Cq(TensorI, TensorI),
+    /// New rows `[L, B, H, hd]`.
+    Fp(TensorF, TensorF),
+}
+
+fn apply_updates(
+    ctx: &mut Ctx,
+    batcher: &Batcher,
+    pos: &[i32],
+    up: StepUpdate,
+) -> Result<()> {
+    let b = ctx.batch;
+    match (&mut ctx.mode, up) {
+        (CacheMode::Cq { stage, .. }, StepUpdate::Cq(kn, vn)) => {
+            let (l_n, h_n, g_n) = (ctx.geom.n_layers, ctx.geom.n_heads, ctx.geom.groups);
+            for i in batcher.occupied() {
+                let t = pos[i] as usize;
+                let mut kc = Vec::with_capacity(l_n * h_n * g_n);
+                let mut vc = Vec::with_capacity(l_n * h_n * g_n);
+                for l in 0..l_n {
+                    for h in 0..h_n {
+                        let off = ((l * b + i) * h_n + h) * g_n;
+                        for g in 0..g_n {
+                            kc.push(kn.data[off + g] as u32);
+                            vc.push(vn.data[off + g] as u32);
+                        }
+                    }
+                }
+                stage.write_token(i, t, &kc, &vc);
+                stage.pos[i] = (t + 1) as i32;
+            }
+            Ok(())
+        }
+        (CacheMode::Fp { k_cache, v_cache, tmax, pos: fpos, .. }, StepUpdate::Fp(kn, vn)) => {
+            let _ = &fpos;
+            let (l_n, h_n, hd) = (ctx.geom.n_layers, ctx.geom.n_heads, ctx.head_dim);
+            for i in batcher.occupied() {
+                let t = pos[i] as usize;
+                for l in 0..l_n {
+                    for h in 0..h_n {
+                        let src = ((l * b + i) * h_n + h) * hd;
+                        let dst = (((l * b + i) * h_n + h) * *tmax + t) * hd;
+                        k_cache.data[dst..dst + hd]
+                            .copy_from_slice(&kn.data[src..src + hd]);
+                        v_cache.data[dst..dst + hd]
+                            .copy_from_slice(&vn.data[src..src + hd]);
+                    }
+                }
+                fpos[i] = (t + 1) as i32;
+            }
+            Ok(())
+        }
+        _ => bail!("cache mode / update mismatch"),
+    }
+}
+
+/// Run the serve loop until `Shutdown` arrives and all work drains.
+pub fn serve_loop(
+    cfg: ServeConfig,
+    rx: Receiver<Inbound>,
+    metrics: Arc<ServeMetrics>,
+) -> Result<()> {
+    let mut ctx = build_ctx(&cfg)?;
+    // Warmup: compile the hot artifacts before the first request arrives so
+    // first-token latency reflects steady state, not XLA compilation.
+    {
+        let art = match &ctx.mode {
+            CacheMode::Cq { art, .. } => art.clone(),
+            CacheMode::Fp { art, .. } => art.clone(),
+        };
+        ctx.engine.executable(&art)?;
+        for (_, p) in ctx.prefills.clone() {
+            ctx.engine.executable(&p)?;
+        }
+    }
+    let mut batcher = Batcher::new(ctx.batch, ctx.geom);
+    let mut cache_mgr = match cfg.cache_budget {
+        Some(b) => CacheManager::with_budget(b),
+        None => CacheManager::default(),
+    };
+    let mut rngs: Vec<Pcg64> = (0..ctx.batch).map(|i| Pcg64::seed(i as u64)).collect();
+    let mut shutting_down = false;
+
+    loop {
+        // --- Router: drain inbound ------------------------------------
+        loop {
+            match rx.try_recv() {
+                Ok(Inbound::Submit(req, resp_tx)) => {
+                    let reserve = ctx.geom.bytes_per_token()
+                        * (req.prompt.len().min(ctx.prefills.last().unwrap().0) + req.max_new);
+                    if cache_mgr.reserve(reserve).is_err() {
+                        metrics.requests_rejected.add(1);
+                        let _ = resp_tx.send(Response {
+                            id: req.id,
+                            text: String::from("[rejected: cache budget]"),
+                            prompt_tokens: 0,
+                            gen_tokens: 0,
+                            queue_ms: 0.0,
+                            prefill_ms: 0.0,
+                            decode_ms: 0.0,
+                            cache_bytes: 0,
+                        });
+                        continue;
+                    }
+                    match prefill(&ctx, &req, Some(resp_tx), &metrics) {
+                        Ok(mut run) => {
+                            run.enqueued_at = Instant::now();
+                            batcher.enqueue(run);
+                        }
+                        Err(e) => log::error!("prefill failed: {e:#}"),
+                    }
+                }
+                Ok(Inbound::Shutdown) => shutting_down = true,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => shutting_down = true,
+            }
+            if shutting_down {
+                break;
+            }
+        }
+
+        // --- Admission --------------------------------------------------
+        for slot in batcher.admit() {
+            let run = batcher.slot(slot).unwrap();
+            metrics
+                .queue_wait
+                .record(run.enqueued_at.elapsed());
+            rngs[slot] = Pcg64::seed(run.req.seed.wrapping_add(1));
+            stage_admitted(&mut ctx, slot, &batcher);
+            if let Some(r) = batcher.slot_mut(slot) {
+                r.decode_started = Some(Instant::now());
+            }
+        }
+
+        // --- Decode ------------------------------------------------------
+        if batcher.active() > 0 {
+            let t0 = Instant::now();
+            let logits = decode_step(&mut ctx, &batcher)?;
+            metrics.decode_step_latency.record(t0.elapsed());
+
+            for i in batcher.occupied() {
+                // Account the token written this step.
+                {
+                    let run = batcher.slot_mut(i).unwrap();
+                    match &ctx.mode {
+                        CacheMode::Cq { .. } => {
+                            // Codes were staged; append to the packed store
+                            // from the staging lane for durability.
+                            let t = run.packed.len;
+                            let (kc, vc) = read_stage_token(&ctx, i, t);
+                            run.packed.append(&kc, &vc)?;
+                        }
+                        CacheMode::Fp { .. } => run.packed.append_unstored()?,
+                    }
+                }
+                let run = batcher.slot_mut(i).unwrap();
+                let cfg_s = SampleCfg {
+                    temperature: run.req.temperature,
+                    top_k: run.req.top_k,
+                };
+                let next = sample(&logits[i], cfg_s, &mut rngs[i]);
+                run.generated.push(next);
+                metrics.tokens_out.add(1);
+
+                if batcher.must_stop(i) {
+                    complete(&mut ctx, &mut batcher, &mut cache_mgr, i, &metrics);
+                }
+            }
+        } else if shutting_down && batcher.is_idle() {
+            return Ok(());
+        } else if batcher.is_idle() {
+            // Idle: block briefly for the next request.
+            match rx.recv_timeout(std::time::Duration::from_millis(20)) {
+                Ok(Inbound::Submit(req, resp_tx)) => {
+                    let reserve = ctx.geom.bytes_per_token()
+                        * (req.prompt.len().min(ctx.prefills.last().unwrap().0) + req.max_new);
+                    if cache_mgr.reserve(reserve).is_ok() {
+                        if let Ok(run) = prefill(&ctx, &req, Some(resp_tx), &metrics) {
+                            batcher.enqueue(run);
+                        }
+                    } else {
+                        metrics.requests_rejected.add(1);
+                    }
+                }
+                Ok(Inbound::Shutdown) => shutting_down = true,
+                Err(_) => {
+                    if shutting_down {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Read a token's codes back from the staging lane (CQ mode).
+fn read_stage_token(ctx: &Ctx, slot: usize, t: usize) -> (Vec<u32>, Vec<u32>) {
+    match &ctx.mode {
+        CacheMode::Cq { stage, .. } => {
+            let (l_n, h_n, g_n) = (ctx.geom.n_layers, ctx.geom.n_heads, ctx.geom.groups);
+            let b = ctx.batch;
+            let mut kc = Vec::with_capacity(l_n * h_n * g_n);
+            let mut vc = Vec::with_capacity(l_n * h_n * g_n);
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let off = (((l * b + slot) * h_n + h) * ctx.geom.tmax + t) * g_n;
+                    for g in 0..g_n {
+                        kc.push(stage.k_codes.data[off + g] as u32);
+                        vc.push(stage.v_codes.data[off + g] as u32);
+                    }
+                }
+            }
+            (kc, vc)
+        }
+        CacheMode::Fp { .. } => unreachable!("fp mode stores no codes"),
+    }
+}
+
+fn complete(
+    ctx: &mut Ctx,
+    batcher: &mut Batcher,
+    cache_mgr: &mut CacheManager,
+    slot: usize,
+    metrics: &ServeMetrics,
+) {
+    if let Some(run) = batcher.take(slot) {
+        match &mut ctx.mode {
+            CacheMode::Cq { stage, .. } => stage.release(slot),
+            CacheMode::Fp { pos, .. } => pos[slot] = 0,
+        }
+        let reserve = ctx.geom.bytes_per_token()
+            * (run.prompt_tokens + run.req.max_new);
+        cache_mgr.release(reserve);
+        let tok = ByteTokenizer;
+        let text = tok.decode(&run.generated);
+        let decode_ms = run
+            .decode_started
+            .map(|t| t.elapsed().as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        let queue_ms = run
+            .decode_started
+            .map(|t| (t.duration_since(run.enqueued_at)).as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        metrics.requests_done.add(1);
+        metrics
+            .request_latency
+            .record(run.enqueued_at.elapsed());
+        if let Some(tx) = run.respond {
+            let _ = tx.send(Response {
+                id: run.req.id,
+                text,
+                prompt_tokens: run.prompt_tokens,
+                gen_tokens: run.generated.len(),
+                queue_ms,
+                prefill_ms: run.prefill_ms,
+                decode_ms,
+                cache_bytes: run.packed.logical_bytes(),
+            });
+        }
+    }
+}
+
+/// In-process handle: spawns the serve loop on its own thread and provides
+/// a blocking `submit`.  Used by the TCP server, examples and benches.
+pub struct ServeHandle {
+    tx: Sender<Inbound>,
+    pub metrics: Arc<ServeMetrics>,
+    join: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl ServeHandle {
+    pub fn start(cfg: ServeConfig) -> ServeHandle {
+        let (tx, rx) = channel();
+        let metrics = Arc::new(ServeMetrics::default());
+        let m2 = metrics.clone();
+        let join = std::thread::Builder::new()
+            .name("cq-serve-loop".into())
+            .spawn(move || serve_loop(cfg, rx, m2))
+            .expect("spawn serve loop");
+        ServeHandle { tx, metrics, join: Some(join) }
+    }
+
+    /// Submit a request and block for its response.
+    pub fn submit(&self, req: Request) -> Result<Response> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Inbound::Submit(req, tx))
+            .map_err(|_| anyhow!("serve loop gone"))?;
+        rx.recv().context("serve loop dropped response")
+    }
+
+    /// Submit without waiting; returns the response receiver.
+    pub fn submit_async(&self, req: Request) -> Result<Receiver<Response>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Inbound::Submit(req, tx))
+            .map_err(|_| anyhow!("serve loop gone"))?;
+        Ok(rx)
+    }
+
+    /// Drain and stop the loop.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Inbound::Shutdown);
+        if let Some(j) = self.join.take() {
+            j.join().map_err(|_| anyhow!("serve loop panicked"))??;
+        }
+        Ok(())
+    }
+}

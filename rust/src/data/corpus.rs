@@ -1,0 +1,309 @@
+//! Deterministic synthetic corpora.
+//!
+//! `wiki2s` ("WikiText-2-style"): encyclopedic prose with section headings,
+//! years, and consistent grammar.  `c4s` ("C4-style"): web text with URLs,
+//! list bullets and boilerplate, over a shifted vocabulary mixture.  Both
+//! are generated from a seeded PCG so every experiment is reproducible;
+//! train/test splits use disjoint RNG streams.
+//!
+//! The grammar embeds three regularities the zero-shot suites probe:
+//!   1. subject–verb agreement   (singular -> "is"/"was", plural -> "are"/"were")
+//!   2. adjective–noun collocations (each adjective has a licensed noun set)
+//!   3. spelled-out arithmetic   ("three plus four equals seven")
+//! A byte-level LM trained on the corpus learns all three, so quantization
+//! damage shows up as task-accuracy loss exactly as in the paper's Table 3.
+
+use crate::util::rng::Pcg64;
+
+/// Which corpus to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusKind {
+    Wiki2s,
+    C4s,
+}
+
+impl CorpusKind {
+    pub fn parse(s: &str) -> Option<CorpusKind> {
+        match s {
+            "wiki2s" => Some(CorpusKind::Wiki2s),
+            "c4s" => Some(CorpusKind::C4s),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorpusKind::Wiki2s => "wiki2s",
+            CorpusKind::C4s => "c4s",
+        }
+    }
+}
+
+/// Train/test split (disjoint RNG streams).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// Full corpus specification.
+#[derive(Clone, Copy, Debug)]
+pub struct CorpusSpec {
+    pub kind: CorpusKind,
+    pub split: Split,
+    pub seed: u64,
+}
+
+impl CorpusSpec {
+    pub fn new(kind: CorpusKind, split: Split) -> CorpusSpec {
+        CorpusSpec { kind, split, seed: 0x5eed }
+    }
+
+    fn stream(&self) -> u64 {
+        let k = match self.kind {
+            CorpusKind::Wiki2s => 1,
+            CorpusKind::C4s => 2,
+        };
+        let s = match self.split {
+            Split::Train => 10,
+            Split::Test => 20,
+        };
+        k * 1000 + s
+    }
+
+    /// Generate at least `n_bytes` of corpus text.
+    pub fn generate(&self, n_bytes: usize) -> String {
+        let mut rng = Pcg64::new(self.seed, self.stream());
+        let mut out = String::with_capacity(n_bytes + 256);
+        while out.len() < n_bytes {
+            match self.kind {
+                CorpusKind::Wiki2s => wiki_document(&mut rng, &mut out),
+                CorpusKind::C4s => web_document(&mut rng, &mut out),
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vocabulary: nouns carry number; adjectives license noun subsets.
+// ---------------------------------------------------------------------------
+
+pub const SING_NOUNS: &[&str] = &[
+    "castle", "river", "engine", "garden", "bridge", "museum", "library",
+    "harbor", "village", "mountain", "temple", "forest", "canal", "tower",
+];
+pub const PLUR_NOUNS: &[&str] = &[
+    "castles", "rivers", "engines", "gardens", "bridges", "museums",
+    "libraries", "harbors", "villages", "mountains", "temples", "forests",
+];
+/// Adjective -> licensed nouns (collocation regularity for the PIQA-like
+/// suite).  Each adjective appears ONLY with its licensed nouns in corpus.
+pub const COLLOCATIONS: &[(&str, &[&str])] = &[
+    ("ancient", &["castle", "temple", "bridge", "tower"]),
+    ("flowing", &["river", "canal"]),
+    ("mechanical", &["engine", "tower"]),
+    ("blooming", &["garden", "forest"]),
+    ("crowded", &["museum", "library", "harbor", "village"]),
+    ("misty", &["mountain", "forest", "river"]),
+];
+pub const PLACES: &[&str] = &[
+    "Aldenport", "Brimholt", "Carvel", "Dunmere", "Eastvale", "Fenwick",
+    "Grendale", "Halloway",
+];
+pub const VERBS_SING: &[&str] = &["is", "was", "stands", "remains"];
+pub const VERBS_PLUR: &[&str] = &["are", "were", "stand", "remain"];
+pub const DIGITS: &[&str] = &[
+    "zero", "one", "two", "three", "four", "five", "six", "seven", "eight",
+    "nine",
+];
+const TAILS: &[&str] = &[
+    "near the old town", "in the northern district", "by the coast",
+    "under royal charter", "according to early records", "for many years",
+];
+
+/// Spell a number 0..=18 (sum of two digits).
+pub fn spell_number(n: usize) -> String {
+    const TEENS: &[&str] = &[
+        "ten", "eleven", "twelve", "thirteen", "fourteen", "fifteen",
+        "sixteen", "seventeen", "eighteen",
+    ];
+    if n < 10 {
+        DIGITS[n].to_string()
+    } else {
+        TEENS[n - 10].to_string()
+    }
+}
+
+fn agreement_sentence(rng: &mut Pcg64) -> String {
+    let singular = rng.next_f64() < 0.5;
+    let (noun, verb): (&str, &str) = if singular {
+        (*rng.choose(SING_NOUNS), *rng.choose(VERBS_SING))
+    } else {
+        (*rng.choose(PLUR_NOUNS), *rng.choose(VERBS_PLUR))
+    };
+    format!(
+        "The {} of {} {} notable {}.",
+        noun,
+        rng.choose(PLACES),
+        verb,
+        rng.choose(TAILS)
+    )
+}
+
+fn collocation_sentence(rng: &mut Pcg64) -> String {
+    let (adj, nouns) = rng.choose(COLLOCATIONS);
+    let noun = *rng.choose(nouns);
+    format!(
+        "Travellers often mention the {} {} {}.",
+        adj,
+        noun,
+        rng.choose(TAILS)
+    )
+}
+
+fn arithmetic_sentence(rng: &mut Pcg64) -> String {
+    let a = rng.below(10);
+    let b = rng.below(10);
+    format!(
+        "In the ledger, {} plus {} equals {}.",
+        DIGITS[a],
+        DIGITS[b],
+        spell_number(a + b)
+    )
+}
+
+fn year_sentence(rng: &mut Pcg64) -> String {
+    let year = 1400 + rng.below(500);
+    format!(
+        "It was rebuilt in {} after the great storm.",
+        year
+    )
+}
+
+fn wiki_sentence(rng: &mut Pcg64) -> String {
+    let x = rng.next_f64();
+    if x < 0.40 {
+        agreement_sentence(rng)
+    } else if x < 0.65 {
+        collocation_sentence(rng)
+    } else if x < 0.85 {
+        arithmetic_sentence(rng)
+    } else {
+        year_sentence(rng)
+    }
+}
+
+fn wiki_document(rng: &mut Pcg64, out: &mut String) {
+    out.push_str(&format!(
+        "\n= {} {} =\n\n",
+        rng.choose(PLACES),
+        rng.choose(&["History", "Geography", "Architecture", "Economy"])
+    ));
+    let sentences = 6 + rng.below(10);
+    for i in 0..sentences {
+        out.push_str(&wiki_sentence(rng));
+        out.push(if i % 4 == 3 { '\n' } else { ' ' });
+    }
+    out.push('\n');
+}
+
+fn web_document(rng: &mut Pcg64, out: &mut String) {
+    // Web register: boilerplate + URLs + lists around the same grammar, so
+    // it is a distribution shift, not a disjoint language (paper: calibrate
+    // on WikiText-2, evaluate on C4).
+    out.push_str(&format!(
+        "\nwww.{}.example/{}\n",
+        rng.choose(PLACES).to_lowercase(),
+        rng.below(1000)
+    ));
+    if rng.next_f64() < 0.5 {
+        out.push_str("Sign up for our newsletter today. ");
+    }
+    let items = 2 + rng.below(4);
+    for _ in 0..items {
+        out.push_str("- ");
+        out.push_str(&wiki_sentence(rng));
+        out.push('\n');
+    }
+    if rng.next_f64() < 0.4 {
+        out.push_str(&format!(
+            "Read more about {} here. Contact us for details.\n",
+            rng.choose(SING_NOUNS)
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let s = CorpusSpec::new(CorpusKind::Wiki2s, Split::Train);
+        assert_eq!(s.generate(2000), s.generate(2000));
+    }
+
+    #[test]
+    fn splits_are_disjoint_streams() {
+        let tr = CorpusSpec::new(CorpusKind::Wiki2s, Split::Train).generate(4000);
+        let te = CorpusSpec::new(CorpusKind::Wiki2s, Split::Test).generate(4000);
+        assert_ne!(tr, te);
+        // No long shared substring at the same offset (streams independent).
+        assert_ne!(&tr[..200], &te[..200]);
+    }
+
+    #[test]
+    fn corpora_differ_by_register() {
+        let w = CorpusSpec::new(CorpusKind::Wiki2s, Split::Test).generate(4000);
+        let c = CorpusSpec::new(CorpusKind::C4s, Split::Test).generate(4000);
+        assert!(w.contains("= "), "wiki has headings");
+        assert!(c.contains("www."), "web has urls");
+        assert!(!w.contains("www."));
+    }
+
+    #[test]
+    fn agreement_regularity_holds() {
+        // In the generated text, "castles ... is" must never occur —
+        // the grammar enforces number agreement.
+        let text = CorpusSpec::new(CorpusKind::Wiki2s, Split::Train).generate(200_000);
+        for plural in PLUR_NOUNS {
+            assert!(
+                !text.contains(&format!("The {plural} of Aldenport is")),
+                "agreement violated for {plural}"
+            );
+        }
+        assert!(text.contains(" is ") && text.contains(" are "));
+    }
+
+    #[test]
+    fn collocations_are_exclusive() {
+        let text = CorpusSpec::new(CorpusKind::Wiki2s, Split::Train).generate(200_000);
+        // "flowing" licenses only river/canal; "flowing castle" must not occur.
+        assert!(!text.contains("flowing castle"));
+        assert!(!text.contains("ancient river"));
+        assert!(text.contains("flowing river") || text.contains("flowing canal"));
+    }
+
+    #[test]
+    fn arithmetic_is_correct_in_corpus() {
+        let text = CorpusSpec::new(CorpusKind::Wiki2s, Split::Train).generate(100_000);
+        assert!(text.contains("plus"));
+        // Spot-check: "two plus two equals four" style lines are consistent.
+        assert!(!text.contains("two plus two equals five"));
+    }
+
+    #[test]
+    fn spell_number_covers_range() {
+        assert_eq!(spell_number(0), "zero");
+        assert_eq!(spell_number(9), "nine");
+        assert_eq!(spell_number(10), "ten");
+        assert_eq!(spell_number(18), "eighteen");
+    }
+
+    #[test]
+    fn generates_requested_length() {
+        let s = CorpusSpec::new(CorpusKind::C4s, Split::Train).generate(50_000);
+        assert!(s.len() >= 50_000);
+        assert!(s.is_ascii(), "byte tokenizer expects ascii corpus");
+    }
+}

@@ -1,0 +1,106 @@
+//! Batch assembly for training, calibration and evaluation.
+
+use crate::tensor::TensorI;
+use crate::util::rng::Pcg64;
+
+use super::corpus::CorpusSpec;
+use super::tokenizer::{ByteTokenizer, Tokenizer};
+
+/// A tokenized corpus with batch samplers.
+pub struct Dataset {
+    pub tokens: Vec<i32>,
+    pub name: String,
+}
+
+impl Dataset {
+    /// Generate and tokenize `n_bytes` of a corpus.
+    pub fn from_corpus(spec: CorpusSpec, n_bytes: usize) -> Dataset {
+        let text = spec.generate(n_bytes);
+        Dataset {
+            tokens: ByteTokenizer.encode(&text),
+            name: format!("{}-{:?}", spec.kind.name(), spec.split),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Sample a `[batch, ctx]` training batch at random offsets.
+pub fn train_batch(ds: &Dataset, batch: usize, ctx: usize, rng: &mut Pcg64) -> TensorI {
+    assert!(ds.len() > ctx + 1, "corpus too small for ctx {ctx}");
+    let mut data = Vec::with_capacity(batch * ctx);
+    for _ in 0..batch {
+        let start = rng.below(ds.len() - ctx - 1);
+        data.extend_from_slice(&ds.tokens[start..start + ctx]);
+    }
+    TensorI::from_vec(&[batch, ctx], data).unwrap()
+}
+
+/// Deterministic, non-overlapping eval batches covering a prefix of the
+/// corpus: `n_batches` of shape `[batch, ctx]`.
+pub fn eval_batches(ds: &Dataset, batch: usize, ctx: usize, n_batches: usize) -> Vec<TensorI> {
+    let needed = n_batches * batch * ctx;
+    assert!(
+        ds.len() >= needed,
+        "corpus has {} tokens, eval needs {needed}",
+        ds.len()
+    );
+    let mut out = Vec::with_capacity(n_batches);
+    let mut off = 0;
+    for _ in 0..n_batches {
+        let mut data = Vec::with_capacity(batch * ctx);
+        for _ in 0..batch {
+            data.extend_from_slice(&ds.tokens[off..off + ctx]);
+            off += ctx;
+        }
+        out.push(TensorI::from_vec(&[batch, ctx], data).unwrap());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{CorpusKind, Split};
+
+    fn ds() -> Dataset {
+        Dataset::from_corpus(CorpusSpec::new(CorpusKind::Wiki2s, Split::Train), 20_000)
+    }
+
+    #[test]
+    fn train_batch_shape_and_range() {
+        let d = ds();
+        let mut rng = Pcg64::seed(0);
+        let b = train_batch(&d, 4, 65, &mut rng);
+        assert_eq!(b.shape, vec![4, 65]);
+        assert!(b.data.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn eval_batches_non_overlapping_and_deterministic() {
+        let d = ds();
+        let a = eval_batches(&d, 2, 64, 3);
+        let b = eval_batches(&d, 2, 64, 3);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0].data, b[0].data);
+        // Consecutive batches tile the corpus without overlap.
+        assert_eq!(a[0].data[64..128], d.tokens[64..128]);
+        assert_eq!(a[1].data[..64], d.tokens[128..192]);
+    }
+
+    #[test]
+    #[should_panic(expected = "eval needs")]
+    fn eval_batches_guard_corpus_size() {
+        let d = Dataset {
+            tokens: vec![0; 100],
+            name: "t".into(),
+        };
+        eval_batches(&d, 4, 64, 2);
+    }
+}

@@ -1,0 +1,17 @@
+//! Data substrate: synthetic corpora, byte-level tokenizer, batch assembly.
+//!
+//! The paper evaluates on WikiText-2 and C4 with public LLaMA checkpoints;
+//! this image is offline, so we train our own models on deterministic
+//! synthetic corpora whose *structure* supports the same experiments
+//! (DESIGN.md §2): an encyclopedic register (`wiki2s`) and a web register
+//! (`c4s`), with embedded regularities (subject–verb agreement, adjective–
+//! noun collocations, spelled-out arithmetic) that the zero-shot suites in
+//! `eval::tasks` probe.
+
+pub mod corpus;
+pub mod dataset;
+pub mod tokenizer;
+
+pub use corpus::{CorpusKind, CorpusSpec, Split};
+pub use dataset::{eval_batches, train_batch, Dataset};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,60 @@
+//! Byte-level tokenizer.
+//!
+//! The models are byte-level (vocab 256) like the smallest LLaMA-family
+//! ablations; a tokenizer trait keeps the serving stack tokenizer-agnostic
+//! should a subword scheme be added later.
+
+/// Tokenizer interface used by the coordinator and evaluation harness.
+pub trait Tokenizer: Send + Sync {
+    fn vocab_size(&self) -> usize;
+    fn encode(&self, text: &str) -> Vec<i32>;
+    fn decode(&self, tokens: &[i32]) -> String;
+}
+
+/// Identity byte tokenizer: token id == byte value.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl Tokenizer for ByteTokenizer {
+    fn vocab_size(&self) -> usize {
+        256
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .map(|&t| t.clamp(0, 255) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "The castle of Aldenport is notable.";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert_eq!(t.vocab_size(), 256);
+    }
+
+    #[test]
+    fn encode_is_byte_identity() {
+        let t = ByteTokenizer;
+        assert_eq!(t.encode("Az"), vec![65, 122]);
+    }
+
+    #[test]
+    fn decode_clamps_out_of_range() {
+        let t = ByteTokenizer;
+        let s = t.decode(&[72, 105, 999, -5]);
+        assert!(s.starts_with("Hi"));
+    }
+}

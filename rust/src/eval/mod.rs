@@ -1,0 +1,8 @@
+//! Evaluation harnesses: teacher-forced perplexity and zero-shot accuracy
+//! under arbitrary KV-cache codecs (paper Tables 1–4).
+
+pub mod ppl;
+pub mod tasks;
+
+pub use ppl::{perplexity, PplMode, PplResult};
+pub use tasks::{task_accuracy, TaskKind, TaskSet};

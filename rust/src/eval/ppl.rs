@@ -1,0 +1,202 @@
+//! Teacher-forced perplexity under a KV-cache codec.
+//!
+//! Protocol (per eval batch, through the single `eval_kv` artifact):
+//!   1. clean pass (`use_q = 0`) → per-token nll + clean pre-RoPE K / V;
+//!   2. codec quantize→dequantize of K and V on the host;
+//!   3. quantized pass (`use_q = 1`) → nll under the quantized cache.
+//!
+//! `PplMode::Fast` substitutes all layers at once (2 executions/batch).
+//! `PplMode::Exact` quantizes progressively layer by layer so that layer
+//! `l`'s activations are computed *under the already-quantized prefix* —
+//! exactly the autoregressive-inference semantics — at L+2 executions/batch
+//! (see DESIGN.md §3.1).
+
+use anyhow::{Context, Result};
+
+use crate::quant::{Codec, KvKind};
+use crate::runtime::engine::{Arg, DevBuf};
+use crate::runtime::{Engine, Value};
+use crate::tensor::{TensorF, TensorI};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PplMode {
+    Fast,
+    Exact,
+}
+
+#[derive(Clone, Debug)]
+pub struct PplResult {
+    pub nll_sum: f64,
+    pub tokens: usize,
+    /// Mean Frobenius² quantization error of keys / values per batch
+    /// (the paper's Fig. 4 right-hand metric).
+    pub k_err: f64,
+    pub v_err: f64,
+}
+
+impl PplResult {
+    pub fn ppl(&self) -> f64 {
+        (self.nll_sum / self.tokens as f64).exp()
+    }
+}
+
+struct EvalArt {
+    name: String,
+    kv_shape: Vec<usize>,
+    n_layers: usize,
+}
+
+fn eval_art(engine: &Engine, model: &str) -> Result<EvalArt> {
+    let name = format!("{model}.eval_kv");
+    let spec = engine.manifest.artifact(&name)?;
+    let kv_shape = spec.inputs[2].shape.clone();
+    Ok(EvalArt { name, n_layers: kv_shape[0], kv_shape })
+}
+
+fn run_eval(
+    engine: &Engine,
+    art: &EvalArt,
+    params: &DevBuf,
+    tokens: &TensorI,
+    khat: &TensorF,
+    vhat: &TensorF,
+    use_q: &[f32],
+) -> Result<(TensorF, TensorF, TensorF)> {
+    let toks = Value::I(tokens.clone());
+    let kh = Value::F(khat.clone());
+    let vh = Value::F(vhat.clone());
+    let uq = Value::F(TensorF::from_vec(&[use_q.len()], use_q.to_vec())?);
+    let out = engine.executable(&art.name)?.run_mixed(&[
+        Arg::B(params),
+        Arg::V(&toks),
+        Arg::V(&kh),
+        Arg::V(&vh),
+        Arg::V(&uq),
+    ])?;
+    let mut it = out.into_iter();
+    let nll = it.next().context("nll")?.into_f()?;
+    let k = it.next().context("k")?.into_f()?;
+    let v = it.next().context("v")?.into_f()?;
+    Ok((nll, k, v))
+}
+
+/// Evaluate perplexity of `model` under `codec` over `batches`
+/// (each `[batch, eval_ctx]`, from `data::eval_batches`).
+pub fn perplexity(
+    engine: &Engine,
+    model: &str,
+    params: &TensorF,
+    codec: &dyn Codec,
+    batches: &[TensorI],
+    mode: PplMode,
+) -> Result<PplResult> {
+    let art = eval_art(engine, model)?;
+    let params = engine.upload(&Value::F(params.clone()))?;
+    let params = &params;
+    let zeros = TensorF::zeros(&art.kv_shape);
+    let mut res = PplResult { nll_sum: 0.0, tokens: 0, k_err: 0.0, v_err: 0.0 };
+
+    for tokens in batches {
+        // 1. clean pass: nll (unused) + clean K/V.
+        let use0 = vec![0.0f32; art.n_layers];
+        let (_, k_clean, v_clean) =
+            run_eval(engine, &art, params, tokens, &zeros, &zeros, &use0)?;
+
+        let nll = match mode {
+            PplMode::Fast => {
+                let mut kq = k_clean.clone();
+                let mut vq = v_clean.clone();
+                codec.apply(KvKind::Key, &mut kq);
+                codec.apply(KvKind::Value, &mut vq);
+                res.k_err += k_clean.sqdiff(&kq);
+                res.v_err += v_clean.sqdiff(&vq);
+                let use1 = vec![1.0f32; art.n_layers];
+                run_eval(engine, &art, params, tokens, &kq, &vq, &use1)?.0
+            }
+            PplMode::Exact => {
+                // Progressive: layer l's K/V are recomputed under the
+                // quantized prefix before being quantized themselves.
+                let mut khat = TensorF::zeros(&art.kv_shape);
+                let mut vhat = TensorF::zeros(&art.kv_shape);
+                let mut use_q = vec![0.0f32; art.n_layers];
+                let mut k_cur = k_clean;
+                let mut v_cur = v_clean;
+                for l in 0..art.n_layers {
+                    // Quantize layer l from the current (prefix-consistent) pass.
+                    let mut kq = slice_layer(&k_cur, l);
+                    let mut vq = slice_layer(&v_cur, l);
+                    codec.apply(KvKind::Key, &mut kq);
+                    codec.apply(KvKind::Value, &mut vq);
+                    res.k_err += slice_layer(&k_cur, l).sqdiff(&kq);
+                    res.v_err += slice_layer(&v_cur, l).sqdiff(&vq);
+                    paste_layer(&mut khat, &kq, l);
+                    paste_layer(&mut vhat, &vq, l);
+                    use_q[l] = 1.0;
+                    if l + 1 < art.n_layers {
+                        let (_, k2, v2) =
+                            run_eval(engine, &art, params, tokens, &khat, &vhat, &use_q)?;
+                        k_cur = k2;
+                        v_cur = v2;
+                    }
+                }
+                run_eval(engine, &art, params, tokens, &khat, &vhat, &use_q)?.0
+            }
+        };
+        res.nll_sum += nll.data.iter().map(|&x| x as f64).sum::<f64>();
+        res.tokens += nll.numel();
+    }
+    let nb = batches.len().max(1) as f64;
+    res.k_err /= nb;
+    res.v_err /= nb;
+    Ok(res)
+}
+
+/// Extract layer `l` of `[L,B,H,T,hd]` as a `[1,B,H,T,hd]` tensor.
+fn slice_layer(src: &TensorF, l: usize) -> TensorF {
+    let per = src.numel() / src.shape[0];
+    let mut shape = src.shape.clone();
+    shape[0] = 1;
+    TensorF::from_vec(&shape, src.data[l * per..(l + 1) * per].to_vec()).unwrap()
+}
+
+/// Write a `[1,B,H,T,hd]` layer slice into layer `l` of `dst`.
+fn paste_layer(dst: &mut TensorF, src: &TensorF, l: usize) {
+    let per = dst.numel() / dst.shape[0];
+    assert_eq!(src.numel(), per);
+    dst.data[l * per..(l + 1) * per].copy_from_slice(&src.data);
+}
+
+/// FP baseline convenience: perplexity with the identity codec.
+pub fn perplexity_fp(
+    engine: &Engine,
+    model: &str,
+    params: &TensorF,
+    batches: &[TensorI],
+) -> Result<PplResult> {
+    perplexity(engine, model, params, &crate::quant::Fp16, batches, PplMode::Fast)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_slice_paste_roundtrip() {
+        let mut src = TensorF::zeros(&[3, 1, 1, 2, 2]);
+        for (i, x) in src.data.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let l1 = slice_layer(&src, 1);
+        assert_eq!(l1.shape, vec![1, 1, 1, 2, 2]);
+        assert_eq!(l1.data, (4..8).map(|x| x as f32).collect::<Vec<_>>());
+        let mut dst = TensorF::zeros(&[3, 1, 1, 2, 2]);
+        paste_layer(&mut dst, &l1, 2);
+        assert_eq!(dst.data[8..12], l1.data[..]);
+    }
+
+    #[test]
+    fn ppl_result_math() {
+        let r = PplResult { nll_sum: 100.0, tokens: 50, k_err: 0.0, v_err: 0.0 };
+        assert!((r.ppl() - (2.0f64).exp()).abs() < 1e-12);
+    }
+}

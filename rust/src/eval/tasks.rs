@@ -1,0 +1,303 @@
+//! Zero-shot multiple-choice suites (the paper's Table 3 analogue).
+//!
+//! Three synthetic tasks probe regularities the corpus grammar embeds
+//! (DESIGN.md §2):
+//!   * `agree`    — subject–verb agreement (WinoGrande-style coreference/
+//!                  agreement resolution);
+//!   * `affinity` — adjective–noun collocation plausibility (PIQA-style
+//!                  "which continuation is physically/semantically licensed");
+//!   * `arith`    — spelled-out addition (ARC-style factual QA).
+//!
+//! Scoring follows the standard zero-shot recipe: each option is appended to
+//! the prompt and scored by total nll of the option tokens under the model —
+//! with the KV cache quantized by the codec under test — and the lowest-nll
+//! option wins.  Items are packed into `eval_kv` batches for throughput.
+
+use anyhow::Result;
+
+use crate::data::corpus::{spell_number, COLLOCATIONS, DIGITS, PLACES, PLUR_NOUNS, SING_NOUNS};
+use crate::quant::{Codec, KvKind};
+use crate::runtime::engine::Arg;
+use crate::runtime::{Engine, Value};
+use crate::tensor::{TensorF, TensorI};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Agree,
+    Affinity,
+    Arith,
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Agree => "agree",
+            TaskKind::Affinity => "affinity",
+            TaskKind::Arith => "arith",
+        }
+    }
+    pub fn all() -> [TaskKind; 3] {
+        [TaskKind::Agree, TaskKind::Affinity, TaskKind::Arith]
+    }
+    pub fn parse(s: &str) -> Option<TaskKind> {
+        TaskKind::all().into_iter().find(|t| t.name() == s)
+    }
+}
+
+/// One multiple-choice item: common prompt + options; `correct` indexes the
+/// licensed option.
+#[derive(Clone, Debug)]
+pub struct Item {
+    pub prompt: String,
+    pub options: Vec<String>,
+    pub correct: usize,
+}
+
+/// A generated task set.
+pub struct TaskSet {
+    pub kind: TaskKind,
+    pub items: Vec<Item>,
+}
+
+impl TaskSet {
+    /// Deterministically generate `n` items (seeded independently of the
+    /// corpus streams so no item text appears verbatim in training data at
+    /// the same positions).
+    pub fn generate(kind: TaskKind, n: usize, seed: u64) -> TaskSet {
+        let mut rng = Pcg64::new(seed, 0xbead + kind.name().len() as u64);
+        let items = (0..n)
+            .map(|_| match kind {
+                TaskKind::Agree => agree_item(&mut rng),
+                TaskKind::Affinity => affinity_item(&mut rng),
+                TaskKind::Arith => arith_item(&mut rng),
+            })
+            .collect();
+        TaskSet { kind, items }
+    }
+}
+
+fn agree_item(rng: &mut Pcg64) -> Item {
+    let singular = rng.next_f64() < 0.5;
+    let noun: &str = if singular {
+        *rng.choose(SING_NOUNS)
+    } else {
+        *rng.choose(PLUR_NOUNS)
+    };
+    let place = rng.choose(PLACES);
+    let prompt = format!("The {} of {} ", noun, place);
+    let (good, bad) = if singular { ("is", "are") } else { ("are", "is") };
+    Item {
+        prompt,
+        options: vec![format!("{good} notable"), format!("{bad} notable")],
+        correct: 0,
+    }
+}
+
+fn affinity_item(rng: &mut Pcg64) -> Item {
+    let (adj, licensed) = rng.choose(COLLOCATIONS);
+    let good: &str = *rng.choose(licensed);
+    // A noun NOT licensed by this adjective.
+    let bad = loop {
+        let cand = *rng.choose(SING_NOUNS);
+        if !licensed.contains(&cand) {
+            break cand;
+        }
+    };
+    Item {
+        prompt: format!("Travellers often mention the {} ", adj),
+        options: vec![good.to_string(), bad.to_string()],
+        correct: 0,
+    }
+}
+
+fn arith_item(rng: &mut Pcg64) -> Item {
+    let a = rng.below(10);
+    let b = rng.below(10);
+    let good = spell_number(a + b);
+    let bad = loop {
+        let w = spell_number(rng.below(19));
+        if w != good {
+            break w;
+        }
+    };
+    Item {
+        prompt: format!("In the ledger, {} plus {} equals ", DIGITS[a], DIGITS[b]),
+        options: vec![format!("{good}."), format!("{bad}.")],
+        correct: 0,
+    }
+}
+
+/// Accuracy of `model` + `codec` on a task set.
+///
+/// Every (item, option) pair becomes one row of an `eval_kv` batch, right-
+/// padded with newline bytes; the option nll is summed over the option's
+/// token positions only.  Quantization uses the same clean-extract → codec →
+/// substituted-eval protocol as `ppl` (fast mode).
+pub fn task_accuracy(
+    engine: &Engine,
+    model: &str,
+    params: &TensorF,
+    codec: &dyn Codec,
+    set: &TaskSet,
+) -> Result<f64> {
+    let art = format!("{model}.eval_kv");
+    let spec = engine.manifest.artifact(&art)?.clone();
+    let batch = spec.inputs[1].shape[0];
+    let ctx = spec.inputs[1].shape[1];
+    let kv_shape = spec.inputs[2].shape.clone();
+    let n_layers = kv_shape[0];
+    let zeros = Value::F(TensorF::zeros(&kv_shape));
+    let params_buf = engine.upload(&Value::F(params.clone()))?;
+    let exe = engine.executable(&art)?;
+
+    // Flatten (item, option) pairs into rows.
+    struct Row {
+        item: usize,
+        option: usize,
+        tokens: Vec<i32>,
+        score_from: usize,
+        score_to: usize,
+    }
+    let mut rows = Vec::new();
+    for (ii, item) in set.items.iter().enumerate() {
+        for (oi, opt) in item.options.iter().enumerate() {
+            let prompt_t: Vec<i32> = item.prompt.bytes().map(|b| b as i32).collect();
+            let opt_t: Vec<i32> = opt.bytes().map(|b| b as i32).collect();
+            let mut tokens = prompt_t.clone();
+            tokens.extend_from_slice(&opt_t);
+            assert!(tokens.len() <= ctx, "item exceeds eval ctx");
+            // nll[j] scores tokens[j+1]; option tokens span
+            // [prompt_len, prompt_len+opt_len) -> nll rows prompt_len-1 ..
+            let score_from = prompt_t.len() - 1;
+            let score_to = tokens.len() - 1;
+            tokens.resize(ctx, b'\n' as i32);
+            rows.push(Row { item: ii, option: oi, tokens, score_from, score_to });
+        }
+    }
+
+    // Score batches.
+    let mut scores: Vec<Vec<f64>> = set
+        .items
+        .iter()
+        .map(|it| vec![0.0; it.options.len()])
+        .collect();
+    for chunk in rows.chunks(batch) {
+        let mut data = Vec::with_capacity(batch * ctx);
+        for r in chunk {
+            data.extend_from_slice(&r.tokens);
+        }
+        // Pad the final partial batch by repeating the last row.
+        while data.len() < batch * ctx {
+            data.extend_from_slice(&chunk.last().unwrap().tokens);
+        }
+        let tokens = Value::I(TensorI::from_vec(&[batch, ctx], data)?);
+
+        // Clean extract.
+        let use0 = Value::F(TensorF::from_vec(&[n_layers], vec![0.0; n_layers])?);
+        let out = exe.run_mixed(&[
+            Arg::B(&params_buf),
+            Arg::V(&tokens),
+            Arg::V(&zeros),
+            Arg::V(&zeros),
+            Arg::V(&use0),
+        ])?;
+        let mut k = out[1].as_f()?.clone();
+        let mut v = out[2].as_f()?.clone();
+        codec.apply(KvKind::Key, &mut k);
+        codec.apply(KvKind::Value, &mut v);
+        let use1 = Value::F(TensorF::from_vec(&[n_layers], vec![1.0; n_layers])?);
+        let k = Value::F(k);
+        let v = Value::F(v);
+        let out = exe.run_mixed(&[
+            Arg::B(&params_buf),
+            Arg::V(&tokens),
+            Arg::V(&k),
+            Arg::V(&v),
+            Arg::V(&use1),
+        ])?;
+        let nll = out[0].as_f()?;
+        let per_row = nll.shape[1];
+        for (bi, r) in chunk.iter().enumerate() {
+            let s: f64 = (r.score_from..r.score_to.min(per_row))
+                .map(|j| nll.data[bi * per_row + j] as f64)
+                .sum();
+            scores[r.item][r.option] = s;
+        }
+    }
+
+    let correct = set
+        .items
+        .iter()
+        .enumerate()
+        .filter(|(ii, item)| {
+            let s = &scores[*ii];
+            let best = s
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            best == item.correct
+        })
+        .count();
+    Ok(correct as f64 / set.items.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = TaskSet::generate(TaskKind::Agree, 10, 1);
+        let b = TaskSet::generate(TaskKind::Agree, 10, 1);
+        assert_eq!(a.items.len(), 10);
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.options, y.options);
+        }
+    }
+
+    #[test]
+    fn agree_items_are_well_formed() {
+        for item in TaskSet::generate(TaskKind::Agree, 50, 2).items {
+            assert_eq!(item.options.len(), 2);
+            assert_eq!(item.correct, 0);
+            assert_ne!(item.options[0], item.options[1]);
+            let plural = PLUR_NOUNS.iter().any(|n| item.prompt.contains(n));
+            if plural {
+                assert!(item.options[0].starts_with("are"));
+            } else {
+                assert!(item.options[0].starts_with("is"));
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_distractor_is_unlicensed() {
+        for item in TaskSet::generate(TaskKind::Affinity, 50, 3).items {
+            let adj = item
+                .prompt
+                .split_whitespace()
+                .last()
+                .unwrap()
+                .to_string();
+            let lic = COLLOCATIONS.iter().find(|(a, _)| *a == adj).unwrap().1;
+            assert!(lic.contains(&item.options[0].as_str()));
+            assert!(!lic.contains(&item.options[1].as_str()));
+        }
+    }
+
+    #[test]
+    fn arith_items_have_correct_answers() {
+        for item in TaskSet::generate(TaskKind::Arith, 50, 4).items {
+            // Parse "In the ledger, X plus Y equals ".
+            let words: Vec<&str> = item.prompt.split_whitespace().collect();
+            let xi = DIGITS.iter().position(|d| *d == words[3]).unwrap();
+            let yi = DIGITS.iter().position(|d| *d == words[5]).unwrap();
+            assert_eq!(item.options[0], format!("{}.", spell_number(xi + yi)));
+            assert_ne!(item.options[0], item.options[1]);
+        }
+    }
+}

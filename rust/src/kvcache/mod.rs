@@ -1,0 +1,338 @@
+//! Quantized KV-cache manager.
+//!
+//! Two representations coexist (DESIGN.md §3.3):
+//!
+//! * **Packed pages** ([`PackedSeqCache`]) — the durable, per-sequence store:
+//!   codes at their true bit width (1 bit/FPN for CQ-8c8b), allocated in
+//!   fixed-size pages.  This is the unit of memory accounting and the thing
+//!   the paper shrinks 16×.
+//! * **Staging tensors** ([`BatchStage`]) — the `i32` code tensors the PJRT
+//!   decode artifact consumes, one slot per batch lane, updated in place so
+//!   the hot loop never re-packs.
+//!
+//! `CacheManager` tracks a global byte budget and exposes the accounting
+//! used by the serve-throughput bench and the von-Neumann traffic model.
+
+use anyhow::{bail, Result};
+
+use crate::quant::pack::{pack_codes, packed_len, unpack_codes};
+use crate::tensor::{TensorF, TensorI};
+
+/// Geometry of one model's quantized cache.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheGeom {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub groups: usize,
+    pub bits: u32,
+    pub tmax: usize,
+}
+
+impl CacheGeom {
+    /// Codes per token (both K and V, all layers/heads).
+    pub fn codes_per_token(&self) -> usize {
+        2 * self.n_layers * self.n_heads * self.groups
+    }
+
+    /// Packed bytes per token.
+    pub fn bytes_per_token(&self) -> usize {
+        packed_len(self.codes_per_token(), self.bits)
+    }
+
+    /// FP16 bytes per token for the same geometry (the paper's baseline).
+    pub fn fp16_bytes_per_token(&self, head_dim: usize) -> usize {
+        2 * self.n_layers * self.n_heads * head_dim * 2
+    }
+}
+
+/// Packed per-sequence cache: one bit-stream page list per (layer, kv, head).
+/// Codes are appended token-at-a-time in [k, v] × layer × head order.
+pub struct PackedSeqCache {
+    pub geom: CacheGeom,
+    pub len: usize,
+    /// Packed code stream; tokens are appended as fixed-width records of
+    /// `codes_per_token` codes, so random access by token index is O(1).
+    data: Vec<u8>,
+    scratch: Vec<u32>,
+    /// `false` for fp-cache sequences: length/byte accounting only, the
+    /// actual floats live in the serve loop's staging tensors.
+    stored: bool,
+    /// fp-mode only: prefill K/V (`[L,1,H,T,hd]`) held until the sequence is
+    /// admitted into a staging lane, then dropped.
+    pub fp_seed: Option<(TensorF, TensorF)>,
+}
+
+impl PackedSeqCache {
+    pub fn new(geom: CacheGeom) -> PackedSeqCache {
+        PackedSeqCache { geom, len: 0, data: Vec::new(), scratch: Vec::new(), stored: true, fp_seed: None }
+    }
+
+    /// Accounting-only cache (fp16 serving baseline): tracks length and
+    /// logical bytes without storing codes.
+    pub fn new_unstored(geom: CacheGeom) -> PackedSeqCache {
+        PackedSeqCache { geom, len: 0, data: Vec::new(), scratch: Vec::new(), stored: false, fp_seed: None }
+    }
+
+    /// Bump the token count without storing codes (unstored mode).
+    pub fn append_unstored(&mut self) -> Result<()> {
+        if self.len >= self.geom.tmax {
+            bail!("cache full ({} tokens)", self.geom.tmax);
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Logical footprint: what this sequence occupies at the configured bit
+    /// width, independent of storage mode (fp16 geometry uses bits=16).
+    pub fn logical_bytes(&self) -> usize {
+        self.len * self.geom.bytes_per_token()
+    }
+
+    /// Append one token's codes: `k_codes`/`v_codes` laid out `[L, H, G]`.
+    pub fn append(&mut self, k_codes: &[u32], v_codes: &[u32]) -> Result<()> {
+        let per_side = self.geom.n_layers * self.geom.n_heads * self.geom.groups;
+        if k_codes.len() != per_side || v_codes.len() != per_side {
+            bail!(
+                "append: want {per_side} codes per side, got {}/{}",
+                k_codes.len(),
+                v_codes.len()
+            );
+        }
+        if self.len >= self.geom.tmax {
+            bail!("cache full ({} tokens)", self.geom.tmax);
+        }
+        self.scratch.clear();
+        self.scratch.extend_from_slice(k_codes);
+        self.scratch.extend_from_slice(v_codes);
+        self.data.extend_from_slice(&pack_codes(&self.scratch, self.geom.bits));
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Read one token's codes back as (k `[L,H,G]`, v `[L,H,G]`).
+    pub fn token(&self, t: usize) -> (Vec<u32>, Vec<u32>) {
+        assert!(self.stored, "unstored (fp) cache holds no codes");
+        assert!(t < self.len);
+        let per_tok = self.geom.bytes_per_token();
+        let per_side = self.geom.n_layers * self.geom.n_heads * self.geom.groups;
+        let rec = &self.data[t * per_tok..(t + 1) * per_tok];
+        let all = unpack_codes(rec, self.geom.bits, 2 * per_side);
+        (all[..per_side].to_vec(), all[per_side..].to_vec())
+    }
+
+    /// Exact packed footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Staging tensors for one decode batch: `[L, B, H, Tmax, G]` i32 for keys
+/// and values, plus per-slot positions.  Lanes map 1:1 to sequences.
+pub struct BatchStage {
+    pub geom: CacheGeom,
+    pub batch: usize,
+    pub k_codes: TensorI,
+    pub v_codes: TensorI,
+    pub pos: Vec<i32>,
+    pub occupied: Vec<bool>,
+}
+
+impl BatchStage {
+    pub fn new(geom: CacheGeom, batch: usize) -> BatchStage {
+        let shape = [geom.n_layers, batch, geom.n_heads, geom.tmax, geom.groups];
+        BatchStage {
+            geom,
+            batch,
+            k_codes: TensorI::zeros(&shape),
+            v_codes: TensorI::zeros(&shape),
+            pos: vec![0; batch],
+            occupied: vec![false; batch],
+        }
+    }
+
+    fn off(&self, l: usize, slot: usize, h: usize, t: usize) -> usize {
+        (((l * self.batch + slot) * self.geom.n_heads + h) * self.geom.tmax + t)
+            * self.geom.groups
+    }
+
+    /// Write one token's codes (`[L,H,G]` per side) at position `t` of `slot`.
+    pub fn write_token(&mut self, slot: usize, t: usize, k: &[u32], v: &[u32]) {
+        let g = self.geom.groups;
+        let mut i = 0;
+        for l in 0..self.geom.n_layers {
+            for h in 0..self.geom.n_heads {
+                let off = self.off(l, slot, h, t);
+                for gi in 0..g {
+                    self.k_codes.data[off + gi] = k[i] as i32;
+                    self.v_codes.data[off + gi] = v[i] as i32;
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Load a whole packed sequence into `slot` (prefill admission).
+    pub fn load_sequence(&mut self, slot: usize, seq: &PackedSeqCache) {
+        assert!(seq.len <= self.geom.tmax);
+        for t in 0..seq.len {
+            let (k, v) = seq.token(t);
+            self.write_token(slot, t, &k, &v);
+        }
+        self.pos[slot] = seq.len.saturating_sub(1) as i32;
+        self.occupied[slot] = true;
+    }
+
+    /// Release a slot (sequence finished).
+    pub fn release(&mut self, slot: usize) {
+        self.occupied[slot] = false;
+        self.pos[slot] = 0;
+    }
+
+    pub fn free_slot(&self) -> Option<usize> {
+        self.occupied.iter().position(|&o| !o)
+    }
+}
+
+/// Global cache accounting across sequences.
+#[derive(Default)]
+pub struct CacheManager {
+    pub bytes_in_use: usize,
+    pub budget: Option<usize>,
+    pub peak: usize,
+}
+
+impl CacheManager {
+    pub fn with_budget(budget: usize) -> CacheManager {
+        CacheManager { budget: Some(budget), ..Default::default() }
+    }
+
+    /// Reserve bytes for a sequence; fails when over budget (the router
+    /// turns this into backpressure).
+    pub fn reserve(&mut self, bytes: usize) -> Result<()> {
+        if let Some(b) = self.budget {
+            if self.bytes_in_use + bytes > b {
+                bail!(
+                    "cache budget exceeded: {} + {bytes} > {b}",
+                    self.bytes_in_use
+                );
+            }
+        }
+        self.bytes_in_use += bytes;
+        self.peak = self.peak.max(self.bytes_in_use);
+        Ok(())
+    }
+
+    pub fn release(&mut self, bytes: usize) {
+        self.bytes_in_use = self.bytes_in_use.saturating_sub(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+
+    fn geom() -> CacheGeom {
+        CacheGeom { n_layers: 2, n_heads: 2, groups: 4, bits: 3, tmax: 8 }
+    }
+
+    #[test]
+    fn bytes_per_token_is_exact() {
+        let g = geom();
+        // 2*2*2*4 = 32 codes * 3 bits = 96 bits = 12 bytes.
+        assert_eq!(g.codes_per_token(), 32);
+        assert_eq!(g.bytes_per_token(), 12);
+        // 1-bit CQ-8c8b example from the paper: hd=64 -> G=8, bits=8:
+        let g1 = CacheGeom { n_layers: 4, n_heads: 4, groups: 8, bits: 8, tmax: 512 };
+        let fp16 = g1.fp16_bytes_per_token(64);
+        assert_eq!(fp16 / g1.bytes_per_token(), 16, "16x compression at 1 bit/FPN");
+    }
+
+    #[test]
+    fn append_and_read_roundtrip() {
+        let mut c = PackedSeqCache::new(geom());
+        let per = 2 * 2 * 4;
+        for t in 0..5 {
+            let k: Vec<u32> = (0..per).map(|i| ((t + i) % 8) as u32).collect();
+            let v: Vec<u32> = (0..per).map(|i| ((t * 3 + i) % 8) as u32).collect();
+            c.append(&k, &v).unwrap();
+        }
+        assert_eq!(c.len, 5);
+        let (k2, v2) = c.token(3);
+        assert_eq!(k2, (0..per).map(|i| ((3 + i) % 8) as u32).collect::<Vec<_>>());
+        assert_eq!(v2, (0..per).map(|i| ((9 + i) % 8) as u32).collect::<Vec<_>>());
+        assert_eq!(c.bytes(), 5 * c.geom.bytes_per_token());
+    }
+
+    #[test]
+    fn cache_capacity_enforced() {
+        let mut c = PackedSeqCache::new(geom());
+        let per = 16;
+        for _ in 0..8 {
+            c.append(&vec![0; per], &vec![0; per]).unwrap();
+        }
+        assert!(c.append(&vec![0; per], &vec![0; per]).is_err());
+    }
+
+    #[test]
+    fn stage_roundtrips_through_sequence_load() {
+        let g = geom();
+        let mut seq = PackedSeqCache::new(g);
+        let per = 16;
+        for t in 0..4 {
+            let k: Vec<u32> = (0..per).map(|i| ((7 * t + i) % 8) as u32).collect();
+            seq.append(&k, &k).unwrap();
+        }
+        let mut stage = BatchStage::new(g, 2);
+        stage.load_sequence(1, &seq);
+        assert_eq!(stage.pos[1], 3);
+        assert!(stage.occupied[1]);
+        // Spot-check a code: token 2, layer 1, head 0, group 3.
+        let (k2, _) = seq.token(2);
+        let idx = stage.off(1, 1, 0, 2) + 3;
+        assert_eq!(stage.k_codes.data[idx], k2[(1 * 2 + 0) * 4 + 3] as i32);
+        stage.release(1);
+        assert_eq!(stage.free_slot(), Some(0));
+    }
+
+    #[test]
+    fn manager_budget_backpressure() {
+        let mut m = CacheManager::with_budget(100);
+        m.reserve(60).unwrap();
+        assert!(m.reserve(50).is_err());
+        m.release(30);
+        m.reserve(50).unwrap();
+        assert_eq!(m.bytes_in_use, 80);
+        assert_eq!(m.peak, 80);
+    }
+
+    #[test]
+    fn prop_packed_roundtrip_random_geometry() {
+        run_prop(20, 21, |rng| {
+            let g = CacheGeom {
+                n_layers: 1 + rng.below(3),
+                n_heads: 1 + rng.below(3),
+                groups: 1 + rng.below(8),
+                bits: 1 + rng.below(10) as u32,
+                tmax: 6,
+            };
+            let per = g.n_layers * g.n_heads * g.groups;
+            let maxc = 1u32 << g.bits;
+            let mut c = PackedSeqCache::new(g);
+            let mut expect = Vec::new();
+            for _ in 0..5 {
+                let k: Vec<u32> = (0..per).map(|_| rng.below(maxc as usize) as u32).collect();
+                let v: Vec<u32> = (0..per).map(|_| rng.below(maxc as usize) as u32).collect();
+                c.append(&k, &v).map_err(|e| e.to_string())?;
+                expect.push((k, v));
+            }
+            for (t, (k, v)) in expect.iter().enumerate() {
+                let (k2, v2) = c.token(t);
+                if &k2 != k || &v2 != v {
+                    return Err(format!("token {t} mismatch"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,64 @@
+//! `cq` — Coupled Quantization KV-cache serving stack.
+//!
+//! Reproduction of *"KV Cache is 1 Bit Per Channel: Efficient Large Language
+//! Model Inference with Coupled Quantization"* (NeurIPS 2024) as a
+//! three-layer Rust + JAX + Pallas system.  This crate is Layer 3: the
+//! coordinator that owns the event loop, the quantized KV cache, request
+//! routing/batching, training/calibration drivers and every experiment
+//! harness.  Layers 1–2 (Pallas kernels + JAX model) are AOT-compiled to
+//! `artifacts/*.hlo.txt` by `python/compile/aot.py` and executed through the
+//! PJRT CPU client (`runtime`); Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md §1 for the paper-system inventory):
+//!
+//! * [`util`]        — substrates the offline image lacks crates for:
+//!                     JSON, RNG, CLI, bench harness, property testing.
+//! * [`tensor`]      — minimal shaped f32/i32 host tensors.
+//! * [`runtime`]     — PJRT engine: manifest, executable registry, literals.
+//! * [`quant`]       — the paper's contribution + baselines: CQ codec,
+//!                     k-means(++/weighted), INT/NF/KVQuant codecs,
+//!                     bit-packing, entropy & correlation estimators.
+//! * [`data`]        — synthetic corpora, byte tokenizer, batch assembly.
+//! * [`train`]       — Rust-driven AOT training loop + checkpoints.
+//! * [`calib`]       — Fisher calibration (activations + gradients).
+//! * [`eval`]        — perplexity + zero-shot suites under any codec.
+//! * [`kvcache`]     — packed quantized cache pages + staging buffers.
+//! * [`coordinator`] — router, continuous batcher, decode scheduler.
+//! * [`server`]      — TCP line-protocol server and client.
+//! * [`metrics`]     — latency/throughput/memory-traffic telemetry.
+
+pub mod bench_support;
+pub mod calib;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod kvcache;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the artifact directory; overridable via `CQ_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Some(p) = std::env::var_os("CQ_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from CWD until a directory containing `artifacts/manifest.json`
+    // is found (tests and benches run from target subdirectories).
+    let mut d = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = d.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !d.pop() {
+            return "artifacts".into();
+        }
+    }
+}

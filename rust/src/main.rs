@@ -1,0 +1,366 @@
+//! `cq-serve` — CLI launcher for the Coupled Quantization serving stack.
+//!
+//! Pipeline (see README Quickstart):
+//!   gen-corpus -> train -> calibrate -> learn-cq -> {eval-ppl, eval-tasks,
+//!   serve / client / generate}
+//!
+//! Every subcommand runs fully in Rust against the AOT artifacts; Python is
+//! only needed once, for `make artifacts`.
+
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use cq::calib::CalibData;
+use cq::coordinator::{Request, ServeConfig, ServeHandle};
+use cq::data::corpus::{CorpusKind, CorpusSpec, Split};
+use cq::data::{eval_batches, Dataset};
+use cq::eval::tasks::{task_accuracy, TaskKind, TaskSet};
+use cq::eval::{perplexity, PplMode};
+use cq::quant::cq::{CqCodebooks, LearnCfg};
+use cq::quant::factory::{build_codec, needs_calibration, parse_cq, FactoryCfg};
+use cq::runtime::Engine;
+use cq::train::{ckpt_dir, load_checkpoint, save_checkpoint, train, TrainCfg};
+use cq::util::cli::Args;
+use cq::util::human_bytes;
+
+const USAGE: &str = "\
+cq-serve — Coupled Quantization KV-cache serving stack
+
+USAGE: cq-serve <command> [flags]
+
+COMMANDS
+  selfcheck                      load artifacts, run one eval step (smoke)
+  info                           print manifest + model inventory
+  train       --model small --steps 400 [--lr 3e-3] [--seed 7]
+  calibrate   --model small [--seqs 16]
+  learn-cq    --model small --spec 8c8b [--no-fisher] [--iters 40]
+  eval-ppl    --model small --codec cq-8c8b [--corpus wiki2s|c4s]
+              [--batches 8] [--exact] [--no-fisher]
+  eval-tasks  --model small --codec cq-8c8b [--items 120]
+  generate    --model small --prompt \"...\" [--max-tokens 48] [--cq 8c8b]
+  serve       --model small --port 7878 [--cq 8c8b] [--batch 8]
+              [--cache-budget-mb 64]
+  client      --port 7878 --prompt \"...\" [--max-tokens 32]
+  gen-corpus  --corpus wiki2s --split train --bytes 200000 [--out file]
+";
+
+fn main() {
+    if std::env::var_os("RUST_LOG").is_some() {
+        // Minimal logger: level-filtered stderr (no env_logger offline).
+        let _ = log::set_boxed_logger(Box::new(StderrLog));
+        log::set_max_level(log::LevelFilter::Info);
+    }
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct StderrLog;
+impl log::Log for StderrLog {
+    fn enabled(&self, m: &log::Metadata) -> bool {
+        m.level() <= log::Level::Info
+    }
+    fn log(&self, r: &log::Record) {
+        if self.enabled(r.metadata()) {
+            eprintln!("[{}] {}", r.level(), r.args());
+        }
+    }
+    fn flush(&self) {}
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "selfcheck" => selfcheck(),
+        "info" => info(),
+        "train" => cmd_train(args),
+        "calibrate" => cmd_calibrate(args),
+        "learn-cq" => cmd_learn_cq(args),
+        "eval-ppl" => cmd_eval_ppl(args),
+        "eval-tasks" => cmd_eval_tasks(args),
+        "generate" => cmd_generate(args),
+        "serve" => cmd_serve(args),
+        "client" => cmd_client(args),
+        "gen-corpus" => cmd_gen_corpus(args),
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn corpus_of(args: &Args, default: &str) -> Result<CorpusKind> {
+    let name = args.str("corpus", default);
+    CorpusKind::parse(&name).with_context(|| format!("unknown corpus '{name}'"))
+}
+
+fn selfcheck() -> Result<()> {
+    let engine = Engine::load_default()?;
+    println!("artifacts: {}", engine.dir.display());
+    let params = engine.init_params("small")?;
+    let ds = Dataset::from_corpus(CorpusSpec::new(CorpusKind::Wiki2s, Split::Test), 40_000);
+    let batches = eval_batches(&ds, 4, engine.manifest.model("small")?.eval_ctx, 1);
+    let r = perplexity(&engine, "small", &params, &cq::quant::Fp16, &batches, PplMode::Fast)?;
+    println!(
+        "selfcheck OK: eval_kv over {} tokens, random-init ppl {:.1} (≈ vocab 256 expected)",
+        r.tokens,
+        r.ppl()
+    );
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let engine = Engine::load_default()?;
+    println!("artifacts dir: {}", engine.dir.display());
+    for (name, m) in &engine.manifest.models {
+        println!(
+            "model {name}: params={} L={} H={} hd={} d={} ctx(train/eval/serve)={}/{}/{}",
+            m.param_count, m.n_layers, m.n_heads, m.head_dim, m.d_model,
+            m.train_ctx, m.eval_ctx, m.serve_ctx
+        );
+    }
+    for (name, a) in &engine.manifest.artifacts {
+        let ins: usize = a.inputs.iter().map(|i| i.numel()).sum();
+        println!("  {name}: {} inputs ({} elems)", a.inputs.len(), ins);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.str("model", "small");
+    let engine = Engine::load_default()?;
+    let params0 = engine.init_params(&model)?;
+    let ds = Dataset::from_corpus(CorpusSpec::new(corpus_of(args, "wiki2s")?, Split::Train), 2_000_000);
+    let cfg = TrainCfg {
+        steps: args.usize("steps", 400),
+        lr_max: args.f64("lr", 3e-3),
+        warmup: args.usize("warmup", 40),
+        seed: args.u64("seed", 7),
+        log_every: args.usize("log-every", 20),
+    };
+    println!("training '{model}' for {} steps on {}", cfg.steps, ds.name);
+    let result = train(&engine, &model, params0, &ds, &cfg)?;
+    let dir = ckpt_dir(&model);
+    save_checkpoint(&dir, &model, &result.params, &result.losses)?;
+    println!(
+        "done: final loss {:.4} in {:.1}s -> {}",
+        result.final_loss,
+        result.secs,
+        dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let model = args.str("model", "small");
+    let engine = Engine::load_default()?;
+    let params = load_checkpoint(&engine, &model, &ckpt_dir(&model))?;
+    let ds = Dataset::from_corpus(CorpusSpec::new(corpus_of(args, "wiki2s")?, Split::Train), 2_000_000);
+    let n_seqs = args.usize("seqs", 16);
+    println!("calibrating '{model}' on {n_seqs} sequences (paper: 16)");
+    let t0 = std::time::Instant::now();
+    let calib = cq::calib::calibrate(&engine, &model, &params, &ds, n_seqs)?;
+    calib.save(&ckpt_dir(&model))?;
+    println!(
+        "calibration saved: K/V {:?} in {:.1}s",
+        calib.k.shape,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_learn_cq(args: &Args) -> Result<()> {
+    let model = args.str("model", "small");
+    let spec = parse_cq(&args.str("spec", "8c8b"))?;
+    let fisher = !args.flag("no-fisher");
+    let engine = Engine::load_default()?;
+    let dir = ckpt_dir(&model);
+    let calib = CalibData::load(&dir)?;
+    let _ = &engine;
+    println!(
+        "learning CQ-{} codebooks (fisher={fisher}, iters={})",
+        spec.tag(),
+        args.usize("iters", 40)
+    );
+    let books = CqCodebooks::learn(
+        spec,
+        &calib.k,
+        &calib.v,
+        fisher.then_some(&calib.gk),
+        fisher.then_some(&calib.gv),
+        LearnCfg { fisher, max_iters: args.usize("iters", 40), seed: args.u64("seed", 0) },
+    );
+    let path = dir.join(format!("cq_{}.cqb", spec.tag()));
+    books.save(&path)?;
+    println!(
+        "saved {} ({} centroid params, learned in {:.1}s)",
+        path.display(),
+        books.centroid_param_count(),
+        books.learn_secs
+    );
+    Ok(())
+}
+
+fn cmd_eval_ppl(args: &Args) -> Result<()> {
+    let model = args.str("model", "small");
+    let codec_name = args.str("codec", "fp16");
+    let engine = Engine::load_default()?;
+    let params = load_checkpoint(&engine, &model, &ckpt_dir(&model))?;
+    let calib = if needs_calibration(&codec_name) {
+        Some(CalibData::load(&ckpt_dir(&model))?)
+    } else {
+        None
+    };
+    let fcfg = FactoryCfg {
+        fisher: !args.flag("no-fisher"),
+        max_iters: args.usize("iters", 40),
+        seed: args.u64("seed", 0),
+    };
+    let codec = build_codec(&codec_name, calib.as_ref(), fcfg)?;
+    let kind = corpus_of(args, "wiki2s")?;
+    let mm = engine.manifest.model(&model)?;
+    let n_batches = args.usize("batches", 8);
+    let ds = Dataset::from_corpus(
+        CorpusSpec::new(kind, Split::Test),
+        n_batches * 4 * mm.eval_ctx + 4096,
+    );
+    let batches = eval_batches(&ds, 4, mm.eval_ctx, n_batches);
+    let mode = if args.flag("exact") { PplMode::Exact } else { PplMode::Fast };
+    let r = perplexity(&engine, &model, &params, codec.as_ref(), &batches, mode)?;
+    println!(
+        "{:<16} bits/FPN {:<5.2} corpus {:<7} ppl {:>9.3}  (kerr {:.1} verr {:.1}, {} tokens)",
+        codec.name(),
+        codec.bits_per_fpn(),
+        kind.name(),
+        r.ppl(),
+        r.k_err,
+        r.v_err,
+        r.tokens
+    );
+    Ok(())
+}
+
+fn cmd_eval_tasks(args: &Args) -> Result<()> {
+    let model = args.str("model", "small");
+    let codec_name = args.str("codec", "fp16");
+    let engine = Engine::load_default()?;
+    let params = load_checkpoint(&engine, &model, &ckpt_dir(&model))?;
+    let calib = if needs_calibration(&codec_name) {
+        Some(CalibData::load(&ckpt_dir(&model))?)
+    } else {
+        None
+    };
+    let codec = build_codec(
+        &codec_name,
+        calib.as_ref(),
+        FactoryCfg { fisher: !args.flag("no-fisher"), max_iters: args.usize("iters", 40), seed: 0 },
+    )?;
+    let n = args.usize("items", 120);
+    for kind in TaskKind::all() {
+        let set = TaskSet::generate(kind, n, 42);
+        let acc = task_accuracy(&engine, &model, &params, codec.as_ref(), &set)?;
+        println!("{:<16} task {:<9} acc {:.2}%", codec.name(), kind.name(), acc * 100.0);
+    }
+    Ok(())
+}
+
+fn serve_config(args: &Args) -> Result<ServeConfig> {
+    let model = args.str("model", "small");
+    let cq_tag = if args.has("cq") { Some(args.str("cq", "8c8b")) } else { None };
+    let dir = ckpt_dir(&model);
+    let codebook_path = cq_tag
+        .as_ref()
+        .map(|t| dir.join(format!("cq_{t}.cqb")));
+    Ok(ServeConfig {
+        model,
+        cq: cq_tag,
+        batch: args.usize("batch", 8),
+        cache_budget: args
+            .has("cache-budget-mb")
+            .then(|| args.usize("cache-budget-mb", 64) * 1024 * 1024),
+        codebook_path,
+        params_path: dir.join("params.bin"),
+        kernel: args.str("kernel", &ServeConfig::default_kernel()),
+    })
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let mut cfg = serve_config(args)?;
+    // Single-stream generation: a batch-1 decode artifact avoids paying for
+    // idle lanes (the serve command keeps the batched default).
+    if !args.has("batch") {
+        cfg.batch = 1;
+    }
+    let handle = ServeHandle::start(cfg);
+    let req = Request {
+        id: 1,
+        prompt: args.str("prompt", "The castle of Aldenport "),
+        max_new: args.usize("max-tokens", 48),
+        temperature: args.f64("temperature", 0.0) as f32,
+        top_k: args.usize("top-k", 0),
+        seed: args.u64("seed", 1),
+    };
+    let resp = handle.submit(req)?;
+    println!("--- completion ({} tokens, cache {}) ---", resp.gen_tokens, human_bytes(resp.cache_bytes));
+    println!("{}", resp.text);
+    println!(
+        "prefill {:.1} ms, decode {:.1} ms ({:.1} tok/s)",
+        resp.prefill_ms,
+        resp.decode_ms,
+        resp.gen_tokens as f64 / (resp.decode_ms / 1e3).max(1e-9)
+    );
+    handle.shutdown()
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = serve_config(args)?;
+    let port = args.usize("port", 7878);
+    println!(
+        "serving model '{}' cache={} batch={}",
+        cfg.model,
+        cfg.cq.clone().unwrap_or_else(|| "fp16".into()),
+        cfg.batch
+    );
+    let handle = ServeHandle::start(cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    cq::server::serve_tcp(&handle, &format!("127.0.0.1:{port}"), stop)?;
+    handle.shutdown()
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let port = args.usize("port", 7878);
+    let resp = cq::server::client_request(
+        &format!("127.0.0.1:{port}"),
+        &args.str("prompt", "The castle of Aldenport "),
+        args.usize("max-tokens", 32),
+        args.f64("temperature", 0.0) as f32,
+    )?;
+    println!("{}", resp.dump());
+    Ok(())
+}
+
+fn cmd_gen_corpus(args: &Args) -> Result<()> {
+    let kind = corpus_of(args, "wiki2s")?;
+    let split = if args.str("split", "train") == "test" { Split::Test } else { Split::Train };
+    let bytes = args.usize("bytes", 200_000);
+    let text = CorpusSpec::new(kind, split).generate(bytes);
+    match args.has("out").then(|| args.str("out", "")) {
+        Some(path) => {
+            std::fs::write(&path, &text)?;
+            println!("wrote {} bytes to {path}", text.len());
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Telemetry: latency histograms, throughput counters, and the von-Neumann
+//! memory-traffic model the paper's §2.2 argument rests on.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-bucketed latency histogram (thread-safe, lock-free).
+pub struct Histogram {
+    /// Buckets: [0, 1µs), [1µs, 2µs), [2µs, 4µs) ... doubling.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..48).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns < 1000 {
+            0
+        } else {
+            (64 - (ns / 1000).leading_zeros() as usize).min(47)
+        }
+    }
+
+    pub fn record(&self, dur: std::time::Duration) {
+        let ns = dur.as_nanos() as u64;
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
+    }
+
+    /// Approximate percentile from bucket upper bounds (µs resolution).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                let upper_us = if i == 0 { 1u64 } else { 1u64 << i };
+                return upper_us as f64 / 1e3;
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Memory-traffic model for one decode step (paper §2.2): every generated
+/// token must read the entire cache of its sequence once.  Comparing fp16
+/// and packed-code traffic gives the bandwidth-bound speedup ceiling.
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficModel {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub bits_per_fpn: f64,
+}
+
+impl TrafficModel {
+    /// Bytes read from cache to decode one token at context length `t`.
+    pub fn bytes_per_decode(&self, t: usize) -> f64 {
+        let fpns = (2 * self.n_layers * self.n_heads * self.head_dim * t) as f64;
+        fpns * self.bits_per_fpn / 8.0
+    }
+
+    /// Speedup ceiling vs an fp16 cache (ratio of traffic).
+    pub fn speedup_vs_fp16(&self) -> f64 {
+        16.0 / self.bits_per_fpn
+    }
+}
+
+/// Serving metrics bundle.
+#[derive(Default)]
+pub struct ServeMetrics {
+    pub queue_wait: Histogram,
+    pub prefill_latency: Histogram,
+    pub decode_step_latency: Histogram,
+    pub request_latency: Histogram,
+    pub tokens_out: Counter,
+    pub requests_done: Counter,
+    pub requests_rejected: Counter,
+}
+
+impl ServeMetrics {
+    pub fn summary(&self, wall_secs: f64) -> String {
+        format!(
+            "requests={} rejected={} tokens={} tput={:.1} tok/s  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms",
+            self.requests_done.get(),
+            self.requests_rejected.get(),
+            self.tokens_out.get(),
+            self.tokens_out.get() as f64 / wall_secs.max(1e-9),
+            self.decode_step_latency.percentile_ms(0.5),
+            self.decode_step_latency.percentile_ms(0.95),
+            self.request_latency.percentile_ms(0.5),
+            self.request_latency.percentile_ms(0.95),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn histogram_records_and_reports() {
+        let h = Histogram::new();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_ms() > 20.0 && h.mean_ms() < 30.0);
+        let p50 = h.percentile_ms(0.5);
+        assert!(p50 >= 2.0 && p50 <= 8.2, "p50={p50}");
+        assert!(h.percentile_ms(1.0) >= 100.0);
+    }
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+    }
+
+    #[test]
+    fn traffic_model_matches_paper_ratios() {
+        let fp = TrafficModel { n_layers: 4, n_heads: 4, head_dim: 64, bits_per_fpn: 16.0 };
+        let cq1 = TrafficModel { bits_per_fpn: 1.0, ..fp };
+        // 16x traffic reduction at 1 bit/FPN.
+        assert!((fp.bytes_per_decode(512) / cq1.bytes_per_decode(512) - 16.0).abs() < 1e-9);
+        assert!((cq1.speedup_vs_fp16() - 16.0).abs() < 1e-9);
+        // Absolute check: fp16, T=512: 2*4*4*64*512 fpns * 2 bytes = 2 MiB.
+        assert_eq!(fp.bytes_per_decode(512) as usize, 2 * 4 * 4 * 64 * 512 * 2);
+    }
+}

@@ -1,0 +1,114 @@
+//! Pearson correlation matrices over activation channels — the measurement
+//! behind the paper's Figure 2 (and Appendix Figures 5–8): channels of
+//! key/value head embeddings are strongly linearly dependent.
+
+/// Pearson correlation between two equal-length samples.
+pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let ma = a.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let (mut sab, mut saa, mut sbb) = (0.0, 0.0, 0.0);
+    for i in 0..a.len() {
+        let da = a[i] as f64 - ma;
+        let db = b[i] as f64 - mb;
+        sab += da * db;
+        saa += da * da;
+        sbb += db * db;
+    }
+    if saa == 0.0 || sbb == 0.0 {
+        return 0.0;
+    }
+    sab / (saa * sbb).sqrt()
+}
+
+/// Full correlation matrix (row-major `[c, c]`) over `channels[c][i]`.
+pub fn corr_matrix(channels: &[Vec<f32>]) -> Vec<f64> {
+    let c = channels.len();
+    let mut m = vec![0.0; c * c];
+    for i in 0..c {
+        m[i * c + i] = 1.0;
+        for j in (i + 1)..c {
+            let r = pearson(&channels[i], &channels[j]);
+            m[i * c + j] = r;
+            m[j * c + i] = r;
+        }
+    }
+    m
+}
+
+/// Mean absolute off-diagonal correlation — the scalar summary printed by
+/// the Figure-2 bench (heat maps are dumped as CSV).
+pub fn mean_abs_offdiag(m: &[f64], c: usize) -> f64 {
+    if c < 2 {
+        return 0.0;
+    }
+    let mut s = 0.0;
+    for i in 0..c {
+        for j in 0..c {
+            if i != j {
+                s += m[i * c + j].abs();
+            }
+        }
+    }
+    s / (c * (c - 1)) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn perfect_correlation() {
+        let a: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let b: Vec<f32> = a.iter().map(|x| 2.0 * x + 1.0).collect();
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        let c: Vec<f32> = a.iter().map(|x| -x).collect();
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_near_zero() {
+        let mut rng = Pcg64::seed(1);
+        let a: Vec<f32> = (0..20000).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..20000).map(|_| rng.normal() as f32).collect();
+        assert!(pearson(&a, &b).abs() < 0.03);
+    }
+
+    #[test]
+    fn constant_channel_yields_zero() {
+        let a = vec![1.0f32; 10];
+        let b: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        assert_eq!(pearson(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn matrix_is_symmetric_with_unit_diagonal() {
+        let mut rng = Pcg64::seed(2);
+        let chans: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..500).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let m = corr_matrix(&chans);
+        for i in 0..4 {
+            assert_eq!(m[i * 4 + i], 1.0);
+            for j in 0..4 {
+                assert!((m[i * 4 + j] - m[j * 4 + i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn mean_abs_offdiag_summary() {
+        // Block of two perfectly correlated + one independent channel.
+        let base: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        let mut rng = Pcg64::seed(3);
+        let noise: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        let m = corr_matrix(&[base.clone(), base.clone(), noise]);
+        let s = mean_abs_offdiag(&m, 3);
+        assert!(s > 0.3 && s < 0.8, "s={s}");
+    }
+}

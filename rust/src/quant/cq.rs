@@ -1,0 +1,453 @@
+//! Coupled Quantization (CQ) — the paper's contribution (§3.2).
+//!
+//! Channels of each key/value head embedding are split into contiguous
+//! groups of `c`; each group is quantized jointly to one of `2^b` learned
+//! multi-channel centroids (notation `CQ-<c>c<b>b`, bits/FPN = b/c).
+//! Codebooks are learned per (layer, K/V, head, group) on a calibration set
+//! with k-means++ (Eq. 5), optionally weighted by the diagonal Fisher
+//! information of the activations (Eq. 6) to preserve salient activations.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::kmeans::{kmeans, KMeans, KMeansCfg};
+use super::{Codec, KvDims, KvKind};
+use crate::tensor::TensorF;
+use crate::util::json::Json;
+
+/// A CQ-<c>c<b>b configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CqSpec {
+    pub channels: usize,
+    pub bits: usize,
+}
+
+impl CqSpec {
+    pub fn new(channels: usize, bits: usize) -> CqSpec {
+        CqSpec { channels, bits }
+    }
+    pub fn n_centroids(&self) -> usize {
+        1 << self.bits
+    }
+    pub fn n_groups(&self, head_dim: usize) -> usize {
+        assert_eq!(head_dim % self.channels, 0);
+        head_dim / self.channels
+    }
+    pub fn bits_per_fpn(&self) -> f64 {
+        self.bits as f64 / self.channels as f64
+    }
+    pub fn tag(&self) -> String {
+        format!("{}c{}b", self.channels, self.bits)
+    }
+}
+
+/// Centroid-learning options.
+#[derive(Clone, Copy, Debug)]
+pub struct LearnCfg {
+    /// Use Fisher-guided weighting (paper Eq. 6) when gradients are given.
+    pub fisher: bool,
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for LearnCfg {
+    fn default() -> Self {
+        LearnCfg { fisher: true, max_iters: 100, seed: 0 }
+    }
+}
+
+/// Learned CQ codebooks for one model: `books[l][kv][h][g]`.
+pub struct CqCodebooks {
+    pub spec: CqSpec,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    books: Vec<KMeans>,
+    /// Wall-clock seconds spent in centroid learning (Table 5).
+    pub learn_secs: f64,
+}
+
+impl CqCodebooks {
+    fn book_index(&self, l: usize, kind: KvKind, h: usize, g: usize) -> usize {
+        let kv = match kind {
+            KvKind::Key => 0,
+            KvKind::Value => 1,
+        };
+        ((l * 2 + kv) * self.n_heads + h) * self.spec.n_groups(self.head_dim) + g
+    }
+
+    pub fn book(&self, l: usize, kind: KvKind, h: usize, g: usize) -> &KMeans {
+        &self.books[self.book_index(l, kind, h, g)]
+    }
+
+    /// Learn codebooks from calibration activations (`k`,`v`: `[L,B,H,T,hd]`)
+    /// and, when `cfg.fisher`, their loss gradients of identical shape.
+    pub fn learn(
+        spec: CqSpec,
+        k: &TensorF,
+        v: &TensorF,
+        gk: Option<&TensorF>,
+        gv: Option<&TensorF>,
+        cfg: LearnCfg,
+    ) -> CqCodebooks {
+        let d = KvDims::of(k);
+        assert_eq!(k.shape, v.shape);
+        let t0 = std::time::Instant::now();
+        let groups = spec.n_groups(d.hd);
+        let mut books =
+            Vec::with_capacity(d.l * 2 * d.h * groups);
+        for l in 0..d.l {
+            for (kind_i, (acts, grads)) in [(k, gk), (v, gv)].into_iter().enumerate() {
+                for h in 0..d.h {
+                    for g in 0..groups {
+                        let (pts, w) = collect_group_points(acts, grads, l, h, g, spec, cfg.fisher);
+                        let km = kmeans(
+                            &pts,
+                            d.n_tokens(),
+                            spec.channels,
+                            w.as_deref(),
+                            KMeansCfg {
+                                k: spec.n_centroids(),
+                                max_iters: cfg.max_iters,
+                                seed: cfg
+                                    .seed
+                                    .wrapping_add((((l * 2 + kind_i) * d.h + h) * groups + g) as u64),
+                            },
+                        );
+                        books.push(km);
+                    }
+                }
+            }
+        }
+        CqCodebooks {
+            spec,
+            n_layers: d.l,
+            n_heads: d.h,
+            head_dim: d.hd,
+            books,
+            learn_secs: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Encode one head vector (`len == head_dim`) to per-group codes.
+    pub fn encode_vec(&self, l: usize, kind: KvKind, h: usize, x: &[f32]) -> Vec<u32> {
+        assert_eq!(x.len(), self.head_dim);
+        let c = self.spec.channels;
+        (0..self.spec.n_groups(self.head_dim))
+            .map(|g| self.book(l, kind, h, g).assign(&x[g * c..(g + 1) * c]) as u32)
+            .collect()
+    }
+
+    /// Decode per-group codes back into a head vector.
+    pub fn decode_vec(&self, l: usize, kind: KvKind, h: usize, codes: &[u32], out: &mut [f32]) {
+        let c = self.spec.channels;
+        for (g, &code) in codes.iter().enumerate() {
+            out[g * c..(g + 1) * c]
+                .copy_from_slice(self.book(l, kind, h, g).centroid(code as usize));
+        }
+    }
+
+    /// Export centroids as the `[L, H, G, K, C]` tensor fed to the
+    /// `decode_cq_*` artifacts.
+    pub fn export_tensor(&self, kind: KvKind) -> TensorF {
+        let g = self.spec.n_groups(self.head_dim);
+        let kk = self.spec.n_centroids();
+        let c = self.spec.channels;
+        let mut t = TensorF::zeros(&[self.n_layers, self.n_heads, g, kk, c]);
+        let mut off = 0;
+        for l in 0..self.n_layers {
+            for h in 0..self.n_heads {
+                for gi in 0..g {
+                    let book = self.book(l, kind, h, gi);
+                    for j in 0..kk {
+                        let src = if j < book.k { book.centroid(j) } else { book.centroid(book.k - 1) };
+                        t.data[off..off + c].copy_from_slice(src);
+                        off += c;
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Centroid parameter count (paper Table 5: `l × 2 × h × hd × 2^b`
+    /// halves — independent of `c` because dims-per-centroid and group count
+    /// trade off exactly).
+    pub fn centroid_param_count(&self) -> usize {
+        // per (l, kv, h): (hd/c) groups × 2^b centroids × c dims = hd · 2^b
+        self.n_layers * 2 * self.n_heads * self.head_dim * self.spec.n_centroids()
+    }
+
+    /// Serialize to `<path>` (JSON header line + raw LE f32 centroids).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let hdr = Json::obj(vec![
+            ("channels", Json::Num(self.spec.channels as f64)),
+            ("bits", Json::Num(self.spec.bits as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("head_dim", Json::Num(self.head_dim as f64)),
+            ("learn_secs", Json::Num(self.learn_secs)),
+        ]);
+        let mut bytes = hdr.dump().into_bytes();
+        bytes.push(b'\n');
+        for b in &self.books {
+            for x in &b.centroids {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a serialized codebook file.
+    pub fn load(path: &Path) -> Result<CqCodebooks> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let nl = bytes
+            .iter()
+            .position(|&b| b == b'\n')
+            .context("missing header line")?;
+        let hdr = Json::parse(std::str::from_utf8(&bytes[..nl])?)?;
+        let spec = CqSpec::new(
+            hdr.req("channels")?.as_usize().context("channels")?,
+            hdr.req("bits")?.as_usize().context("bits")?,
+        );
+        let n_layers = hdr.req("n_layers")?.as_usize().context("n_layers")?;
+        let n_heads = hdr.req("n_heads")?.as_usize().context("n_heads")?;
+        let head_dim = hdr.req("head_dim")?.as_usize().context("head_dim")?;
+        let learn_secs = hdr.num_or("learn_secs", 0.0);
+        let groups = spec.n_groups(head_dim);
+        let n_books = n_layers * 2 * n_heads * groups;
+        let per_book = spec.n_centroids() * spec.channels;
+        let need = n_books * per_book * 4;
+        let payload = &bytes[nl + 1..];
+        if payload.len() != need {
+            bail!("codebook payload: want {need} bytes, got {}", payload.len());
+        }
+        let mut books = Vec::with_capacity(n_books);
+        for bi in 0..n_books {
+            let mut cents = Vec::with_capacity(per_book);
+            for j in 0..per_book {
+                let o = (bi * per_book + j) * 4;
+                cents.push(f32::from_le_bytes([
+                    payload[o],
+                    payload[o + 1],
+                    payload[o + 2],
+                    payload[o + 3],
+                ]));
+            }
+            books.push(KMeans {
+                k: spec.n_centroids(),
+                dim: spec.channels,
+                centroids: cents,
+                inertia: 0.0,
+                iters_run: 0,
+            });
+        }
+        Ok(CqCodebooks { spec, n_layers, n_heads, head_dim, books, learn_secs })
+    }
+}
+
+/// Gather the `[n_tokens, c]` point matrix for one (layer, head, group) and,
+/// if Fisher-guided, the per-token weights `sum_{ch in group} g(A)^2`
+/// (Eq. 6's `g(A)^T g(A)` over the coupled sub-vector).
+fn collect_group_points(
+    acts: &TensorF,
+    grads: Option<&TensorF>,
+    l: usize,
+    h: usize,
+    g: usize,
+    spec: CqSpec,
+    fisher: bool,
+) -> (Vec<f32>, Option<Vec<f32>>) {
+    let d = KvDims::of(acts);
+    let c = spec.channels;
+    let mut pts = Vec::with_capacity(d.n_tokens() * c);
+    let mut w = if fisher && grads.is_some() {
+        Some(Vec::with_capacity(d.n_tokens()))
+    } else {
+        None
+    };
+    for b in 0..d.b {
+        for t in 0..d.t {
+            let off = d.vec_off(l, b, h, t) + g * c;
+            pts.extend_from_slice(&acts.data[off..off + c]);
+            if let (Some(w), Some(gr)) = (w.as_mut(), grads) {
+                let mut s = 0.0f32;
+                for ch in 0..c {
+                    let gi = gr.data[off + ch];
+                    s += gi * gi;
+                }
+                // Guard against all-zero gradients (dead tokens): keep a
+                // small floor so k-means still sees every point.
+                w.push(s.max(1e-12));
+            }
+        }
+    }
+    (pts, w)
+}
+
+/// The CQ codec over full KV tensors — used by the perplexity/accuracy
+/// harness (Tables 1–4).  Holds separate codebooks conceptually keyed by
+/// KvKind inside [`CqCodebooks`].
+pub struct CqCodec {
+    pub books: CqCodebooks,
+    label: String,
+}
+
+impl CqCodec {
+    pub fn new(books: CqCodebooks) -> CqCodec {
+        let label = format!("CQ-{}", books.spec.tag());
+        CqCodec { books, label }
+    }
+
+    pub fn with_label(books: CqCodebooks, label: &str) -> CqCodec {
+        CqCodec { books, label: label.to_string() }
+    }
+}
+
+impl Codec for CqCodec {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn bits_per_fpn(&self) -> f64 {
+        self.books.spec.bits_per_fpn()
+    }
+
+    fn apply(&self, kind: KvKind, a: &mut TensorF) {
+        let d = KvDims::of(a);
+        assert_eq!(d.l, self.books.n_layers);
+        assert_eq!(d.h, self.books.n_heads);
+        assert_eq!(d.hd, self.books.head_dim);
+        let c = self.books.spec.channels;
+        let groups = self.books.spec.n_groups(d.hd);
+        for l in 0..d.l {
+            for h in 0..d.h {
+                for g in 0..groups {
+                    let book = self.books.book(l, kind, h, g);
+                    for b in 0..d.b {
+                        for t in 0..d.t {
+                            let off = d.vec_off(l, b, h, t) + g * c;
+                            book.quantize_vec(&mut a.data[off..off + c]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Correlated two-channel activations: ch1 = ch0 + small noise — the
+    /// regime where coupling should crush independent quantization.
+    fn correlated_kv(l: usize, h: usize, hd: usize, n: usize, seed: u64) -> TensorF {
+        let mut rng = Pcg64::seed(seed);
+        let mut t = TensorF::zeros(&[l, 1, h, n, hd]);
+        for i in 0..t.data.len() / hd {
+            let base = rng.normal() as f32;
+            for c in 0..hd {
+                let corr = base + 0.05 * rng.normal() as f32;
+                t.data[i * hd + c] = if c % 2 == 0 { base } else { corr };
+            }
+        }
+        t
+    }
+
+    fn learn_books(spec: CqSpec, fisher: bool) -> (CqCodebooks, TensorF, TensorF) {
+        let k = correlated_kv(2, 2, 8, 64, 1);
+        let v = correlated_kv(2, 2, 8, 64, 2);
+        let gk = correlated_kv(2, 2, 8, 64, 3);
+        let gv = correlated_kv(2, 2, 8, 64, 4);
+        let cfg = LearnCfg { fisher, max_iters: 30, seed: 0 };
+        let books = CqCodebooks::learn(spec, &k, &v, Some(&gk), Some(&gv), cfg);
+        (books, k, v)
+    }
+
+    #[test]
+    fn coupling_beats_scalar_at_equal_bits() {
+        // 2 bits/FPN budget: CQ-1c2b (scalar) vs CQ-2c4b (coupled).
+        let (scalar, k, _) = learn_books(CqSpec::new(1, 2), false);
+        let (coupled, _, _) = learn_books(CqSpec::new(2, 4), false);
+        let err = |books: CqCodebooks| {
+            let codec = CqCodec::new(books);
+            let mut kq = k.clone();
+            codec.apply(KvKind::Key, &mut kq);
+            k.sqdiff(&kq)
+        };
+        let es = err(scalar);
+        let ec = err(coupled);
+        assert!(
+            ec < es * 0.8,
+            "coupled {ec} should beat scalar {es} on correlated channels"
+        );
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_fixed_point() {
+        let (books, k, _) = learn_books(CqSpec::new(2, 3), false);
+        let d = KvDims::of(&k);
+        let off = d.vec_off(1, 0, 1, 5);
+        let x = &k.data[off..off + d.hd];
+        let codes = books.encode_vec(1, KvKind::Key, 1, x);
+        assert_eq!(codes.len(), 4);
+        let mut decoded = vec![0.0; d.hd];
+        books.decode_vec(1, KvKind::Key, 1, &codes, &mut decoded);
+        // Re-encoding the decoded vector must give identical codes.
+        assert_eq!(books.encode_vec(1, KvKind::Key, 1, &decoded), codes);
+    }
+
+    #[test]
+    fn export_tensor_matches_books() {
+        let (books, _, _) = learn_books(CqSpec::new(4, 2), false);
+        let t = books.export_tensor(KvKind::Value);
+        assert_eq!(t.shape, vec![2, 2, 2, 4, 4]); // [L,H,G,K,C]
+        let c0 = books.book(1, KvKind::Value, 0, 1).centroid(2);
+        let off = t.offset(&[1, 0, 1, 2, 0]);
+        assert_eq!(&t.data[off..off + 4], c0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let (books, k, _) = learn_books(CqSpec::new(2, 4), true);
+        let dir = std::env::temp_dir().join("cq_books_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("books.cqb");
+        books.save(&p).unwrap();
+        let loaded = CqCodebooks::load(&p).unwrap();
+        assert_eq!(loaded.spec, books.spec);
+        let codec_a = CqCodec::new(books);
+        let codec_b = CqCodec::new(loaded);
+        let mut ka = k.clone();
+        let mut kb = k.clone();
+        codec_a.apply(KvKind::Key, &mut ka);
+        codec_b.apply(KvKind::Key, &mut kb);
+        assert_eq!(ka, kb);
+    }
+
+    #[test]
+    fn bits_per_fpn_accounting() {
+        assert_eq!(CqSpec::new(2, 8).bits_per_fpn(), 4.0);
+        assert_eq!(CqSpec::new(4, 8).bits_per_fpn(), 2.0);
+        assert_eq!(CqSpec::new(8, 8).bits_per_fpn(), 1.0);
+        assert_eq!(CqSpec::new(8, 10).bits_per_fpn(), 1.25);
+        assert_eq!(CqSpec::new(8, 10).tag(), "8c10b");
+    }
+
+    #[test]
+    fn quantization_error_shrinks_with_bits() {
+        let (b2, k, _) = learn_books(CqSpec::new(2, 2), false);
+        let (b5, _, _) = learn_books(CqSpec::new(2, 5), false);
+        let err = |books: CqCodebooks| {
+            let codec = CqCodec::new(books);
+            let mut kq = k.clone();
+            codec.apply(KvKind::Key, &mut kq);
+            k.sqdiff(&kq)
+        };
+        assert!(err(b5) < err(b2) * 0.6);
+    }
+}

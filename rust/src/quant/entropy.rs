@@ -1,0 +1,153 @@
+//! Binned (joint) entropy estimation — the information-theoretic measurement
+//! behind the paper's Figure 1 and §3.1 motivation.
+//!
+//! Each channel's support is partitioned into `bins` equally sized bins
+//! (the paper uses 16); values are discretized to bin indices and entropy is
+//! estimated from empirical bin frequencies (Eq. 4).  Joint entropy over a
+//! group of channels uses the product binning, counted sparsely in a hash
+//! map so group sizes up to 4 stay cheap.
+
+use std::collections::HashMap;
+
+/// Per-channel binning: equal-width bins over [min, max].
+pub struct Binner {
+    pub lo: f32,
+    pub width: f32,
+    pub bins: usize,
+}
+
+impl Binner {
+    pub fn fit(values: &[f32], bins: usize) -> Binner {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &x in values {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if !lo.is_finite() || hi <= lo {
+            return Binner { lo: 0.0, width: 1.0, bins };
+        }
+        Binner { lo, width: (hi - lo) / bins as f32, bins }
+    }
+
+    #[inline]
+    pub fn bin(&self, x: f32) -> usize {
+        (((x - self.lo) / self.width) as usize).min(self.bins - 1)
+    }
+}
+
+/// Entropy (bits) of empirical counts.
+fn entropy_of_counts<I: Iterator<Item = u32>>(counts: I, n: usize) -> f64 {
+    let n = n as f64;
+    let mut h = 0.0;
+    for c in counts {
+        if c > 0 {
+            let p = c as f64 / n;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+/// Marginal entropy of one channel, `bins` equal-width bins.
+pub fn marginal_entropy(values: &[f32], bins: usize) -> f64 {
+    let b = Binner::fit(values, bins);
+    let mut counts = vec![0u32; bins];
+    for &x in values {
+        counts[b.bin(x)] += 1;
+    }
+    entropy_of_counts(counts.into_iter(), values.len())
+}
+
+/// Joint entropy of a channel group.  `channels[c][i]` is sample `i` of
+/// channel `c`; all channels must have equal sample counts.
+pub fn joint_entropy(channels: &[&[f32]], bins: usize) -> f64 {
+    assert!(!channels.is_empty());
+    let n = channels[0].len();
+    assert!(channels.iter().all(|c| c.len() == n));
+    assert!(
+        (channels.len() as f64) * (bins as f64).log2() <= 60.0,
+        "group too large for u64 bin keys"
+    );
+    let binners: Vec<Binner> = channels.iter().map(|c| Binner::fit(c, bins)).collect();
+    let mut counts: HashMap<u64, u32> = HashMap::new();
+    for i in 0..n {
+        let mut key = 0u64;
+        for (c, b) in channels.iter().zip(&binners) {
+            key = key * bins as u64 + b.bin(c[i]) as u64;
+        }
+        *counts.entry(key).or_insert(0) += 1;
+    }
+    entropy_of_counts(counts.into_values(), n)
+}
+
+/// Sum of marginal entropies of a channel group (the upper bound in Eq. 3).
+pub fn sum_marginal_entropy(channels: &[&[f32]], bins: usize) -> f64 {
+    channels.iter().map(|c| marginal_entropy(c, bins)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn uniform_bins_hit_log2_bins() {
+        // Perfectly uniform data over 16 bins -> H == 4 bits.
+        let vals: Vec<f32> = (0..1600).map(|i| (i % 16) as f32 + 0.5).collect();
+        let h = marginal_entropy(&vals, 16);
+        assert!((h - 4.0).abs() < 1e-9, "h={h}");
+    }
+
+    #[test]
+    fn constant_channel_has_zero_entropy() {
+        let vals = vec![3.0f32; 100];
+        assert_eq!(marginal_entropy(&vals, 16), 0.0);
+    }
+
+    #[test]
+    fn joint_entropy_of_identical_channels_equals_marginal() {
+        let mut rng = Pcg64::seed(1);
+        let a: Vec<f32> = (0..5000).map(|_| rng.normal() as f32).collect();
+        let hj = joint_entropy(&[&a, &a], 16);
+        let hm = marginal_entropy(&a, 16);
+        assert!((hj - hm).abs() < 1e-9, "joint {hj} vs marginal {hm}");
+    }
+
+    #[test]
+    fn independent_channels_joint_close_to_sum() {
+        let mut rng = Pcg64::seed(2);
+        let a: Vec<f32> = (0..30000).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..30000).map(|_| rng.normal() as f32).collect();
+        let hj = joint_entropy(&[&a, &b], 8);
+        let hs = sum_marginal_entropy(&[&a, &b], 8);
+        // Finite-sample bias pulls joint slightly below the sum.
+        assert!(hj <= hs + 1e-9);
+        assert!(hj > hs - 0.35, "joint {hj} vs sum {hs}");
+    }
+
+    #[test]
+    fn dependent_channels_have_lower_joint_entropy() {
+        // The paper's core observation (Fig. 1): correlated channels'
+        // joint entropy grows sub-linearly.
+        let mut rng = Pcg64::seed(3);
+        let a: Vec<f32> = (0..30000).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = a.iter().map(|&x| x + 0.1 * rng.normal() as f32).collect();
+        let hj = joint_entropy(&[&a, &b], 16);
+        let hs = sum_marginal_entropy(&[&a, &b], 16);
+        assert!(hj < hs - 1.0, "dependency should show: joint {hj} sum {hs}");
+    }
+
+    #[test]
+    fn subadditivity_property() {
+        // H(X1..Xn) <= sum H(Xi) for arbitrary random data (Eq. 3).
+        let mut rng = Pcg64::seed(4);
+        for _ in 0..5 {
+            let n = 2000;
+            let chans: Vec<Vec<f32>> = (0..3)
+                .map(|_| (0..n).map(|_| (rng.normal() * 2.0) as f32).collect())
+                .collect();
+            let refs: Vec<&[f32]> = chans.iter().map(|c| c.as_slice()).collect();
+            assert!(joint_entropy(&refs, 8) <= sum_marginal_entropy(&refs, 8) + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Codec factory: builds every Table-1/2/3 row from its display name.
+//!
+//! Calibration-free codecs (INT/NF/FP16) build directly; calibration-based
+//! codecs (CQ, KVQuant) learn from a [`CalibData`] — the same 16-sequence
+//! WikiText-2-style calibration set the paper uses for both method families.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::calib::CalibData;
+
+use super::cq::{CqCodebooks, CqCodec, CqSpec, LearnCfg};
+use super::intq::IntQ;
+use super::kvquant::KvQuant;
+use super::nf::NfQ;
+use super::{Codec, Fp16};
+
+/// Options for calibration-based codec construction.
+#[derive(Clone, Copy, Debug)]
+pub struct FactoryCfg {
+    pub fisher: bool,
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for FactoryCfg {
+    fn default() -> Self {
+        FactoryCfg { fisher: true, max_iters: 40, seed: 0 }
+    }
+}
+
+/// Canonical codec name list in the paper's Table 1/2 row order.
+pub fn table_rows() -> Vec<&'static str> {
+    vec![
+        "fp16",
+        "int4", "int4-gs128", "nf4", "nf4-gs128", "kvquant-4b", "kvquant-4b-1%", "cq-2c8b",
+        "int2", "int2-gs128", "nf2", "nf2-gs128", "kvquant-2b", "kvquant-2b-1%", "cq-4c8b",
+        "kvquant-1b", "kvquant-1b-1%", "cq-8c8b", "cq-8c10b",
+    ]
+}
+
+/// Whether a codec name needs calibration data.
+pub fn needs_calibration(name: &str) -> bool {
+    let n = name.to_lowercase();
+    n.starts_with("cq-") || n.starts_with("kvquant")
+}
+
+/// Build a codec by name.  `calib` is required for CQ/KVQuant rows.
+pub fn build_codec(
+    name: &str,
+    calib: Option<&CalibData>,
+    cfg: FactoryCfg,
+) -> Result<Box<dyn Codec>> {
+    let n = name.to_lowercase();
+    if n == "fp16" {
+        return Ok(Box::new(Fp16));
+    }
+    if let Some(rest) = n.strip_prefix("int") {
+        let (bits, group) = parse_scalar(rest)?;
+        return Ok(Box::new(IntQ::new(bits, group)));
+    }
+    if let Some(rest) = n.strip_prefix("nf") {
+        let (bits, group) = parse_scalar(rest)?;
+        return Ok(Box::new(NfQ::new(bits, group)));
+    }
+    let calib = calib.ok_or_else(|| anyhow!("codec '{name}' needs calibration data"))?;
+    if let Some(rest) = n.strip_prefix("cq-") {
+        let spec = parse_cq(rest)?;
+        let (gk, gv) = if cfg.fisher {
+            (Some(&calib.gk), Some(&calib.gv))
+        } else {
+            (None, None)
+        };
+        let books = CqCodebooks::learn(
+            spec,
+            &calib.k,
+            &calib.v,
+            gk,
+            gv,
+            LearnCfg { fisher: cfg.fisher, max_iters: cfg.max_iters, seed: cfg.seed },
+        );
+        let codec = if cfg.fisher {
+            CqCodec::new(books)
+        } else {
+            CqCodec::with_label(books, &format!("CQ-{}-uniform", spec.tag()))
+        };
+        return Ok(Box::new(codec));
+    }
+    if let Some(rest) = n.strip_prefix("kvquant-") {
+        // forms: "2b", "2b-1%"
+        let (bits_s, frac) = match rest.split_once("b-") {
+            Some((b, f)) => {
+                let pct: f64 = f
+                    .trim_end_matches('%')
+                    .parse()
+                    .map_err(|_| anyhow!("bad outlier % in '{name}'"))?;
+                (b, pct / 100.0)
+            }
+            None => (rest.trim_end_matches('b'), 0.0),
+        };
+        let bits: u32 = bits_s.parse().map_err(|_| anyhow!("bad bits in '{name}'"))?;
+        let (gk, gv) = if cfg.fisher {
+            (Some(&calib.gk), Some(&calib.gv))
+        } else {
+            (None, None)
+        };
+        return Ok(Box::new(KvQuant::learn(
+            bits,
+            frac,
+            &calib.k,
+            &calib.v,
+            gk,
+            gv,
+            cfg.max_iters,
+            cfg.seed,
+        )));
+    }
+    bail!("unknown codec '{name}' (rows: {:?})", table_rows())
+}
+
+/// Parse "<bits>" or "<bits>-gs<group>".
+fn parse_scalar(s: &str) -> Result<(u32, Option<usize>)> {
+    match s.split_once("-gs") {
+        Some((b, g)) => Ok((
+            b.parse().map_err(|_| anyhow!("bad bits '{b}'"))?,
+            Some(g.parse().map_err(|_| anyhow!("bad group '{g}'"))?),
+        )),
+        None => Ok((s.parse().map_err(|_| anyhow!("bad bits '{s}'"))?, None)),
+    }
+}
+
+/// Parse "<c>c<b>b".
+pub fn parse_cq(s: &str) -> Result<CqSpec> {
+    let (c, rest) = s
+        .split_once('c')
+        .ok_or_else(|| anyhow!("bad CQ spec '{s}' (want e.g. 4c8b)"))?;
+    let b = rest.trim_end_matches('b');
+    Ok(CqSpec::new(
+        c.parse().map_err(|_| anyhow!("bad channels '{c}'"))?,
+        b.parse().map_err(|_| anyhow!("bad bits '{b}'"))?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorF;
+    use crate::util::rng::Pcg64;
+
+    fn fake_calib() -> CalibData {
+        let mut rng = Pcg64::seed(0);
+        let shape = [2, 1, 2, 16, 8];
+        let mut mk = || {
+            let n = crate::tensor::numel(&shape);
+            TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+        };
+        CalibData { k: mk(), v: mk(), gk: mk(), gv: mk() }
+    }
+
+    #[test]
+    fn builds_every_table_row() {
+        let calib = fake_calib();
+        let cfg = FactoryCfg { fisher: true, max_iters: 5, seed: 0 };
+        for name in table_rows() {
+            let codec = build_codec(name, Some(&calib), cfg)
+                .unwrap_or_else(|e| panic!("row {name}: {e:#}"));
+            assert!(codec.bits_per_fpn() > 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn bits_per_fpn_matches_paper_budget() {
+        let calib = fake_calib();
+        let cfg = FactoryCfg { fisher: false, max_iters: 3, seed: 0 };
+        for (name, bits) in [
+            ("cq-2c8b", 4.0),
+            ("cq-4c8b", 2.0),
+            ("cq-8c8b", 1.0),
+            ("cq-8c10b", 1.25),
+            ("int2", 2.0),
+            ("kvquant-1b-1%", 1.32),
+        ] {
+            let c = build_codec(name, Some(&calib), cfg).unwrap();
+            assert!(
+                (c.bits_per_fpn() - bits).abs() < 1e-9,
+                "{name}: {} != {bits}",
+                c.bits_per_fpn()
+            );
+        }
+    }
+
+    #[test]
+    fn calibration_requirement_enforced() {
+        assert!(build_codec("cq-4c8b", None, FactoryCfg::default()).is_err());
+        assert!(build_codec("int4", None, FactoryCfg::default()).is_ok());
+        assert!(needs_calibration("kvquant-2b"));
+        assert!(!needs_calibration("nf4-gs128"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(build_codec("zstd", None, FactoryCfg::default()).is_err());
+        assert!(parse_cq("8x8").is_err());
+        assert_eq!(parse_cq("8c10b").unwrap(), CqSpec::new(8, 10));
+    }
+}

@@ -1,0 +1,202 @@
+//! Uniform integer (INT-b) quantization baseline.
+//!
+//! Matches the INT rows of the paper's Tables 1–2: asymmetric uniform
+//! quantization with keys quantized per-channel and values per-token
+//! (§2.3), either ungrouped (one scale/zero per channel/token) or with
+//! group size 128 along the reduction axis (`-gs128`, +0.25 bits/FPN from
+//! the fp16 scale+zero pair per 128 values).
+
+use super::{gather_channel, scatter_channel, Codec, KvDims, KvKind};
+use crate::tensor::TensorF;
+
+pub struct IntQ {
+    pub bits: u32,
+    /// Group size along the reduction axis; `None` = whole axis.
+    pub group: Option<usize>,
+}
+
+impl IntQ {
+    pub fn new(bits: u32, group: Option<usize>) -> IntQ {
+        IntQ { bits, group }
+    }
+}
+
+/// Asymmetric uniform quantize-dequantize of one slice in place.
+pub fn uniform_qdq(xs: &mut [f32], bits: u32) {
+    let levels = (1u32 << bits) as f32 - 1.0;
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in xs.iter() {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() || hi <= lo {
+        return; // constant or empty slice: exact at any width
+    }
+    let scale = (hi - lo) / levels;
+    for x in xs.iter_mut() {
+        let q = ((*x - lo) / scale).round().clamp(0.0, levels);
+        *x = lo + q * scale;
+    }
+}
+
+/// Apply a per-slice transform over groups of `group` elements.
+pub fn grouped<F: FnMut(&mut [f32])>(xs: &mut [f32], group: Option<usize>, mut f: F) {
+    match group {
+        None => f(xs),
+        Some(g) => {
+            for chunk in xs.chunks_mut(g) {
+                f(chunk);
+            }
+        }
+    }
+}
+
+impl Codec for IntQ {
+    fn name(&self) -> String {
+        match self.group {
+            None => format!("INT{}", self.bits),
+            Some(g) => format!("INT{}-gs{}", self.bits, g),
+        }
+    }
+
+    fn bits_per_fpn(&self) -> f64 {
+        // scale + zero-point as two fp16 per group / per vector.  Ungrouped
+        // variants amortize over the whole reduction axis (the paper's
+        // "4.00-4.01" rows); gs128 adds exactly 32/128 = 0.25.
+        match self.group {
+            Some(g) => self.bits as f64 + 32.0 / g as f64,
+            None => self.bits as f64,
+        }
+    }
+
+    fn apply(&self, kind: KvKind, a: &mut TensorF) {
+        let d = KvDims::of(a);
+        match kind {
+            // Keys: per-channel — quantize each channel's token series.
+            KvKind::Key => {
+                for l in 0..d.l {
+                    for h in 0..d.h {
+                        for ch in 0..d.hd {
+                            let mut vals = gather_channel(a, l, h, ch);
+                            grouped(&mut vals, self.group, |s| uniform_qdq(s, self.bits));
+                            scatter_channel(a, l, h, ch, &vals);
+                        }
+                    }
+                }
+            }
+            // Values: per-token — quantize each token's channel vector.
+            KvKind::Value => {
+                for l in 0..d.l {
+                    for h in 0..d.h {
+                        super::for_each_vec(a, l, h, |_, vec| {
+                            grouped(vec, self.group, |s| uniform_qdq(s, self.bits));
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+    use crate::util::rng::Pcg64;
+
+    fn randn_tensor(shape: &[usize], seed: u64) -> TensorF {
+        let mut rng = Pcg64::seed(seed);
+        let n = crate::tensor::numel(shape);
+        TensorF::from_vec(shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn uniform_qdq_endpoints_exact() {
+        let mut xs = vec![-1.0f32, 0.0, 0.5, 1.0];
+        uniform_qdq(&mut xs, 2);
+        assert_eq!(xs[0], -1.0);
+        assert_eq!(xs[3], 1.0);
+    }
+
+    #[test]
+    fn high_bits_near_lossless() {
+        let mut a = randn_tensor(&[1, 1, 1, 64, 8], 1);
+        let orig = a.clone();
+        IntQ::new(8, None).apply(KvKind::Key, &mut a);
+        let mse = a.sqdiff(&orig) / a.numel() as f64;
+        assert!(mse < 1e-3, "mse={mse}");
+    }
+
+    #[test]
+    fn int2_is_very_lossy() {
+        let mut a = randn_tensor(&[1, 1, 2, 64, 8], 2);
+        let orig = a.clone();
+        IntQ::new(2, None).apply(KvKind::Key, &mut a);
+        let mse = a.sqdiff(&orig) / a.numel() as f64;
+        assert!(mse > 0.01, "INT2 should be lossy, mse={mse}");
+    }
+
+    #[test]
+    fn grouping_reduces_error() {
+        // Channel with a scale shift halfway: grouping isolates the ranges.
+        let mut vals: Vec<f32> = (0..256).map(|i| if i < 128 { i as f32 * 0.01 } else { 100.0 + i as f32 }).collect();
+        let orig = vals.clone();
+        let mut g128 = vals.clone();
+        grouped(&mut vals, None, |s| uniform_qdq(s, 4));
+        grouped(&mut g128, Some(128), |s| uniform_qdq(s, 4));
+        let err = |a: &[f32]| -> f64 {
+            a.iter().zip(&orig).map(|(x, y)| ((x - y) as f64).powi(2)).sum()
+        };
+        assert!(err(&g128) < err(&vals) * 0.5);
+    }
+
+    #[test]
+    fn value_axis_is_per_token() {
+        // A tensor where one token is an extreme outlier: per-token
+        // quantization must keep other tokens accurate.
+        let mut a = randn_tensor(&[1, 1, 1, 8, 16], 3);
+        for c in 0..16 {
+            a.data[3 * 16 + c] = 1000.0;
+        }
+        let orig = a.clone();
+        IntQ::new(4, None).apply(KvKind::Value, &mut a);
+        // Token 0 error unaffected by token 3's scale.
+        let tok0: f64 = (0..16)
+            .map(|c| ((a.data[c] - orig.data[c]) as f64).powi(2))
+            .sum();
+        assert!(tok0 < 0.1, "tok0 err={tok0}");
+    }
+
+    #[test]
+    fn prop_qdq_idempotent_and_bounded() {
+        run_prop(25, 13, |rng| {
+            let bits = 2 + rng.below(6) as u32;
+            let n = 4 + rng.below(60);
+            let mut xs: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 5.0).collect();
+            let (lo, hi) = xs.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(a, b), &x| {
+                (a.min(x), b.max(x))
+            });
+            uniform_qdq(&mut xs, bits);
+            let once = xs.clone();
+            uniform_qdq(&mut xs, bits);
+            if xs != once {
+                return Err("not idempotent".into());
+            }
+            let step = (hi - lo) / ((1u32 << bits) as f32 - 1.0);
+            for &x in &xs {
+                if x < lo - step || x > hi + step {
+                    return Err(format!("value {x} escaped range [{lo},{hi}]"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn names_and_bits() {
+        assert_eq!(IntQ::new(4, None).name(), "INT4");
+        assert_eq!(IntQ::new(4, Some(128)).name(), "INT4-gs128");
+        assert!((IntQ::new(4, Some(128)).bits_per_fpn() - 4.25).abs() < 1e-9);
+        assert_eq!(IntQ::new(2, None).bits_per_fpn(), 2.0);
+    }
+}

@@ -1,0 +1,318 @@
+//! k-means clustering engine: k-means++ initialization (Arthur &
+//! Vassilvitskii 2007) + Lloyd iterations, with optional per-point weights —
+//! the optimizer behind both uniform (paper Eq. 5) and Fisher-guided (Eq. 6)
+//! centroid learning.
+//!
+//! Distances use the MXU-friendly expansion `||x-c||² = ||x||² - 2x·c +
+//! ||c||²` with the `||x||²` term dropped for argmin; the inner loop is a
+//! plain dot product the compiler auto-vectorizes.
+
+use crate::util::rng::Pcg64;
+
+/// Learned centroid table: `k` centroids of dimension `dim`, row-major.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub k: usize,
+    pub dim: usize,
+    pub centroids: Vec<f32>,
+    /// Total weighted quantization error at the final assignment.
+    pub inertia: f64,
+    /// Lloyd iterations actually executed (early-stops on convergence).
+    pub iters_run: usize,
+}
+
+impl KMeans {
+    #[inline]
+    pub fn centroid(&self, j: usize) -> &[f32] {
+        &self.centroids[j * self.dim..(j + 1) * self.dim]
+    }
+
+    /// Index of the nearest centroid to `x` (L2).
+    pub fn assign(&self, x: &[f32]) -> usize {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for j in 0..self.k {
+            let c = self.centroid(j);
+            let mut d = 0.0f32;
+            for i in 0..self.dim {
+                let t = x[i] - c[i];
+                d += t * t;
+            }
+            if d < best_d {
+                best_d = d;
+                best = j;
+            }
+        }
+        best
+    }
+
+    /// Replace `x` with its nearest centroid; returns the code.
+    pub fn quantize_vec(&self, x: &mut [f32]) -> usize {
+        let j = self.assign(x);
+        x.copy_from_slice(self.centroid(j));
+        j
+    }
+}
+
+/// Configuration for a k-means run.
+#[derive(Clone, Copy, Debug)]
+pub struct KMeansCfg {
+    pub k: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for KMeansCfg {
+    fn default() -> Self {
+        // The paper runs 100 Lloyd iterations (§4.3); we keep that cap but
+        // early-stop when assignments stabilize, which in practice happens
+        // far earlier.
+        KMeansCfg { k: 16, max_iters: 100, seed: 0 }
+    }
+}
+
+/// Run (weighted) k-means over `n` points of dimension `dim` stored
+/// row-major in `points`.  `weights` (len `n`) biases both the k-means++
+/// seeding and the Lloyd updates — passing the diagonal Fisher information
+/// yields the paper's Eq. 6 objective; `None` yields uniform Eq. 5.
+pub fn kmeans(points: &[f32], n: usize, dim: usize, weights: Option<&[f32]>, cfg: KMeansCfg) -> KMeans {
+    assert_eq!(points.len(), n * dim);
+    if let Some(w) = weights {
+        assert_eq!(w.len(), n);
+    }
+    assert!(n > 0, "kmeans needs at least one point");
+    let k = cfg.k.min(n.max(1));
+    let mut rng = Pcg64::seed(cfg.seed);
+
+    let wgt = |i: usize| -> f64 {
+        weights.map(|w| (w[i] as f64).max(0.0)).unwrap_or(1.0)
+    };
+    let pt = |i: usize| -> &[f32] { &points[i * dim..(i + 1) * dim] };
+
+    // --- k-means++ seeding (weighted D² sampling) -----------------------
+    let mut centroids = vec![0.0f32; k * dim];
+    let first = rng.weighted(&(0..n).map(wgt).collect::<Vec<_>>());
+    centroids[..dim].copy_from_slice(pt(first));
+    let mut d2 = vec![0.0f64; n]; // weighted distance² to nearest chosen centroid
+    for i in 0..n {
+        d2[i] = sqdist(pt(i), &centroids[..dim]) * wgt(i);
+    }
+    for j in 1..k {
+        let next = rng.weighted(&d2);
+        centroids[j * dim..(j + 1) * dim].copy_from_slice(pt(next));
+        for i in 0..n {
+            let d = sqdist(pt(i), pt(next)) * wgt(i);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+
+    // --- Lloyd iterations ------------------------------------------------
+    let mut assign = vec![0usize; n];
+    let mut iters_run = 0;
+    for _ in 0..cfg.max_iters {
+        iters_run += 1;
+        // Assignment step.
+        let mut changed = false;
+        let km_view = KMeans { k, dim, centroids: centroids.clone(), inertia: 0.0, iters_run: 0 };
+        for i in 0..n {
+            let a = km_view.assign(pt(i));
+            if a != assign[i] {
+                assign[i] = a;
+                changed = true;
+            }
+        }
+        // Update step (weighted means).
+        let mut sums = vec![0.0f64; k * dim];
+        let mut wsum = vec![0.0f64; k];
+        for i in 0..n {
+            let w = wgt(i);
+            let a = assign[i];
+            wsum[a] += w;
+            let p = pt(i);
+            for c in 0..dim {
+                sums[a * dim + c] += w * p[c] as f64;
+            }
+        }
+        for j in 0..k {
+            if wsum[j] > 0.0 {
+                for c in 0..dim {
+                    centroids[j * dim + c] = (sums[j * dim + c] / wsum[j]) as f32;
+                }
+            } else {
+                // Empty cluster: reseed at the point with the largest
+                // weighted error to its current centroid.
+                let mut worst = 0usize;
+                let mut worst_d = -1.0f64;
+                for i in 0..n {
+                    let d = sqdist(pt(i), &centroids[assign[i] * dim..assign[i] * dim + dim])
+                        * wgt(i);
+                    if d > worst_d {
+                        worst_d = d;
+                        worst = i;
+                    }
+                }
+                centroids[j * dim..(j + 1) * dim].copy_from_slice(pt(worst));
+            }
+        }
+        if !changed && iters_run > 1 {
+            break;
+        }
+    }
+
+    // Final inertia.
+    let km = KMeans { k, dim, centroids, inertia: 0.0, iters_run };
+    let inertia: f64 = (0..n)
+        .map(|i| sqdist(pt(i), km.centroid(km.assign(pt(i)))) * wgt(i))
+        .sum();
+    KMeans { inertia, ..km }
+}
+
+/// Specialized 1-D k-means (scalar non-uniform quantization grids for the
+/// KVQuant baseline).  Same semantics as [`kmeans`] with `dim == 1`.
+pub fn kmeans_1d(values: &[f32], weights: Option<&[f32]>, cfg: KMeansCfg) -> KMeans {
+    kmeans(values, values.len(), 1, weights, cfg)
+}
+
+#[inline]
+fn sqdist(a: &[f32], b: &[f32]) -> f64 {
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+    use crate::util::rng::Pcg64;
+
+    fn blobs(rng: &mut Pcg64, centers: &[[f32; 2]], per: usize, spread: f64) -> Vec<f32> {
+        let mut pts = Vec::new();
+        for c in centers {
+            for _ in 0..per {
+                pts.push(c[0] + (rng.normal() * spread) as f32);
+                pts.push(c[1] + (rng.normal() * spread) as f32);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Pcg64::seed(1);
+        let centers = [[-10.0, 0.0], [10.0, 0.0], [0.0, 10.0]];
+        let pts = blobs(&mut rng, &centers, 50, 0.3);
+        let km = kmeans(&pts, 150, 2, None, KMeansCfg { k: 3, max_iters: 50, seed: 2 });
+        // Every true center must be within 0.5 of some learned centroid.
+        for c in &centers {
+            let best = (0..3)
+                .map(|j| {
+                    let cc = km.centroid(j);
+                    ((cc[0] - c[0]).powi(2) + (cc[1] - c[1]).powi(2)).sqrt()
+                })
+                .fold(f32::INFINITY, f32::min);
+            assert!(best < 0.5, "center {c:?} not recovered (best={best})");
+        }
+        assert!(km.inertia < 150.0 * 0.5);
+    }
+
+    #[test]
+    fn k_greater_than_n_is_clamped() {
+        let pts = [0.0f32, 0.0, 1.0, 1.0];
+        let km = kmeans(&pts, 2, 2, None, KMeansCfg { k: 8, max_iters: 10, seed: 0 });
+        assert_eq!(km.k, 2);
+        assert!(km.inertia < 1e-9);
+    }
+
+    #[test]
+    fn weights_pull_centroids() {
+        // Two scalar clusters; give one point a huge weight — with k=1 the
+        // single centroid must sit near the heavy point.
+        let vals = [0.0f32, 0.1, 10.0];
+        let w = [1.0f32, 1.0, 1000.0];
+        let km = kmeans_1d(&vals, Some(&w), KMeansCfg { k: 1, max_iters: 20, seed: 0 });
+        assert!(km.centroids[0] > 9.5, "centroid={}", km.centroids[0]);
+    }
+
+    #[test]
+    fn fisher_weighting_reduces_weighted_error() {
+        let mut rng = Pcg64::seed(3);
+        let n = 400;
+        let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        // Salient points: the right tail.
+        let w: Vec<f32> = vals.iter().map(|&x| if x > 1.0 { 50.0 } else { 1.0 }).collect();
+        let cfg = KMeansCfg { k: 4, max_iters: 60, seed: 4 };
+        let uni = kmeans_1d(&vals, None, cfg);
+        let fis = kmeans_1d(&vals, Some(&w), cfg);
+        let werr = |km: &KMeans| -> f64 {
+            vals.iter()
+                .zip(&w)
+                .map(|(&x, &wi)| {
+                    let c = km.centroid(km.assign(&[x]))[0];
+                    ((x - c) as f64).powi(2) * wi as f64
+                })
+                .sum()
+        };
+        assert!(
+            werr(&fis) < werr(&uni),
+            "fisher={} uniform={}",
+            werr(&fis),
+            werr(&uni)
+        );
+    }
+
+    #[test]
+    fn quantize_vec_replaces_with_centroid() {
+        let pts = [0.0f32, 0.0, 4.0, 4.0];
+        let km = kmeans(&pts, 2, 2, None, KMeansCfg { k: 2, max_iters: 10, seed: 0 });
+        let mut x = [3.7f32, 4.2];
+        let code = km.quantize_vec(&mut x);
+        assert_eq!(&x, km.centroid(code));
+        assert!((x[0] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_inertia_never_exceeds_naive_single_centroid() {
+        run_prop(15, 7, |rng| {
+            let n = 20 + rng.below(60);
+            let dim = 1 + rng.below(4);
+            let pts: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 3.0).collect();
+            let km = kmeans(&pts, n, dim, None, KMeansCfg { k: 4, max_iters: 30, seed: rng.next_u64() });
+            // Single-centroid (mean) inertia is an upper bound for k >= 1.
+            let mut mean = vec![0.0f32; dim];
+            for i in 0..n {
+                for c in 0..dim {
+                    mean[c] += pts[i * dim + c] / n as f32;
+                }
+            }
+            let naive: f64 = (0..n)
+                .map(|i| {
+                    (0..dim)
+                        .map(|c| ((pts[i * dim + c] - mean[c]) as f64).powi(2))
+                        .sum::<f64>()
+                })
+                .sum();
+            if km.inertia <= naive + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("inertia {} > naive {}", km.inertia, naive))
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Pcg64::seed(9);
+        let pts: Vec<f32> = (0..200).map(|_| rng.normal() as f32).collect();
+        let cfg = KMeansCfg { k: 8, max_iters: 40, seed: 5 };
+        let a = kmeans(&pts, 100, 2, None, cfg);
+        let b = kmeans(&pts, 100, 2, None, cfg);
+        assert_eq!(a.centroids, b.centroids);
+    }
+}

@@ -1,0 +1,286 @@
+//! KVQuant-style baseline (Hooper et al. 2024): sensitivity-weighted
+//! non-uniform quantization with optional dense-and-sparse outliers.
+//!
+//! * Keys (pre-RoPE): per-channel non-uniform grids — a 1-D Fisher-weighted
+//!   k-means per (layer, head, channel) learned on calibration data.
+//! * Values: per-token normalization (absmax) + a shared per-layer
+//!   non-uniform grid over normalized magnitudes.
+//! * `-1%` variants: the top-fraction magnitude outliers (threshold taken
+//!   from calibration quantiles per layer/kind) are kept exact, modelling
+//!   the paper's sparse fp16 side-band; accounting adds 32 bits (value +
+//!   index) per outlier → +0.32 bits/FPN at 1 %.
+
+use super::kmeans::{kmeans_1d, KMeans, KMeansCfg};
+use super::{for_each_vec, gather_channel, scatter_channel, Codec, KvDims, KvKind};
+use crate::tensor::TensorF;
+
+pub struct KvQuant {
+    pub bits: u32,
+    /// Fraction of outliers stored exactly (0.0 = dense-only).
+    pub outlier_frac: f64,
+    dims: KvDims,
+    /// `[l][h][ch]` scalar grids for keys.
+    key_books: Vec<KMeans>,
+    /// `[l]` shared normalized-value grids.
+    val_books: Vec<KMeans>,
+    /// `[l]` |x| outlier thresholds per kind, from calibration quantiles.
+    key_thresh: Vec<f32>,
+    val_thresh: Vec<f32>,
+}
+
+impl KvQuant {
+    /// Learn grids on calibration activations (and gradients for Fisher
+    /// weighting, as in KVQuant's sensitivity-weighted objective).
+    pub fn learn(
+        bits: u32,
+        outlier_frac: f64,
+        k: &TensorF,
+        v: &TensorF,
+        gk: Option<&TensorF>,
+        gv: Option<&TensorF>,
+        max_iters: usize,
+        seed: u64,
+    ) -> KvQuant {
+        let d = KvDims::of(k);
+        let kcfg = |s: u64| KMeansCfg { k: 1 << bits, max_iters, seed: s };
+
+        let key_thresh = (0..d.l).map(|l| quantile_abs(k, l, 1.0 - outlier_frac)).collect();
+        let val_thresh = (0..d.l).map(|l| quantile_abs(v, l, 1.0 - outlier_frac)).collect();
+
+        let mut key_books = Vec::with_capacity(d.l * d.h * d.hd);
+        for l in 0..d.l {
+            for h in 0..d.h {
+                for ch in 0..d.hd {
+                    let vals = gather_channel(k, l, h, ch);
+                    let w: Option<Vec<f32>> = gk.map(|g| {
+                        gather_channel(g, l, h, ch)
+                            .iter()
+                            .map(|x| (x * x).max(1e-12))
+                            .collect()
+                    });
+                    key_books.push(kmeans_1d(
+                        &vals,
+                        w.as_deref(),
+                        kcfg(seed.wrapping_add(((l * d.h + h) * d.hd + ch) as u64)),
+                    ));
+                }
+            }
+        }
+
+        // Values: collect per-token-normalized entries per layer.
+        let mut val_books = Vec::with_capacity(d.l);
+        for l in 0..d.l {
+            let mut normed = Vec::new();
+            let mut w = Vec::new();
+            for b in 0..d.b {
+                for h in 0..d.h {
+                    for t in 0..d.t {
+                        let off = d.vec_off(l, b, h, t);
+                        let tok = &v.data[off..off + d.hd];
+                        let s = tok.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                        if s == 0.0 {
+                            continue;
+                        }
+                        for ch in 0..d.hd {
+                            normed.push(tok[ch] / s);
+                            // Error in original space scales by s: weight by
+                            // (g·s)² when gradients are available.
+                            let gw = gv
+                                .map(|g| g.data[off + ch])
+                                .unwrap_or(1.0);
+                            w.push(((gw * s) * (gw * s)).max(1e-12));
+                        }
+                    }
+                }
+            }
+            let wopt = if gv.is_some() { Some(w.as_slice()) } else { None };
+            val_books.push(kmeans_1d(&normed, wopt, kcfg(seed.wrapping_add(7777 + l as u64))));
+        }
+
+        KvQuant {
+            bits,
+            outlier_frac,
+            dims: d,
+            key_books,
+            val_books,
+            key_thresh,
+            val_thresh,
+        }
+    }
+
+    fn key_book(&self, l: usize, h: usize, ch: usize) -> &KMeans {
+        &self.key_books[(l * self.dims.h + h) * self.dims.hd + ch]
+    }
+}
+
+/// |x| quantile of one layer slice (q in [0,1]; q>=1 disables outliers).
+fn quantile_abs(a: &TensorF, l: usize, q: f64) -> f32 {
+    if q >= 1.0 {
+        return f32::INFINITY;
+    }
+    let d = KvDims::of(a);
+    let per_layer = d.b * d.h * d.t * d.hd;
+    let mut mags: Vec<f32> = a.data[l * per_layer..(l + 1) * per_layer]
+        .iter()
+        .map(|x| x.abs())
+        .collect();
+    mags.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let idx = ((mags.len() as f64 - 1.0) * q).round() as usize;
+    mags[idx]
+}
+
+impl Codec for KvQuant {
+    fn name(&self) -> String {
+        if self.outlier_frac > 0.0 {
+            format!("KVQuant-{}b-{}%", self.bits, (self.outlier_frac * 100.0) as u32)
+        } else {
+            format!("KVQuant-{}b", self.bits)
+        }
+    }
+
+    fn bits_per_fpn(&self) -> f64 {
+        // Dense code + (16-bit value + 16-bit index) per sparse outlier.
+        self.bits as f64 + self.outlier_frac * 32.0
+    }
+
+    fn apply(&self, kind: KvKind, a: &mut TensorF) {
+        let d = KvDims::of(a);
+        assert_eq!((d.l, d.h, d.hd), (self.dims.l, self.dims.h, self.dims.hd));
+        match kind {
+            KvKind::Key => {
+                for l in 0..d.l {
+                    let thr = self.key_thresh[l];
+                    for h in 0..d.h {
+                        for ch in 0..d.hd {
+                            let book = self.key_book(l, h, ch);
+                            let mut vals = gather_channel(a, l, h, ch);
+                            for x in vals.iter_mut() {
+                                if x.abs() <= thr {
+                                    *x = book.centroid(book.assign(&[*x]))[0];
+                                }
+                            }
+                            scatter_channel(a, l, h, ch, &vals);
+                        }
+                    }
+                }
+            }
+            KvKind::Value => {
+                for l in 0..d.l {
+                    let thr = self.val_thresh[l];
+                    let book = &self.val_books[l];
+                    for h in 0..d.h {
+                        for_each_vec(a, l, h, |_, tok| {
+                            let s = tok.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                            if s == 0.0 {
+                                return;
+                            }
+                            for x in tok.iter_mut() {
+                                if x.abs() <= thr {
+                                    let u = *x / s;
+                                    *x = book.centroid(book.assign(&[u]))[0] * s;
+                                }
+                            }
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randn_kv(shape: &[usize], seed: u64, outlier_every: usize) -> TensorF {
+        let mut rng = Pcg64::seed(seed);
+        let n = crate::tensor::numel(shape);
+        let mut data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        if outlier_every > 0 {
+            for i in (0..n).step_by(outlier_every) {
+                data[i] *= 50.0;
+            }
+        }
+        TensorF::from_vec(shape, data).unwrap()
+    }
+
+    fn setup(bits: u32, frac: f64) -> (KvQuant, TensorF, TensorF) {
+        let k = randn_kv(&[2, 1, 2, 128, 8], 1, 97);
+        let v = randn_kv(&[2, 1, 2, 128, 8], 2, 101);
+        let q = KvQuant::learn(bits, frac, &k, &v, None, None, 25, 0);
+        (q, k, v)
+    }
+
+    #[test]
+    fn dense_quantization_reduces_precision_gracefully() {
+        let (q, k, _) = setup(4, 0.0);
+        let mut kq = k.clone();
+        q.apply(KvKind::Key, &mut kq);
+        let mse = kq.sqdiff(&k) / k.numel() as f64;
+        assert!(mse < 1.0, "4-bit NUQ mse={mse}");
+    }
+
+    #[test]
+    fn outliers_preserved_exactly_with_sparse_band() {
+        let (q, k, _) = setup(2, 0.01);
+        let mut kq = k.clone();
+        q.apply(KvKind::Key, &mut kq);
+        // The largest-magnitude element must be untouched.
+        let (mut imax, mut vmax) = (0usize, 0.0f32);
+        for (i, &x) in k.data.iter().enumerate() {
+            if x.abs() > vmax {
+                vmax = x.abs();
+                imax = i;
+            }
+        }
+        assert_eq!(kq.data[imax], k.data[imax]);
+    }
+
+    #[test]
+    fn sparse_band_improves_low_bit_error() {
+        let (qd, k, _) = setup(1, 0.0);
+        let (qs, _, _) = setup(1, 0.01);
+        let mut a = k.clone();
+        let mut b = k.clone();
+        qd.apply(KvKind::Key, &mut a);
+        qs.apply(KvKind::Key, &mut b);
+        assert!(
+            b.sqdiff(&k) < a.sqdiff(&k) * 0.8,
+            "sparse {} dense {}",
+            b.sqdiff(&k),
+            a.sqdiff(&k)
+        );
+    }
+
+    #[test]
+    fn fisher_weighting_shifts_grids() {
+        let k = randn_kv(&[1, 1, 1, 64, 4], 3, 0);
+        let v = randn_kv(&[1, 1, 1, 64, 4], 4, 0);
+        let gk = randn_kv(&[1, 1, 1, 64, 4], 5, 0);
+        let gv = randn_kv(&[1, 1, 1, 64, 4], 6, 0);
+        let uni = KvQuant::learn(3, 0.0, &k, &v, None, None, 25, 0);
+        let fis = KvQuant::learn(3, 0.0, &k, &v, Some(&gk), Some(&gv), 25, 0);
+        assert_ne!(uni.key_books[0].centroids, fis.key_books[0].centroids);
+    }
+
+    #[test]
+    fn names_and_accounting() {
+        let (q, _, _) = setup(2, 0.01);
+        assert_eq!(q.name(), "KVQuant-2b-1%");
+        assert!((q.bits_per_fpn() - 2.32).abs() < 1e-9);
+        let (qd, _, _) = setup(4, 0.0);
+        assert_eq!(qd.name(), "KVQuant-4b");
+        assert_eq!(qd.bits_per_fpn(), 4.0);
+    }
+
+    #[test]
+    fn value_path_scales_per_token() {
+        let (q, _, v) = setup(4, 0.0);
+        let mut vq = v.clone();
+        q.apply(KvKind::Value, &mut vq);
+        let mse = vq.sqdiff(&v) / v.numel() as f64;
+        assert!(mse < 1.0, "mse={mse}");
+        assert_ne!(vq, v);
+    }
+}

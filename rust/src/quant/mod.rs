@@ -1,0 +1,238 @@
+//! KV-cache quantization: the paper's contribution (CQ) and every baseline
+//! it is compared against (Tables 1–3), plus the shared infrastructure
+//! (k-means, bit packing, entropy/correlation estimators).
+//!
+//! All codecs implement [`Codec`]: an in-place quantize→dequantize transform
+//! over a KV activation tensor laid out `[L, B, H, T, hd]` (layers, batch,
+//! heads, tokens, head channels).  The evaluation harness extracts clean
+//! K/V through the `eval_kv` artifact, runs a codec over them, and feeds the
+//! result back — so every method is measured through the *same* model path.
+//!
+//! Axis conventions (faithful to the paper §2.3/§3.2):
+//! * keys are quantized **pre-RoPE**;
+//! * scalar baselines quantize keys per-channel and values per-token;
+//! * CQ quantizes both keys and values channel-coupled (groups of `c`
+//!   contiguous channels within a head share one `b`-bit code).
+
+pub mod corr;
+pub mod cq;
+pub mod entropy;
+pub mod intq;
+pub mod kmeans;
+pub mod kvquant;
+pub mod nf;
+pub mod factory;
+pub mod pack;
+
+use crate::tensor::TensorF;
+
+/// Which half of the KV cache a tensor holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvKind {
+    Key,
+    Value,
+}
+
+/// A KV-cache quantization method.
+pub trait Codec: Send + Sync {
+    /// Display name, e.g. `CQ-4c8b` or `KVQuant-2b-1%`.
+    fn name(&self) -> String;
+
+    /// Bits per floating-point number, including per-group scale/zero and
+    /// sparse-outlier overheads, excluding constant codebook storage
+    /// (paper §4 "Bits Per FPN" accounting).
+    fn bits_per_fpn(&self) -> f64;
+
+    /// Quantize-dequantize `a` (layout `[L, B, H, T, hd]`) in place.
+    fn apply(&self, kind: KvKind, a: &mut TensorF);
+}
+
+/// Identity codec — the FP16 row of every table.
+pub struct Fp16;
+
+impl Codec for Fp16 {
+    fn name(&self) -> String {
+        "FP16".into()
+    }
+    fn bits_per_fpn(&self) -> f64 {
+        16.0
+    }
+    fn apply(&self, _kind: KvKind, _a: &mut TensorF) {}
+}
+
+/// Dimensions of a KV activation tensor `[L, B, H, T, hd]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvDims {
+    pub l: usize,
+    pub b: usize,
+    pub h: usize,
+    pub t: usize,
+    pub hd: usize,
+}
+
+impl KvDims {
+    pub fn of(a: &TensorF) -> KvDims {
+        assert_eq!(a.rank(), 5, "KV tensor must be [L,B,H,T,hd], got {:?}", a.shape);
+        KvDims {
+            l: a.shape[0],
+            b: a.shape[1],
+            h: a.shape[2],
+            t: a.shape[3],
+            hd: a.shape[4],
+        }
+    }
+
+    /// Flat offset of the contiguous `[hd]` token vector at (l, b, h, t).
+    #[inline]
+    pub fn vec_off(&self, l: usize, b: usize, h: usize, t: usize) -> usize {
+        (((l * self.b + b) * self.h + h) * self.t + t) * self.hd
+    }
+
+    /// Tokens per (layer, head) slice.
+    pub fn n_tokens(&self) -> usize {
+        self.b * self.t
+    }
+}
+
+/// Visit every token vector (contiguous `&mut [f32]` of length `hd`) of one
+/// (layer, head) pair.
+pub fn for_each_vec<F: FnMut(usize, &mut [f32])>(
+    a: &mut TensorF,
+    l: usize,
+    h: usize,
+    mut f: F,
+) {
+    let d = KvDims::of(a);
+    let mut i = 0;
+    for b in 0..d.b {
+        for t in 0..d.t {
+            let off = d.vec_off(l, b, h, t);
+            f(i, &mut a.data[off..off + d.hd]);
+            i += 1;
+        }
+    }
+}
+
+/// Gather one channel (l, h, dch) across all (b, t) into a vector.
+pub fn gather_channel(a: &TensorF, l: usize, h: usize, dch: usize) -> Vec<f32> {
+    let d = KvDims::of(a);
+    let mut out = Vec::with_capacity(d.n_tokens());
+    for b in 0..d.b {
+        for t in 0..d.t {
+            out.push(a.data[d.vec_off(l, b, h, t) + dch]);
+        }
+    }
+    out
+}
+
+/// Apply a slice transform along the paper's quantization axes: keys
+/// per-channel (the token series of each channel), values per-token (the
+/// channel vector of each token), optionally subdivided into groups of
+/// `group` elements along the reduction axis.
+pub fn grouped_axis_apply<F: FnMut(&mut [f32])>(
+    a: &mut TensorF,
+    kind: KvKind,
+    group: Option<usize>,
+    mut f: F,
+) {
+    let d = KvDims::of(a);
+    let mut run = |s: &mut [f32]| match group {
+        None => f(s),
+        Some(g) => {
+            for chunk in s.chunks_mut(g) {
+                f(chunk);
+            }
+        }
+    };
+    match kind {
+        KvKind::Key => {
+            for l in 0..d.l {
+                for h in 0..d.h {
+                    for ch in 0..d.hd {
+                        let mut vals = gather_channel(a, l, h, ch);
+                        run(&mut vals);
+                        scatter_channel(a, l, h, ch, &vals);
+                    }
+                }
+            }
+        }
+        KvKind::Value => {
+            for l in 0..d.l {
+                for h in 0..d.h {
+                    for_each_vec(a, l, h, |_, v| run(v));
+                }
+            }
+        }
+    }
+}
+
+/// Scatter a channel back (inverse of [`gather_channel`]).
+pub fn scatter_channel(a: &mut TensorF, l: usize, h: usize, dch: usize, vals: &[f32]) {
+    let d = KvDims::of(a);
+    assert_eq!(vals.len(), d.n_tokens());
+    let mut i = 0;
+    for b in 0..d.b {
+        for t in 0..d.t {
+            let off = d.vec_off(l, b, h, t) + dch;
+            a.data[off] = vals[i];
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_tensor(shape: &[usize]) -> TensorF {
+        let n = crate::tensor::numel(shape);
+        TensorF::from_vec(shape, (0..n).map(|x| x as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn fp16_is_identity() {
+        let mut a = seq_tensor(&[1, 1, 1, 2, 3]);
+        let before = a.clone();
+        Fp16.apply(KvKind::Key, &mut a);
+        assert_eq!(a, before);
+        assert_eq!(Fp16.bits_per_fpn(), 16.0);
+    }
+
+    #[test]
+    fn vec_off_matches_tensor_indexing() {
+        let a = seq_tensor(&[2, 3, 4, 5, 6]);
+        let d = KvDims::of(&a);
+        assert_eq!(
+            a.data[d.vec_off(1, 2, 3, 4)],
+            a.at(&[1, 2, 3, 4, 0])
+        );
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut a = seq_tensor(&[2, 2, 2, 3, 4]);
+        let orig = a.clone();
+        let ch = gather_channel(&a, 1, 0, 2);
+        assert_eq!(ch.len(), 6);
+        let doubled: Vec<f32> = ch.iter().map(|x| x * 2.0).collect();
+        scatter_channel(&mut a, 1, 0, 2, &doubled);
+        let back = gather_channel(&a, 1, 0, 2);
+        assert_eq!(back, doubled);
+        // Other channels untouched.
+        assert_eq!(gather_channel(&a, 1, 0, 1), gather_channel(&orig, 1, 0, 1));
+    }
+
+    #[test]
+    fn for_each_vec_visits_all_tokens_contiguously() {
+        let mut a = seq_tensor(&[1, 2, 2, 3, 4]);
+        let mut count = 0;
+        for_each_vec(&mut a, 0, 1, |i, v| {
+            assert_eq!(v.len(), 4);
+            assert_eq!(i, count);
+            count += 1;
+            // Vectors are contiguous: consecutive channel values.
+            assert_eq!(v[1] - v[0], 1.0);
+        });
+        assert_eq!(count, 6);
+    }
+}

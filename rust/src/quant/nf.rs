@@ -1,0 +1,206 @@
+//! NormalFloat (NF-b) quantization baseline (Dettmers et al., QLoRA).
+//!
+//! NF-b places its 2^b levels at evenly spaced quantiles of N(0,1) —
+//! information-theoretically optimal for normally distributed data — then
+//! scales each channel (keys) or token (values) into [-1, 1] by its absmax.
+//! The level nearest zero is snapped to exactly 0, as in the QLoRA grid.
+//! `-gs128` applies the absmax per group of 128 along the reduction axis.
+
+use super::{grouped_axis_apply, Codec, KvKind};
+use crate::tensor::TensorF;
+
+/// Inverse standard-normal CDF (Acklam's rational approximation, |ε|<1.15e-9).
+pub fn probit(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "probit domain: {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let pl = 0.02425;
+    if p < pl {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - pl {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -probit(1.0 - p)
+    }
+}
+
+/// Build the NF-b level grid in [-1, 1] with 0 exactly representable.
+pub fn nf_levels(bits: u32) -> Vec<f32> {
+    let m = 1usize << bits;
+    let delta = 1.0 / (2.0 * m as f64 + 2.0);
+    let mut lv: Vec<f64> = (0..m)
+        .map(|i| probit(delta + (1.0 - 2.0 * delta) * i as f64 / (m - 1) as f64))
+        .collect();
+    let maxab = lv.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+    for x in lv.iter_mut() {
+        *x /= maxab;
+    }
+    // Snap the level nearest zero to exactly zero (QLoRA property).
+    let zi = lv
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    lv[zi] = 0.0;
+    lv.iter().map(|&x| x as f32).collect()
+}
+
+/// Quantize-dequantize one slice against the normalized grid: absmax scale,
+/// nearest level, rescale.
+pub fn nf_qdq(xs: &mut [f32], levels: &[f32]) {
+    let absmax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    if absmax == 0.0 {
+        return;
+    }
+    for x in xs.iter_mut() {
+        let u = *x / absmax;
+        let mut best = levels[0];
+        let mut bd = (u - best).abs();
+        for &lv in &levels[1..] {
+            let d = (u - lv).abs();
+            if d < bd {
+                bd = d;
+                best = lv;
+            }
+        }
+        *x = best * absmax;
+    }
+}
+
+pub struct NfQ {
+    pub bits: u32,
+    pub group: Option<usize>,
+    levels: Vec<f32>,
+}
+
+impl NfQ {
+    pub fn new(bits: u32, group: Option<usize>) -> NfQ {
+        NfQ { bits, group, levels: nf_levels(bits) }
+    }
+}
+
+impl Codec for NfQ {
+    fn name(&self) -> String {
+        match self.group {
+            None => format!("NF{}", self.bits),
+            Some(g) => format!("NF{}-gs{}", self.bits, g),
+        }
+    }
+
+    fn bits_per_fpn(&self) -> f64 {
+        match self.group {
+            Some(g) => self.bits as f64 + 16.0 / g as f64, // one fp16 absmax per group
+            None => self.bits as f64,
+        }
+    }
+
+    fn apply(&self, kind: KvKind, a: &mut TensorF) {
+        grouped_axis_apply(a, kind, self.group, |s| nf_qdq(s, &self.levels));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::KvDims;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn probit_known_values() {
+        assert!((probit(0.5)).abs() < 1e-9);
+        assert!((probit(0.975) - 1.959964).abs() < 1e-5);
+        assert!((probit(0.0013498980316301) + 3.0).abs() < 1e-6);
+        assert!((probit(0.84134474606854) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nf4_grid_properties() {
+        let lv = nf_levels(4);
+        assert_eq!(lv.len(), 16);
+        assert_eq!(lv[0], -1.0);
+        assert_eq!(*lv.last().unwrap(), 1.0);
+        assert!(lv.contains(&0.0));
+        assert!(lv.windows(2).all(|w| w[0] < w[1]), "monotone: {lv:?}");
+        // Denser near zero than near the tails (normal-quantile property).
+        let near = lv[8] - lv[7];
+        let far = lv[15] - lv[14];
+        assert!(near.abs() < far.abs());
+    }
+
+    #[test]
+    fn nf2_grid() {
+        let lv = nf_levels(2);
+        assert_eq!(lv.len(), 4);
+        assert!(lv.contains(&0.0));
+        assert_eq!(lv[0], -1.0);
+    }
+
+    #[test]
+    fn nf_beats_int_on_gaussian_data() {
+        let mut rng = Pcg64::seed(1);
+        let orig: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        let mut nf = orig.clone();
+        nf_qdq(&mut nf, &nf_levels(4));
+        let mut int = orig.clone();
+        super::super::intq::uniform_qdq(&mut int, 4);
+        let err = |a: &[f32]| -> f64 {
+            a.iter().zip(&orig).map(|(x, y)| ((x - y) as f64).powi(2)).sum()
+        };
+        assert!(err(&nf) < err(&int), "nf={} int={}", err(&nf), err(&int));
+    }
+
+    #[test]
+    fn zero_slice_is_noop() {
+        let mut xs = vec![0.0f32; 8];
+        nf_qdq(&mut xs, &nf_levels(4));
+        assert!(xs.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn codec_applies_over_kv_axes() {
+        let mut rng = Pcg64::seed(2);
+        let shape = [1, 1, 2, 16, 8];
+        let n = crate::tensor::numel(&shape);
+        let mut a =
+            TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap();
+        let orig = a.clone();
+        NfQ::new(4, None).apply(KvKind::Key, &mut a);
+        let d = KvDims::of(&a);
+        assert_eq!(d.hd, 8);
+        let mse = a.sqdiff(&orig) / n as f64;
+        assert!(mse > 0.0 && mse < 0.05, "mse={mse}");
+    }
+}

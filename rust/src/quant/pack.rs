@@ -1,0 +1,113 @@
+//! Bit-packing of quantization codes.
+//!
+//! The KV cache stores codes at their true width (1–10 bits each, LSB-first
+//! within a little-endian bit stream), which is what makes the paper's
+//! "1 bit per channel" footprint real on the Rust side: a CQ-8c8b cache of
+//! `T` tokens × `G` groups occupies exactly `ceil(T*G*8 / 8)` bytes.
+
+/// Pack `codes` (each `< 2^bits`) into an LSB-first bit stream.
+pub fn pack_codes(codes: &[u32], bits: u32) -> Vec<u8> {
+    assert!((1..=32).contains(&bits));
+    let total_bits = codes.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(bits == 32 || c < (1u32 << bits), "code {c} exceeds {bits} bits");
+        let mut v = c as u64;
+        let mut remaining = bits;
+        while remaining > 0 {
+            let byte = bitpos / 8;
+            let off = (bitpos % 8) as u32;
+            let take = remaining.min(8 - off);
+            out[byte] |= (((v & ((1u64 << take) - 1)) as u8) << off) as u8;
+            v >>= take;
+            bitpos += take as usize;
+            remaining -= take;
+        }
+    }
+    out
+}
+
+/// Unpack `n` codes of `bits` width from an LSB-first bit stream.
+pub fn unpack_codes(bytes: &[u8], bits: u32, n: usize) -> Vec<u32> {
+    assert!((1..=32).contains(&bits));
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let mut v: u64 = 0;
+        let mut got = 0u32;
+        while got < bits {
+            let byte = bitpos / 8;
+            let off = (bitpos % 8) as u32;
+            let take = (bits - got).min(8 - off);
+            let chunk = ((bytes[byte] >> off) & ((1u16 << take) - 1) as u8) as u64;
+            v |= chunk << got;
+            got += take;
+            bitpos += take as usize;
+        }
+        out.push(v as u32);
+    }
+    out
+}
+
+/// Bytes needed to store `n` codes of `bits` width.
+pub fn packed_len(n: usize, bits: u32) -> usize {
+    (n * bits as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+
+    #[test]
+    fn roundtrip_small_widths() {
+        for bits in [1u32, 2, 3, 4, 5, 7, 8, 10, 12] {
+            let max = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let codes: Vec<u32> = (0..37u32).map(|i| i.wrapping_mul(2654435761) & max).collect();
+            let packed = pack_codes(&codes, bits);
+            assert_eq!(packed.len(), packed_len(codes.len(), bits));
+            let back = unpack_codes(&packed, bits, codes.len());
+            assert_eq!(back, codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn one_bit_density() {
+        let codes = vec![1u32; 16];
+        let packed = pack_codes(&codes, 1);
+        assert_eq!(packed, vec![0xff, 0xff]);
+    }
+
+    #[test]
+    fn ten_bit_crosses_byte_boundaries() {
+        let codes = vec![0x3ffu32, 0, 0x2aa, 0x155];
+        let packed = pack_codes(&codes, 10);
+        assert_eq!(packed.len(), 5);
+        assert_eq!(unpack_codes(&packed, 10, 4), codes);
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        run_prop(40, 11, |rng| {
+            let bits = 1 + rng.below(12) as u32;
+            let n = 1 + rng.below(200);
+            let max = (1u64 << bits) as u32;
+            let codes: Vec<u32> = (0..n).map(|_| rng.below(max as usize) as u32).collect();
+            let back = unpack_codes(&pack_codes(&codes, bits), bits, n);
+            if back == codes {
+                Ok(())
+            } else {
+                Err(format!("mismatch at bits={bits} n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn packed_len_exact() {
+        assert_eq!(packed_len(8, 1), 1);
+        assert_eq!(packed_len(9, 1), 2);
+        assert_eq!(packed_len(3, 10), 4); // 30 bits -> 4 bytes
+        assert_eq!(packed_len(4, 8), 4);
+    }
+}

@@ -1,0 +1,289 @@
+//! PJRT execution engine.
+//!
+//! Loads HLO-text artifacts, compiles them on the PJRT CPU client
+//! (compile-on-first-use, cached for the process lifetime) and executes them
+//! with host tensors.  Inputs are validated against the manifest so a
+//! shape/dtype mismatch fails loudly at the boundary instead of inside XLA.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+use crate::tensor::{TensorF, TensorI};
+
+/// A host value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F(TensorF),
+    I(TensorI),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F(t) => &t.shape,
+            Value::I(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F(_) => DType::F32,
+            Value::I(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f(&self) -> Result<&TensorF> {
+        match self {
+            Value::F(t) => Ok(t),
+            Value::I(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i(&self) -> Result<&TensorI> {
+        match self {
+            Value::I(t) => Ok(t),
+            Value::F(_) => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    pub fn into_f(self) -> Result<TensorF> {
+        match self {
+            Value::F(t) => Ok(t),
+            Value::I(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_i(self) -> Result<TensorI> {
+        match self {
+            Value::I(t) => Ok(t),
+            Value::F(_) => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// Scalar f32 convenience constructor.
+    pub fn scalar_f(x: f32) -> Value {
+        Value::F(TensorF { shape: vec![], data: vec![x] })
+    }
+
+    /// Upload directly host->device without an intermediate literal copy.
+    fn to_device(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        Ok(match self {
+            Value::F(t) => client.buffer_from_host_buffer(&t.data, &t.shape, None)?,
+            Value::I(t) => client.buffer_from_host_buffer(&t.data, &t.shape, None)?,
+        })
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &ArgSpec2) -> Result<Value> {
+        match spec.dtype {
+            DType::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                Ok(Value::F(TensorF::from_vec(&spec.shape, data)?))
+            }
+            DType::I32 => {
+                let data = lit.to_vec::<i32>()?;
+                Ok(Value::I(TensorI::from_vec(&spec.shape, data)?))
+            }
+        }
+    }
+}
+
+// Local alias to avoid pulling ArgSpec's name field through.
+struct ArgSpec2 {
+    dtype: DType,
+    shape: Vec<usize>,
+}
+
+/// A compiled executable plus its manifest spec.
+pub struct Exe {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// An argument to [`Exe::run_mixed`]: a host tensor (uploaded per call) or a
+/// resident device buffer (uploaded once via [`Engine::upload`]) — the hot
+/// path keeps the 13 MB parameter vector and the centroid tables resident.
+pub enum Arg<'a> {
+    V(&'a Value),
+    B(&'a DevBuf),
+}
+
+/// A device-resident input (wraps a PJRT buffer plus its spec for
+/// validation).
+pub struct DevBuf {
+    buf: xla::PjRtBuffer,
+    dtype: DType,
+    shape: Vec<usize>,
+}
+
+impl Exe {
+    /// Execute with host values; validates shapes/dtypes against the spec.
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        let args: Vec<Arg> = inputs.iter().map(Arg::V).collect();
+        self.run_mixed(&args)
+    }
+
+    /// Execute with a mix of host values and resident device buffers.
+    pub fn run_mixed(&self, inputs: &[Arg]) -> Result<Vec<Value>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (v, s) in inputs.iter().zip(&self.spec.inputs) {
+            let (dt, shape): (DType, &[usize]) = match v {
+                Arg::V(v) => (v.dtype(), v.shape()),
+                Arg::B(b) => (b.dtype, &b.shape),
+            };
+            if dt != s.dtype || shape != s.shape.as_slice() {
+                bail!(
+                    "{}: input '{}' wants {:?}{:?}, got {:?}{:?}",
+                    self.spec.name,
+                    s.name,
+                    s.dtype,
+                    s.shape,
+                    dt,
+                    shape
+                );
+            }
+        }
+        // Upload host args; borrow resident ones.
+        let client = self.exe.client().clone();
+        let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
+        for a in inputs {
+            if let Arg::V(v) = a {
+                uploaded.push(v.to_device(&client)?);
+            }
+        }
+        let mut it = uploaded.iter();
+        let bufs_in: Vec<&xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|a| match a {
+                Arg::V(_) => it.next().unwrap(),
+                Arg::B(b) => &b.buf,
+            })
+            .collect();
+        let bufs = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs_in)?;
+        let out_lit = bufs[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is an N-tuple.
+        let parts = out_lit.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, s)| {
+                Value::from_literal(
+                    lit,
+                    &ArgSpec2 { dtype: s.dtype, shape: s.shape.clone() },
+                )
+            })
+            .collect()
+    }
+}
+
+/// The PJRT engine: client + manifest + executable cache.
+///
+/// PJRT handles are not `Send`/`Sync`; the engine lives on one thread (the
+/// coordinator's engine loop) and other threads talk to it via channels.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Exe>>>,
+}
+
+impl Engine {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(dir: PathBuf) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client: {} ({} devices), {} artifacts",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Engine { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Engine> {
+        Self::load(crate::artifacts_dir())
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Rc<Exe>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        log::info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let exe = Rc::new(Exe { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Convenience: run an artifact by name.
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.executable(name)?.run(inputs)
+    }
+
+    /// Upload a host tensor once; reuse across calls via [`Arg::B`].
+    pub fn upload(&self, v: &Value) -> Result<DevBuf> {
+        Ok(DevBuf {
+            buf: v.to_device(&self.client)?,
+            dtype: v.dtype(),
+            shape: v.shape().to_vec(),
+        })
+    }
+
+    /// Read the initial parameter vector for a model.
+    pub fn init_params(&self, model: &str) -> Result<TensorF> {
+        let mm = self.manifest.model(model)?;
+        TensorF::read_f32_file(&self.dir.join(&mm.init_file), &[mm.param_count])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_accessors() {
+        let f = Value::F(TensorF::zeros(&[2, 2]));
+        let i = Value::I(TensorI::zeros(&[3]));
+        assert_eq!(f.dtype(), DType::F32);
+        assert_eq!(i.shape(), &[3]);
+        assert!(f.as_f().is_ok());
+        assert!(f.as_i().is_err());
+        assert!(i.as_i().is_ok());
+        let s = Value::scalar_f(2.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+    }
+
+    // Engine execution is covered by rust/tests/runtime_smoke.rs, which
+    // requires built artifacts.
+}

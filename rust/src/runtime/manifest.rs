@@ -1,0 +1,241 @@
+//! Typed view of `artifacts/manifest.json` (written by the AOT pipeline).
+//!
+//! The manifest is the single source of truth for artifact shapes: the Rust
+//! side never hard-codes model dimensions, so recompiling the Python layer
+//! with a different configuration requires no Rust changes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+/// One input or output of an artifact.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<ArgSpec> {
+        Ok(ArgSpec {
+            name: j.str_or("name", "?"),
+            dtype: DType::parse(j.req("dtype")?.as_str().context("dtype")?)?,
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+    pub meta: Json,
+}
+
+/// A serve-path CQ configuration listed in the manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeCq {
+    pub channels: usize,
+    pub bits: usize,
+}
+
+/// Model metadata block.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub param_count: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ffn: usize,
+    pub train_ctx: usize,
+    pub eval_ctx: usize,
+    pub serve_ctx: usize,
+    pub init_file: String,
+    pub serve_cq: Vec<ServeCq>,
+    pub decode_batches: Vec<usize>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelMeta>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest JSON")?;
+        let mut m = Manifest::default();
+        for a in j.req("artifacts")?.as_arr().context("artifacts")? {
+            let spec = ArtifactSpec {
+                name: a.req("name")?.as_str().context("name")?.to_string(),
+                inputs: a
+                    .req("inputs")?
+                    .as_arr()
+                    .context("inputs")?
+                    .iter()
+                    .map(ArgSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .req("outputs")?
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(ArgSpec::from_json)
+                    .collect::<Result<_>>()?,
+                meta: a.get("meta").cloned().unwrap_or(Json::Null),
+            };
+            m.artifacts.insert(spec.name.clone(), spec);
+        }
+        if let Some(Json::Obj(models)) = j.get("models") {
+            for (name, mm) in models {
+                let serve_cq = mm
+                    .get("serve_cq")
+                    .and_then(Json::as_arr)
+                    .map(|arr| {
+                        arr.iter()
+                            .map(|c| ServeCq {
+                                channels: c.num_or("channels", 1.0) as usize,
+                                bits: c.num_or("bits", 8.0) as usize,
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let decode_batches = mm
+                    .get("decode_batches")
+                    .and_then(Json::as_arr)
+                    .map(|arr| arr.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default();
+                m.models.insert(
+                    name.clone(),
+                    ModelMeta {
+                        name: name.clone(),
+                        param_count: mm.num_or("param_count", 0.0) as usize,
+                        vocab: mm.num_or("vocab", 256.0) as usize,
+                        d_model: mm.num_or("d_model", 0.0) as usize,
+                        n_layers: mm.num_or("n_layers", 0.0) as usize,
+                        n_heads: mm.num_or("n_heads", 0.0) as usize,
+                        head_dim: mm.num_or("head_dim", 0.0) as usize,
+                        d_ffn: mm.num_or("d_ffn", 0.0) as usize,
+                        train_ctx: mm.num_or("train_ctx", 0.0) as usize,
+                        eval_ctx: mm.num_or("eval_ctx", 0.0) as usize,
+                        serve_ctx: mm.num_or("serve_ctx", 0.0) as usize,
+                        init_file: mm.str_or("init_file", ""),
+                        serve_cq,
+                        decode_batches,
+                    },
+                );
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {"small": {"param_count": 100, "vocab": 256, "d_model": 8,
+        "n_layers": 2, "n_heads": 2, "head_dim": 4, "d_ffn": 16,
+        "train_ctx": 8, "eval_ctx": 16, "serve_ctx": 32,
+        "init_file": "init_small.bin",
+        "serve_cq": [{"channels": 2, "bits": 8, "tag": "2c8b"}],
+        "decode_batches": [1, 8]}},
+      "artifacts": [{"name": "small.eval_kv",
+        "inputs": [{"name": "params", "dtype": "f32", "shape": [100]},
+                   {"name": "tokens", "dtype": "i32", "shape": [4, 16]}],
+        "outputs": [{"name": "nll", "dtype": "f32", "shape": [4, 15]}],
+        "meta": {"batch": 4, "ctx": 16}}]
+    }"#;
+
+    #[test]
+    fn parses_models_and_artifacts() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let mm = m.model("small").unwrap();
+        assert_eq!(mm.param_count, 100);
+        assert_eq!(mm.serve_cq.len(), 1);
+        assert_eq!(mm.serve_cq[0].channels, 2);
+        assert_eq!(mm.decode_batches, vec![1, 8]);
+        let a = m.artifact("small.eval_kv").unwrap();
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.inputs[1].shape, vec![4, 16]);
+        assert_eq!(a.outputs[0].numel(), 60);
+        assert_eq!(a.meta.num_or("batch", 0.0), 4.0);
+    }
+
+    #[test]
+    fn missing_entries_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.model("huge").is_err());
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = crate::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.contains_key("small.eval_kv"));
+            assert!(m.models.contains_key("small"));
+            let mm = m.model("small").unwrap();
+            assert_eq!(mm.head_dim, 64);
+        }
+    }
+}

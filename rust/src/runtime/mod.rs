@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the Rust hot path.
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json`.
+//! * [`engine`]   — PJRT CPU client, executable registry (compile-on-first-
+//!                  use, cached), literal marshalling for `TensorF`/`TensorI`.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Exe, Value};
+pub use manifest::{ArgSpec, ArtifactSpec, DType, Manifest, ModelMeta};

@@ -1,0 +1,153 @@
+//! TCP inference server + client (line-delimited JSON protocol).
+//!
+//! Request line:  `{"prompt": "...", "max_tokens": 32, "temperature": 0.8,
+//!                  "top_k": 40}`
+//! Response line: `{"id": 1, "text": "...", "prompt_tokens": 12,
+//!                  "gen_tokens": 32, "prefill_ms": ..., "decode_ms": ...,
+//!                  "cache_bytes": ...}`
+//!
+//! Connection threads are thin: they parse, forward to the serve loop over
+//! its channel, and stream the response back.  All model work happens on the
+//! engine thread (`coordinator::serve_loop`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Request, Response, ServeHandle};
+use crate::util::json::Json;
+
+/// Parse one request line into a [`Request`].
+pub fn parse_request(line: &str, id: u64) -> Result<Request> {
+    let j = Json::parse(line).context("request JSON")?;
+    Ok(Request {
+        id,
+        prompt: j.str_or("prompt", ""),
+        max_new: j.num_or("max_tokens", 32.0) as usize,
+        temperature: j.num_or("temperature", 0.0) as f32,
+        top_k: j.num_or("top_k", 0.0) as usize,
+        seed: j.num_or("seed", id as f64) as u64,
+    })
+}
+
+/// Serialize a [`Response`] to its wire line.
+pub fn format_response(r: &Response) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(r.id as f64)),
+        ("text", Json::Str(r.text.clone())),
+        ("prompt_tokens", Json::Num(r.prompt_tokens as f64)),
+        ("gen_tokens", Json::Num(r.gen_tokens as f64)),
+        ("prefill_ms", Json::Num((r.prefill_ms * 100.0).round() / 100.0)),
+        ("decode_ms", Json::Num((r.decode_ms * 100.0).round() / 100.0)),
+        ("cache_bytes", Json::Num(r.cache_bytes as f64)),
+    ])
+    .dump()
+}
+
+/// Serve on `addr` until `stop` is raised.  Each connection may pipeline
+/// multiple newline-delimited requests.
+pub fn serve_tcp(handle: &ServeHandle, addr: &str, stop: Arc<AtomicBool>) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    listener.set_nonblocking(true)?;
+    println!("[server] listening on {addr}");
+    let next_id = Arc::new(AtomicU64::new(1));
+    std::thread::scope(|scope| -> Result<()> {
+        loop {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    log::info!("connection from {peer}");
+                    let ids = next_id.clone();
+                    let h = handle;
+                    scope.spawn(move || {
+                        if let Err(e) = handle_conn(h, stream, &ids) {
+                            log::warn!("connection error: {e:#}");
+                        }
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if stop.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    })
+}
+
+fn handle_conn(handle: &ServeHandle, stream: TcpStream, ids: &AtomicU64) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let id = ids.fetch_add(1, Ordering::Relaxed);
+        let resp = match parse_request(&line, id) {
+            Ok(req) => handle.submit(req)?,
+            Err(e) => {
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("error", Json::Str(format!("{e:#}"))),
+                ]).dump())?;
+                continue;
+            }
+        };
+        writeln!(writer, "{}", format_response(&resp))?;
+    }
+    Ok(())
+}
+
+/// Blocking client: send one prompt, return the parsed response line.
+pub fn client_request(addr: &str, prompt: &str, max_tokens: usize, temperature: f32) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let req = Json::obj(vec![
+        ("prompt", Json::Str(prompt.to_string())),
+        ("max_tokens", Json::Num(max_tokens as f64)),
+        ("temperature", Json::Num(temperature as f64)),
+    ]);
+    writeln!(stream, "{}", req.dump())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(line.trim())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_fields_and_defaults() {
+        let r = parse_request(r#"{"prompt": "hi", "max_tokens": 8}"#, 3).unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(r.max_new, 8);
+        assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.seed, 3);
+        assert!(parse_request("not json", 1).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_through_wire_format() {
+        let r = Response {
+            id: 9,
+            text: "abc\ndef".into(),
+            prompt_tokens: 4,
+            gen_tokens: 7,
+            queue_ms: 0.0,
+            prefill_ms: 1.25,
+            decode_ms: 10.5,
+            cache_bytes: 1234,
+        };
+        let line = format_response(&r);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.num_or("id", 0.0), 9.0);
+        assert_eq!(j.str_or("text", ""), "abc\ndef");
+        assert_eq!(j.num_or("cache_bytes", 0.0), 1234.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Minimal host-side shaped tensors.
+//!
+//! The coordinator moves flat buffers in and out of PJRT; this module gives
+//! them just enough structure (shape + row-major indexing + file I/O) without
+//! pulling in an ndarray dependency.  Only f32 and i32 exist in the system.
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Row-major i32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+macro_rules! tensor_common {
+    ($t:ident, $elem:ty) => {
+        impl $t {
+            pub fn zeros(shape: &[usize]) -> Self {
+                Self { shape: shape.to_vec(), data: vec![<$elem>::default(); numel(shape)] }
+            }
+
+            pub fn from_vec(shape: &[usize], data: Vec<$elem>) -> Result<Self> {
+                if numel(shape) != data.len() {
+                    bail!("shape {:?} wants {} elements, got {}", shape, numel(shape), data.len());
+                }
+                Ok(Self { shape: shape.to_vec(), data })
+            }
+
+            pub fn numel(&self) -> usize {
+                self.data.len()
+            }
+
+            pub fn rank(&self) -> usize {
+                self.shape.len()
+            }
+
+            /// Row-major strides.
+            pub fn strides(&self) -> Vec<usize> {
+                let mut s = vec![1; self.shape.len()];
+                for i in (0..self.shape.len().saturating_sub(1)).rev() {
+                    s[i] = s[i + 1] * self.shape[i + 1];
+                }
+                s
+            }
+
+            /// Flat offset of a multi-index.
+            pub fn offset(&self, idx: &[usize]) -> usize {
+                debug_assert_eq!(idx.len(), self.shape.len());
+                let st = self.strides();
+                idx.iter().zip(&st).map(|(i, s)| i * s).sum()
+            }
+
+            pub fn at(&self, idx: &[usize]) -> $elem {
+                self.data[self.offset(idx)]
+            }
+
+            pub fn set(&mut self, idx: &[usize], v: $elem) {
+                let o = self.offset(idx);
+                self.data[o] = v;
+            }
+
+            /// Reinterpret with a new shape of identical element count.
+            pub fn reshaped(mut self, shape: &[usize]) -> Result<Self> {
+                if numel(shape) != self.data.len() {
+                    bail!("reshape {:?} -> {:?} changes element count", self.shape, shape);
+                }
+                self.shape = shape.to_vec();
+                Ok(self)
+            }
+        }
+    };
+}
+
+tensor_common!(TensorF, f32);
+tensor_common!(TensorI, i32);
+
+impl TensorF {
+    /// Read a raw little-endian f32 file (checkpoints, init params).
+    pub fn read_f32_file(path: &std::path::Path, shape: &[usize]) -> Result<TensorF> {
+        let bytes = std::fs::read(path)?;
+        if bytes.len() != numel(shape) * 4 {
+            bail!(
+                "{}: expected {} f32 ({} bytes), file has {} bytes",
+                path.display(),
+                numel(shape),
+                numel(shape) * 4,
+                bytes.len()
+            );
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(TensorF { shape: shape.to_vec(), data })
+    }
+
+    /// Write raw little-endian f32 bytes.
+    pub fn write_f32_file(&self, path: &std::path::Path) -> Result<()> {
+        let mut bytes = Vec::with_capacity(self.data.len() * 4);
+        for x in &self.data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// Sum of squared differences against another tensor (quantization error
+    /// metric used throughout the paper: ||A - cq(A)||_F^2).
+    pub fn sqdiff(&self, other: &TensorF) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_indexing() {
+        let mut t = TensorF::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        t.set(&[1, 2, 3], 7.0);
+        assert_eq!(t.at(&[1, 2, 3]), 7.0);
+        assert_eq!(t.data[23], 7.0);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(TensorF::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(TensorI::from_vec(&[2, 2], vec![0; 4]).is_ok());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = TensorF::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        let r = t.clone().reshaped(&[3, 2]).unwrap();
+        assert_eq!(r.data, t.data);
+        assert!(t.clone().reshaped(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("cq_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let t = TensorF::from_vec(&[5], vec![1.0, -2.5, 3.25, 0.0, 9.75]).unwrap();
+        t.write_f32_file(&p).unwrap();
+        let r = TensorF::read_f32_file(&p, &[5]).unwrap();
+        assert_eq!(t, r);
+        assert!(TensorF::read_f32_file(&p, &[6]).is_err());
+    }
+
+    #[test]
+    fn sqdiff_matches_manual() {
+        let a = TensorF::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = TensorF::from_vec(&[3], vec![1.0, 0.0, 6.0]).unwrap();
+        assert!((a.sqdiff(&b) - (4.0 + 9.0)).abs() < 1e-12);
+    }
+}

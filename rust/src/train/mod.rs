@@ -1,0 +1,171 @@
+//! Rust-driven training loop.
+//!
+//! The optimizer math lives in the AOT `train_step` artifact (Adam, fused by
+//! XLA); this module owns the schedule, data feeding, logging and
+//! checkpointing.  The loss curve it logs is the end-to-end evidence in
+//! EXPERIMENTS.md that all three layers compose.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::data::{train_batch, Dataset};
+use crate::runtime::{Engine, Value};
+use crate::tensor::TensorF;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Training hyperparameters (the in-graph Adam betas/eps are fixed at
+/// lowering time; these are the host-controlled knobs).
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub lr_max: f64,
+    pub warmup: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg { steps: 400, lr_max: 3e-3, warmup: 40, seed: 7, log_every: 20 }
+    }
+}
+
+/// Linear warmup then cosine decay to 10 % of peak.
+pub fn lr_at(cfg: &TrainCfg, step: usize) -> f64 {
+    if step < cfg.warmup {
+        cfg.lr_max * (step + 1) as f64 / cfg.warmup as f64
+    } else {
+        let t = (step - cfg.warmup) as f64 / (cfg.steps - cfg.warmup).max(1) as f64;
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        cfg.lr_max * (0.1 + 0.9 * cos)
+    }
+}
+
+/// Result of a training run.
+pub struct TrainResult {
+    pub params: TensorF,
+    pub losses: Vec<(usize, f64)>,
+    pub final_loss: f64,
+    pub secs: f64,
+}
+
+/// Train `model` on `ds`, starting from `params0`.
+pub fn train(
+    engine: &Engine,
+    model: &str,
+    params0: TensorF,
+    ds: &Dataset,
+    cfg: &TrainCfg,
+) -> Result<TrainResult> {
+    let art = format!("{model}.train_step");
+    let spec = engine.manifest.artifact(&art)?.clone();
+    let batch = spec.meta.num_or("batch", 8.0) as usize;
+    let ctx = spec.meta.num_or("ctx", 65.0) as usize;
+    let n = params0.numel();
+
+    let mut params = params0;
+    let mut m = TensorF::zeros(&[n]);
+    let mut v = TensorF::zeros(&[n]);
+    let mut rng = Pcg64::seed(cfg.seed);
+    let mut losses = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut final_loss = f64::NAN;
+
+    for step in 0..cfg.steps {
+        let tokens = train_batch(ds, batch, ctx, &mut rng);
+        let lr = lr_at(cfg, step);
+        let out = engine.run(
+            &art,
+            &[
+                Value::F(params),
+                Value::F(m),
+                Value::F(v),
+                Value::scalar_f((step + 1) as f32),
+                Value::scalar_f(lr as f32),
+                Value::I(tokens),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        params = it.next().context("params out")?.into_f()?;
+        m = it.next().context("m out")?.into_f()?;
+        v = it.next().context("v out")?.into_f()?;
+        let loss = it.next().context("loss out")?.into_f()?.data[0] as f64;
+        final_loss = loss;
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            log::info!("step {step:>5}  lr {lr:.2e}  loss {loss:.4}");
+            println!("step {step:>5}  lr {lr:.2e}  loss {loss:.4}");
+            losses.push((step, loss));
+        }
+    }
+
+    Ok(TrainResult { params, losses, final_loss, secs: t0.elapsed().as_secs_f64() })
+}
+
+/// Save a checkpoint: `<dir>/params.bin` + `<dir>/ckpt.json`.
+pub fn save_checkpoint(
+    dir: &Path,
+    model: &str,
+    params: &TensorF,
+    losses: &[(usize, f64)],
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    params.write_f32_file(&dir.join("params.bin"))?;
+    let meta = Json::obj(vec![
+        ("model", Json::Str(model.to_string())),
+        ("param_count", Json::Num(params.numel() as f64)),
+        (
+            "loss_curve",
+            Json::Arr(
+                losses
+                    .iter()
+                    .map(|(s, l)| Json::Arr(vec![Json::Num(*s as f64), Json::Num(*l)]))
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(dir.join("ckpt.json"), meta.dump())?;
+    Ok(())
+}
+
+/// Load `<dir>/params.bin` for a model known to the manifest.
+pub fn load_checkpoint(engine: &Engine, model: &str, dir: &Path) -> Result<TensorF> {
+    let mm = engine.manifest.model(model)?;
+    TensorF::read_f32_file(&dir.join("params.bin"), &[mm.param_count])
+        .with_context(|| format!("checkpoint in {} (run `cq-serve train` first)", dir.display()))
+}
+
+/// Default checkpoint directory for a model.
+pub fn ckpt_dir(model: &str) -> PathBuf {
+    let mut d = crate::artifacts_dir();
+    d.pop();
+    d.join("runs").join(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let cfg = TrainCfg { steps: 100, lr_max: 1.0, warmup: 10, ..Default::default() };
+        assert!(lr_at(&cfg, 0) < 0.2);
+        assert!((lr_at(&cfg, 9) - 1.0).abs() < 1e-9);
+        assert!(lr_at(&cfg, 50) < 1.0);
+        assert!(lr_at(&cfg, 99) >= 0.1 * 0.99);
+        // Monotone decay after warmup.
+        assert!(lr_at(&cfg, 30) > lr_at(&cfg, 60));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("cq_ckpt_test");
+        let params = TensorF::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        save_checkpoint(&dir, "toy", &params, &[(0, 5.5), (10, 3.2)]).unwrap();
+        let re = TensorF::read_f32_file(&dir.join("params.bin"), &[4]).unwrap();
+        assert_eq!(re, params);
+        let meta = std::fs::read_to_string(dir.join("ckpt.json")).unwrap();
+        assert!(meta.contains("loss_curve"));
+    }
+}

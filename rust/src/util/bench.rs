@@ -1,0 +1,190 @@
+//! Benchmark harness (criterion replacement).
+//!
+//! Used by every target in `benches/` (`harness = false`).  Provides warmup,
+//! fixed-iteration timing with percentile reporting, and a table printer so
+//! each bench regenerates its paper table/figure as aligned text plus a CSV
+//! dump under `bench_out/`.
+
+use std::time::Instant;
+
+/// Timing summary over a set of iterations, in seconds.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Timing {
+    pub fn from_samples(mut s: Vec<f64>) -> Timing {
+        assert!(!s.is_empty());
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| s[((s.len() as f64 - 1.0) * p).round() as usize];
+        Timing {
+            iters: s.len(),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            min: s[0],
+            max: s[s.len() - 1],
+        }
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing::from_samples(samples)
+}
+
+/// Aligned-text table builder used by the table/figure benches.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column alignment.
+    pub fn render(&self) -> String {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &w));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and dump a CSV copy to `bench_out/<slug>.csv`.
+    pub fn emit(&self, slug: &str) {
+        println!("{}", self.render());
+        let _ = std::fs::create_dir_all("bench_out");
+        let mut csv = String::new();
+        csv.push_str(&self.header.join(","));
+        csv.push('\n');
+        for r in &self.rows {
+            csv.push_str(
+                &r.iter()
+                    .map(|c| {
+                        if c.contains(',') {
+                            format!("\"{c}\"")
+                        } else {
+                            c.clone()
+                        }
+                    })
+                    .collect::<Vec<_>>()
+                    .join(","),
+            );
+            csv.push('\n');
+        }
+        let path = format!("bench_out/{slug}.csv");
+        if let Err(e) = std::fs::write(&path, csv) {
+            eprintln!("warn: could not write {path}: {e}");
+        } else {
+            println!("[csv] {path}");
+        }
+    }
+}
+
+/// Format seconds as an adaptive human string.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.2} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_percentiles() {
+        let t = Timing::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(t.min, 1.0);
+        assert_eq!(t.max, 100.0);
+        assert_eq!(t.p50, 51.0); // round-half-up on the 49.5 index
+        assert!((t.mean - 50.5).abs() < 1e-9);
+        assert_eq!(t.p95, 95.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["name", "val"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("long-name"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn time_fn_runs_expected_iters() {
+        let mut n = 0;
+        let t = time_fn(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(t.iters, 5);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-5).ends_with("µs"));
+        assert!(fmt_secs(2e-2).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with("s"));
+    }
+}

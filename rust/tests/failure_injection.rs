@@ -1,0 +1,106 @@
+//! Failure injection: the coordinator and runtime must fail loudly and
+//! specifically at the boundary, never deep inside XLA or with corrupted
+//! state.
+
+use cq::coordinator::serve_loop::{serve_loop, ServeConfig};
+use cq::coordinator::Inbound;
+use cq::quant::cq::CqCodebooks;
+use cq::runtime::{Engine, Manifest};
+use cq::tensor::TensorF;
+
+#[test]
+fn manifest_rejects_malformed_json() {
+    for bad in ["", "{", "[1,2]", r#"{"artifacts": "nope"}"#] {
+        assert!(Manifest::parse(bad).is_err(), "should reject {bad:?}");
+    }
+}
+
+#[test]
+fn missing_artifact_file_is_a_clean_error() {
+    let engine = Engine::load_default().expect("artifacts");
+    // Name exists nowhere in the manifest.
+    let err = match engine.executable("small.nonexistent") {
+        Ok(_) => panic!("should fail"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("not in manifest"), "{err}");
+}
+
+#[test]
+fn checkpoint_size_mismatch_is_detected() {
+    let dir = std::env::temp_dir().join("cq_fail_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("params.bin");
+    TensorF::from_vec(&[10], vec![0.0; 10]).unwrap().write_f32_file(&p).unwrap();
+    let engine = Engine::load_default().expect("artifacts");
+    let err = cq::train::load_checkpoint(&engine, "small", &dir).unwrap_err();
+    assert!(err.to_string().contains("checkpoint"), "{err}");
+}
+
+#[test]
+fn corrupt_codebook_file_is_rejected() {
+    let dir = std::env::temp_dir().join("cq_fail_books");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("books.cqb");
+    // Valid header, truncated payload.
+    std::fs::write(
+        &p,
+        b"{\"channels\":2,\"bits\":4,\"n_layers\":2,\"n_heads\":2,\"head_dim\":8}\nshort",
+    )
+    .unwrap();
+    let err = match CqCodebooks::load(&p) {
+        Ok(_) => panic!("should fail"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("payload"), "{err}");
+    // Missing header newline entirely.
+    std::fs::write(&p, b"garbage-without-newline").unwrap();
+    assert!(CqCodebooks::load(&p).is_err());
+}
+
+#[test]
+fn serve_loop_fails_fast_on_missing_assets() {
+    // Nonexistent params path: the loop thread must return an error, not hang.
+    let cfg = ServeConfig {
+        model: "small".into(),
+        cq: None,
+        batch: 1,
+        cache_budget: None,
+        codebook_path: None,
+        params_path: "/nonexistent/params.bin".into(),
+        kernel: ServeConfig::default_kernel(),
+    };
+    let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
+    let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
+    let err = serve_loop(cfg, rx, metrics).unwrap_err();
+    assert!(err.to_string().contains("params"), "{err}");
+}
+
+#[test]
+fn serve_config_validates_batch_and_codebook_tag() {
+    // Batch size not compiled into any decode artifact.
+    let engine = Engine::load_default().expect("artifacts");
+    let mm = engine.manifest.model("small").unwrap();
+    assert!(!mm.decode_batches.contains(&3));
+    drop(engine);
+    let dir = std::env::temp_dir().join("cq_fail_batch");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Provide syntactically valid params so the batch check is reached.
+    let engine = Engine::load_default().unwrap();
+    let n = engine.manifest.model("small").unwrap().param_count;
+    drop(engine);
+    TensorF::zeros(&[n]).write_f32_file(&dir.join("params.bin")).unwrap();
+    let cfg = ServeConfig {
+        model: "small".into(),
+        cq: None,
+        batch: 3,
+        cache_budget: None,
+        codebook_path: None,
+        params_path: dir.join("params.bin"),
+        kernel: ServeConfig::default_kernel(),
+    };
+    let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
+    let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
+    let err = serve_loop(cfg, rx, metrics).unwrap_err();
+    assert!(err.to_string().contains("batch"), "{err}");
+}

@@ -1,0 +1,103 @@
+//! Serving-stack integration: ServeHandle + TCP server against the real
+//! decode artifacts.  Requires a trained `small` checkpoint + CQ-8c8b
+//! codebooks; builds them on demand via bench_support (slow first run,
+//! cached afterwards).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use cq::bench_support::Pipeline;
+use cq::coordinator::{Request, ServeConfig, ServeHandle};
+use cq::quant::cq::CqSpec;
+use cq::server::{client_request, serve_tcp};
+
+fn ensure_assets() {
+    let pipe = Pipeline::ensure("small").expect("pipeline");
+    pipe.cq_codec(CqSpec::new(8, 8), true, 30).expect("codebooks");
+}
+
+fn cq_config(batch: usize) -> ServeConfig {
+    ServeConfig {
+        model: "small".into(),
+        cq: Some("8c8b".into()),
+        batch,
+        cache_budget: None,
+        codebook_path: Some(cq::train::ckpt_dir("small").join("cq_8c8b.cqb")),
+        params_path: cq::train::ckpt_dir("small").join("params.bin"),
+        kernel: ServeConfig::default_kernel(),
+    }
+}
+
+#[test]
+fn serve_loop_cq_and_fp_agree_on_shapes_and_make_text() {
+    ensure_assets();
+
+    // CQ mode, batch 8, four concurrent requests with different lengths.
+    let handle = ServeHandle::start(cq_config(8));
+    let rxs: Vec<_> = (0..4)
+        .map(|i| {
+            let req = Request::greedy(i, "The castle of Aldenport ", 8 + (i as usize) * 3);
+            handle.submit_async(req).unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap();
+        assert_eq!(r.gen_tokens, 8 + i * 3, "respects max_new");
+        assert_eq!(r.prompt_tokens, "The castle of Aldenport ".len());
+        assert!(!r.text.is_empty());
+        assert!(r.cache_bytes > 0);
+        // 1 bit/FPN: cache bytes = tokens * (2*L*H*hd)/8 = tokens * 256 B.
+        // The final sampled token is returned but never decoded, so it is
+        // not cached: cached tokens = prompt + gen - 1.
+        assert_eq!(r.cache_bytes, (r.prompt_tokens + r.gen_tokens - 1) * 256);
+    }
+    handle.shutdown().unwrap();
+
+    // FP mode, batch 1: greedy decode must be deterministic.
+    let fp_cfg = ServeConfig { cq: None, batch: 1, codebook_path: None, ..cq_config(1) };
+    let handle = ServeHandle::start(fp_cfg);
+    let a = handle.submit(Request::greedy(1, "In the ledger, three plus four equals ", 12)).unwrap();
+    let b = handle.submit(Request::greedy(2, "In the ledger, three plus four equals ", 12)).unwrap();
+    assert_eq!(a.text, b.text, "greedy decode is deterministic");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn cq_serving_learns_the_corpus_grammar() {
+    ensure_assets();
+    let handle = ServeHandle::start(cq_config(1));
+    // The trained model + 1-bit cache should continue the arithmetic
+    // template with *something* corpus-shaped (letters + punctuation).
+    let r = handle
+        .submit(Request::greedy(1, "In the ledger, two plus two equals ", 8))
+        .unwrap();
+    assert!(
+        r.text.chars().all(|c| c.is_ascii()),
+        "decodes ascii, got {:?}",
+        r.text
+    );
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn tcp_server_roundtrip() {
+    ensure_assets();
+    let handle = ServeHandle::start(cq_config(8));
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:17917";
+
+    std::thread::scope(|scope| {
+        let h = &handle;
+        let server = scope.spawn(move || serve_tcp(h, addr, stop2).unwrap());
+        // Wait for bind.
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        let resp = client_request(addr, "Travellers often mention the ancient ", 10, 0.0)
+            .expect("client roundtrip");
+        assert!(resp.get("text").is_some(), "{}", resp.dump());
+        assert_eq!(resp.num_or("gen_tokens", 0.0) as usize, 10);
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    });
+    handle.shutdown().unwrap();
+}
