@@ -1,18 +1,21 @@
 //! Serving bench (paper §2.2 von-Neumann argument, extra to the tables):
 //! decode-step latency, end-to-end throughput, cache footprint and modelled
-//! memory traffic for the fp16 cache vs CQ caches at batch 1 and 8.
+//! memory traffic for the fp16 cache vs CQ caches — plus a serve-pool
+//! worker sweep that isolates how each cache mode scales across replica
+//! workers (each worker = its own PJRT engine + cache shard).
 //!
 //! On this CPU-interpret testbed the *measured* decode time is compute-bound
 //! (XLA CPU is not bandwidth-starved at these sizes), so the table reports
 //! both the measured times AND the bandwidth-bound traffic model that
 //! governs real accelerators: bytes-touched-per-token ratios are exact.
 //!
-//!     cargo bench --bench serve_throughput  [-- --requests 8 --max-tokens 16]
+//!     cargo bench --bench serve_throughput \
+//!         [-- --requests 16 --max-tokens 16 --workers 1,2,4]
 
 use std::time::Instant;
 
 use cq::bench_support::Pipeline;
-use cq::coordinator::{Request, ServeConfig, ServeHandle};
+use cq::coordinator::{Request, ServeConfig, ServePool};
 use cq::metrics::TrafficModel;
 use cq::quant::cq::CqSpec;
 use cq::util::bench::Table;
@@ -24,11 +27,12 @@ struct ModeResult {
     tokens_per_s: f64,
     decode_p50_ms: f64,
     cache_bytes: usize,
+    /// Per-worker tokens/s over the same wall window.
+    per_worker: Vec<f64>,
 }
 
-fn run_mode(cq: Option<&str>, batch: usize, n_req: usize, max_new: usize) -> ModeResult {
-    let label = cq.unwrap_or("fp16").to_string();
-    let cfg = ServeConfig {
+fn mode_cfg(cq: Option<&str>, batch: usize) -> ServeConfig {
+    ServeConfig {
         model: "small".into(),
         cq: cq.map(|s| s.to_string()),
         batch,
@@ -36,13 +40,34 @@ fn run_mode(cq: Option<&str>, batch: usize, n_req: usize, max_new: usize) -> Mod
         codebook_path: cq.map(|t| cq::train::ckpt_dir("small").join(format!("cq_{t}.cqb"))),
         params_path: cq::train::ckpt_dir("small").join("params.bin"),
         kernel: ServeConfig::default_kernel(),
-    };
-    let handle = ServeHandle::start(cfg);
+    }
+}
+
+fn bits_of(cq: Option<&str>) -> f64 {
+    match cq {
+        None => 16.0,
+        Some(t) => {
+            let spec: Vec<&str> = t.split('c').collect();
+            let c: f64 = spec[0].parse().unwrap();
+            let b: f64 = spec[1].trim_end_matches('b').parse().unwrap();
+            b / c
+        }
+    }
+}
+
+fn run_mode(
+    cq: Option<&str>,
+    batch: usize,
+    workers: usize,
+    n_req: usize,
+    max_new: usize,
+) -> ModeResult {
+    let label = cq.unwrap_or("fp16").to_string();
+    let pool = ServePool::start(mode_cfg(cq, batch), workers);
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n_req)
         .map(|i| {
-            handle
-                .submit_async(Request::greedy(i as u64, "The castle of Aldenport ", max_new))
+            pool.submit_async(Request::greedy(i as u64, "The castle of Aldenport ", max_new))
                 .unwrap()
         })
         .collect();
@@ -54,23 +79,21 @@ fn run_mode(cq: Option<&str>, batch: usize, n_req: usize, max_new: usize) -> Mod
         cache += r.cache_bytes;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let bits = match cq {
-        None => 16.0,
-        Some(t) => {
-            let spec: Vec<&str> = t.split('c').collect();
-            let c: f64 = spec[0].parse().unwrap();
-            let b: f64 = spec[1].trim_end_matches('b').parse().unwrap();
-            b / c
-        }
-    };
+    let per_worker: Vec<f64> = pool
+        .metrics
+        .workers()
+        .iter()
+        .map(|m| m.tokens_out.get() as f64 / wall)
+        .collect();
     let res = ModeResult {
         label,
-        bits,
+        bits: bits_of(cq),
         tokens_per_s: tokens as f64 / wall,
-        decode_p50_ms: handle.metrics.decode_step_latency.percentile_ms(0.5),
+        decode_p50_ms: pool.metrics.merged_decode_latency().percentile_ms(0.5),
         cache_bytes: cache,
+        per_worker,
     };
-    handle.shutdown().unwrap();
+    pool.shutdown().unwrap();
     res
 }
 
@@ -80,6 +103,15 @@ fn main() {
     )
     .unwrap();
     let max_new = args.usize("max-tokens", 12);
+    let mut worker_counts: Vec<usize> = args
+        .str("workers", "1,2,4")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .filter(|&w| w >= 1)
+        .collect();
+    if worker_counts.is_empty() {
+        worker_counts = vec![1, 2, 4];
+    }
 
     // Ensure checkpoint + all serve codebooks exist.
     {
@@ -89,15 +121,16 @@ fn main() {
         }
     }
 
+    // --- Table 1: cache modes at a single worker (paper comparison) ------
     let mut table = Table::new(
-        "Serving: decode latency / throughput / cache bytes, fp16 vs CQ",
+        "Serving: decode latency / throughput / cache bytes, fp16 vs CQ (1 worker)",
         &["cache", "bits/FPN", "batch", "tok/s", "decode p50 (ms)",
           "cache bytes", "traffic/token @T=512", "bw-bound speedup ceiling"],
     );
     for batch in [1usize, 8] {
         let n_req = args.usize("requests", batch.max(4));
         for mode in [None, Some("2c8b"), Some("4c8b"), Some("8c8b")] {
-            let r = run_mode(mode, batch, n_req, max_new);
+            let r = run_mode(mode, batch, 1, n_req, max_new);
             let tm = TrafficModel {
                 n_layers: 4,
                 n_heads: 4,
@@ -121,4 +154,52 @@ fn main() {
         }
     }
     table.emit("serve_throughput");
+
+    // --- Table 2: worker sweep — pool scaling of fp vs quantized cache ---
+    let mut sweep = Table::new(
+        "Serve pool scaling: aggregate + per-worker tok/s by worker count",
+        &["cache", "workers", "agg tok/s", "per-worker tok/s", "speedup vs 1w",
+          "decode p50 (ms)"],
+    );
+    for mode in [None, Some("8c8b")] {
+        let results: Vec<(usize, ModeResult)> = worker_counts
+            .iter()
+            .map(|&workers| {
+                // Enough requests to keep every worker's lanes busy.
+                let n_req = args.usize("requests", 8 * workers).max(2 * workers);
+                let r = run_mode(mode, 8, workers, n_req, max_new);
+                eprintln!(
+                    "  {:<5} {workers}w: {:.1} tok/s agg [{}]",
+                    r.label,
+                    r.tokens_per_s,
+                    r.per_worker
+                        .iter()
+                        .map(|t| format!("{t:.1}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                );
+                (workers, r)
+            })
+            .collect();
+        // Baseline = the single-worker run when the sweep includes one
+        // (whatever its position), else the first run.
+        let base_tps = results
+            .iter()
+            .find(|(w, _)| *w == 1)
+            .map(|(_, r)| r.tokens_per_s)
+            .unwrap_or(results[0].1.tokens_per_s);
+        for (workers, r) in &results {
+            let per: Vec<String> =
+                r.per_worker.iter().map(|t| format!("{t:.1}")).collect();
+            sweep.row(vec![
+                r.label.clone(),
+                workers.to_string(),
+                format!("{:.1}", r.tokens_per_s),
+                per.join(" / "),
+                format!("{:.2}x", r.tokens_per_s / base_tps.max(1e-9)),
+                format!("{:.2}", r.decode_p50_ms),
+            ]);
+        }
+    }
+    sweep.emit("serve_throughput_workers");
 }

@@ -11,12 +11,18 @@ use std::time::Instant;
 
 use crate::kvcache::{CacheGeom, PackedSeqCache};
 
+use super::pool::LoadToken;
 use super::{Request, Response};
 
 /// One running sequence occupying a batch lane.
 pub struct SeqRun {
     pub req: Request,
     pub respond: Option<Sender<Response>>,
+    /// Router in-flight marker; dropping it (with this run) decrements the
+    /// owning worker's load in the serve pool.
+    pub load_token: Option<LoadToken>,
+    /// Cache bytes reserved at admission; released exactly on completion.
+    pub reserved_bytes: usize,
     pub prompt_tokens: usize,
     /// Generated token ids (the last one is the next decode input).
     pub generated: Vec<i32>,
@@ -142,6 +148,8 @@ mod tests {
         SeqRun {
             req: Request::greedy(id, "x", max_new),
             respond: None,
+            load_token: None,
+            reserved_bytes: 0,
             prompt_tokens: prompt_len,
             generated: vec![7],
             packed,

@@ -2,17 +2,21 @@
 //! scheduler — the Layer-3 system that turns the paper's quantized cache
 //! into a serving win (vLLM-router-style architecture, DESIGN.md §3.3).
 //!
-//! Threading model: PJRT handles are not `Send`, so the [`serve_loop`] owns
-//! the [`crate::runtime::Engine`] on a dedicated thread; the TCP frontend
-//! (`server`) and in-process clients talk to it over an mpsc channel.
+//! Threading model: PJRT handles are not `Send`, so each serve-loop worker
+//! owns its [`crate::runtime::Engine`] on a dedicated thread.  The sharded
+//! [`pool::ServePool`] fronts N such workers with a least-loaded router;
+//! the TCP frontend (`server`) and in-process clients talk to the pool over
+//! per-worker mpsc channels.  [`pool::ServeHandle`] is the 1-worker case.
 
 pub mod batcher;
+pub mod pool;
 pub mod sampler;
 pub mod serve_loop;
 
 pub use batcher::{Batcher, SeqRun};
+pub use pool::{LoadToken, ServeHandle, ServePool, WorkerLoad};
 pub use sampler::{sample, SampleCfg};
-pub use serve_loop::{serve_loop, ServeConfig, ServeHandle};
+pub use serve_loop::{serve_loop, ServeConfig};
 
 use std::sync::mpsc::Sender;
 
@@ -53,9 +57,11 @@ pub struct Response {
     pub cache_bytes: usize,
 }
 
-/// Messages into the serve loop.
+/// Messages into one serve-loop worker.  The optional [`LoadToken`] is the
+/// router's in-flight marker; it is dropped (decrementing the worker's load)
+/// when the request reaches any terminal state.
 pub enum Inbound {
-    Submit(Request, Sender<Response>),
+    Submit(Request, Sender<Response>, Option<LoadToken>),
     /// Drain in-flight work and exit.
     Shutdown,
 }

@@ -1,0 +1,355 @@
+//! Sharded serve pool: N replica workers, each owning its own non-`Send`
+//! PJRT [`crate::runtime::Engine`], `Batcher`, `BatchStage` and
+//! `CacheManager` shard on a dedicated thread, fronted by a router that
+//! dispatches requests over per-worker mpsc channels.
+//!
+//! Routing is **least-loaded**: the router tracks per-worker in-flight
+//! requests ([`WorkerLoad`]) and picks the worker with the shallowest
+//! virtual queue, breaking ties by most free lanes and then round-robin
+//! (a rotating scan start).  In-flight accounting is crash-safe: every
+//! dispatched request carries a [`LoadToken`] that decrements the counter
+//! on drop, whatever path the request dies on (completion, budget
+//! rejection, prefill failure, shutdown drain).  A worker whose loop has
+//! exited is marked dead on the first failed send and excluded from
+//! routing; the submission reroutes to the next live worker.
+//!
+//! The global cache byte budget becomes a **per-shard budget**
+//! (`ceil(total / n_workers)`); per-shard accounting is re-aggregated by
+//! [`crate::metrics::PoolMetrics`].  [`ServeHandle`] survives as the
+//! `n_workers = 1` special case so single-stream callers keep a simple API.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::metrics::{PoolMetrics, ServeMetrics};
+
+use super::serve_loop::{serve_loop, ServeConfig};
+use super::{Inbound, Request, Response};
+
+/// Shared load snapshot for one worker: how many requests have been
+/// dispatched to it and not yet completed/rejected.
+pub struct WorkerLoad {
+    batch: usize,
+    inflight: AtomicUsize,
+}
+
+impl WorkerLoad {
+    pub fn new(batch: usize) -> WorkerLoad {
+        WorkerLoad { batch: batch.max(1), inflight: AtomicUsize::new(0) }
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Decode lanes not yet claimed by an in-flight request.
+    pub fn free_lanes(&self) -> usize {
+        self.batch.saturating_sub(self.inflight())
+    }
+
+    /// Requests beyond lane capacity (the worker's virtual queue depth).
+    pub fn queue_depth(&self) -> usize {
+        self.inflight().saturating_sub(self.batch)
+    }
+}
+
+/// RAII in-flight marker: created at dispatch, rides inside the request
+/// through the worker, and decrements the worker's in-flight count when the
+/// request reaches *any* terminal state (its `SeqRun`/message is dropped).
+pub struct LoadToken(Arc<WorkerLoad>);
+
+impl LoadToken {
+    pub fn acquire(load: &Arc<WorkerLoad>) -> LoadToken {
+        load.inflight.fetch_add(1, Ordering::Relaxed);
+        LoadToken(load.clone())
+    }
+}
+
+impl Drop for LoadToken {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Pick the least-loaded worker from `(queue_depth, free_lanes)` snapshots:
+/// min queue depth, then max free lanes, scanning from `start` so equally
+/// loaded workers are chosen round-robin.
+pub(crate) fn select_least_loaded(loads: &[(usize, usize)], start: usize) -> usize {
+    assert!(!loads.is_empty());
+    let n = loads.len();
+    let mut best = start % n;
+    for k in 1..n {
+        let i = (start + k) % n;
+        let (bq, bf) = loads[best];
+        let (iq, if_) = loads[i];
+        if iq < bq || (iq == bq && if_ > bf) {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Per-shard cache budget: split the global budget evenly (rounded up so
+/// `n` shards never sum below the requested total).
+pub(crate) fn shard_budget(total: Option<usize>, n_workers: usize) -> Option<usize> {
+    total.map(|b| b.div_ceil(n_workers.max(1)))
+}
+
+struct PoolWorker {
+    tx: Sender<Inbound>,
+    load: Arc<WorkerLoad>,
+    /// Cleared when a send to this worker fails (its loop exited); dead
+    /// workers are excluded from routing — otherwise a crashed worker's
+    /// empty load would make it a magnet for all subsequent traffic.
+    alive: AtomicBool,
+    join: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+/// Handle to a sharded pool of serve-loop workers.
+///
+/// `Sync`: submissions from many threads (TCP connection handlers, bench
+/// clients) go through `&self`; each picks a worker and sends on its
+/// channel.  Workers own all non-`Send` PJRT state.
+pub struct ServePool {
+    workers: Vec<PoolWorker>,
+    rr: AtomicUsize,
+    pub metrics: PoolMetrics,
+}
+
+impl ServePool {
+    /// Spawn `n_workers` replica serve loops (each compiles its own
+    /// executables and owns a cache shard of `cache_budget / n_workers`).
+    pub fn start(cfg: ServeConfig, n_workers: usize) -> ServePool {
+        let n = n_workers.max(1);
+        let per_shard = shard_budget(cfg.cache_budget, n);
+        let mut workers = Vec::with_capacity(n);
+        let mut worker_metrics = Vec::with_capacity(n);
+        for w in 0..n {
+            let mut wcfg = cfg.clone();
+            wcfg.cache_budget = per_shard;
+            let (tx, rx) = channel();
+            let metrics = Arc::new(ServeMetrics::default());
+            let m2 = metrics.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("cq-serve-worker-{w}"))
+                .spawn(move || serve_loop(wcfg, rx, m2))
+                .expect("spawn serve worker");
+            workers.push(PoolWorker {
+                tx,
+                load: Arc::new(WorkerLoad::new(cfg.batch)),
+                alive: AtomicBool::new(true),
+                join: Some(join),
+            });
+            worker_metrics.push(metrics);
+        }
+        ServePool {
+            workers,
+            rr: AtomicUsize::new(0),
+            metrics: PoolMetrics::new(worker_metrics),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Current `(queue_depth, free_lanes)` per worker (router's view).
+    pub fn loads(&self) -> Vec<(usize, usize)> {
+        self.workers
+            .iter()
+            .map(|w| (w.load.queue_depth(), w.load.free_lanes()))
+            .collect()
+    }
+
+    /// Workers still accepting traffic.
+    pub fn live_workers(&self) -> usize {
+        self.workers
+            .iter()
+            .filter(|w| w.alive.load(Ordering::Relaxed))
+            .count()
+    }
+
+    /// Least-loaded live worker, or `None` when every worker is dead.  The
+    /// candidate list is rotated by a round-robin counter before the
+    /// least-loaded scan so ties rotate across the pool.
+    fn pick_worker(&self) -> Option<usize> {
+        let n = self.workers.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let live: Vec<usize> = (0..n)
+            .map(|k| (start + k) % n)
+            .filter(|&i| self.workers[i].alive.load(Ordering::Relaxed))
+            .collect();
+        if live.is_empty() {
+            return None;
+        }
+        let loads: Vec<(usize, usize)> = live
+            .iter()
+            .map(|&i| {
+                let w = &self.workers[i];
+                (w.load.queue_depth(), w.load.free_lanes())
+            })
+            .collect();
+        Some(live[select_least_loaded(&loads, 0)])
+    }
+
+    /// Dispatch without waiting; returns the response receiver.  A failed
+    /// send marks that worker dead and reroutes to the next live one.
+    pub fn submit_async(&self, req: Request) -> Result<Receiver<Response>> {
+        for _ in 0..self.workers.len() {
+            let Some(wi) = self.pick_worker() else { break };
+            let w = &self.workers[wi];
+            let token = LoadToken::acquire(&w.load);
+            let (tx, rx) = channel();
+            match w.tx.send(Inbound::Submit(req.clone(), tx, Some(token))) {
+                Ok(()) => return Ok(rx),
+                Err(_) => {
+                    // Worker loop exited: exclude it and retry elsewhere.
+                    w.alive.store(false, Ordering::Relaxed);
+                    log::warn!("serve worker {wi} is gone; rerouting");
+                }
+            }
+        }
+        Err(anyhow!("no live serve workers"))
+    }
+
+    /// Dispatch and block for the response.
+    pub fn submit(&self, req: Request) -> Result<Response> {
+        self.submit_async(req)?
+            .recv()
+            .context("serve worker dropped response")
+    }
+
+    /// Drain all workers and join them; the first worker error propagates.
+    pub fn shutdown(mut self) -> Result<()> {
+        for w in &self.workers {
+            let _ = w.tx.send(Inbound::Shutdown);
+        }
+        let mut first_err: Option<anyhow::Error> = None;
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let res = match j.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(anyhow!("serve worker panicked")),
+                };
+                if let Err(e) = res {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// In-process handle for the single-worker case: spawns a 1-worker
+/// [`ServePool`] and forwards to it.  Kept because single-stream callers
+/// (the `generate` CLI, quickstart) don't care about sharding.
+pub struct ServeHandle {
+    pool: ServePool,
+}
+
+impl ServeHandle {
+    pub fn start(cfg: ServeConfig) -> ServeHandle {
+        ServeHandle { pool: ServePool::start(cfg, 1) }
+    }
+
+    /// The underlying 1-worker pool (e.g. for `server::serve_tcp`).
+    pub fn pool(&self) -> &ServePool {
+        &self.pool
+    }
+
+    /// Metrics of the single worker.
+    pub fn metrics(&self) -> &ServeMetrics {
+        self.pool.metrics.worker(0)
+    }
+
+    /// Submit a request and block for its response.
+    pub fn submit(&self, req: Request) -> Result<Response> {
+        self.pool.submit(req)
+    }
+
+    /// Submit without waiting; returns the response receiver.
+    pub fn submit_async(&self, req: Request) -> Result<Receiver<Response>> {
+        self.pool.submit_async(req)
+    }
+
+    /// Drain and stop the loop.
+    pub fn shutdown(self) -> Result<()> {
+        self.pool.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn least_loaded_prefers_shallow_queue_then_free_lanes() {
+        // Worker 1 has the shallowest queue.
+        assert_eq!(select_least_loaded(&[(2, 0), (0, 0), (1, 0)], 0), 1);
+        // Equal queues: worker with more free lanes wins.
+        assert_eq!(select_least_loaded(&[(0, 1), (0, 3), (0, 2)], 0), 1);
+        // Queue depth dominates free lanes.
+        assert_eq!(select_least_loaded(&[(1, 8), (0, 1)], 0), 1);
+    }
+
+    #[test]
+    fn ties_break_round_robin_via_scan_start() {
+        let even = [(0usize, 4usize), (0, 4), (0, 4)];
+        assert_eq!(select_least_loaded(&even, 0), 0);
+        assert_eq!(select_least_loaded(&even, 1), 1);
+        assert_eq!(select_least_loaded(&even, 2), 2);
+        assert_eq!(select_least_loaded(&even, 3), 0);
+    }
+
+    #[test]
+    fn load_tokens_track_inflight_free_lanes_and_queue_depth() {
+        let load = Arc::new(WorkerLoad::new(2));
+        assert_eq!((load.queue_depth(), load.free_lanes()), (0, 2));
+        let t1 = LoadToken::acquire(&load);
+        let t2 = LoadToken::acquire(&load);
+        let t3 = LoadToken::acquire(&load);
+        assert_eq!(load.inflight(), 3);
+        assert_eq!(load.free_lanes(), 0);
+        assert_eq!(load.queue_depth(), 1, "one request beyond lane capacity");
+        drop(t2);
+        assert_eq!((load.queue_depth(), load.free_lanes()), (0, 0));
+        drop(t1);
+        drop(t3);
+        assert_eq!((load.queue_depth(), load.free_lanes()), (0, 2));
+    }
+
+    #[test]
+    fn budget_splits_across_shards_rounding_up() {
+        assert_eq!(shard_budget(None, 4), None);
+        assert_eq!(shard_budget(Some(100), 1), Some(100));
+        assert_eq!(shard_budget(Some(100), 4), Some(25));
+        assert_eq!(shard_budget(Some(101), 4), Some(26), "never under-provision");
+    }
+
+    #[test]
+    fn pool_with_missing_assets_errors_instead_of_hanging() {
+        // No artifacts / params anywhere: every worker must fail fast and
+        // submissions must surface an error, never block forever.
+        let cfg = ServeConfig {
+            model: "small".into(),
+            cq: None,
+            batch: 1,
+            cache_budget: None,
+            codebook_path: None,
+            params_path: "/nonexistent/params.bin".into(),
+            kernel: ServeConfig::default_kernel(),
+        };
+        let pool = ServePool::start(cfg, 2);
+        assert_eq!(pool.n_workers(), 2);
+        assert!(pool.submit(Request::greedy(1, "x", 4)).is_err());
+        assert!(pool.shutdown().is_err(), "worker startup error propagates");
+    }
+}

@@ -16,7 +16,7 @@
 //! baseline.  Both run the same batcher, so the serve-throughput bench
 //! isolates exactly the cache effect.
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -32,6 +32,7 @@ use crate::tensor::{TensorF, TensorI};
 use crate::util::rng::Pcg64;
 
 use super::batcher::{Batcher, SeqRun};
+use super::pool::LoadToken;
 use super::sampler::{sample, SampleCfg};
 use super::{Inbound, Request, Response};
 
@@ -187,6 +188,7 @@ fn prefill(
     ctx: &Ctx,
     req: &Request,
     respond: Option<Sender<Response>>,
+    load_token: Option<LoadToken>,
     metrics: &ServeMetrics,
 ) -> Result<SeqRun> {
     let t0 = Instant::now();
@@ -267,6 +269,8 @@ fn prefill(
     Ok(SeqRun {
         req: req.clone(),
         respond,
+        load_token,
+        reserved_bytes: 0,
         prompt_tokens: p,
         generated: vec![t0_tok],
         packed,
@@ -274,6 +278,65 @@ fn prefill(
         prefill_ms,
         decode_started: None,
     })
+}
+
+/// Router admission for one inbound request: reserve this shard's cache
+/// budget, prefill, and enqueue.  On budget exhaustion the client gets an
+/// explicit rejection; on prefill failure the reservation is returned (the
+/// seed leaked it).  The [`LoadToken`] rides in the `SeqRun` so the pool's
+/// in-flight count drops on every terminal path.
+fn admit_request(
+    ctx: &Ctx,
+    cache_mgr: &mut CacheManager,
+    batcher: &mut Batcher,
+    metrics: &ServeMetrics,
+    req: Request,
+    resp_tx: Sender<Response>,
+    token: Option<LoadToken>,
+) {
+    let reserve = ctx.geom.bytes_per_token()
+        * (req.prompt.len().min(ctx.prefills.last().unwrap().0) + req.max_new);
+    if cache_mgr.reserve(reserve).is_err() {
+        metrics.requests_rejected.add(1);
+        let _ = resp_tx.send(Response {
+            id: req.id,
+            text: String::from("[rejected: cache budget]"),
+            prompt_tokens: 0,
+            gen_tokens: 0,
+            queue_ms: 0.0,
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+            cache_bytes: 0,
+        });
+        return; // token drops here -> router sees the slot free again
+    }
+    metrics.cache_reserved_bytes.add(reserve as u64);
+    metrics.cache_peak_bytes.observe_max(cache_mgr.bytes_in_use as u64);
+    match prefill(ctx, &req, Some(resp_tx.clone()), token, metrics) {
+        Ok(mut run) => {
+            run.reserved_bytes = reserve;
+            run.enqueued_at = Instant::now();
+            batcher.enqueue(run);
+        }
+        Err(e) => {
+            log::error!("prefill failed: {e:#}");
+            cache_mgr.release(reserve);
+            metrics.cache_released_bytes.add(reserve as u64);
+            // Explicit error reply (like the rejection path) so pipelined
+            // TCP clients keep their connection instead of a dropped-channel
+            // error tearing it down.
+            let _ = resp_tx.send(Response {
+                id: req.id,
+                text: format!("[error: prefill failed: {e:#}]"),
+                prompt_tokens: 0,
+                gen_tokens: 0,
+                queue_ms: 0.0,
+                prefill_ms: 0.0,
+                decode_ms: 0.0,
+                cache_bytes: 0,
+            });
+        }
+    }
 }
 
 /// Stage a newly admitted sequence into its lane.
@@ -451,30 +514,10 @@ pub fn serve_loop(
         // --- Router: drain inbound ------------------------------------
         loop {
             match rx.try_recv() {
-                Ok(Inbound::Submit(req, resp_tx)) => {
-                    let reserve = ctx.geom.bytes_per_token()
-                        * (req.prompt.len().min(ctx.prefills.last().unwrap().0) + req.max_new);
-                    if cache_mgr.reserve(reserve).is_err() {
-                        metrics.requests_rejected.add(1);
-                        let _ = resp_tx.send(Response {
-                            id: req.id,
-                            text: String::from("[rejected: cache budget]"),
-                            prompt_tokens: 0,
-                            gen_tokens: 0,
-                            queue_ms: 0.0,
-                            prefill_ms: 0.0,
-                            decode_ms: 0.0,
-                            cache_bytes: 0,
-                        });
-                        continue;
-                    }
-                    match prefill(&ctx, &req, Some(resp_tx), &metrics) {
-                        Ok(mut run) => {
-                            run.enqueued_at = Instant::now();
-                            batcher.enqueue(run);
-                        }
-                        Err(e) => log::error!("prefill failed: {e:#}"),
-                    }
+                Ok(Inbound::Submit(req, resp_tx, token)) => {
+                    admit_request(
+                        &ctx, &mut cache_mgr, &mut batcher, &metrics, req, resp_tx, token,
+                    );
                 }
                 Ok(Inbound::Shutdown) => shutting_down = true,
                 Err(TryRecvError::Empty) => break,
@@ -537,16 +580,10 @@ pub fn serve_loop(
         } else if batcher.is_idle() {
             // Idle: block briefly for the next request.
             match rx.recv_timeout(std::time::Duration::from_millis(20)) {
-                Ok(Inbound::Submit(req, resp_tx)) => {
-                    let reserve = ctx.geom.bytes_per_token()
-                        * (req.prompt.len().min(ctx.prefills.last().unwrap().0) + req.max_new);
-                    if cache_mgr.reserve(reserve).is_ok() {
-                        if let Ok(run) = prefill(&ctx, &req, Some(resp_tx), &metrics) {
-                            batcher.enqueue(run);
-                        }
-                    } else {
-                        metrics.requests_rejected.add(1);
-                    }
+                Ok(Inbound::Submit(req, resp_tx, token)) => {
+                    admit_request(
+                        &ctx, &mut cache_mgr, &mut batcher, &metrics, req, resp_tx, token,
+                    );
                 }
                 Ok(Inbound::Shutdown) => shutting_down = true,
                 Err(_) => {
@@ -594,9 +631,10 @@ fn complete(
             CacheMode::Cq { stage, .. } => stage.release(slot),
             CacheMode::Fp { pos, .. } => pos[slot] = 0,
         }
-        let reserve = ctx.geom.bytes_per_token()
-            * (run.prompt_tokens + run.req.max_new);
-        cache_mgr.release(reserve);
+        // Release exactly what admission reserved so shard accounting
+        // returns to zero when the shard drains.
+        cache_mgr.release(run.reserved_bytes);
+        metrics.cache_released_bytes.add(run.reserved_bytes as u64);
         let tok = ByteTokenizer;
         let text = tok.decode(&run.generated);
         let decode_ms = run
@@ -623,53 +661,7 @@ fn complete(
                 cache_bytes: run.packed.logical_bytes(),
             });
         }
-    }
-}
-
-/// In-process handle: spawns the serve loop on its own thread and provides
-/// a blocking `submit`.  Used by the TCP server, examples and benches.
-pub struct ServeHandle {
-    tx: Sender<Inbound>,
-    pub metrics: Arc<ServeMetrics>,
-    join: Option<std::thread::JoinHandle<Result<()>>>,
-}
-
-impl ServeHandle {
-    pub fn start(cfg: ServeConfig) -> ServeHandle {
-        let (tx, rx) = channel();
-        let metrics = Arc::new(ServeMetrics::default());
-        let m2 = metrics.clone();
-        let join = std::thread::Builder::new()
-            .name("cq-serve-loop".into())
-            .spawn(move || serve_loop(cfg, rx, m2))
-            .expect("spawn serve loop");
-        ServeHandle { tx, metrics, join: Some(join) }
-    }
-
-    /// Submit a request and block for its response.
-    pub fn submit(&self, req: Request) -> Result<Response> {
-        let (tx, rx) = channel();
-        self.tx
-            .send(Inbound::Submit(req, tx))
-            .map_err(|_| anyhow!("serve loop gone"))?;
-        rx.recv().context("serve loop dropped response")
-    }
-
-    /// Submit without waiting; returns the response receiver.
-    pub fn submit_async(&self, req: Request) -> Result<Receiver<Response>> {
-        let (tx, rx) = channel();
-        self.tx
-            .send(Inbound::Submit(req, tx))
-            .map_err(|_| anyhow!("serve loop gone"))?;
-        Ok(rx)
-    }
-
-    /// Drain and stop the loop.
-    pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.tx.send(Inbound::Shutdown);
-        if let Some(j) = self.join.take() {
-            j.join().map_err(|_| anyhow!("serve loop panicked"))??;
-        }
-        Ok(())
+        // `run` (and its LoadToken) drops here: the router's in-flight count
+        // for this worker decrements only after the response is sent.
     }
 }

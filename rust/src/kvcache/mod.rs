@@ -307,6 +307,81 @@ mod tests {
     }
 
     #[test]
+    fn compression_ratio_table_matches_paper() {
+        // hd=64 head: CQ-<c>c8b has G = 64/c groups at 8 bits each, so
+        // bits/FPN = 8/c and the fp16 ratio is 2c. Paper headline: 8c8b
+        // (1 bit per channel) compresses 16x.
+        for (groups, want) in [(8usize, 16usize), (16, 8), (32, 4)] {
+            let g = CacheGeom { n_layers: 4, n_heads: 4, groups, bits: 8, tmax: 512 };
+            assert_eq!(
+                g.fp16_bytes_per_token(64) / g.bytes_per_token(),
+                want,
+                "G={groups}"
+            );
+        }
+        // fp16 geometry (1 channel per group, 16 bits) is the identity.
+        let fp = CacheGeom { n_layers: 4, n_heads: 4, groups: 64, bits: 16, tmax: 512 };
+        assert_eq!(fp.fp16_bytes_per_token(64), fp.bytes_per_token());
+    }
+
+    #[test]
+    fn token_random_access_is_fixed_stride() {
+        // Appends are O(1) amortized and token(t) reads a fixed-width record
+        // at t * bytes_per_token, independent of cache length: storage must
+        // grow exactly linearly and out-of-order reads must roundtrip.
+        let g = geom();
+        let per = g.n_layers * g.n_heads * g.groups;
+        let mut c = PackedSeqCache::new(g);
+        let tok = |t: usize| -> Vec<u32> {
+            (0..per).map(|i| ((5 * t + 3 * i) % 8) as u32).collect()
+        };
+        for t in 0..8 {
+            let before = c.bytes();
+            c.append(&tok(t), &tok(t + 1)).unwrap();
+            assert_eq!(c.bytes() - before, g.bytes_per_token(), "linear growth");
+        }
+        for t in [7usize, 0, 4, 2, 6, 1, 5, 3] {
+            let (k, v) = c.token(t);
+            assert_eq!(k, tok(t), "token {t} keys");
+            assert_eq!(v, tok(t + 1), "token {t} values");
+        }
+        assert_eq!(c.logical_bytes(), 8 * g.bytes_per_token());
+    }
+
+    #[test]
+    fn budget_exhaustion_error_path_and_recovery() {
+        let mut m = CacheManager::with_budget(1000);
+        m.reserve(600).unwrap();
+        m.reserve(400).unwrap();
+        // Exactly full: the next byte must be refused with a budget error.
+        let err = m.reserve(1).unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+        // A failed reserve must not corrupt accounting.
+        assert_eq!(m.bytes_in_use, 1000);
+        assert_eq!(m.peak, 1000);
+        // Releasing makes room again; peak is sticky.
+        m.release(500);
+        m.reserve(300).unwrap();
+        assert_eq!(m.bytes_in_use, 800);
+        assert_eq!(m.peak, 1000);
+        // Unbudgeted manager never refuses.
+        let mut free = CacheManager::default();
+        free.reserve(usize::MAX / 2).unwrap();
+    }
+
+    #[test]
+    fn unstored_fp_cache_accounts_without_storing() {
+        let g = geom();
+        let mut c = PackedSeqCache::new_unstored(g);
+        for _ in 0..g.tmax {
+            c.append_unstored().unwrap();
+        }
+        assert!(c.append_unstored().is_err(), "tmax enforced in fp mode too");
+        assert_eq!(c.bytes(), 0, "fp mode stores no codes");
+        assert_eq!(c.logical_bytes(), g.tmax * g.bytes_per_token());
+    }
+
+    #[test]
     fn prop_packed_roundtrip_random_geometry() {
         run_prop(20, 21, |rng| {
             let g = CacheGeom {

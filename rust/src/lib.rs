@@ -22,10 +22,13 @@
 //! * [`train`]       — Rust-driven AOT training loop + checkpoints.
 //! * [`calib`]       — Fisher calibration (activations + gradients).
 //! * [`eval`]        — perplexity + zero-shot suites under any codec.
-//! * [`kvcache`]     — packed quantized cache pages + staging buffers.
-//! * [`coordinator`] — router, continuous batcher, decode scheduler.
-//! * [`server`]      — TCP line-protocol server and client.
-//! * [`metrics`]     — latency/throughput/memory-traffic telemetry.
+//! * [`kvcache`]     — packed quantized cache pages + staging buffers,
+//!                     per-shard byte-budget accounting.
+//! * [`coordinator`] — sharded serve pool: least-loaded router over N
+//!                     engine workers, continuous batcher, decode scheduler.
+//! * [`server`]      — TCP line-protocol server and client (fronts the pool).
+//! * [`metrics`]     — latency/throughput/memory-traffic telemetry, merged
+//!                     per-worker into pool-level aggregates.
 
 pub mod bench_support;
 pub mod calib;
@@ -43,6 +46,19 @@ pub mod util;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
+
+/// True when the AOT artifact bundle exists (`artifacts/manifest.json`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// True when artifacts exist *and* a PJRT engine can actually be built
+/// (false when compiled against the vendored `xla` stub).  Integration
+/// tests and benches that execute artifacts gate on this and skip
+/// gracefully instead of failing on build-only hosts.
+pub fn runtime_available() -> bool {
+    artifacts_available() && runtime::Engine::load_default().is_ok()
+}
 
 /// Root of the artifact directory; overridable via `CQ_ARTIFACTS`.
 pub fn artifacts_dir() -> std::path::PathBuf {

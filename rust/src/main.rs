@@ -14,7 +14,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use cq::calib::CalibData;
-use cq::coordinator::{Request, ServeConfig, ServeHandle};
+use cq::coordinator::{Request, ServeConfig, ServeHandle, ServePool};
 use cq::data::corpus::{CorpusKind, CorpusSpec, Split};
 use cq::data::{eval_batches, Dataset};
 use cq::eval::tasks::{task_accuracy, TaskKind, TaskSet};
@@ -42,7 +42,7 @@ COMMANDS
   eval-tasks  --model small --codec cq-8c8b [--items 120]
   generate    --model small --prompt \"...\" [--max-tokens 48] [--cq 8c8b]
   serve       --model small --port 7878 [--cq 8c8b] [--batch 8]
-              [--cache-budget-mb 64]
+              [--workers 2] [--cache-budget-mb 64]
   client      --port 7878 --prompt \"...\" [--max-tokens 32]
   gen-corpus  --corpus wiki2s --split train --bytes 200000 [--out file]
 ";
@@ -326,16 +326,17 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = serve_config(args)?;
     let port = args.usize("port", 7878);
+    let workers = args.usize("workers", 1).max(1);
     println!(
-        "serving model '{}' cache={} batch={}",
+        "serving model '{}' cache={} batch={} workers={workers} (cache budget sharded per worker)",
         cfg.model,
         cfg.cq.clone().unwrap_or_else(|| "fp16".into()),
         cfg.batch
     );
-    let handle = ServeHandle::start(cfg);
+    let pool = ServePool::start(cfg, workers);
     let stop = Arc::new(AtomicBool::new(false));
-    cq::server::serve_tcp(&handle, &format!("127.0.0.1:{port}"), stop)?;
-    handle.shutdown()
+    cq::server::serve_tcp(&pool, &format!("127.0.0.1:{port}"), stop)?;
+    pool.shutdown()
 }
 
 fn cmd_client(args: &Args) -> Result<()> {

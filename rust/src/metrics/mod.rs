@@ -1,7 +1,9 @@
-//! Telemetry: latency histograms, throughput counters, and the von-Neumann
-//! memory-traffic model the paper's §2.2 argument rests on.
+//! Telemetry: latency histograms, throughput counters, pool-level
+//! aggregation across serve-pool workers, and the von-Neumann memory-traffic
+//! model the paper's §2.2 argument rests on.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Log-bucketed latency histogram (thread-safe, lock-free).
 pub struct Histogram {
@@ -53,6 +55,17 @@ impl Histogram {
         self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
     }
 
+    /// Fold another histogram's samples into this one (pool aggregation).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (a, b) in self.buckets.iter().zip(&other.buckets) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     /// Approximate percentile from bucket upper bounds (µs resolution).
     pub fn percentile_ms(&self, p: f64) -> f64 {
         let total = self.count();
@@ -85,6 +98,19 @@ impl Counter {
     }
 }
 
+/// High-watermark gauge (records the maximum value ever observed).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn observe_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Memory-traffic model for one decode step (paper §2.2): every generated
 /// token must read the entire cache of its sequence once.  Comparing fp16
 /// and packed-code traffic gives the bandwidth-bound speedup ceiling.
@@ -109,7 +135,7 @@ impl TrafficModel {
     }
 }
 
-/// Serving metrics bundle.
+/// Serving metrics bundle (one per serve-pool worker).
 #[derive(Default)]
 pub struct ServeMetrics {
     pub queue_wait: Histogram,
@@ -119,12 +145,24 @@ pub struct ServeMetrics {
     pub tokens_out: Counter,
     pub requests_done: Counter,
     pub requests_rejected: Counter,
+    /// Cache-budget accounting: bytes reserved / released by this shard's
+    /// `CacheManager` (in_use = reserved - released) and the shard's peak.
+    pub cache_reserved_bytes: Counter,
+    pub cache_released_bytes: Counter,
+    pub cache_peak_bytes: Gauge,
 }
 
 impl ServeMetrics {
+    /// Cache bytes currently reserved on this shard.
+    pub fn cache_bytes_in_use(&self) -> u64 {
+        self.cache_reserved_bytes
+            .get()
+            .saturating_sub(self.cache_released_bytes.get())
+    }
+
     pub fn summary(&self, wall_secs: f64) -> String {
         format!(
-            "requests={} rejected={} tokens={} tput={:.1} tok/s  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms",
+            "requests={} rejected={} tokens={} tput={:.1} tok/s  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms  cache peak={}B",
             self.requests_done.get(),
             self.requests_rejected.get(),
             self.tokens_out.get(),
@@ -133,7 +171,105 @@ impl ServeMetrics {
             self.decode_step_latency.percentile_ms(0.95),
             self.request_latency.percentile_ms(0.5),
             self.request_latency.percentile_ms(0.95),
+            self.cache_peak_bytes.get(),
         )
+    }
+}
+
+/// Pool-level telemetry: per-worker [`ServeMetrics`] plus aggregation.
+///
+/// Counters aggregate by summation; latency histograms merge bucket-wise so
+/// pool percentiles weight every worker's samples equally.  The pool "peak"
+/// is the sum of per-shard peaks — an upper bound on the true simultaneous
+/// peak (shards peak independently).
+pub struct PoolMetrics {
+    workers: Vec<Arc<ServeMetrics>>,
+}
+
+impl PoolMetrics {
+    pub fn new(workers: Vec<Arc<ServeMetrics>>) -> PoolMetrics {
+        assert!(!workers.is_empty(), "pool needs at least one worker");
+        PoolMetrics { workers }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn worker(&self, i: usize) -> &ServeMetrics {
+        &self.workers[i]
+    }
+
+    pub fn workers(&self) -> &[Arc<ServeMetrics>] {
+        &self.workers
+    }
+
+    fn sum(&self, f: impl Fn(&ServeMetrics) -> u64) -> u64 {
+        self.workers.iter().map(|m| f(m)).sum()
+    }
+
+    pub fn tokens_out(&self) -> u64 {
+        self.sum(|m| m.tokens_out.get())
+    }
+
+    pub fn requests_done(&self) -> u64 {
+        self.sum(|m| m.requests_done.get())
+    }
+
+    pub fn requests_rejected(&self) -> u64 {
+        self.sum(|m| m.requests_rejected.get())
+    }
+
+    pub fn cache_bytes_reserved(&self) -> u64 {
+        self.sum(|m| m.cache_reserved_bytes.get())
+    }
+
+    pub fn cache_bytes_in_use(&self) -> u64 {
+        self.sum(|m| m.cache_bytes_in_use())
+    }
+
+    pub fn cache_peak_bytes(&self) -> u64 {
+        self.sum(|m| m.cache_peak_bytes.get())
+    }
+
+    /// All workers' decode-step latencies merged into one histogram.
+    pub fn merged_decode_latency(&self) -> Histogram {
+        let h = Histogram::new();
+        for m in &self.workers {
+            h.merge_from(&m.decode_step_latency);
+        }
+        h
+    }
+
+    /// All workers' end-to-end request latencies merged into one histogram.
+    pub fn merged_request_latency(&self) -> Histogram {
+        let h = Histogram::new();
+        for m in &self.workers {
+            h.merge_from(&m.request_latency);
+        }
+        h
+    }
+
+    /// Pool summary line followed by one indented line per worker.
+    pub fn summary(&self, wall_secs: f64) -> String {
+        let decode = self.merged_decode_latency();
+        let e2e = self.merged_request_latency();
+        let mut s = format!(
+            "pool[{}w]: requests={} rejected={} tokens={} tput={:.1} tok/s  decode p50={:.2}ms  e2e p95={:.1}ms  cache in_use={}B peak<={}B",
+            self.n_workers(),
+            self.requests_done(),
+            self.requests_rejected(),
+            self.tokens_out(),
+            self.tokens_out() as f64 / wall_secs.max(1e-9),
+            decode.percentile_ms(0.5),
+            e2e.percentile_ms(0.95),
+            self.cache_bytes_in_use(),
+            self.cache_peak_bytes(),
+        );
+        for (i, m) in self.workers.iter().enumerate() {
+            s.push_str(&format!("\n  worker {i}: {}", m.summary(wall_secs)));
+        }
+        s
     }
 }
 
@@ -161,6 +297,68 @@ mod tests {
         c.add(3);
         c.add(4);
         assert_eq!(c.get(), 7);
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts_and_preserves_percentiles() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for ms in [1u64, 2, 4] {
+            a.record(Duration::from_millis(ms));
+        }
+        for ms in [8u64, 100] {
+            b.record(Duration::from_millis(ms));
+        }
+        let merged = Histogram::new();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+        assert_eq!(merged.count(), 5);
+        assert!(merged.mean_ms() > 20.0 && merged.mean_ms() < 30.0);
+        assert!(merged.percentile_ms(1.0) >= 100.0);
+    }
+
+    #[test]
+    fn gauge_tracks_high_watermark() {
+        let g = Gauge::default();
+        g.observe_max(10);
+        g.observe_max(3);
+        assert_eq!(g.get(), 10);
+        g.observe_max(42);
+        assert_eq!(g.get(), 42);
+    }
+
+    #[test]
+    fn pool_metrics_aggregate_worker_shards() {
+        let w0 = Arc::new(ServeMetrics::default());
+        let w1 = Arc::new(ServeMetrics::default());
+        w0.tokens_out.add(10);
+        w1.tokens_out.add(5);
+        w0.requests_done.add(2);
+        w1.requests_rejected.add(1);
+        w0.cache_reserved_bytes.add(100);
+        w0.cache_released_bytes.add(40);
+        w0.cache_peak_bytes.observe_max(100);
+        w1.cache_reserved_bytes.add(30);
+        w1.cache_peak_bytes.observe_max(30);
+        w0.decode_step_latency.record(Duration::from_millis(2));
+        w1.decode_step_latency.record(Duration::from_millis(4));
+
+        let pool = PoolMetrics::new(vec![w0.clone(), w1.clone()]);
+        assert_eq!(pool.n_workers(), 2);
+        assert_eq!(pool.tokens_out(), 15);
+        assert_eq!(pool.requests_done(), 2);
+        assert_eq!(pool.requests_rejected(), 1);
+        // Per-shard accounting sums to pool totals.
+        assert_eq!(
+            pool.cache_bytes_in_use(),
+            w0.cache_bytes_in_use() + w1.cache_bytes_in_use()
+        );
+        assert_eq!(pool.cache_bytes_in_use(), 90);
+        assert_eq!(pool.cache_peak_bytes(), 130);
+        assert_eq!(pool.merged_decode_latency().count(), 2);
+        let s = pool.summary(1.0);
+        assert!(s.contains("pool[2w]"), "{s}");
+        assert!(s.contains("worker 1"), "{s}");
     }
 
     #[test]

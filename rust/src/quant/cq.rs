@@ -439,6 +439,26 @@ mod tests {
     }
 
     #[test]
+    fn cqspec_table_bits_tag_centroids_groups() {
+        // (channels, bits) -> (bits/FPN, tag, 2^b centroids, groups at hd=64)
+        let table: [(usize, usize, f64, &str, usize, usize); 6] = [
+            (1, 2, 2.0, "1c2b", 4, 64),
+            (2, 4, 2.0, "2c4b", 16, 32),
+            (2, 8, 4.0, "2c8b", 256, 32),
+            (4, 8, 2.0, "4c8b", 256, 16),
+            (8, 8, 1.0, "8c8b", 256, 8),
+            (8, 10, 1.25, "8c10b", 1024, 8),
+        ];
+        for (c, b, bpf, tag, k, g) in table {
+            let spec = CqSpec::new(c, b);
+            assert_eq!(spec.bits_per_fpn(), bpf, "{tag}");
+            assert_eq!(spec.tag(), tag);
+            assert_eq!(spec.n_centroids(), k, "{tag}");
+            assert_eq!(spec.n_groups(64), g, "{tag}");
+        }
+    }
+
+    #[test]
     fn quantization_error_shrinks_with_bits() {
         let (b2, k, _) = learn_books(CqSpec::new(2, 2), false);
         let (b5, _, _) = learn_books(CqSpec::new(2, 5), false);

@@ -315,4 +315,45 @@ mod tests {
         let b = kmeans(&pts, 100, 2, None, cfg);
         assert_eq!(a.centroids, b.centroids);
     }
+
+    #[test]
+    fn weighted_runs_are_deterministic_and_seed_sensitive() {
+        // Fisher-weighted learning must be exactly reproducible from a seed
+        // (EXPERIMENTS.md requires every table regenerate bit-identically)
+        // while different seeds explore different k-means++ initializations.
+        let mut rng = Pcg64::seed(11);
+        let pts: Vec<f32> = (0..300).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..150).map(|i| 1.0 + (i % 7) as f32).collect();
+        let cfg = KMeansCfg { k: 8, max_iters: 3, seed: 21 };
+        let a = kmeans(&pts, 150, 2, Some(&w), cfg);
+        let b = kmeans(&pts, 150, 2, Some(&w), cfg);
+        assert_eq!(a.centroids, b.centroids, "same seed => identical centroids");
+        assert_eq!(a.inertia, b.inertia);
+        // max_iters=3 stops before convergence, so different seeding must
+        // still be visible in the centroids.
+        let c = kmeans(&pts, 150, 2, Some(&w), KMeansCfg { seed: 22, ..cfg });
+        assert_ne!(a.centroids, c.centroids, "different seed => different init");
+    }
+
+    #[test]
+    fn fisher_weighted_and_unweighted_centroids_differ() {
+        // Skewed weights must pull the solution away from the uniform
+        // (Eq. 5) optimum toward the Fisher (Eq. 6) optimum.
+        let mut rng = Pcg64::seed(13);
+        let vals: Vec<f32> = (0..200).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = vals
+            .iter()
+            .map(|&x| if x > 0.5 { 100.0 } else { 1.0 })
+            .collect();
+        let cfg = KMeansCfg { k: 4, max_iters: 60, seed: 3 };
+        let uni = kmeans_1d(&vals, None, cfg);
+        let fis = kmeans_1d(&vals, Some(&w), cfg);
+        assert_ne!(uni.centroids, fis.centroids, "weights must matter");
+        // And the weighted run allocates its centroid mass to the right
+        // tail: its largest centroid sits above the unweighted one's mean.
+        let maxc = |km: &KMeans| {
+            km.centroids.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+        };
+        assert!(maxc(&fis) >= maxc(&uni) - 0.25, "fis={} uni={}", maxc(&fis), maxc(&uni));
+    }
 }

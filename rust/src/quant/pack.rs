@@ -110,4 +110,76 @@ mod tests {
         assert_eq!(packed_len(3, 10), 4); // 30 bits -> 4 bytes
         assert_eq!(packed_len(4, 8), 4);
     }
+
+    #[test]
+    fn prop_roundtrip_bits_1_to_16_ragged_lengths() {
+        // Every width the cache can be configured with (1..=16), at lengths
+        // that land on and off byte boundaries, with packed_len consistency.
+        run_prop(80, 17, |rng| {
+            let bits = 1 + rng.below(16) as u32; // 1..=16
+            let n = 1 + rng.below(257); // ragged: 1..=257 codes
+            let max = 1u64 << bits;
+            let codes: Vec<u32> =
+                (0..n).map(|_| rng.below(max as usize) as u32).collect();
+            let packed = pack_codes(&codes, bits);
+            if packed.len() != packed_len(n, bits) {
+                return Err(format!(
+                    "packed_len mismatch: {} vs {} (bits={bits} n={n})",
+                    packed.len(),
+                    packed_len(n, bits)
+                ));
+            }
+            let back = unpack_codes(&packed, bits, n);
+            if back != codes {
+                return Err(format!("roundtrip mismatch at bits={bits} n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_packed_len_matches_bit_arithmetic() {
+        run_prop(120, 23, |rng| {
+            let bits = 1 + rng.below(16) as u32;
+            let n = rng.below(1000);
+            let want = (n * bits as usize + 7) / 8;
+            if packed_len(n, bits) == want {
+                Ok(())
+            } else {
+                Err(format!("packed_len({n}, {bits}) != {want}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_packing_is_dense_concatenable_records() {
+        // PackedSeqCache appends fixed-width per-token records and indexes
+        // them by multiplication; that is only sound if packing a whole
+        // stream equals concatenating byte-aligned record packings.
+        run_prop(40, 29, |rng| {
+            let bits = 1 + rng.below(16) as u32;
+            // Record length chosen so each record is byte-aligned.
+            let rec = match bits % 8 {
+                0 => 1 + rng.below(8),
+                4 => 2 * (1 + rng.below(4)),
+                2 | 6 => 4 * (1 + rng.below(2)),
+                _ => 8,
+            };
+            let n_recs = 1 + rng.below(6);
+            let max = 1u64 << bits;
+            let all: Vec<u32> = (0..rec * n_recs)
+                .map(|_| rng.below(max as usize) as u32)
+                .collect();
+            let whole = pack_codes(&all, bits);
+            let mut concat = Vec::new();
+            for chunk in all.chunks(rec) {
+                concat.extend_from_slice(&pack_codes(chunk, bits));
+            }
+            if whole == concat {
+                Ok(())
+            } else {
+                Err(format!("dense concat failed at bits={bits} rec={rec}"))
+            }
+        });
+    }
 }

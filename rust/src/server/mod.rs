@@ -6,9 +6,10 @@
 //!                  "gen_tokens": 32, "prefill_ms": ..., "decode_ms": ...,
 //!                  "cache_bytes": ...}`
 //!
-//! Connection threads are thin: they parse, forward to the serve loop over
-//! its channel, and stream the response back.  All model work happens on the
-//! engine thread (`coordinator::serve_loop`).
+//! Connection threads are thin: they parse, forward to the serve pool's
+//! router, and stream the response back.  All model work happens on the
+//! pool's engine worker threads (`coordinator::pool` + `serve_loop`); the
+//! router spreads concurrent connections across workers least-loaded-first.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -17,7 +18,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Request, Response, ServeHandle};
+use crate::coordinator::{Request, Response, ServePool};
 use crate::util::json::Json;
 
 /// Parse one request line into a [`Request`].
@@ -48,8 +49,9 @@ pub fn format_response(r: &Response) -> String {
 }
 
 /// Serve on `addr` until `stop` is raised.  Each connection may pipeline
-/// multiple newline-delimited requests.
-pub fn serve_tcp(handle: &ServeHandle, addr: &str, stop: Arc<AtomicBool>) -> Result<()> {
+/// multiple newline-delimited requests; concurrent connections are routed
+/// across the pool's workers.
+pub fn serve_tcp(pool: &ServePool, addr: &str, stop: Arc<AtomicBool>) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     listener.set_nonblocking(true)?;
     println!("[server] listening on {addr}");
@@ -60,9 +62,9 @@ pub fn serve_tcp(handle: &ServeHandle, addr: &str, stop: Arc<AtomicBool>) -> Res
                 Ok((stream, peer)) => {
                     log::info!("connection from {peer}");
                     let ids = next_id.clone();
-                    let h = handle;
+                    let p = pool;
                     scope.spawn(move || {
-                        if let Err(e) = handle_conn(h, stream, &ids) {
+                        if let Err(e) = handle_conn(p, stream, &ids) {
                             log::warn!("connection error: {e:#}");
                         }
                     });
@@ -79,7 +81,7 @@ pub fn serve_tcp(handle: &ServeHandle, addr: &str, stop: Arc<AtomicBool>) -> Res
     })
 }
 
-fn handle_conn(handle: &ServeHandle, stream: TcpStream, ids: &AtomicU64) -> Result<()> {
+fn handle_conn(pool: &ServePool, stream: TcpStream, ids: &AtomicU64) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -89,7 +91,7 @@ fn handle_conn(handle: &ServeHandle, stream: TcpStream, ids: &AtomicU64) -> Resu
         }
         let id = ids.fetch_add(1, Ordering::Relaxed);
         let resp = match parse_request(&line, id) {
-            Ok(req) => handle.submit(req)?,
+            Ok(req) => pool.submit(req)?,
             Err(e) => {
                 writeln!(writer, "{}", Json::obj(vec![
                     ("error", Json::Str(format!("{e:#}"))),

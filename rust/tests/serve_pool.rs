@@ -1,0 +1,155 @@
+//! Sharded serve-pool integration: a 2-worker pool under concurrent client
+//! threads against the real decode artifacts.
+//!
+//! Engine-dependent tests gate on `cq::runtime_available()` and skip
+//! gracefully when artifacts/PJRT are absent; the fail-fast test below runs
+//! everywhere.  Requires a trained `small` checkpoint + CQ-8c8b codebooks;
+//! builds them on demand via bench_support (slow first run, cached after).
+
+use cq::bench_support::Pipeline;
+use cq::coordinator::{Request, ServeConfig, ServePool};
+use cq::quant::cq::CqSpec;
+
+const BUDGET: usize = 16 * 1024 * 1024;
+const N_REQ: usize = 8;
+
+fn ensure_assets() {
+    let pipe = Pipeline::ensure("small").expect("pipeline");
+    pipe.cq_codec(CqSpec::new(8, 8), true, 30).expect("codebooks");
+}
+
+fn cq_config() -> ServeConfig {
+    ServeConfig {
+        model: "small".into(),
+        cq: Some("8c8b".into()),
+        batch: 8,
+        cache_budget: Some(BUDGET),
+        codebook_path: Some(cq::train::ckpt_dir("small").join("cq_8c8b.cqb")),
+        params_path: cq::train::ckpt_dir("small").join("params.bin"),
+        kernel: ServeConfig::default_kernel(),
+    }
+}
+
+fn request_set() -> Vec<Request> {
+    let prompts = [
+        "The castle of Aldenport ",
+        "Travellers often mention the ancient ",
+        "In the ledger, three plus four equals ",
+        "= Brimholt History =\n\nThe river of ",
+    ];
+    (0..N_REQ as u64)
+        .map(|i| Request::greedy(i, prompts[i as usize % prompts.len()], 6 + (i as usize % 3) * 2))
+        .collect()
+}
+
+/// Run the full request set against an `n_workers` pool from several client
+/// threads; returns `(id, text, gen_tokens)` sorted by id.
+fn run_pool(workers: usize) -> Vec<(u64, String, usize)> {
+    let reqs = request_set();
+    let pool = ServePool::start(cq_config(), workers);
+    let mut results: Vec<(u64, String, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = reqs
+            .chunks(2)
+            .map(|chunk| {
+                let p = &pool;
+                s.spawn(move || {
+                    chunk
+                        .iter()
+                        .map(|r| {
+                            let resp = p.submit(r.clone()).expect("pool response");
+                            (r.id, resp.text, resp.gen_tokens)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+
+    // Every request completed, none rejected.
+    results.sort_by_key(|r| r.0);
+    assert_eq!(results.len(), N_REQ);
+    assert_eq!(pool.metrics.requests_done(), N_REQ as u64);
+    assert_eq!(pool.metrics.requests_rejected(), 0);
+    for (i, req) in request_set().iter().enumerate() {
+        assert_eq!(results[i].0, req.id);
+        assert_eq!(results[i].2, req.max_new, "respects max_new");
+        assert!(!results[i].1.is_empty(), "non-empty completion");
+    }
+
+    // Per-shard cache accounting sums to pool totals and fully drains.
+    let shard_sum: u64 = pool
+        .metrics
+        .workers()
+        .iter()
+        .map(|m| m.cache_bytes_in_use())
+        .sum();
+    assert_eq!(shard_sum, pool.metrics.cache_bytes_in_use());
+    assert_eq!(
+        pool.metrics.cache_bytes_in_use(),
+        0,
+        "all reservations released after completion"
+    );
+    assert!(pool.metrics.cache_bytes_reserved() > 0, "budget was exercised");
+    let shard_budget = BUDGET.div_ceil(workers);
+    for (i, m) in pool.metrics.workers().iter().enumerate() {
+        assert!(
+            m.cache_peak_bytes.get() as usize <= shard_budget,
+            "worker {i} peak {} exceeds its shard budget {shard_budget}",
+            m.cache_peak_bytes.get()
+        );
+    }
+
+    // With 2+ workers the least-loaded router must actually spread load.
+    if workers > 1 {
+        let busy = pool
+            .metrics
+            .workers()
+            .iter()
+            .filter(|m| m.requests_done.get() > 0)
+            .count();
+        assert!(busy >= 2, "router sent all traffic to one worker");
+    }
+
+    pool.shutdown().expect("clean shutdown");
+    results
+}
+
+#[test]
+fn two_worker_pool_serves_concurrent_clients_and_matches_single_worker() {
+    if !cq::runtime_available() {
+        eprintln!("skipping: PJRT runtime / artifacts unavailable (run `make artifacts`)");
+        return;
+    }
+    ensure_assets();
+    let two = run_pool(2);
+    let one = run_pool(1);
+    assert_eq!(
+        two, one,
+        "greedy decode must be identical across pool sizes (lanes are independent)"
+    );
+}
+
+#[test]
+fn pool_with_missing_assets_fails_fast_everywhere() {
+    // Runs on build-only hosts too: a pool whose workers cannot start must
+    // surface errors on submit and shutdown, never hang the client.
+    let cfg = ServeConfig {
+        model: "small".into(),
+        cq: None,
+        batch: 1,
+        cache_budget: None,
+        codebook_path: None,
+        params_path: "/nonexistent/cq-pool-test/params.bin".into(),
+        kernel: ServeConfig::default_kernel(),
+    };
+    let pool = ServePool::start(cfg, 3);
+    assert_eq!(pool.n_workers(), 3);
+    for i in 0..3 {
+        assert!(pool.submit(Request::greedy(i, "x", 2)).is_err());
+    }
+    assert!(pool.shutdown().is_err(), "worker error must propagate");
+}

@@ -1,0 +1,198 @@
+//! Vendored, dependency-free drop-in for the slice of the `anyhow` crate this
+//! repo uses.  The build image is fully offline (no crates.io), so the real
+//! crate cannot be fetched; this shim keeps source compatibility:
+//!
+//! * `anyhow::Error` — a context-chain error (`Display` prints the outermost
+//!   message, `{:#}` the full `a: b: c` chain, like real anyhow).
+//! * `anyhow::Result<T>` alias.
+//! * `anyhow!` / `bail!` / `ensure!` macros with `format!`-style args.
+//! * `Context` trait with `.context(..)` / `.with_context(..)` on both
+//!   `Result<T, E: std::error::Error>`, `Result<T, anyhow::Error>` and
+//!   `Option<T>`.
+//! * Blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts foreign errors.
+//!
+//! Only behaviour the repo relies on is implemented; downcasting and
+//! backtraces are intentionally absent.
+
+use std::fmt;
+
+/// Context-chain error type. `chain[0]` is the outermost (most recent)
+/// context; later entries are the causes.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by the `Context` trait).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, outermost first — matches real anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `unwrap()`/`expect()` panics print the whole chain.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` (with the usual overridable error type).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Sealed unifier over "things an error position may hold": foreign
+    /// `std::error::Error`s and `anyhow::Error` itself.  Coherence accepts
+    /// the two impls because `Error` is local and never implements
+    /// `std::error::Error` (the same trick real anyhow uses).
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoAnyhow for E {
+        fn into_anyhow(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+
+    impl IntoAnyhow for super::Error {
+        fn into_anyhow(self) -> super::Error {
+            self
+        }
+    }
+}
+
+use private::IntoAnyhow;
+
+/// `.context(..)` / `.with_context(..)` extension.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: IntoAnyhow> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: `{}`", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/781b")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_chains_and_alternate_prints_chain() {
+        let e = io_fail().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("outer: "), "{full}");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 2: inner 7");
+        let o: Option<u32> = None;
+        assert_eq!(format!("{}", o.context("missing").unwrap_err()), "missing");
+    }
+
+    #[test]
+    fn macros_bail_and_ensure() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(3).unwrap_err().to_string().contains("three"));
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+    }
+}

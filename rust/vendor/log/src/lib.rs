@@ -1,0 +1,167 @@
+//! Vendored, dependency-free drop-in for the slice of the `log` crate this
+//! repo uses: the `error!`/`warn!`/`info!`/`debug!`/`trace!` macros, the
+//! `Log` trait, `set_boxed_logger` and `set_max_level`.  With no logger
+//! installed every macro is a no-op, matching the real crate's default.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Log levels, most severe first (matches the real crate's ordering, so
+/// `level <= Level::Info` admits Error/Warn/Info).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl std::fmt::Display for Level {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Maximum-level filter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Metadata about a log invocation (level only in this shim).
+pub struct Metadata {
+    level: Level,
+}
+
+impl Metadata {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+}
+
+/// One log record: metadata plus the formatted message.
+pub struct Record {
+    metadata: Metadata,
+    msg: String,
+}
+
+impl Record {
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+    pub fn metadata(&self) -> &Metadata {
+        &self.metadata
+    }
+    /// The formatted message (real `log` returns `fmt::Arguments`; a `&str`
+    /// is display-compatible for the call sites in this repo).
+    pub fn args(&self) -> &str {
+        &self.msg
+    }
+}
+
+/// A logging sink.
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+/// Error returned when a logger is installed twice.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl std::fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("a logger was already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+static LOGGER: OnceLock<Box<dyn Log>> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Install the global logger.
+pub fn set_boxed_logger(logger: Box<dyn Log>) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum level.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// Macro backend — not part of the public `log` API.
+#[doc(hidden)]
+pub fn __log(level: Level, msg: String) {
+    if level as usize > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let record = Record { metadata: Metadata { level }, msg };
+        if logger.enabled(record.metadata()) {
+            logger.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Error, format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Warn, format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Info, format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Debug, format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Trace, format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_like_real_log() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info <= Level::Info);
+        assert!(Level::Trace > Level::Debug);
+        assert_eq!(Level::Info.to_string(), "INFO");
+    }
+
+    #[test]
+    fn macros_are_noops_without_logger() {
+        // Must not panic or allocate a logger.
+        error!("e {}", 1);
+        warn!("w");
+        info!("i {x}", x = 2);
+        debug!("d");
+        trace!("t");
+    }
+}
