@@ -34,6 +34,8 @@ fn main() -> Result<()> {
         codebook_path: Some(cq::train::ckpt_dir("small").join("cq_8c8b.cqb")),
         params_path: cq::train::ckpt_dir("small").join("params.bin"),
         kernel: ServeConfig::default_kernel(),
+        block_tokens: ServeConfig::default_block_tokens(),
+        prefix_sharing: true,
     };
     let handle = ServeHandle::start(cfg);
     let req = Request::greedy(1, "The castle of Aldenport ", 64);

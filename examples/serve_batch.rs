@@ -28,6 +28,8 @@ fn run_mode(cq: Option<String>, workers: usize, n_requests: usize, max_new: usiz
         codebook_path: Some(cq::train::ckpt_dir("small").join("cq_8c8b.cqb")),
         params_path: cq::train::ckpt_dir("small").join("params.bin"),
         kernel: ServeConfig::default_kernel(),
+        block_tokens: ServeConfig::default_block_tokens(),
+        prefix_sharing: true,
     };
     let pool = ServePool::start(cfg, workers);
     let prompts = [
@@ -56,10 +58,11 @@ fn run_mode(cq: Option<String>, workers: usize, n_requests: usize, max_new: usiz
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "[{label:>5} x{workers}w] {n_requests} reqs x {max_new} tok: {:.1}s wall, {:.1} tok/s, cache {} total",
+        "[{label:>5} x{workers}w] {n_requests} reqs x {max_new} tok: {:.1}s wall, {:.1} tok/s, cache {} total, prefix hit {:.0}%",
         wall,
         total_tokens as f64 / wall,
-        human_bytes(total_cache)
+        human_bytes(total_cache),
+        pool.metrics.prefix_hit_rate() * 100.0
     );
     println!("        {}", pool.metrics.summary(wall).replace('\n', "\n        "));
     pool.shutdown()?;

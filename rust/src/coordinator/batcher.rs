@@ -9,7 +9,7 @@ use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-use crate::kvcache::{CacheGeom, PackedSeqCache};
+use crate::kvcache::{CacheGeom, PagedSeqCache};
 
 use super::pool::LoadToken;
 use super::{Request, Response};
@@ -21,12 +21,19 @@ pub struct SeqRun {
     /// Router in-flight marker; dropping it (with this run) decrements the
     /// owning worker's load in the serve pool.
     pub load_token: Option<LoadToken>,
-    /// Cache bytes reserved at admission; released exactly on completion.
-    pub reserved_bytes: usize,
+    /// Pool blocks reserved at admission; settled exactly on completion
+    /// (promoted blocks stay cached, the rest return to the budget).
+    pub reserved_blocks: usize,
     pub prompt_tokens: usize,
+    /// Prompt token ids after router trimming — the key under which the
+    /// finished sequence's blocks are promoted into the radix index.
+    pub prompt_ids: Vec<i32>,
+    /// Prompt tokens served from cached blocks at admission (reported via
+    /// `ServeMetrics::prefix_hit_tokens` and the response).
+    pub prefix_hit_tokens: usize,
     /// Generated token ids (the last one is the next decode input).
     pub generated: Vec<i32>,
-    pub packed: PackedSeqCache,
+    pub packed: PagedSeqCache,
     pub enqueued_at: Instant,
     pub prefill_ms: f64,
     pub decode_started: Option<Instant>,
@@ -141,16 +148,20 @@ mod tests {
     }
 
     fn mk_run(id: u64, prompt_len: usize, max_new: usize) -> SeqRun {
-        let mut packed = PackedSeqCache::new(geom());
+        // Lane scheduling only depends on lengths, so the accounting-only
+        // cache keeps these tests free of a block pool.
+        let mut packed = PagedSeqCache::new_unstored(geom());
         for _ in 0..prompt_len {
-            packed.append(&[0, 1], &[2, 3]).unwrap();
+            packed.append_unstored().unwrap();
         }
         SeqRun {
             req: Request::greedy(id, "x", max_new),
             respond: None,
             load_token: None,
-            reserved_bytes: 0,
+            reserved_blocks: 0,
             prompt_tokens: prompt_len,
+            prompt_ids: vec![0; prompt_len],
+            prefix_hit_tokens: 0,
             generated: vec![7],
             packed,
             enqueued_at: Instant::now(),
@@ -190,7 +201,7 @@ mod tests {
         b2.enqueue(mk_run(1, 14, 100));
         b2.admit();
         let r = b2.slot_mut(0).unwrap();
-        r.packed.append(&[0, 0], &[0, 0]).unwrap(); // len 15, tmax 16
+        r.packed.append_unstored().unwrap(); // len 15, tmax 16
         assert!(b2.must_stop(0), "cache lane nearly full");
     }
 

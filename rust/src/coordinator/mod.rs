@@ -50,11 +50,31 @@ pub struct Response {
     pub id: u64,
     pub text: String,
     pub prompt_tokens: usize,
+    /// Prompt tokens served from radix-cached blocks (quantize+store was
+    /// skipped for this span).
+    pub prefix_hit_tokens: usize,
     pub gen_tokens: usize,
     pub queue_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
     pub cache_bytes: usize,
+}
+
+impl Response {
+    /// A terminal rejection/error reply (no tokens were produced).
+    pub fn failure(id: u64, text: String) -> Response {
+        Response {
+            id,
+            text,
+            prompt_tokens: 0,
+            prefix_hit_tokens: 0,
+            gen_tokens: 0,
+            queue_ms: 0.0,
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+            cache_bytes: 0,
+        }
+    }
 }
 
 /// Messages into one serve-loop worker.  The optional [`LoadToken`] is the

@@ -1,7 +1,8 @@
 //! Sharded serve pool: N replica workers, each owning its own non-`Send`
-//! PJRT [`crate::runtime::Engine`], `Batcher`, `BatchStage` and
-//! `CacheManager` shard on a dedicated thread, fronted by a router that
-//! dispatches requests over per-worker mpsc channels.
+//! PJRT [`crate::runtime::Engine`], `Batcher`, `BatchStage` and paged cache
+//! shard (`kvcache::PagedShard`: block pool + radix prefix index +
+//! accounting) on a dedicated thread, fronted by a router that dispatches
+//! requests over per-worker mpsc channels.
 //!
 //! Routing is **least-loaded**: the router tracks per-worker in-flight
 //! requests ([`WorkerLoad`]) and picks the worker with the shallowest
@@ -15,7 +16,12 @@
 //!
 //! The global cache byte budget becomes a **per-shard budget**
 //! (`ceil(total / n_workers)`); per-shard accounting is re-aggregated by
-//! [`crate::metrics::PoolMetrics`].  [`ServeHandle`] survives as the
+//! [`crate::metrics::PoolMetrics`].  On top of the per-shard enforcement the
+//! router runs **pool-wide admission control**: once any worker has
+//! published its cache geometry, a request whose prefill+decode reservation
+//! estimate exceeds the *total* remaining pool budget is rejected up front
+//! — instead of being dispatched to a shard that is guaranteed to refuse it
+//! after prefill work was already queued.  [`ServeHandle`] survives as the
 //! `n_workers = 1` special case so single-stream callers keep a simple API.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -98,6 +104,29 @@ pub(crate) fn shard_budget(total: Option<usize>, n_workers: usize) -> Option<usi
     total.map(|b| b.div_ceil(n_workers.max(1)))
 }
 
+/// Pool-wide admission check: would a request needing
+/// `(prompt_tokens + max_new) * bytes_per_token` bytes overflow what is
+/// left of the *total* pool budget?  `bytes_in_use` should already exclude
+/// radix-cached bytes (shards evict those on demand, so they count as
+/// available).  `bytes_per_token == 0` means no worker has published its
+/// geometry yet — admit and let the shard decide.  Conservative on purpose:
+/// prefix hits and per-shard context trimming can only shrink the real
+/// reservation.
+pub(crate) fn pool_admission_rejects(
+    total_budget: Option<usize>,
+    bytes_per_token: u64,
+    bytes_in_use: u64,
+    prompt_tokens: usize,
+    max_new: usize,
+) -> bool {
+    let Some(budget) = total_budget else { return false };
+    if bytes_per_token == 0 {
+        return false;
+    }
+    let est = (prompt_tokens + max_new) as u64 * bytes_per_token;
+    est > (budget as u64).saturating_sub(bytes_in_use)
+}
+
 struct PoolWorker {
     tx: Sender<Inbound>,
     load: Arc<WorkerLoad>,
@@ -116,6 +145,8 @@ struct PoolWorker {
 pub struct ServePool {
     workers: Vec<PoolWorker>,
     rr: AtomicUsize,
+    /// Total cache budget across all shards (admission-control ceiling).
+    total_budget: Option<usize>,
     pub metrics: PoolMetrics,
 }
 
@@ -148,6 +179,7 @@ impl ServePool {
         ServePool {
             workers,
             rr: AtomicUsize::new(0),
+            total_budget: cfg.cache_budget,
             metrics: PoolMetrics::new(worker_metrics),
         }
     }
@@ -195,9 +227,39 @@ impl ServePool {
         Some(live[select_least_loaded(&loads, 0)])
     }
 
-    /// Dispatch without waiting; returns the response receiver.  A failed
-    /// send marks that worker dead and reroutes to the next live one.
+    /// Dispatch without waiting; returns the response receiver.  Requests
+    /// that cannot possibly fit the pool's remaining cache budget are
+    /// rejected here, before any worker sees them.  A failed send marks
+    /// that worker dead and reroutes to the next live one.
     pub fn submit_async(&self, req: Request) -> Result<Receiver<Response>> {
+        let hard_in_use = self
+            .metrics
+            .cache_bytes_in_use()
+            .saturating_sub(self.metrics.cache_cached_bytes());
+        // Workers trim prompts to their prefill ceiling before reserving, so
+        // the estimate must too (once a worker has published that ceiling).
+        let max_ctx = self.metrics.max_prompt_tokens() as usize;
+        let prompt_tokens = if max_ctx > 0 {
+            req.prompt.len().min(max_ctx)
+        } else {
+            req.prompt.len()
+        };
+        if pool_admission_rejects(
+            self.total_budget,
+            self.metrics.bytes_per_token(),
+            hard_in_use,
+            prompt_tokens,
+            // Workers serve at least one token (admission clamps max_new).
+            req.max_new.max(1),
+        ) {
+            self.metrics.router_rejected.add(1);
+            let (tx, rx) = channel();
+            let _ = tx.send(Response::failure(
+                req.id,
+                String::from("[rejected: pool budget]"),
+            ));
+            return Ok(rx);
+        }
         for _ in 0..self.workers.len() {
             let Some(wi) = self.pick_worker() else { break };
             let w = &self.workers[wi];
@@ -334,22 +396,72 @@ mod tests {
         assert_eq!(shard_budget(Some(101), 4), Some(26), "never under-provision");
     }
 
+    fn dead_worker_cfg(cache_budget: Option<usize>) -> ServeConfig {
+        ServeConfig {
+            model: "small".into(),
+            cq: None,
+            batch: 1,
+            cache_budget,
+            codebook_path: None,
+            params_path: "/nonexistent/params.bin".into(),
+            kernel: ServeConfig::default_kernel(),
+            block_tokens: ServeConfig::default_block_tokens(),
+            prefix_sharing: true,
+        }
+    }
+
     #[test]
     fn pool_with_missing_assets_errors_instead_of_hanging() {
         // No artifacts / params anywhere: every worker must fail fast and
         // submissions must surface an error, never block forever.
-        let cfg = ServeConfig {
-            model: "small".into(),
-            cq: None,
-            batch: 1,
-            cache_budget: None,
-            codebook_path: None,
-            params_path: "/nonexistent/params.bin".into(),
-            kernel: ServeConfig::default_kernel(),
-        };
-        let pool = ServePool::start(cfg, 2);
+        let pool = ServePool::start(dead_worker_cfg(None), 2);
         assert_eq!(pool.n_workers(), 2);
         assert!(pool.submit(Request::greedy(1, "x", 4)).is_err());
         assert!(pool.shutdown().is_err(), "worker startup error propagates");
+    }
+
+    #[test]
+    fn pool_admission_estimate_gates_on_total_remaining_budget() {
+        // No budget or unpublished geometry: always admit.
+        assert!(!pool_admission_rejects(None, 8, 0, 1_000_000, 1_000));
+        assert!(!pool_admission_rejects(Some(100), 0, 0, 1_000_000, 1_000));
+        // (prompt + max_new) * bpt vs remaining budget.
+        assert!(!pool_admission_rejects(Some(100), 4, 0, 20, 5), "100 == 100 fits");
+        assert!(pool_admission_rejects(Some(100), 4, 0, 20, 6), "104 > 100");
+        // In-use bytes shrink the remaining budget.
+        assert!(pool_admission_rejects(Some(100), 4, 60, 5, 5));
+        assert!(!pool_admission_rejects(Some(100), 4, 60, 5, 4));
+        // Saturation: over-reserved pool admits nothing with a cost.
+        assert!(pool_admission_rejects(Some(100), 4, 200, 1, 0));
+    }
+
+    #[test]
+    fn router_rejects_oversized_requests_before_any_worker() {
+        let pool = ServePool::start(dead_worker_cfg(Some(1024)), 2);
+        // Simulate one worker having published its cache geometry.
+        pool.metrics.worker(0).bytes_per_token.observe_max(4);
+        // (2000 + 16) * 4 bytes can never fit a 1024-byte pool: rejected at
+        // the router even though every worker is dead.
+        let big = Request::greedy(1, &"x".repeat(2000), 16);
+        let resp = pool.submit(big).expect("router replies directly");
+        assert!(resp.text.contains("pool budget"), "{}", resp.text);
+        assert_eq!(resp.gen_tokens, 0);
+        assert_eq!(pool.metrics.router_rejected.get(), 1);
+        assert_eq!(pool.metrics.requests_rejected(), 1);
+        // A small request passes the gate and then surfaces the dead-worker
+        // error instead.
+        assert!(pool.submit(Request::greedy(2, "hi", 1)).is_err());
+        // Once a worker publishes its prefill ceiling, the estimate clamps
+        // to it: the same huge prompt trims to (64 + 16) * 4 = 320 B, fits
+        // the 1024 B pool, and reaches the (dead) workers instead of being
+        // router-rejected.
+        pool.metrics.worker(0).max_prompt_tokens.observe_max(64);
+        assert!(pool.submit(Request::greedy(3, &"x".repeat(2000), 16)).is_err());
+        assert_eq!(
+            pool.metrics.router_rejected.get(),
+            1,
+            "trimmed estimate must not be rejected again"
+        );
+        assert!(pool.shutdown().is_err());
     }
 }

@@ -4,10 +4,12 @@
 //!
 //! ```text
 //! loop {
-//!   drain inbound channel -> prefill + enqueue      (router)
+//!   drain inbound -> radix match + block reserve    (admission, eviction
+//!                  -> prefill + enqueue              under pressure)
 //!   admit queued sequences into free lanes          (batcher)
 //!   if any lane active: one fused decode step       (decode_cq / decode_fp)
-//!   sample, append codes, complete finished lanes
+//!   sample, append codes, complete finished lanes   (promote full blocks
+//!                                                    into the radix index)
 //! }
 //! ```
 //!
@@ -23,7 +25,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::tokenizer::{ByteTokenizer, Tokenizer};
-use crate::kvcache::{BatchStage, CacheGeom, CacheManager, PackedSeqCache};
+use crate::kvcache::{Admission, BatchStage, CacheGeom, PagedShard, DEFAULT_BLOCK_TOKENS};
 use crate::metrics::ServeMetrics;
 use crate::quant::cq::CqCodebooks;
 use crate::quant::KvKind;
@@ -43,7 +45,9 @@ pub struct ServeConfig {
     /// CQ tag ("2c8b" | "4c8b" | "8c8b") or None for the fp cache baseline.
     pub cq: Option<String>,
     pub batch: usize,
-    /// Global cache budget in bytes (None = unlimited).
+    /// Global cache budget in bytes (None = unlimited).  Each shard converts
+    /// its split to whole blocks (floor), and the block pool enforces it as
+    /// a hard allocation ceiling.
     pub cache_budget: Option<usize>,
     /// Path to learned codebooks (required when `cq` is set).
     pub codebook_path: Option<std::path::PathBuf>,
@@ -52,6 +56,13 @@ pub struct ServeConfig {
     /// Decode kernel lowering: "pallas" (L1 interpret kernel) or "xla"
     /// (XLA-fused CPU fast path) — see EXPERIMENTS.md §Perf.
     pub kernel: String,
+    /// Paging granularity of the block-pool cache, in tokens per block
+    /// (see `kvcache::paged`; `DEFAULT_BLOCK_TOKENS` unless tuning).
+    pub block_tokens: usize,
+    /// Radix-tree prefix sharing across requests (CQ mode): new requests
+    /// attach to already-quantized prompt-prefix blocks and skip
+    /// quantize+store for the matched span.
+    pub prefix_sharing: bool,
 }
 
 impl ServeConfig {
@@ -61,6 +72,11 @@ impl ServeConfig {
     /// for the alternative lowering.
     pub fn default_kernel() -> String {
         "pallas".to_string()
+    }
+
+    /// Default paging granularity (tokens per block).
+    pub fn default_block_tokens() -> usize {
+        DEFAULT_BLOCK_TOKENS
     }
 }
 
@@ -182,16 +198,9 @@ fn build_ctx(cfg: &ServeConfig) -> Result<Ctx> {
     })
 }
 
-/// Prefill one request: returns a ready [`SeqRun`] with its first sampled
-/// token and (for CQ) a populated packed cache.
-fn prefill(
-    ctx: &Ctx,
-    req: &Request,
-    respond: Option<Sender<Response>>,
-    load_token: Option<LoadToken>,
-    metrics: &ServeMetrics,
-) -> Result<SeqRun> {
-    let t0 = Instant::now();
+/// Tokenize + router-trim one request's prompt (sliding-window tail policy,
+/// like a chat server keeping the most recent context).
+fn prompt_ids(ctx: &Ctx, req: &Request) -> Vec<i32> {
     let tok = ByteTokenizer;
     let mut prompt = tok.encode(&req.prompt);
     if prompt.is_empty() {
@@ -199,10 +208,59 @@ fn prefill(
     }
     let max_ctx = ctx.prefills.last().unwrap().0;
     if prompt.len() > max_ctx {
-        // Router policy: keep the tail (most recent context), like a
-        // sliding-window chat server.
         prompt = prompt[prompt.len() - max_ctx..].to_vec();
     }
+    prompt
+}
+
+/// Prefill one admitted request: returns a ready [`SeqRun`] with its first
+/// sampled token and (for CQ) a block-backed packed cache.  Quantize+store
+/// runs ONLY over the prompt span not covered by the admission's radix hit.
+/// On failure the admission is rolled back (blocks + reservation returned).
+fn prefill(
+    ctx: &Ctx,
+    shard: &mut PagedShard,
+    req: &Request,
+    prompt: Vec<i32>,
+    mut adm: Admission,
+    metrics: &ServeMetrics,
+) -> Result<SeqRun> {
+    let t0 = Instant::now();
+    match prefill_fill(ctx, shard, req, &prompt, &mut adm) {
+        Ok(first_tok) => {
+            let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+            metrics.prefill_latency.record(t0.elapsed());
+            Ok(SeqRun {
+                req: req.clone(),
+                respond: None,
+                load_token: None,
+                reserved_blocks: adm.reserved_blocks,
+                prompt_tokens: prompt.len(),
+                prompt_ids: prompt,
+                prefix_hit_tokens: adm.hit_tokens,
+                generated: vec![first_tok],
+                packed: adm.seq,
+                enqueued_at: Instant::now(),
+                prefill_ms,
+                decode_started: None,
+            })
+        }
+        Err(e) => {
+            shard.abort(&mut adm.seq, adm.reserved_blocks, metrics);
+            Err(e)
+        }
+    }
+}
+
+/// Artifact run + cache fill for [`prefill`]; mutates `adm.seq` in place so
+/// a mid-way failure rolls back cleanly in the caller.
+fn prefill_fill(
+    ctx: &Ctx,
+    shard: &mut PagedShard,
+    req: &Request,
+    prompt: &[i32],
+    adm: &mut Admission,
+) -> Result<i32> {
     let p = prompt.len();
     // Smallest compiled prefill bucket that fits the prompt.
     let (bucket_ctx, art) = ctx
@@ -210,7 +268,7 @@ fn prefill(
         .iter()
         .find(|(t, _)| *t >= p)
         .unwrap_or_else(|| ctx.prefills.last().unwrap());
-    let mut padded = prompt.clone();
+    let mut padded = prompt.to_vec();
     padded.resize(*bucket_ctx, b' ' as i32);
     let tokens = Value::I(TensorI::from_vec(&[1, *bucket_ctx], padded)?);
     let out = ctx
@@ -221,14 +279,15 @@ fn prefill(
     let k = out[1].as_f()?;
     let v = out[2].as_f()?;
 
-    let mut packed = match &ctx.mode {
+    match &ctx.mode {
         CacheMode::Cq { books, .. } => {
-            let mut packed = PackedSeqCache::new(ctx.geom);
             let d = crate::quant::KvDims::of(k);
             let per_side = ctx.geom.n_layers * ctx.geom.n_heads * ctx.geom.groups;
             let mut kc = Vec::with_capacity(per_side);
             let mut vc = Vec::with_capacity(per_side);
-            for t in 0..p {
+            // Tokens [0, hit) are already attached from shared blocks —
+            // the whole point of the radix index is skipping this loop.
+            for t in adm.hit_tokens..p {
                 kc.clear();
                 vc.clear();
                 for l in 0..d.l {
@@ -238,114 +297,87 @@ fn prefill(
                         vc.extend(books.encode_vec(l, KvKind::Value, h, &v.data[off..off + d.hd]));
                     }
                 }
-                packed.append(&kc, &vc)?;
+                adm.seq.append(&mut shard.pool, &kc, &vc)?;
             }
-            packed
         }
         CacheMode::Fp { .. } => {
-            let mut packed = PackedSeqCache::new_unstored(ctx.geom);
             for _ in 0..p {
-                packed.append_unstored()?;
+                adm.seq.append_unstored()?;
             }
-            packed
+            // Stash prefill K/V for staging at admission time.
+            adm.seq.fp_seed = Some((k.clone(), v.clone()));
         }
-    };
-    // Stash prefill K/V for fp mode staging at admission time.
-    if let CacheMode::Fp { .. } = &ctx.mode {
-        packed.fp_seed = Some((k.clone(), v.clone()));
     }
 
     // First generated token from the last prompt position.
     let row = &logits.data[(p - 1) * ctx.vocab..p * ctx.vocab];
     let mut rng = Pcg64::seed(req.seed);
-    let t0_tok = sample(
+    Ok(sample(
         row,
         SampleCfg { temperature: req.temperature, top_k: req.top_k },
         &mut rng,
-    );
-    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-    metrics.prefill_latency.record(t0.elapsed());
-
-    Ok(SeqRun {
-        req: req.clone(),
-        respond,
-        load_token,
-        reserved_bytes: 0,
-        prompt_tokens: p,
-        generated: vec![t0_tok],
-        packed,
-        enqueued_at: Instant::now(),
-        prefill_ms,
-        decode_started: None,
-    })
+    ))
 }
 
-/// Router admission for one inbound request: reserve this shard's cache
-/// budget, prefill, and enqueue.  On budget exhaustion the client gets an
-/// explicit rejection; on prefill failure the reservation is returned (the
-/// seed leaked it).  The [`LoadToken`] rides in the `SeqRun` so the pool's
-/// in-flight count drops on every terminal path.
+/// Router admission for one inbound request: match the prompt against this
+/// shard's radix index, reserve blocks (evicting cold cached prefixes under
+/// pressure), prefill, and enqueue.  On budget exhaustion the client gets an
+/// explicit rejection; on prefill failure the admission is rolled back.
+/// The [`LoadToken`] rides in the `SeqRun` so the pool's in-flight count
+/// drops on every terminal path.
 fn admit_request(
     ctx: &Ctx,
-    cache_mgr: &mut CacheManager,
+    shard: &mut PagedShard,
     batcher: &mut Batcher,
     metrics: &ServeMetrics,
-    req: Request,
+    mut req: Request,
     resp_tx: Sender<Response>,
     token: Option<LoadToken>,
 ) {
-    let reserve = ctx.geom.bytes_per_token()
-        * (req.prompt.len().min(ctx.prefills.last().unwrap().0) + req.max_new);
-    if cache_mgr.reserve(reserve).is_err() {
-        metrics.requests_rejected.add(1);
-        let _ = resp_tx.send(Response {
-            id: req.id,
-            text: String::from("[rejected: cache budget]"),
-            prompt_tokens: 0,
-            gen_tokens: 0,
-            queue_ms: 0.0,
-            prefill_ms: 0.0,
-            decode_ms: 0.0,
-            cache_bytes: 0,
-        });
-        return; // token drops here -> router sees the slot free again
-    }
-    metrics.cache_reserved_bytes.add(reserve as u64);
-    metrics.cache_peak_bytes.observe_max(cache_mgr.bytes_in_use as u64);
-    match prefill(ctx, &req, Some(resp_tx.clone()), token, metrics) {
+    // The decode loop always appends at least one token before `must_stop`
+    // is consulted, so max_new = 0 would under-reserve by one block and the
+    // unbacked append could fail mid-decode; serve at least one token.
+    req.max_new = req.max_new.max(1);
+    let prompt = prompt_ids(ctx, &req);
+    let admitted = match &ctx.mode {
+        CacheMode::Cq { .. } => shard.admit_stored(&prompt, req.max_new, metrics),
+        CacheMode::Fp { .. } => shard.admit_unstored(prompt.len(), req.max_new, metrics),
+    };
+    let adm = match admitted {
+        Ok(adm) => adm,
+        Err(_) => {
+            metrics.requests_rejected.add(1);
+            let _ = resp_tx.send(Response::failure(req.id, "[rejected: cache budget]".into()));
+            return; // token drops here -> router sees the slot free again
+        }
+    };
+    match prefill(ctx, shard, &req, prompt, adm, metrics) {
         Ok(mut run) => {
-            run.reserved_bytes = reserve;
-            run.enqueued_at = Instant::now();
+            run.respond = Some(resp_tx);
+            run.load_token = token;
             batcher.enqueue(run);
         }
         Err(e) => {
             log::error!("prefill failed: {e:#}");
-            cache_mgr.release(reserve);
-            metrics.cache_released_bytes.add(reserve as u64);
             // Explicit error reply (like the rejection path) so pipelined
             // TCP clients keep their connection instead of a dropped-channel
             // error tearing it down.
-            let _ = resp_tx.send(Response {
-                id: req.id,
-                text: format!("[error: prefill failed: {e:#}]"),
-                prompt_tokens: 0,
-                gen_tokens: 0,
-                queue_ms: 0.0,
-                prefill_ms: 0.0,
-                decode_ms: 0.0,
-                cache_bytes: 0,
-            });
+            let _ = resp_tx.send(Response::failure(
+                req.id,
+                format!("[error: prefill failed: {e:#}]"),
+            ));
         }
     }
 }
 
-/// Stage a newly admitted sequence into its lane.
-fn stage_admitted(ctx: &mut Ctx, slot: usize, batcher: &Batcher) {
+/// Stage a newly admitted sequence into its lane.  Shared prefix blocks and
+/// privately quantized tokens alike are read out of the shard's block pool.
+fn stage_admitted(ctx: &mut Ctx, shard: &PagedShard, slot: usize, batcher: &Batcher) {
     let run = batcher.slot(slot).expect("admitted slot");
     match &mut ctx.mode {
         CacheMode::Cq { stage, .. } => {
-            stage.load_sequence(slot, &run.packed);
-            stage.pos[slot] = run.packed.len as i32; // next write position
+            // load_sequence leaves pos at the next write position.
+            stage.load_sequence(slot, &run.packed, &shard.pool);
         }
         CacheMode::Fp { k_cache, v_cache, pos, tmax, .. } => {
             let (k, v) = run.packed.fp_seed.as_ref().expect("fp prefill seed");
@@ -503,10 +535,33 @@ pub fn serve_loop(
         }
     }
     let mut batcher = Batcher::new(ctx.batch, ctx.geom);
-    let mut cache_mgr = match cfg.cache_budget {
-        Some(b) => CacheManager::with_budget(b),
-        None => CacheManager::default(),
-    };
+    // Block-pool cache shard: the byte budget becomes a whole-block budget
+    // (floor), enforced both by reservation accounting and by the pool's
+    // allocator itself.
+    let block_tokens = cfg.block_tokens.max(1);
+    let block_bytes = block_tokens * ctx.geom.bytes_per_token();
+    if let Some(b) = cfg.cache_budget {
+        // A budget below one block would floor to zero blocks and silently
+        // reject every request; fail loudly at startup instead.
+        anyhow::ensure!(
+            b >= block_bytes,
+            "cache budget {b} B is smaller than one block ({block_bytes} B); \
+             lower --block-tokens or raise the budget"
+        );
+    }
+    let budget_blocks = cfg.cache_budget.map(|b| b / block_bytes);
+    let mut shard = PagedShard::new(
+        ctx.geom,
+        block_tokens,
+        budget_blocks,
+        cfg.prefix_sharing && cfg.cq.is_some(),
+    );
+    // Publish shard geometry for the router's pool-wide admission estimate.
+    metrics.bytes_per_token.observe_max(ctx.geom.bytes_per_token() as u64);
+    metrics.block_bytes.observe_max(block_bytes as u64);
+    metrics
+        .max_prompt_tokens
+        .observe_max(ctx.prefills.last().unwrap().0 as u64);
     let mut rngs: Vec<Pcg64> = (0..ctx.batch).map(|i| Pcg64::seed(i as u64)).collect();
     let mut shutting_down = false;
 
@@ -516,7 +571,7 @@ pub fn serve_loop(
             match rx.try_recv() {
                 Ok(Inbound::Submit(req, resp_tx, token)) => {
                     admit_request(
-                        &ctx, &mut cache_mgr, &mut batcher, &metrics, req, resp_tx, token,
+                        &ctx, &mut shard, &mut batcher, &metrics, req, resp_tx, token,
                     );
                 }
                 Ok(Inbound::Shutdown) => shutting_down = true,
@@ -535,7 +590,7 @@ pub fn serve_loop(
                 .queue_wait
                 .record(run.enqueued_at.elapsed());
             rngs[slot] = Pcg64::seed(run.req.seed.wrapping_add(1));
-            stage_admitted(&mut ctx, slot, &batcher);
+            stage_admitted(&mut ctx, &shard, slot, &batcher);
             if let Some(r) = batcher.slot_mut(slot) {
                 r.decode_started = Some(Instant::now());
             }
@@ -553,11 +608,11 @@ pub fn serve_loop(
                     let run = batcher.slot_mut(i).unwrap();
                     match &ctx.mode {
                         CacheMode::Cq { .. } => {
-                            // Codes were staged; append to the packed store
+                            // Codes were staged; append to the paged store
                             // from the staging lane for durability.
                             let t = run.packed.len;
                             let (kc, vc) = read_stage_token(&ctx, i, t);
-                            run.packed.append(&kc, &vc)?;
+                            run.packed.append(&mut shard.pool, &kc, &vc)?;
                         }
                         CacheMode::Fp { .. } => run.packed.append_unstored()?,
                     }
@@ -572,7 +627,7 @@ pub fn serve_loop(
                 metrics.tokens_out.add(1);
 
                 if batcher.must_stop(i) {
-                    complete(&mut ctx, &mut batcher, &mut cache_mgr, i, &metrics);
+                    complete(&mut ctx, &mut batcher, &mut shard, i, &metrics);
                 }
             }
         } else if shutting_down && batcher.is_idle() {
@@ -582,7 +637,7 @@ pub fn serve_loop(
             match rx.recv_timeout(std::time::Duration::from_millis(20)) {
                 Ok(Inbound::Submit(req, resp_tx, token)) => {
                     admit_request(
-                        &ctx, &mut cache_mgr, &mut batcher, &metrics, req, resp_tx, token,
+                        &ctx, &mut shard, &mut batcher, &metrics, req, resp_tx, token,
                     );
                 }
                 Ok(Inbound::Shutdown) => shutting_down = true,
@@ -622,19 +677,23 @@ fn read_stage_token(ctx: &Ctx, slot: usize, t: usize) -> (Vec<u32>, Vec<u32>) {
 fn complete(
     ctx: &mut Ctx,
     batcher: &mut Batcher,
-    cache_mgr: &mut CacheManager,
+    shard: &mut PagedShard,
     slot: usize,
     metrics: &ServeMetrics,
 ) {
-    if let Some(run) = batcher.take(slot) {
+    if let Some(mut run) = batcher.take(slot) {
         match &mut ctx.mode {
             CacheMode::Cq { stage, .. } => stage.release(slot),
             CacheMode::Fp { pos, .. } => pos[slot] = 0,
         }
-        // Release exactly what admission reserved so shard accounting
-        // returns to zero when the shard drains.
-        cache_mgr.release(run.reserved_bytes);
-        metrics.cache_released_bytes.add(run.reserved_bytes as u64);
+        let cache_bytes = run.packed.logical_bytes();
+        // Promote the sequence's full blocks into the radix index under its
+        // (prompt ++ generated) token key, then settle blocks + reservation.
+        // Cache position `prompt_tokens + j` holds the KV of generated[j].
+        let cached_gen = run.packed.len.saturating_sub(run.prompt_tokens);
+        let mut key = run.prompt_ids.clone();
+        key.extend_from_slice(&run.generated[..cached_gen.min(run.generated.len())]);
+        shard.finish(&mut run.packed, &key, run.reserved_blocks, metrics);
         let tok = ByteTokenizer;
         let text = tok.decode(&run.generated);
         let decode_ms = run
@@ -654,11 +713,12 @@ fn complete(
                 id: run.req.id,
                 text,
                 prompt_tokens: run.prompt_tokens,
+                prefix_hit_tokens: run.prefix_hit_tokens,
                 gen_tokens: run.generated.len(),
                 queue_ms,
                 prefill_ms: run.prefill_ms,
                 decode_ms,
-                cache_bytes: run.packed.logical_bytes(),
+                cache_bytes,
             });
         }
         // `run` (and its LoadToken) drops here: the router's in-flight count

@@ -1,22 +1,37 @@
-//! Quantized KV-cache manager.
+//! Quantized KV-cache: paged block-pool storage + staging tensors.
 //!
 //! Two representations coexist (DESIGN.md §3.3):
 //!
-//! * **Packed pages** ([`PackedSeqCache`]) — the durable, per-sequence store:
-//!   codes at their true bit width (1 bit/FPN for CQ-8c8b), allocated in
-//!   fixed-size pages.  This is the unit of memory accounting and the thing
-//!   the paper shrinks 16×.
+//! * **Paged packed blocks** ([`paged`]) — the durable store: codes at
+//!   their true bit width (1 bit/FPN for CQ-8c8b) in fixed-size ref-counted
+//!   blocks drawn from a per-shard slab [`BlockPool`].  A [`RadixIndex`]
+//!   maps token-id prefixes to frozen block chains, so requests sharing a
+//!   system prompt attach to already-quantized blocks and skip the
+//!   quantize+store pass for the matched span (the prefill artifact still
+//!   runs over the whole prompt — skipping its compute for hit spans is an
+//!   open follow-up); cold cached prefixes are evicted LRU when admission
+//!   would otherwise exceed the block budget.  Each sequence is a
+//!   [`PagedSeqCache`]: shared prefix blocks + private tail.
 //! * **Staging tensors** ([`BatchStage`]) — the `i32` code tensors the PJRT
 //!   decode artifact consumes, one slot per batch lane, updated in place so
 //!   the hot loop never re-packs.
 //!
-//! `CacheManager` tracks a global byte budget and exposes the accounting
-//! used by the serve-throughput bench and the von-Neumann traffic model.
+//! [`CacheManager`] accounts the shard budget in **blocks** (reservations
+//! by active sequences + blocks cached by the radix index); the pool's
+//! allocator enforces the same cap as a hard ceiling.  The serve-throughput
+//! bench and the von-Neumann traffic model read this accounting.
 
 use anyhow::{bail, Result};
 
-use crate::quant::pack::{pack_codes, packed_len, unpack_codes};
-use crate::tensor::{TensorF, TensorI};
+use crate::quant::pack::packed_len;
+use crate::tensor::TensorI;
+
+pub mod paged;
+
+pub use paged::{
+    Admission, BlockConfig, BlockId, BlockPool, PagedSeqCache, PagedShard, RadixIndex,
+    DEFAULT_BLOCK_TOKENS,
+};
 
 /// Geometry of one model's quantized cache.
 #[derive(Clone, Copy, Debug)]
@@ -42,87 +57,6 @@ impl CacheGeom {
     /// FP16 bytes per token for the same geometry (the paper's baseline).
     pub fn fp16_bytes_per_token(&self, head_dim: usize) -> usize {
         2 * self.n_layers * self.n_heads * head_dim * 2
-    }
-}
-
-/// Packed per-sequence cache: one bit-stream page list per (layer, kv, head).
-/// Codes are appended token-at-a-time in [k, v] × layer × head order.
-pub struct PackedSeqCache {
-    pub geom: CacheGeom,
-    pub len: usize,
-    /// Packed code stream; tokens are appended as fixed-width records of
-    /// `codes_per_token` codes, so random access by token index is O(1).
-    data: Vec<u8>,
-    scratch: Vec<u32>,
-    /// `false` for fp-cache sequences: length/byte accounting only, the
-    /// actual floats live in the serve loop's staging tensors.
-    stored: bool,
-    /// fp-mode only: prefill K/V (`[L,1,H,T,hd]`) held until the sequence is
-    /// admitted into a staging lane, then dropped.
-    pub fp_seed: Option<(TensorF, TensorF)>,
-}
-
-impl PackedSeqCache {
-    pub fn new(geom: CacheGeom) -> PackedSeqCache {
-        PackedSeqCache { geom, len: 0, data: Vec::new(), scratch: Vec::new(), stored: true, fp_seed: None }
-    }
-
-    /// Accounting-only cache (fp16 serving baseline): tracks length and
-    /// logical bytes without storing codes.
-    pub fn new_unstored(geom: CacheGeom) -> PackedSeqCache {
-        PackedSeqCache { geom, len: 0, data: Vec::new(), scratch: Vec::new(), stored: false, fp_seed: None }
-    }
-
-    /// Bump the token count without storing codes (unstored mode).
-    pub fn append_unstored(&mut self) -> Result<()> {
-        if self.len >= self.geom.tmax {
-            bail!("cache full ({} tokens)", self.geom.tmax);
-        }
-        self.len += 1;
-        Ok(())
-    }
-
-    /// Logical footprint: what this sequence occupies at the configured bit
-    /// width, independent of storage mode (fp16 geometry uses bits=16).
-    pub fn logical_bytes(&self) -> usize {
-        self.len * self.geom.bytes_per_token()
-    }
-
-    /// Append one token's codes: `k_codes`/`v_codes` laid out `[L, H, G]`.
-    pub fn append(&mut self, k_codes: &[u32], v_codes: &[u32]) -> Result<()> {
-        let per_side = self.geom.n_layers * self.geom.n_heads * self.geom.groups;
-        if k_codes.len() != per_side || v_codes.len() != per_side {
-            bail!(
-                "append: want {per_side} codes per side, got {}/{}",
-                k_codes.len(),
-                v_codes.len()
-            );
-        }
-        if self.len >= self.geom.tmax {
-            bail!("cache full ({} tokens)", self.geom.tmax);
-        }
-        self.scratch.clear();
-        self.scratch.extend_from_slice(k_codes);
-        self.scratch.extend_from_slice(v_codes);
-        self.data.extend_from_slice(&pack_codes(&self.scratch, self.geom.bits));
-        self.len += 1;
-        Ok(())
-    }
-
-    /// Read one token's codes back as (k `[L,H,G]`, v `[L,H,G]`).
-    pub fn token(&self, t: usize) -> (Vec<u32>, Vec<u32>) {
-        assert!(self.stored, "unstored (fp) cache holds no codes");
-        assert!(t < self.len);
-        let per_tok = self.geom.bytes_per_token();
-        let per_side = self.geom.n_layers * self.geom.n_heads * self.geom.groups;
-        let rec = &self.data[t * per_tok..(t + 1) * per_tok];
-        let all = unpack_codes(rec, self.geom.bits, 2 * per_side);
-        (all[..per_side].to_vec(), all[per_side..].to_vec())
-    }
-
-    /// Exact packed footprint in bytes.
-    pub fn bytes(&self) -> usize {
-        self.data.len()
     }
 }
 
@@ -171,14 +105,17 @@ impl BatchStage {
         }
     }
 
-    /// Load a whole packed sequence into `slot` (prefill admission).
-    pub fn load_sequence(&mut self, slot: usize, seq: &PackedSeqCache) {
+    /// Load a whole paged sequence into `slot` (prefill admission): shared
+    /// prefix blocks and private tail alike are read through the pool.
+    /// `pos` is left at the sequence length — the next write position the
+    /// decode step appends at.
+    pub fn load_sequence(&mut self, slot: usize, seq: &PagedSeqCache, pool: &BlockPool) {
         assert!(seq.len <= self.geom.tmax);
         for t in 0..seq.len {
-            let (k, v) = seq.token(t);
+            let (k, v) = seq.token(pool, t);
             self.write_token(slot, t, &k, &v);
         }
-        self.pos[slot] = seq.len.saturating_sub(1) as i32;
+        self.pos[slot] = seq.len as i32;
         self.occupied[slot] = true;
     }
 
@@ -193,37 +130,73 @@ impl BatchStage {
     }
 }
 
-/// Global cache accounting across sequences.
+/// Shard cache accounting, in **blocks** (the pool's allocation unit).
+///
+/// Two components add up against the budget: `blocks_in_use` — admission
+/// reservations held by active sequences — and `cached_blocks` — blocks the
+/// radix index keeps resident for prefix reuse.  Cached blocks are the
+/// reclaimable part: when a reservation would overflow, the shard evicts
+/// cold prefixes (`RadixIndex::evict_lru`) to cover the
+/// [`CacheManager::shortfall`].
 #[derive(Default)]
 pub struct CacheManager {
-    pub bytes_in_use: usize,
-    pub budget: Option<usize>,
-    pub peak: usize,
+    /// Reservations held by active sequences.
+    pub blocks_in_use: usize,
+    /// Blocks resident for prefix reuse (radix index references).
+    pub cached_blocks: usize,
+    pub budget_blocks: Option<usize>,
+    pub peak_blocks: usize,
 }
 
 impl CacheManager {
-    pub fn with_budget(budget: usize) -> CacheManager {
-        CacheManager { budget: Some(budget), ..Default::default() }
+    pub fn with_budget(budget_blocks: usize) -> CacheManager {
+        CacheManager { budget_blocks: Some(budget_blocks), ..Default::default() }
     }
 
-    /// Reserve bytes for a sequence; fails when over budget (the router
-    /// turns this into backpressure).
-    pub fn reserve(&mut self, bytes: usize) -> Result<()> {
-        if let Some(b) = self.budget {
-            if self.bytes_in_use + bytes > b {
+    /// Everything counted against the budget.
+    pub fn total_blocks(&self) -> usize {
+        self.blocks_in_use + self.cached_blocks
+    }
+
+    /// Reserve blocks for a sequence; fails when over budget (the router
+    /// turns this into backpressure, the shard into eviction).
+    pub fn reserve(&mut self, blocks: usize) -> Result<()> {
+        if let Some(b) = self.budget_blocks {
+            if self.total_blocks() + blocks > b {
                 bail!(
-                    "cache budget exceeded: {} + {bytes} > {b}",
-                    self.bytes_in_use
+                    "cache budget exceeded: {} in use + {} cached + {blocks} > {b} blocks",
+                    self.blocks_in_use,
+                    self.cached_blocks
                 );
             }
         }
-        self.bytes_in_use += bytes;
-        self.peak = self.peak.max(self.bytes_in_use);
+        self.blocks_in_use += blocks;
+        self.peak_blocks = self.peak_blocks.max(self.total_blocks());
         Ok(())
     }
 
-    pub fn release(&mut self, bytes: usize) {
-        self.bytes_in_use = self.bytes_in_use.saturating_sub(bytes);
+    pub fn release(&mut self, blocks: usize) {
+        self.blocks_in_use = self.blocks_in_use.saturating_sub(blocks);
+    }
+
+    /// Blocks that must be evicted for `reserve(blocks)` to succeed.
+    pub fn shortfall(&self, blocks: usize) -> usize {
+        match self.budget_blocks {
+            Some(b) => (self.total_blocks() + blocks).saturating_sub(b),
+            None => 0,
+        }
+    }
+
+    /// A completed sequence promoted `blocks` into the radix index: they
+    /// stay resident, accounted as reclaimable cache.
+    pub fn note_cached(&mut self, blocks: usize) {
+        self.cached_blocks += blocks;
+        self.peak_blocks = self.peak_blocks.max(self.total_blocks());
+    }
+
+    /// Eviction returned `blocks` to the free pool.
+    pub fn note_evicted(&mut self, blocks: usize) {
+        self.cached_blocks = self.cached_blocks.saturating_sub(blocks);
     }
 }
 
@@ -234,6 +207,10 @@ mod tests {
 
     fn geom() -> CacheGeom {
         CacheGeom { n_layers: 2, n_heads: 2, groups: 4, bits: 3, tmax: 8 }
+    }
+
+    fn mk_pool(g: &CacheGeom) -> BlockPool {
+        BlockPool::new(BlockConfig::new(4, g.bytes_per_token()), None)
     }
 
     #[test]
@@ -249,61 +226,77 @@ mod tests {
     }
 
     #[test]
-    fn append_and_read_roundtrip() {
-        let mut c = PackedSeqCache::new(geom());
-        let per = 2 * 2 * 4;
-        for t in 0..5 {
-            let k: Vec<u32> = (0..per).map(|i| ((t + i) % 8) as u32).collect();
-            let v: Vec<u32> = (0..per).map(|i| ((t * 3 + i) % 8) as u32).collect();
-            c.append(&k, &v).unwrap();
-        }
-        assert_eq!(c.len, 5);
-        let (k2, v2) = c.token(3);
-        assert_eq!(k2, (0..per).map(|i| ((3 + i) % 8) as u32).collect::<Vec<_>>());
-        assert_eq!(v2, (0..per).map(|i| ((9 + i) % 8) as u32).collect::<Vec<_>>());
-        assert_eq!(c.bytes(), 5 * c.geom.bytes_per_token());
-    }
-
-    #[test]
-    fn cache_capacity_enforced() {
-        let mut c = PackedSeqCache::new(geom());
-        let per = 16;
-        for _ in 0..8 {
-            c.append(&vec![0; per], &vec![0; per]).unwrap();
-        }
-        assert!(c.append(&vec![0; per], &vec![0; per]).is_err());
-    }
-
-    #[test]
     fn stage_roundtrips_through_sequence_load() {
         let g = geom();
-        let mut seq = PackedSeqCache::new(g);
+        let mut pool = mk_pool(&g);
+        let mut seq = PagedSeqCache::new(g);
         let per = 16;
         for t in 0..4 {
             let k: Vec<u32> = (0..per).map(|i| ((7 * t + i) % 8) as u32).collect();
-            seq.append(&k, &k).unwrap();
+            seq.append(&mut pool, &k, &k).unwrap();
         }
         let mut stage = BatchStage::new(g, 2);
-        stage.load_sequence(1, &seq);
-        assert_eq!(stage.pos[1], 3);
+        stage.load_sequence(1, &seq, &pool);
+        assert_eq!(stage.pos[1], 4, "pos = next write position");
         assert!(stage.occupied[1]);
         // Spot-check a code: token 2, layer 1, head 0, group 3.
-        let (k2, _) = seq.token(2);
+        let (k2, _) = seq.token(&pool, 2);
         let idx = stage.off(1, 1, 0, 2) + 3;
-        assert_eq!(stage.k_codes.data[idx], k2[(1 * 2 + 0) * 4 + 3] as i32);
+        assert_eq!(stage.k_codes.data[idx], k2[11] as i32); // [l=1,h=0,g=3]
         stage.release(1);
         assert_eq!(stage.free_slot(), Some(0));
+        seq.release(&mut pool);
     }
 
     #[test]
     fn manager_budget_backpressure() {
+        let mut m = CacheManager::with_budget(10);
+        m.reserve(6).unwrap();
+        assert!(m.reserve(5).is_err());
+        m.release(3);
+        m.reserve(5).unwrap();
+        assert_eq!(m.blocks_in_use, 8);
+        assert_eq!(m.peak_blocks, 8);
+    }
+
+    #[test]
+    fn manager_counts_cached_blocks_against_budget() {
+        let mut m = CacheManager::with_budget(10);
+        m.reserve(4).unwrap();
+        // Sequence completes: 3 of its blocks stay cached in the index.
+        m.release(4);
+        m.note_cached(3);
+        assert_eq!(m.total_blocks(), 3);
+        m.reserve(7).unwrap();
+        let err = m.reserve(1).unwrap_err();
+        assert!(err.to_string().contains("cached"), "{err}");
+        assert_eq!(m.shortfall(1), 1, "one eviction covers it");
+        m.note_evicted(2);
+        m.reserve(1).unwrap();
+        assert_eq!(m.total_blocks(), 9);
+        assert_eq!(m.peak_blocks, 10);
+    }
+
+    #[test]
+    fn budget_exhaustion_error_path_and_recovery() {
         let mut m = CacheManager::with_budget(100);
         m.reserve(60).unwrap();
-        assert!(m.reserve(50).is_err());
-        m.release(30);
-        m.reserve(50).unwrap();
-        assert_eq!(m.bytes_in_use, 80);
-        assert_eq!(m.peak, 80);
+        m.reserve(40).unwrap();
+        // Exactly full: the next block must be refused with a budget error.
+        let err = m.reserve(1).unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+        // A failed reserve must not corrupt accounting.
+        assert_eq!(m.blocks_in_use, 100);
+        assert_eq!(m.peak_blocks, 100);
+        // Releasing makes room again; peak is sticky.
+        m.release(50);
+        m.reserve(30).unwrap();
+        assert_eq!(m.blocks_in_use, 80);
+        assert_eq!(m.peak_blocks, 100);
+        // Unbudgeted manager never refuses.
+        let mut free = CacheManager::default();
+        free.reserve(usize::MAX / 2).unwrap();
+        assert_eq!(free.shortfall(usize::MAX / 4), 0);
     }
 
     #[test]
@@ -325,87 +318,55 @@ mod tests {
     }
 
     #[test]
-    fn token_random_access_is_fixed_stride() {
-        // Appends are O(1) amortized and token(t) reads a fixed-width record
-        // at t * bytes_per_token, independent of cache length: storage must
-        // grow exactly linearly and out-of-order reads must roundtrip.
-        let g = geom();
-        let per = g.n_layers * g.n_heads * g.groups;
-        let mut c = PackedSeqCache::new(g);
-        let tok = |t: usize| -> Vec<u32> {
-            (0..per).map(|i| ((5 * t + 3 * i) % 8) as u32).collect()
-        };
-        for t in 0..8 {
-            let before = c.bytes();
-            c.append(&tok(t), &tok(t + 1)).unwrap();
-            assert_eq!(c.bytes() - before, g.bytes_per_token(), "linear growth");
-        }
-        for t in [7usize, 0, 4, 2, 6, 1, 5, 3] {
-            let (k, v) = c.token(t);
-            assert_eq!(k, tok(t), "token {t} keys");
-            assert_eq!(v, tok(t + 1), "token {t} values");
-        }
-        assert_eq!(c.logical_bytes(), 8 * g.bytes_per_token());
-    }
-
-    #[test]
-    fn budget_exhaustion_error_path_and_recovery() {
-        let mut m = CacheManager::with_budget(1000);
-        m.reserve(600).unwrap();
-        m.reserve(400).unwrap();
-        // Exactly full: the next byte must be refused with a budget error.
-        let err = m.reserve(1).unwrap_err();
-        assert!(err.to_string().contains("budget"), "{err}");
-        // A failed reserve must not corrupt accounting.
-        assert_eq!(m.bytes_in_use, 1000);
-        assert_eq!(m.peak, 1000);
-        // Releasing makes room again; peak is sticky.
-        m.release(500);
-        m.reserve(300).unwrap();
-        assert_eq!(m.bytes_in_use, 800);
-        assert_eq!(m.peak, 1000);
-        // Unbudgeted manager never refuses.
-        let mut free = CacheManager::default();
-        free.reserve(usize::MAX / 2).unwrap();
-    }
-
-    #[test]
     fn unstored_fp_cache_accounts_without_storing() {
         let g = geom();
-        let mut c = PackedSeqCache::new_unstored(g);
+        let mut c = PagedSeqCache::new_unstored(g);
         for _ in 0..g.tmax {
             c.append_unstored().unwrap();
         }
         assert!(c.append_unstored().is_err(), "tmax enforced in fp mode too");
-        assert_eq!(c.bytes(), 0, "fp mode stores no codes");
         assert_eq!(c.logical_bytes(), g.tmax * g.bytes_per_token());
     }
 
     #[test]
-    fn prop_packed_roundtrip_random_geometry() {
+    fn prop_paged_roundtrip_random_geometry() {
         run_prop(20, 21, |rng| {
             let g = CacheGeom {
                 n_layers: 1 + rng.below(3),
                 n_heads: 1 + rng.below(3),
                 groups: 1 + rng.below(8),
                 bits: 1 + rng.below(10) as u32,
-                tmax: 6,
+                tmax: 16,
             };
+            let block_tokens = 1 + rng.below(5);
+            let mut pool =
+                BlockPool::new(BlockConfig::new(block_tokens, g.bytes_per_token()), None);
             let per = g.n_layers * g.n_heads * g.groups;
             let maxc = 1u32 << g.bits;
-            let mut c = PackedSeqCache::new(g);
+            let mut c = PagedSeqCache::new(g);
             let mut expect = Vec::new();
-            for _ in 0..5 {
+            let n_tok = 3 + rng.below(10);
+            for _ in 0..n_tok {
                 let k: Vec<u32> = (0..per).map(|_| rng.below(maxc as usize) as u32).collect();
                 let v: Vec<u32> = (0..per).map(|_| rng.below(maxc as usize) as u32).collect();
-                c.append(&k, &v).map_err(|e| e.to_string())?;
+                c.append(&mut pool, &k, &v).map_err(|e| e.to_string())?;
                 expect.push((k, v));
             }
+            if pool.live_blocks() != n_tok.div_ceil(block_tokens) {
+                return Err(format!(
+                    "{} blocks for {n_tok} tokens at {block_tokens}/block",
+                    pool.live_blocks()
+                ));
+            }
             for (t, (k, v)) in expect.iter().enumerate() {
-                let (k2, v2) = c.token(t);
+                let (k2, v2) = c.token(&pool, t);
                 if &k2 != k || &v2 != v {
                     return Err(format!("token {t} mismatch"));
                 }
+            }
+            c.release(&mut pool);
+            if pool.live_blocks() != 0 {
+                return Err("release leaked blocks".into());
             }
             Ok(())
         });

@@ -1,0 +1,69 @@
+//! Fixed-size packed-code blocks: the allocation unit of the paged cache.
+//!
+//! A block holds up to `block_tokens` fixed-width token records of
+//! `bytes_per_token` packed-code bytes each (the CQ bit-stream record the
+//! flat cache used to append to one big `Vec<u8>`).  Blocks are ref-counted
+//! by the [`super::pool::BlockPool`]: one reference per sequence chain that
+//! includes the block plus one for the radix index while the block backs a
+//! cached prefix.
+
+/// Index of a block inside its pool's slab.
+pub type BlockId = usize;
+
+/// Shape of every block in one pool.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockConfig {
+    /// Tokens per block (the paging granularity).
+    pub block_tokens: usize,
+    /// Packed bytes per token record (`CacheGeom::bytes_per_token()`).
+    pub bytes_per_token: usize,
+}
+
+impl BlockConfig {
+    pub fn new(block_tokens: usize, bytes_per_token: usize) -> BlockConfig {
+        assert!(block_tokens > 0, "block must hold at least one token");
+        assert!(bytes_per_token > 0, "token record cannot be empty");
+        BlockConfig { block_tokens, bytes_per_token }
+    }
+
+    /// Full-block footprint in bytes.
+    pub fn block_bytes(&self) -> usize {
+        self.block_tokens * self.bytes_per_token
+    }
+
+    /// Blocks needed to hold `tokens` token records.
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+}
+
+/// One slab entry: storage + token fill level + reference count.
+#[derive(Default)]
+pub(crate) struct Block {
+    pub(crate) data: Vec<u8>,
+    /// Token records currently written.
+    pub(crate) len: usize,
+    /// 0 = on the free list.
+    pub(crate) refs: usize,
+}
+
+impl Block {
+    pub(crate) fn is_full(&self, cfg: &BlockConfig) -> bool {
+        self.len >= cfg.block_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_geometry() {
+        let cfg = BlockConfig::new(16, 12);
+        assert_eq!(cfg.block_bytes(), 192);
+        assert_eq!(cfg.blocks_for_tokens(0), 0);
+        assert_eq!(cfg.blocks_for_tokens(1), 1);
+        assert_eq!(cfg.blocks_for_tokens(16), 1);
+        assert_eq!(cfg.blocks_for_tokens(17), 2);
+    }
+}

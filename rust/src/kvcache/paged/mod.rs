@@ -1,0 +1,574 @@
+//! Paged block-pool KV cache with radix-tree prefix sharing.
+//!
+//! * [`block`] — fixed-size packed-code blocks (`block_tokens` ×
+//!   `bytes_per_token`), the allocation/refcount unit.
+//! * [`pool`]  — slab [`BlockPool`]: free-list allocation, hard block cap.
+//! * [`radix`] — [`RadixIndex`]: token-id prefixes → frozen block chains,
+//!   block-aligned splits, LRU eviction of cold prefixes.
+//!
+//! [`PagedSeqCache`] replaces the old flat per-sequence `Vec<u8>`: a chain
+//! of **shared** prefix blocks (attached from the radix index, read-only)
+//! plus **private** tail blocks the sequence appends into.  On divergence
+//! nothing is copied eagerly — the divergent span is simply quantized into
+//! private blocks (copy-on-write at block granularity).
+//!
+//! [`PagedShard`] is one serve-loop worker's cache: pool + index +
+//! [`CacheManager`] block accounting, with the admission / completion /
+//! eviction protocol the serve loop drives:
+//!
+//! ```text
+//! admit:  radix match → retain hit blocks → reserve (evict LRU on miss)
+//! serve:  quantize+store ONLY tokens [hit..); decode appends go to
+//!         private blocks
+//! finish: promote full blocks into the radix (skip spans already cached),
+//!         release the sequence's references + reservation
+//! ```
+
+pub mod block;
+pub mod pool;
+pub mod radix;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::ServeMetrics;
+use crate::quant::pack::{pack_codes, unpack_codes};
+use crate::tensor::TensorF;
+
+use super::{CacheGeom, CacheManager};
+pub use block::{BlockConfig, BlockId};
+pub use pool::BlockPool;
+pub use radix::RadixIndex;
+
+/// Default paging granularity (tokens per block).
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+/// Per-sequence view over pool blocks: shared radix prefix + private tail.
+pub struct PagedSeqCache {
+    pub geom: CacheGeom,
+    /// Total cached tokens (shared + private, or logical count when
+    /// unstored).
+    pub len: usize,
+    /// Frozen prefix blocks borrowed from the radix index (one pool
+    /// reference each, taken at admission).
+    shared: Vec<BlockId>,
+    shared_tokens: usize,
+    /// Blocks this sequence appends into; only the last may be partial.
+    private: Vec<BlockId>,
+    scratch: Vec<u32>,
+    /// `false` for fp-cache sequences: length/block accounting only, the
+    /// actual floats live in the serve loop's staging tensors.
+    stored: bool,
+    /// fp-mode only: prefill K/V (`[L,1,H,T,hd]`) held until the sequence is
+    /// admitted into a staging lane, then dropped.
+    pub fp_seed: Option<(TensorF, TensorF)>,
+}
+
+impl PagedSeqCache {
+    pub fn new(geom: CacheGeom) -> PagedSeqCache {
+        PagedSeqCache {
+            geom,
+            len: 0,
+            shared: Vec::new(),
+            shared_tokens: 0,
+            private: Vec::new(),
+            scratch: Vec::new(),
+            stored: true,
+            fp_seed: None,
+        }
+    }
+
+    /// Accounting-only cache (fp16 serving baseline): tracks length and
+    /// logical blocks without storing codes.
+    pub fn new_unstored(geom: CacheGeom) -> PagedSeqCache {
+        PagedSeqCache { stored: false, ..PagedSeqCache::new(geom) }
+    }
+
+    /// Attach an already-retained shared prefix (radix hit).  Must happen
+    /// before any append.
+    pub fn attach_prefix(&mut self, blocks: Vec<BlockId>, tokens: usize) {
+        assert_eq!(self.len, 0, "prefix attaches to an empty sequence");
+        assert!(self.stored, "fp sequences share nothing");
+        self.shared = blocks;
+        self.shared_tokens = tokens;
+        self.len = tokens;
+    }
+
+    /// Tokens covered by the shared radix prefix.
+    pub fn shared_tokens(&self) -> usize {
+        self.shared_tokens
+    }
+
+    /// Bump the token count without storing codes (unstored mode).
+    pub fn append_unstored(&mut self) -> Result<()> {
+        if self.len >= self.geom.tmax {
+            bail!("cache full ({} tokens)", self.geom.tmax);
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Append one token's codes (`k`/`v` laid out `[L, H, G]`) into the
+    /// private tail, allocating a fresh block when the tail is full.
+    pub fn append(&mut self, pool: &mut BlockPool, k_codes: &[u32], v_codes: &[u32]) -> Result<()> {
+        let per_side = self.geom.n_layers * self.geom.n_heads * self.geom.groups;
+        if k_codes.len() != per_side || v_codes.len() != per_side {
+            bail!(
+                "append: want {per_side} codes per side, got {}/{}",
+                k_codes.len(),
+                v_codes.len()
+            );
+        }
+        if self.len >= self.geom.tmax {
+            bail!("cache full ({} tokens)", self.geom.tmax);
+        }
+        let tail_full = self
+            .private
+            .last()
+            .map(|&b| pool.is_full(b))
+            .unwrap_or(true);
+        if tail_full {
+            self.private.push(pool.alloc()?);
+        }
+        self.scratch.clear();
+        self.scratch.extend_from_slice(k_codes);
+        self.scratch.extend_from_slice(v_codes);
+        let rec = pack_codes(&self.scratch, self.geom.bits);
+        pool.push_token(*self.private.last().unwrap(), &rec)?;
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Read one token's codes back as (k `[L,H,G]`, v `[L,H,G]`).
+    pub fn token(&self, pool: &BlockPool, t: usize) -> (Vec<u32>, Vec<u32>) {
+        assert!(self.stored, "unstored (fp) cache holds no codes");
+        assert!(t < self.len);
+        let bt = pool.cfg.block_tokens;
+        let (blk, rec) = if t < self.shared_tokens {
+            (self.shared[t / bt], t % bt)
+        } else {
+            let u = t - self.shared_tokens;
+            (self.private[u / bt], u % bt)
+        };
+        let per_side = self.geom.n_layers * self.geom.n_heads * self.geom.groups;
+        let all = unpack_codes(pool.token_bytes(blk, rec), self.geom.bits, 2 * per_side);
+        (all[..per_side].to_vec(), all[per_side..].to_vec())
+    }
+
+    /// Logical footprint: what this sequence occupies at the configured bit
+    /// width, independent of storage mode (fp16 geometry uses bits=16).
+    pub fn logical_bytes(&self) -> usize {
+        self.len * self.geom.bytes_per_token()
+    }
+
+    /// Pool pages held (shared + private), in bytes.
+    pub fn block_bytes_held(&self, pool: &BlockPool) -> usize {
+        (self.shared.len() + self.private.len()) * pool.cfg.block_bytes()
+    }
+
+    /// The full-block-aligned prefix of this sequence: `(tokens, chain)` —
+    /// what can be promoted into the radix index.
+    fn full_block_chain(&self, pool: &BlockPool) -> (usize, Vec<BlockId>) {
+        let mut chain = self.shared.clone();
+        let mut tokens = self.shared_tokens;
+        for &b in &self.private {
+            if !pool.is_full(b) {
+                break;
+            }
+            chain.push(b);
+            tokens += pool.cfg.block_tokens;
+        }
+        (tokens, chain)
+    }
+
+    /// Drop every pool reference this sequence holds (shared + private).
+    pub fn release(&mut self, pool: &mut BlockPool) {
+        for &b in self.shared.iter().chain(&self.private) {
+            pool.release(b);
+        }
+        self.shared.clear();
+        self.private.clear();
+        self.shared_tokens = 0;
+        self.len = 0;
+    }
+}
+
+/// Admission result: the fresh sequence plus what was matched and reserved.
+pub struct Admission {
+    pub seq: PagedSeqCache,
+    /// Prompt tokens covered by cached blocks (quantize+store is skipped
+    /// for exactly this span).
+    pub hit_tokens: usize,
+    /// Blocks reserved against the shard budget; pass back to
+    /// [`PagedShard::finish`] / [`PagedShard::abort`].
+    pub reserved_blocks: usize,
+}
+
+/// One serve-loop worker's paged cache: pool + prefix index + accounting.
+pub struct PagedShard {
+    pub geom: CacheGeom,
+    pub pool: BlockPool,
+    pub radix: RadixIndex,
+    pub mgr: CacheManager,
+    pub prefix_sharing: bool,
+}
+
+impl PagedShard {
+    /// `budget_blocks` caps both the accounting (`CacheManager`) and the
+    /// slab itself (`BlockPool::cap_blocks`) — the pool's pages can never
+    /// exceed the configured budget.
+    pub fn new(
+        geom: CacheGeom,
+        block_tokens: usize,
+        budget_blocks: Option<usize>,
+        prefix_sharing: bool,
+    ) -> PagedShard {
+        let cfg = BlockConfig::new(block_tokens, geom.bytes_per_token());
+        PagedShard {
+            geom,
+            pool: BlockPool::new(cfg, budget_blocks),
+            radix: RadixIndex::new(block_tokens),
+            mgr: match budget_blocks {
+                Some(b) => CacheManager::with_budget(b),
+                None => CacheManager::default(),
+            },
+            prefix_sharing,
+        }
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.pool.cfg.block_bytes()
+    }
+
+    /// Reserve `need` blocks, evicting cold cached prefixes to cover a
+    /// shortfall.  Metric side effects: eviction + released bytes.
+    fn reserve_with_eviction(&mut self, need: usize, metrics: &ServeMetrics) -> Result<()> {
+        // A reservation no amount of eviction can satisfy must not destroy
+        // the warm prefix cache on its way to the inevitable rejection:
+        // active reservations are as unevictable as the request itself, so
+        // feasibility is `in_use + need <= budget`.
+        if let Some(b) = self.mgr.budget_blocks {
+            if self.mgr.blocks_in_use + need > b {
+                bail!(
+                    "reservation of {need} blocks cannot fit shard budget of {b} \
+                     ({} already reserved)",
+                    self.mgr.blocks_in_use
+                );
+            }
+        }
+        if self.mgr.reserve(need).is_err() {
+            let short = self.mgr.shortfall(need);
+            let freed = self.radix.evict_lru(&mut self.pool, short);
+            self.mgr.note_evicted(freed);
+            metrics.blocks_evicted.add(freed as u64);
+            metrics
+                .cache_released_bytes
+                .add((freed * self.block_bytes()) as u64);
+            self.mgr.reserve(need)?;
+        }
+        metrics
+            .cache_reserved_bytes
+            .add((need * self.block_bytes()) as u64);
+        metrics
+            .cache_peak_bytes
+            .observe_max((self.mgr.total_blocks() * self.block_bytes()) as u64);
+        Ok(())
+    }
+
+    /// Admit a stored (CQ) sequence: match the prompt against the radix
+    /// index, pin the hit blocks, and reserve pool budget for the rest of
+    /// the prompt plus `max_new` decode tokens.
+    pub fn admit_stored(
+        &mut self,
+        prompt_ids: &[i32],
+        max_new: usize,
+        metrics: &ServeMetrics,
+    ) -> Result<Admission> {
+        let (hit_tokens, hit_blocks) = if self.prefix_sharing {
+            let m = self.radix.match_prefix(prompt_ids);
+            (m.hit_tokens, m.blocks)
+        } else {
+            (0, Vec::new())
+        };
+        // Pin before reserving: eviction during our own admission must not
+        // free the span we are about to attach.
+        for &b in &hit_blocks {
+            self.pool.retain(b);
+        }
+        metrics.prefix_lookup_tokens.add(prompt_ids.len() as u64);
+        metrics.prefix_hit_tokens.add(hit_tokens as u64);
+        let need_tokens = prompt_ids.len() - hit_tokens + max_new;
+        let need = self.pool.cfg.blocks_for_tokens(need_tokens);
+        if let Err(e) = self.reserve_with_eviction(need, metrics) {
+            for &b in &hit_blocks {
+                self.pool.release(b);
+            }
+            return Err(e);
+        }
+        let mut seq = PagedSeqCache::new(self.geom);
+        seq.attach_prefix(hit_blocks, hit_tokens);
+        Ok(Admission { seq, hit_tokens, reserved_blocks: need })
+    }
+
+    /// Admit an accounting-only (fp16) sequence: same block reservation,
+    /// no storage and no sharing.
+    pub fn admit_unstored(
+        &mut self,
+        prompt_tokens: usize,
+        max_new: usize,
+        metrics: &ServeMetrics,
+    ) -> Result<Admission> {
+        let need = self.pool.cfg.blocks_for_tokens(prompt_tokens + max_new);
+        self.reserve_with_eviction(need, metrics)?;
+        Ok(Admission {
+            seq: PagedSeqCache::new_unstored(self.geom),
+            hit_tokens: 0,
+            reserved_blocks: need,
+        })
+    }
+
+    /// Complete a sequence: promote its full-block prefix into the radix
+    /// index (`token_ids` must cover `seq.len` cached tokens — prompt plus
+    /// generated), then release the sequence's references and reservation.
+    /// Returns the number of blocks newly cached.
+    pub fn finish(
+        &mut self,
+        seq: &mut PagedSeqCache,
+        token_ids: &[i32],
+        reserved_blocks: usize,
+        metrics: &ServeMetrics,
+    ) -> usize {
+        let mut promoted = 0;
+        if self.prefix_sharing && seq.stored {
+            let (full_tokens, chain) = seq.full_block_chain(&self.pool);
+            if full_tokens > 0 && token_ids.len() >= full_tokens {
+                promoted = self
+                    .radix
+                    .insert(&token_ids[..full_tokens], &chain, &mut self.pool);
+                metrics.blocks_promoted.add(promoted as u64);
+            }
+        }
+        seq.release(&mut self.pool);
+        // Settle the reservation before accounting the promoted blocks as
+        // cached — they are the same physical blocks, not new demand.
+        self.mgr.release(reserved_blocks);
+        self.mgr.note_cached(promoted);
+        debug_assert_eq!(
+            self.mgr.cached_blocks, self.radix.cached_blocks,
+            "manager/index cached-block accounting drifted"
+        );
+        // Promoted blocks stay resident (now owned by the index); only the
+        // rest of the reservation returns to the budget.
+        metrics
+            .cache_released_bytes
+            .add((reserved_blocks.saturating_sub(promoted) * self.block_bytes()) as u64);
+        metrics
+            .cache_frag_bytes
+            .observe_max(self.pool.frag_bytes() as u64);
+        promoted
+    }
+
+    /// Tear down a sequence that never completed (prefill failure): release
+    /// its blocks and the whole reservation.
+    pub fn abort(&mut self, seq: &mut PagedSeqCache, reserved_blocks: usize, metrics: &ServeMetrics) {
+        seq.release(&mut self.pool);
+        self.mgr.release(reserved_blocks);
+        metrics
+            .cache_released_bytes
+            .add((reserved_blocks * self.block_bytes()) as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> CacheGeom {
+        CacheGeom { n_layers: 1, n_heads: 1, groups: 2, bits: 4, tmax: 64 }
+    }
+
+    const BT: usize = 4;
+
+    fn shard(budget_blocks: Option<usize>) -> PagedShard {
+        PagedShard::new(geom(), BT, budget_blocks, true)
+    }
+
+    /// Deterministic per-token codes derived from the token id.
+    fn codes(id: i32) -> (Vec<u32>, Vec<u32>) {
+        let k = vec![(id as u32) % 16, (id as u32 + 5) % 16];
+        let v = vec![(id as u32 + 9) % 16, (id as u32 + 2) % 16];
+        (k, v)
+    }
+
+    /// Drive one client through the full admit → store → decode → finish
+    /// protocol; returns (hit_tokens, promoted_blocks).
+    fn run_client(
+        sh: &mut PagedShard,
+        prompt: &[i32],
+        gen: &[i32],
+        metrics: &ServeMetrics,
+    ) -> (usize, usize) {
+        let adm = sh.admit_stored(prompt, gen.len(), metrics).expect("admit");
+        let mut seq = adm.seq;
+        // Quantize+store ONLY the unmatched prompt span — the prefix hit.
+        for &id in &prompt[adm.hit_tokens..] {
+            let (k, v) = codes(id);
+            seq.append(&mut sh.pool, &k, &v).unwrap();
+        }
+        let mut ids = prompt.to_vec();
+        for &id in gen {
+            let (k, v) = codes(id);
+            seq.append(&mut sh.pool, &k, &v).unwrap();
+            ids.push(id);
+        }
+        let promoted = sh.finish(&mut seq, &ids, adm.reserved_blocks, metrics);
+        (adm.hit_tokens, promoted)
+    }
+
+    #[test]
+    fn append_and_read_roundtrip_across_blocks() {
+        let mut sh = shard(None);
+        let mut seq = PagedSeqCache::new(geom());
+        let toks: Vec<i32> = (0..11).collect(); // spans 3 blocks of 4
+        for &t in &toks {
+            let (k, v) = codes(t);
+            seq.append(&mut sh.pool, &k, &v).unwrap();
+        }
+        assert_eq!(seq.len, 11);
+        assert_eq!(sh.pool.live_blocks(), 3);
+        for &t in &[7i32, 0, 10, 4, 3] {
+            let (k, v) = seq.token(&sh.pool, t as usize);
+            assert_eq!((k, v), codes(t), "token {t}");
+        }
+        assert_eq!(seq.logical_bytes(), 11 * geom().bytes_per_token());
+        assert_eq!(seq.block_bytes_held(&sh.pool), 3 * sh.block_bytes());
+        seq.release(&mut sh.pool);
+        assert_eq!(sh.pool.live_blocks(), 0, "release frees everything");
+    }
+
+    #[test]
+    fn shared_system_prompt_is_stored_once() {
+        let mut sh = shard(None);
+        let m = ServeMetrics::default();
+        let prompt: Vec<i32> = (0..16).collect(); // 4 full blocks
+
+        let (hit_a, promoted_a) = run_client(&mut sh, &prompt, &[100, 101, 102], &m);
+        assert_eq!(hit_a, 0, "cold cache: no hit");
+        assert_eq!(promoted_a, 4, "prompt blocks promoted");
+        assert_eq!(sh.pool.live_blocks(), 4, "only the cached prefix survives");
+
+        let (hit_b, promoted_b) = run_client(&mut sh, &prompt, &[200, 201], &m);
+        assert_eq!(hit_b, 16, "whole prompt served from cache");
+        assert_eq!(promoted_b, 0, "nothing new to store");
+        assert_eq!(
+            sh.pool.live_blocks(),
+            4,
+            "two clients sharing a system prompt produce ONE stored prefix"
+        );
+        // The acceptance metric: quantize+store was skipped for 16 tokens.
+        assert_eq!(m.prefix_hit_tokens.get(), 16);
+        assert_eq!(m.prefix_lookup_tokens.get(), 32);
+        // Reservation shrank with the hit: B needed 1 block (2 decode
+        // tokens), not 5.
+        assert_eq!(sh.mgr.blocks_in_use, 0, "reservations fully returned");
+        assert_eq!(sh.mgr.cached_blocks, 4);
+    }
+
+    #[test]
+    fn divergent_client_copies_only_the_divergent_span() {
+        let mut sh = shard(None);
+        let m = ServeMetrics::default();
+        let prompt_a: Vec<i32> = (0..16).collect();
+        run_client(&mut sh, &prompt_a, &[100], &m);
+        // B shares 2 blocks then diverges mid-block (token 10).
+        let mut prompt_b = prompt_a[..10].to_vec();
+        prompt_b.extend([70, 71, 72, 73, 74, 75]);
+        let (hit_b, promoted_b) = run_client(&mut sh, &prompt_b, &[201], &m);
+        assert_eq!(hit_b, 8, "mid-block divergence floors to 2 blocks");
+        assert_eq!(promoted_b, 2, "B's divergent 2 blocks cached separately");
+        assert_eq!(sh.pool.live_blocks(), 6, "4 of A + 2 divergent of B");
+        // Both prefixes stay readable through the index.
+        assert_eq!(sh.radix.match_prefix(&prompt_a).hit_tokens, 16);
+        assert_eq!(sh.radix.match_prefix(&prompt_b).hit_tokens, 16);
+    }
+
+    #[test]
+    fn eviction_under_pressure_recovers_reservations() {
+        let budget = 6usize;
+        let mut sh = shard(Some(budget));
+        let m = ServeMetrics::default();
+        let prompt_a: Vec<i32> = (0..16).collect(); // 4 blocks
+        run_client(&mut sh, &prompt_a, &[], &m);
+        assert_eq!(sh.mgr.cached_blocks, 4);
+        assert!(sh.pool.live_bytes() <= budget * sh.block_bytes());
+
+        // B needs 4 blocks; 0 in use + 4 cached + 4 > 6 → evict A's prefix.
+        let prompt_b: Vec<i32> = (100..116).collect();
+        let (hit_b, _) = run_client(&mut sh, &prompt_b, &[], &m);
+        assert_eq!(hit_b, 0);
+        assert_eq!(m.blocks_evicted.get(), 4, "A's cold prefix was evicted");
+        assert_eq!(sh.radix.match_prefix(&prompt_a).hit_tokens, 0, "A gone");
+        assert_eq!(sh.radix.match_prefix(&prompt_b).hit_tokens, 16, "B cached");
+        assert!(sh.pool.live_bytes() <= budget * sh.block_bytes());
+
+        // A reservation that can never fit (8 blocks > budget 6) must be
+        // rejected WITHOUT evicting the warm cache on the way out.
+        let prompt_big: Vec<i32> = (300..332).collect();
+        assert!(sh.admit_stored(&prompt_big, 0, &m).is_err());
+        assert_eq!(
+            sh.radix.match_prefix(&prompt_b).hit_tokens,
+            16,
+            "infeasible request must not cold-start the cache"
+        );
+
+        // A pinned prefix is not evictable: admit C while holding B's
+        // blocks, then ask for more than the unpinned remainder.
+        let adm = sh.admit_stored(&prompt_b, 0, &m).expect("hit needs 0 blocks");
+        assert_eq!(adm.hit_tokens, 16);
+        let prompt_d: Vec<i32> = (200..212).collect(); // 3 blocks; 4 pinned + 3 > 6
+        assert!(
+            sh.admit_stored(&prompt_d, 0, &m).is_err(),
+            "pinned blocks cannot be evicted to make room"
+        );
+        assert_eq!(sh.radix.match_prefix(&prompt_b).hit_tokens, 16, "B survives");
+        let mut seq = adm.seq;
+        sh.finish(&mut seq, &prompt_b, adm.reserved_blocks, &m);
+        assert!(sh.pool.live_bytes() <= budget * sh.block_bytes());
+        assert_eq!(sh.mgr.blocks_in_use, 0);
+    }
+
+    #[test]
+    fn abort_returns_blocks_and_reservation() {
+        let mut sh = shard(Some(4));
+        let m = ServeMetrics::default();
+        let prompt: Vec<i32> = (0..8).collect();
+        let adm = sh.admit_stored(&prompt, 4, &m).unwrap();
+        let mut seq = adm.seq;
+        for &id in &prompt[..5] {
+            let (k, v) = codes(id);
+            seq.append(&mut sh.pool, &k, &v).unwrap();
+        }
+        assert!(sh.pool.live_blocks() > 0);
+        sh.abort(&mut seq, adm.reserved_blocks, &m);
+        assert_eq!(sh.pool.live_blocks(), 0);
+        assert_eq!(sh.mgr.blocks_in_use, 0);
+        // Budget fully recovered: the same admission succeeds again.
+        let adm2 = sh.admit_stored(&prompt, 4, &m).unwrap();
+        assert_eq!(adm2.reserved_blocks, 3);
+    }
+
+    #[test]
+    fn unstored_mode_reserves_without_storing() {
+        let mut sh = PagedShard::new(geom(), BT, Some(3), false);
+        let m = ServeMetrics::default();
+        let adm = sh.admit_unstored(8, 4, &m).unwrap();
+        assert_eq!(adm.reserved_blocks, 3);
+        let mut seq = adm.seq;
+        for _ in 0..12 {
+            seq.append_unstored().unwrap();
+        }
+        assert_eq!(sh.pool.live_blocks(), 0, "fp mode allocates no pages");
+        assert!(sh.admit_unstored(1, 0, &m).is_err(), "budget exhausted");
+        sh.finish(&mut seq, &[], adm.reserved_blocks, &m);
+        assert!(sh.admit_unstored(1, 0, &m).is_ok(), "budget recovered");
+    }
+}

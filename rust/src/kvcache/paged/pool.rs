@@ -1,0 +1,244 @@
+//! Slab block pool: free-list allocation, ref-counting and the hard block
+//! budget for one cache shard.
+//!
+//! All sequences of a shard draw blocks from one pool, so the pool is where
+//! the byte budget is actually *enforced* (the `CacheManager` reservation is
+//! the admission-time estimate; `alloc` is the ground truth).  Blocks are
+//! recycled through a free list, never deallocated, so a long-running shard
+//! reaches a steady-state slab and stops touching the system allocator.
+
+use anyhow::{bail, Result};
+
+use super::block::{Block, BlockConfig, BlockId};
+
+/// Lifetime allocator counters for one pool (local diagnostics and test
+/// invariants; serving telemetry lives in `crate::metrics::ServeMetrics`,
+/// fed by `PagedShard`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Blocks handed out by `alloc` (including recycled ones).
+    pub allocs: usize,
+    /// Blocks whose refcount reached zero and returned to the free list.
+    pub frees: usize,
+}
+
+/// Ref-counted slab of fixed-size packed-code blocks.
+pub struct BlockPool {
+    pub cfg: BlockConfig,
+    /// Hard cap on concurrently live blocks (None = unbounded).
+    pub cap_blocks: Option<usize>,
+    blocks: Vec<Block>,
+    free: Vec<BlockId>,
+    pub stats: PoolStats,
+}
+
+impl BlockPool {
+    pub fn new(cfg: BlockConfig, cap_blocks: Option<usize>) -> BlockPool {
+        BlockPool { cfg, cap_blocks, blocks: Vec::new(), free: Vec::new(), stats: PoolStats::default() }
+    }
+
+    /// Live (allocated, refcount > 0) blocks.
+    pub fn live_blocks(&self) -> usize {
+        self.blocks.len() - self.free.len()
+    }
+
+    /// Bytes held by live blocks (every live block owns a full-size slab
+    /// page whether or not it is full of tokens).
+    pub fn live_bytes(&self) -> usize {
+        self.live_blocks() * self.cfg.block_bytes()
+    }
+
+    /// Internal fragmentation: bytes of live pages not covered by written
+    /// token records (partially-filled tail blocks).
+    pub fn frag_bytes(&self) -> usize {
+        let used: usize = self
+            .blocks
+            .iter()
+            .filter(|b| b.refs > 0)
+            .map(|b| b.len * self.cfg.bytes_per_token)
+            .sum();
+        self.live_bytes() - used
+    }
+
+    /// Allocate an empty block with refcount 1.  Fails when the cap is
+    /// reached — the caller (shard admission) turns this into eviction or
+    /// backpressure.
+    pub fn alloc(&mut self) -> Result<BlockId> {
+        if let Some(cap) = self.cap_blocks {
+            if self.live_blocks() >= cap {
+                bail!("block pool exhausted: {cap} blocks live");
+            }
+        }
+        self.stats.allocs += 1;
+        if let Some(id) = self.free.pop() {
+            let b = &mut self.blocks[id];
+            b.len = 0;
+            b.refs = 1;
+            return Ok(id);
+        }
+        self.blocks.push(Block {
+            data: vec![0u8; self.cfg.block_bytes()],
+            len: 0,
+            refs: 1,
+        });
+        Ok(self.blocks.len() - 1)
+    }
+
+    /// Add a reference (sequence attach, radix insert).
+    pub fn retain(&mut self, id: BlockId) {
+        let b = &mut self.blocks[id];
+        assert!(b.refs > 0, "retain of free block {id}");
+        b.refs += 1;
+    }
+
+    /// Drop a reference; a block hitting zero returns to the free list.
+    /// Returns true when the block was freed by this call.
+    pub fn release(&mut self, id: BlockId) -> bool {
+        let b = &mut self.blocks[id];
+        assert!(b.refs > 0, "release of free block {id}");
+        b.refs -= 1;
+        if b.refs == 0 {
+            self.free.push(id);
+            self.stats.frees += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn refs(&self, id: BlockId) -> usize {
+        self.blocks[id].refs
+    }
+
+    /// Token records written into `id`.
+    pub fn len(&self, id: BlockId) -> usize {
+        self.blocks[id].len
+    }
+
+    pub fn is_full(&self, id: BlockId) -> bool {
+        self.blocks[id].is_full(&self.cfg)
+    }
+
+    /// Append one packed token record; the block must not be full.
+    pub fn push_token(&mut self, id: BlockId, record: &[u8]) -> Result<()> {
+        let bpt = self.cfg.bytes_per_token;
+        if record.len() != bpt {
+            bail!("token record is {} bytes, want {bpt}", record.len());
+        }
+        let b = &mut self.blocks[id];
+        assert!(b.refs > 0, "write to free block {id}");
+        if b.len >= self.cfg.block_tokens {
+            bail!("block {id} full ({} tokens)", self.cfg.block_tokens);
+        }
+        let off = b.len * bpt;
+        b.data[off..off + bpt].copy_from_slice(record);
+        b.len += 1;
+        Ok(())
+    }
+
+    /// Read token record `i` of block `id`.
+    pub fn token_bytes(&self, id: BlockId, i: usize) -> &[u8] {
+        let b = &self.blocks[id];
+        assert!(b.refs > 0, "read of free block {id}");
+        assert!(i < b.len, "token {i} beyond fill {}", b.len);
+        let bpt = self.cfg.bytes_per_token;
+        &b.data[i * bpt..(i + 1) * bpt]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+
+    fn pool(cap: Option<usize>) -> BlockPool {
+        BlockPool::new(BlockConfig::new(4, 3), cap)
+    }
+
+    #[test]
+    fn alloc_free_recycles_slots() {
+        let mut p = pool(None);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.live_blocks(), 2);
+        assert!(p.release(a), "last ref frees");
+        assert_eq!(p.live_blocks(), 1);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a, "freed slot is recycled");
+        assert_eq!(p.len(c), 0, "recycled block is reset");
+        assert_eq!(p.stats.allocs, 3);
+        assert_eq!(p.stats.frees, 1);
+        let _ = b;
+    }
+
+    #[test]
+    fn refcounts_delay_free_until_last_release() {
+        let mut p = pool(None);
+        let a = p.alloc().unwrap();
+        p.retain(a);
+        p.retain(a);
+        assert_eq!(p.refs(a), 3);
+        assert!(!p.release(a));
+        assert!(!p.release(a));
+        assert_eq!(p.live_blocks(), 1);
+        assert!(p.release(a), "third release frees");
+        assert_eq!(p.live_blocks(), 0);
+    }
+
+    #[test]
+    fn cap_is_a_hard_ceiling() {
+        let mut p = pool(Some(2));
+        let a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        assert!(p.alloc().is_err(), "cap reached");
+        p.release(a);
+        assert!(p.alloc().is_ok(), "freeing makes room");
+        assert!(p.live_bytes() <= 2 * p.cfg.block_bytes());
+    }
+
+    #[test]
+    fn token_records_roundtrip_and_fill() {
+        let mut p = pool(None);
+        let a = p.alloc().unwrap();
+        for t in 0..4u8 {
+            p.push_token(a, &[t, t + 1, t + 2]).unwrap();
+        }
+        assert!(p.is_full(a));
+        assert!(p.push_token(a, &[0, 0, 0]).is_err(), "overfill rejected");
+        let err = p.push_token(a, &[0]).unwrap_err();
+        assert!(err.to_string().contains("bytes"), "{err}");
+        assert_eq!(p.token_bytes(a, 2), &[2, 3, 4]);
+        assert_eq!(p.frag_bytes(), 0, "full block has no waste");
+        let b = p.alloc().unwrap();
+        p.push_token(b, &[9, 9, 9]).unwrap();
+        assert_eq!(p.frag_bytes(), 3 * 3, "3 unwritten records in block b");
+    }
+
+    #[test]
+    fn prop_live_count_matches_alloc_release_history() {
+        run_prop(20, 77, |rng| {
+            let mut p = pool(Some(8));
+            let mut live: Vec<BlockId> = Vec::new();
+            for _ in 0..200 {
+                if live.is_empty() || (rng.below(2) == 0 && live.len() < 8) {
+                    live.push(p.alloc().map_err(|e| e.to_string())?);
+                } else {
+                    let i = rng.below(live.len());
+                    let id = live.swap_remove(i);
+                    if !p.release(id) {
+                        return Err(format!("single-ref block {id} not freed"));
+                    }
+                }
+                if p.live_blocks() != live.len() {
+                    return Err(format!(
+                        "live {} != tracked {}",
+                        p.live_blocks(),
+                        live.len()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

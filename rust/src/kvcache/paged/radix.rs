@@ -1,0 +1,477 @@
+//! Radix index over token-id prefixes → chains of frozen packed-code blocks.
+//!
+//! Every edge covers a whole number of blocks (`block_tokens` tokens each):
+//! sequences are inserted as full-block chains, and splits happen only at
+//! block boundaries.  Two inserted sequences that diverge *inside* a block
+//! therefore share only the floor of full blocks and keep private copies of
+//! the divergent block — copy-on-write at block granularity.  Because
+//! sibling edges may then share a sub-block token prefix, child lookup scans
+//! all children for the longest token match instead of dispatching on the
+//! first token (children counts are tiny; correctness over micro-speed).
+//!
+//! The index owns one pool reference per block it caches.  [`RadixIndex::
+//! evict_lru`] walks cold leaves (no children, no outside references) in
+//! least-recently-touched order and releases them, which is how a full shard
+//! recovers budget for new admissions.
+
+use super::block::BlockId;
+use super::pool::BlockPool;
+
+/// Result of a prefix lookup: the shared blocks covering the matched span.
+/// `hit_tokens` is always a multiple of the pool's `block_tokens`.
+pub struct MatchResult {
+    pub blocks: Vec<BlockId>,
+    pub hit_tokens: usize,
+}
+
+struct Node {
+    /// Edge label; `tokens.len() == blocks.len() * block_tokens` (root: 0).
+    tokens: Vec<i32>,
+    blocks: Vec<BlockId>,
+    children: Vec<usize>,
+    parent: usize,
+    last_used: u64,
+}
+
+/// Prefix index for one cache shard.
+pub struct RadixIndex {
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    block_tokens: usize,
+    /// Logical LRU clock (bumped per lookup/insert, no wall time).
+    clock: u64,
+    /// Blocks currently referenced by the tree.
+    pub cached_blocks: usize,
+    /// Lifetime count of blocks released by eviction.
+    pub evicted_blocks: usize,
+}
+
+impl RadixIndex {
+    pub fn new(block_tokens: usize) -> RadixIndex {
+        assert!(block_tokens > 0);
+        let root = Node {
+            tokens: Vec::new(),
+            blocks: Vec::new(),
+            children: Vec::new(),
+            parent: usize::MAX,
+            last_used: 0,
+        };
+        RadixIndex {
+            nodes: vec![Some(root)],
+            free: Vec::new(),
+            block_tokens,
+            clock: 0,
+            cached_blocks: 0,
+            evicted_blocks: 0,
+        }
+    }
+
+    fn node(&self, i: usize) -> &Node {
+        self.nodes[i].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node {
+        self.nodes[i].as_mut().expect("live node")
+    }
+
+    fn add_node(&mut self, n: Node) -> usize {
+        if let Some(i) = self.free.pop() {
+            self.nodes[i] = Some(n);
+            i
+        } else {
+            self.nodes.push(Some(n));
+            self.nodes.len() - 1
+        }
+    }
+
+    /// Live nodes, root included (diagnostics/tests).
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count()
+    }
+
+    /// Child of `node` with the longest common token prefix against `rest`.
+    fn best_child(&self, node: usize, rest: &[i32]) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize)> = None;
+        for &c in &self.node(node).children {
+            let lab = &self.node(c).tokens;
+            let lcp = lab.iter().zip(rest).take_while(|(a, b)| a == b).count();
+            if lcp > 0 && best.map(|(_, l)| lcp > l).unwrap_or(true) {
+                best = Some((c, lcp));
+            }
+        }
+        best
+    }
+
+    /// Longest cached prefix of `tokens`, floored to whole blocks.  Bumps
+    /// the LRU clock on every node touched.  Does **not** take references on
+    /// the returned blocks — the caller must `retain` them before the next
+    /// eviction opportunity (single-threaded per shard, so "immediately").
+    pub fn match_prefix(&mut self, tokens: &[i32]) -> MatchResult {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut node = 0;
+        let mut pos = 0usize;
+        let mut blocks = Vec::new();
+        loop {
+            let Some((child, lcp)) = self.best_child(node, &tokens[pos..]) else {
+                break;
+            };
+            self.node_mut(child).last_used = clock;
+            let edge_len = self.node(child).tokens.len();
+            if lcp == edge_len {
+                blocks.extend_from_slice(&self.node(child).blocks);
+                pos += lcp;
+                node = child;
+            } else {
+                // Divergence (or query end) inside the edge: share only the
+                // fully matched blocks.
+                let nb = lcp / self.block_tokens;
+                blocks.extend_from_slice(&self.node(child).blocks[..nb]);
+                pos += nb * self.block_tokens;
+                break;
+            }
+        }
+        MatchResult { blocks, hit_tokens: pos }
+    }
+
+    /// Insert a full-block chain (`tokens.len() == blocks.len() *
+    /// block_tokens`).  Spans already covered by the tree are left as-is
+    /// (the tree's blocks win; the caller's duplicates die with the caller's
+    /// own references).  Returns the number of blocks newly cached — the
+    /// tree `retain`s exactly those.
+    pub fn insert(&mut self, tokens: &[i32], blocks: &[BlockId], pool: &mut BlockPool) -> usize {
+        assert_eq!(
+            tokens.len(),
+            blocks.len() * self.block_tokens,
+            "insert requires whole blocks"
+        );
+        self.clock += 1;
+        let clock = self.clock;
+        let mut node = 0;
+        let mut pos = 0usize;
+        let mut bi = 0usize; // index into `blocks`
+        loop {
+            if pos == tokens.len() {
+                return 0; // fully covered by existing nodes
+            }
+            match self.best_child(node, &tokens[pos..]) {
+                None => {
+                    return self.finish_insert(node, &tokens[pos..], &blocks[bi..], pool);
+                }
+                Some((child, lcp)) => {
+                    self.node_mut(child).last_used = clock;
+                    let edge_len = self.node(child).tokens.len();
+                    if lcp == edge_len {
+                        pos += lcp;
+                        bi += self.node(child).blocks.len();
+                        node = child;
+                        continue;
+                    }
+                    let nb = lcp / self.block_tokens;
+                    if nb == 0 {
+                        // Diverges inside the child's first block: the new
+                        // chain becomes a sibling (COW: both keep their own
+                        // copy of the divergent block).
+                        return self.finish_insert(node, &tokens[pos..], &blocks[bi..], pool);
+                    }
+                    // Split the child at the block boundary, then hang the
+                    // remainder (if any) off the new upper node.
+                    let upper = self.split_at(child, nb);
+                    pos += nb * self.block_tokens;
+                    bi += nb;
+                    if pos == tokens.len() {
+                        return 0;
+                    }
+                    return self.finish_insert(upper, &tokens[pos..], &blocks[bi..], pool);
+                }
+            }
+        }
+    }
+
+    /// Attach `tokens`/`blocks` as a new child of `parent`, retaining each
+    /// block for the tree.  Empty input is a no-op.
+    fn finish_insert(
+        &mut self,
+        parent: usize,
+        tokens: &[i32],
+        blocks: &[BlockId],
+        pool: &mut BlockPool,
+    ) -> usize {
+        if blocks.is_empty() {
+            return 0;
+        }
+        for &b in blocks {
+            pool.retain(b);
+        }
+        let clock = self.clock;
+        let n = self.add_node(Node {
+            tokens: tokens.to_vec(),
+            blocks: blocks.to_vec(),
+            children: Vec::new(),
+            parent,
+            last_used: clock,
+        });
+        self.node_mut(parent).children.push(n);
+        self.cached_blocks += blocks.len();
+        blocks.len()
+    }
+
+    /// Split node `child` after its first `nb` blocks; returns the new upper
+    /// node's index.  Block references move between nodes, no count changes.
+    fn split_at(&mut self, child: usize, nb: usize) -> usize {
+        let cut = nb * self.block_tokens;
+        let parent = self.node(child).parent;
+        let upper_tokens = self.node(child).tokens[..cut].to_vec();
+        let upper_blocks = self.node(child).blocks[..nb].to_vec();
+        let clock = self.clock;
+        let upper = self.add_node(Node {
+            tokens: upper_tokens,
+            blocks: upper_blocks,
+            children: vec![child],
+            parent,
+            last_used: clock,
+        });
+        {
+            let c = self.node_mut(child);
+            c.tokens.drain(..cut);
+            c.blocks.drain(..nb);
+            c.parent = upper;
+        }
+        let p = self.node_mut(parent);
+        let slot = p.children.iter().position(|&x| x == child).expect("child link");
+        p.children[slot] = upper;
+        upper
+    }
+
+    /// A leaf is evictable when nothing hangs below it and no sequence
+    /// holds its blocks (tree reference only).
+    fn evictable_leaf(&self, pool: &BlockPool) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, n) in self.nodes.iter().enumerate() {
+            let Some(n) = n else { continue };
+            if i == 0 || !n.children.is_empty() {
+                continue;
+            }
+            if n.blocks.iter().any(|&b| pool.refs(b) > 1) {
+                continue;
+            }
+            if best.map(|b| n.last_used < self.node(b).last_used).unwrap_or(true) {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Evict least-recently-used cold leaves until at least `need_blocks`
+    /// blocks were released or nothing more is evictable.  Returns blocks
+    /// actually freed back to the pool.
+    pub fn evict_lru(&mut self, pool: &mut BlockPool, need_blocks: usize) -> usize {
+        let mut freed = 0usize;
+        while freed < need_blocks {
+            let Some(leaf) = self.evictable_leaf(pool) else { break };
+            let node = self.nodes[leaf].take().expect("live leaf");
+            self.free.push(leaf);
+            let p = self.node_mut(node.parent);
+            p.children.retain(|&c| c != leaf);
+            for &b in &node.blocks {
+                pool.release(b);
+            }
+            freed += node.blocks.len();
+            self.cached_blocks -= node.blocks.len();
+            self.evicted_blocks += node.blocks.len();
+        }
+        freed
+    }
+
+    /// Release every cached block (shard teardown / tests).
+    pub fn clear(&mut self, pool: &mut BlockPool) {
+        for i in 0..self.nodes.len() {
+            if i == 0 {
+                continue;
+            }
+            if let Some(n) = self.nodes[i].take() {
+                for &b in &n.blocks {
+                    pool.release(b);
+                }
+                self.free.push(i);
+            }
+        }
+        self.node_mut(0).children.clear();
+        self.cached_blocks = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::paged::block::BlockConfig;
+
+    const BT: usize = 4; // tokens per block
+
+    fn mk_pool() -> BlockPool {
+        BlockPool::new(BlockConfig::new(BT, 2), None)
+    }
+
+    /// Token ids `start..start+n_blocks*BT` and freshly allocated blocks.
+    fn chain(pool: &mut BlockPool, start: i32, n_blocks: usize) -> (Vec<i32>, Vec<BlockId>) {
+        let tokens: Vec<i32> = (0..(n_blocks * BT) as i32).map(|i| start + i).collect();
+        let blocks: Vec<BlockId> = (0..n_blocks).map(|_| pool.alloc().unwrap()).collect();
+        (tokens, blocks)
+    }
+
+    fn release_all(pool: &mut BlockPool, blocks: &[BlockId]) {
+        for &b in blocks {
+            pool.release(b);
+        }
+    }
+
+    #[test]
+    fn insert_then_exact_and_partial_match() {
+        let mut pool = mk_pool();
+        let mut rx = RadixIndex::new(BT);
+        let (tokens, blocks) = chain(&mut pool, 0, 3);
+        assert_eq!(rx.insert(&tokens, &blocks, &mut pool), 3);
+        assert_eq!(rx.cached_blocks, 3);
+        for &b in &blocks {
+            assert_eq!(pool.refs(b), 2, "tree holds its own reference");
+        }
+
+        let m = rx.match_prefix(&tokens);
+        assert_eq!(m.hit_tokens, 12);
+        assert_eq!(m.blocks, blocks);
+
+        // Query shorter than the edge: floors to whole blocks.
+        let m = rx.match_prefix(&tokens[..7]);
+        assert_eq!(m.hit_tokens, 4, "7 matched tokens floor to 1 block");
+        assert_eq!(m.blocks, blocks[..1]);
+
+        // Unrelated query misses entirely.
+        let m = rx.match_prefix(&[500, 501]);
+        assert_eq!(m.hit_tokens, 0);
+        assert!(m.blocks.is_empty());
+        release_all(&mut pool, &blocks);
+    }
+
+    #[test]
+    fn boundary_divergence_splits_edge() {
+        let mut pool = mk_pool();
+        let mut rx = RadixIndex::new(BT);
+        let (ta, ba) = chain(&mut pool, 0, 4);
+        rx.insert(&ta, &ba, &mut pool);
+        // B shares A's first 2 blocks exactly, then diverges at the boundary.
+        let mut tb = ta[..8].to_vec();
+        tb.extend((0..2 * BT as i32).map(|i| 1000 + i));
+        let bb: Vec<BlockId> = {
+            let mut v = ba[..2].to_vec();
+            for _ in 0..2 {
+                v.push(pool.alloc().unwrap());
+            }
+            v
+        };
+        // Only the 2 divergent-suffix blocks are new to the tree.
+        assert_eq!(rx.insert(&tb, &bb, &mut pool), 2);
+        assert_eq!(rx.cached_blocks, 6);
+        // Root -> shared(2 blocks) -> {A-suffix(2), B-suffix(2)}.
+        assert_eq!(rx.node_count(), 4);
+        let ma = rx.match_prefix(&ta);
+        assert_eq!((ma.hit_tokens, ma.blocks.len()), (16, 4));
+        assert_eq!(ma.blocks, ba);
+        let mb = rx.match_prefix(&tb);
+        assert_eq!((mb.hit_tokens, mb.blocks.len()), (16, 4));
+        assert_eq!(mb.blocks[..2], ba[..2], "shared span uses A's storage");
+        release_all(&mut pool, &ba);
+        release_all(&mut pool, &bb[2..]);
+    }
+
+    #[test]
+    fn mid_block_divergence_shares_only_the_floor() {
+        let mut pool = mk_pool();
+        let mut rx = RadixIndex::new(BT);
+        let (ta, ba) = chain(&mut pool, 0, 3);
+        rx.insert(&ta, &ba, &mut pool);
+        // B agrees for 2 blocks + 2 tokens, then diverges mid-block: B keeps
+        // a private copy of block 2 (copy-on-write at block granularity).
+        let mut tb = ta[..10].to_vec();
+        tb.extend([900, 901]);
+        let bb: Vec<BlockId> = {
+            let mut v = ba[..2].to_vec();
+            v.push(pool.alloc().unwrap());
+            v
+        };
+        let m = rx.match_prefix(&tb);
+        assert_eq!(m.hit_tokens, 8, "mid-block divergence floors to 2 blocks");
+        assert_eq!(m.blocks, ba[..2]);
+        // Inserting B adds its private third block as a sibling edge whose
+        // label overlaps A's suffix for 2 tokens — longest-match scan keeps
+        // both resolvable.
+        assert_eq!(rx.insert(&tb, &bb, &mut pool), 1);
+        let ma = rx.match_prefix(&ta);
+        assert_eq!(ma.blocks, ba);
+        let mb = rx.match_prefix(&tb);
+        assert_eq!(mb.blocks, bb);
+        release_all(&mut pool, &ba);
+        release_all(&mut pool, &bb[2..]);
+    }
+
+    #[test]
+    fn duplicate_insert_caches_nothing_new() {
+        let mut pool = mk_pool();
+        let mut rx = RadixIndex::new(BT);
+        let (ta, ba) = chain(&mut pool, 0, 2);
+        assert_eq!(rx.insert(&ta, &ba, &mut pool), 2);
+        // A second client quantized the same prompt concurrently: same
+        // tokens, different (duplicate) blocks.  The tree keeps its copy.
+        let dup: Vec<BlockId> = (0..2).map(|_| pool.alloc().unwrap()).collect();
+        assert_eq!(rx.insert(&ta, &dup, &mut pool), 0);
+        assert_eq!(rx.cached_blocks, 2);
+        for &b in &dup {
+            assert_eq!(pool.refs(b), 1, "duplicates stay caller-owned");
+        }
+        release_all(&mut pool, &ba);
+        release_all(&mut pool, &dup);
+        assert_eq!(pool.live_blocks(), 2, "only the tree's copy survives");
+    }
+
+    #[test]
+    fn lru_eviction_frees_cold_leaves_and_respects_live_refs() {
+        let mut pool = mk_pool();
+        let mut rx = RadixIndex::new(BT);
+        let (ta, ba) = chain(&mut pool, 0, 2);
+        let (tb, bb) = chain(&mut pool, 100, 2);
+        let (tc, bc) = chain(&mut pool, 200, 2);
+        rx.insert(&ta, &ba, &mut pool);
+        rx.insert(&tb, &bb, &mut pool);
+        rx.insert(&tc, &bc, &mut pool);
+        // Drop sequence refs for A and B; keep C referenced (in use).
+        release_all(&mut pool, &ba);
+        release_all(&mut pool, &bb);
+        // Touch A so B becomes the coldest.
+        rx.match_prefix(&ta);
+        assert_eq!(rx.evict_lru(&mut pool, 1), 2, "evicts whole leaf (2 blocks)");
+        assert_eq!(rx.cached_blocks, 4);
+        assert!(rx.match_prefix(&tb).blocks.is_empty(), "B was evicted");
+        assert_eq!(rx.match_prefix(&ta).hit_tokens, 8, "A survived (warmer)");
+        // C is pinned by an outside reference: unlimited demand can only
+        // take A.
+        assert_eq!(rx.evict_lru(&mut pool, 100), 2);
+        assert_eq!(rx.match_prefix(&tc).hit_tokens, 8, "pinned leaf survives");
+        assert_eq!(rx.evicted_blocks, 4);
+        release_all(&mut pool, &bc);
+        assert_eq!(rx.evict_lru(&mut pool, 100), 2, "unpinned -> evictable");
+        assert_eq!(pool.live_blocks(), 0);
+        assert_eq!(rx.cached_blocks, 0);
+    }
+
+    #[test]
+    fn clear_releases_everything() {
+        let mut pool = mk_pool();
+        let mut rx = RadixIndex::new(BT);
+        let (ta, ba) = chain(&mut pool, 0, 3);
+        rx.insert(&ta, &ba, &mut pool);
+        release_all(&mut pool, &ba);
+        rx.clear(&mut pool);
+        assert_eq!(pool.live_blocks(), 0);
+        assert_eq!(rx.node_count(), 1, "root remains");
+        assert_eq!(rx.match_prefix(&ta).hit_tokens, 0);
+    }
+}

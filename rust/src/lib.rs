@@ -22,10 +22,12 @@
 //! * [`train`]       — Rust-driven AOT training loop + checkpoints.
 //! * [`calib`]       — Fisher calibration (activations + gradients).
 //! * [`eval`]        — perplexity + zero-shot suites under any codec.
-//! * [`kvcache`]     — packed quantized cache pages + staging buffers,
-//!                     per-shard byte-budget accounting.
-//! * [`coordinator`] — sharded serve pool: least-loaded router over N
-//!                     engine workers, continuous batcher, decode scheduler.
+//! * [`kvcache`]     — paged quantized cache: slab block pool + radix-tree
+//!                     prefix sharing with LRU eviction (`kvcache::paged`),
+//!                     staging buffers, per-shard block-budget accounting.
+//! * [`coordinator`] — sharded serve pool: least-loaded router with
+//!                     pool-wide admission control over N engine workers,
+//!                     continuous batcher, decode scheduler.
 //! * [`server`]      — TCP line-protocol server and client (fronts the pool).
 //! * [`metrics`]     — latency/throughput/memory-traffic telemetry, merged
 //!                     per-worker into pool-level aggregates.

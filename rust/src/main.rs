@@ -42,7 +42,8 @@ COMMANDS
   eval-tasks  --model small --codec cq-8c8b [--items 120]
   generate    --model small --prompt \"...\" [--max-tokens 48] [--cq 8c8b]
   serve       --model small --port 7878 [--cq 8c8b] [--batch 8]
-              [--workers 2] [--cache-budget-mb 64]
+              [--workers 2] [--cache-budget-mb 64] [--block-tokens 16]
+              [--no-prefix-sharing]
   client      --port 7878 --prompt \"...\" [--max-tokens 32]
   gen-corpus  --corpus wiki2s --split train --bytes 200000 [--out file]
 ";
@@ -292,6 +293,8 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         codebook_path,
         params_path: dir.join("params.bin"),
         kernel: args.str("kernel", &ServeConfig::default_kernel()),
+        block_tokens: args.usize("block-tokens", ServeConfig::default_block_tokens()),
+        prefix_sharing: !args.flag("no-prefix-sharing"),
     })
 }
 

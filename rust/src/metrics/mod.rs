@@ -146,23 +146,60 @@ pub struct ServeMetrics {
     pub requests_done: Counter,
     pub requests_rejected: Counter,
     /// Cache-budget accounting: bytes reserved / released by this shard's
-    /// `CacheManager` (in_use = reserved - released) and the shard's peak.
+    /// `CacheManager` (in_use = reserved - released, cached radix blocks
+    /// included) and the shard's peak.
     pub cache_reserved_bytes: Counter,
     pub cache_released_bytes: Counter,
     pub cache_peak_bytes: Gauge,
+    /// Prefix sharing: prompt tokens looked up vs served from cached
+    /// blocks (quantize+store skipped for exactly the hit span).
+    pub prefix_lookup_tokens: Counter,
+    pub prefix_hit_tokens: Counter,
+    /// Block-pool lifecycle: blocks promoted into the radix index at
+    /// completion and blocks reclaimed by LRU eviction.
+    pub blocks_promoted: Counter,
+    pub blocks_evicted: Counter,
+    /// Peak internal fragmentation (allocated page bytes not covered by
+    /// written token records).
+    pub cache_frag_bytes: Gauge,
+    /// Shard geometry, published once the worker's context is built (the
+    /// router's pool-wide admission estimate reads these).
+    pub bytes_per_token: Gauge,
+    pub block_bytes: Gauge,
+    /// Largest prompt the worker's prefill buckets accept (prompts are
+    /// trimmed to this before reservation).
+    pub max_prompt_tokens: Gauge,
 }
 
 impl ServeMetrics {
-    /// Cache bytes currently reserved on this shard.
+    /// Cache bytes currently reserved on this shard (active reservations +
+    /// radix-cached blocks).
     pub fn cache_bytes_in_use(&self) -> u64 {
         self.cache_reserved_bytes
             .get()
             .saturating_sub(self.cache_released_bytes.get())
     }
 
+    /// Bytes held by radix-cached prefix blocks on this shard.
+    pub fn cache_cached_bytes(&self) -> u64 {
+        self.blocks_promoted
+            .get()
+            .saturating_sub(self.blocks_evicted.get())
+            * self.block_bytes.get()
+    }
+
+    /// Fraction of looked-up prompt tokens served from cached blocks.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let lookups = self.prefix_lookup_tokens.get();
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hit_tokens.get() as f64 / lookups as f64
+    }
+
     pub fn summary(&self, wall_secs: f64) -> String {
         format!(
-            "requests={} rejected={} tokens={} tput={:.1} tok/s  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms  cache peak={}B",
+            "requests={} rejected={} tokens={} tput={:.1} tok/s  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms  cache peak={}B  prefix hit={:.0}% evicted={} frag={}B",
             self.requests_done.get(),
             self.requests_rejected.get(),
             self.tokens_out.get(),
@@ -172,6 +209,9 @@ impl ServeMetrics {
             self.request_latency.percentile_ms(0.5),
             self.request_latency.percentile_ms(0.95),
             self.cache_peak_bytes.get(),
+            self.prefix_hit_rate() * 100.0,
+            self.blocks_evicted.get(),
+            self.cache_frag_bytes.get(),
         )
     }
 }
@@ -184,12 +224,15 @@ impl ServeMetrics {
 /// peak (shards peak independently).
 pub struct PoolMetrics {
     workers: Vec<Arc<ServeMetrics>>,
+    /// Requests refused by the router's pool-wide admission control before
+    /// reaching any worker.
+    pub router_rejected: Counter,
 }
 
 impl PoolMetrics {
     pub fn new(workers: Vec<Arc<ServeMetrics>>) -> PoolMetrics {
         assert!(!workers.is_empty(), "pool needs at least one worker");
-        PoolMetrics { workers }
+        PoolMetrics { workers, router_rejected: Counter::default() }
     }
 
     pub fn n_workers(&self) -> usize {
@@ -216,8 +259,10 @@ impl PoolMetrics {
         self.sum(|m| m.requests_done.get())
     }
 
+    /// Worker-side (shard budget) rejections plus router-side (pool-wide
+    /// admission control) rejections.
     pub fn requests_rejected(&self) -> u64 {
-        self.sum(|m| m.requests_rejected.get())
+        self.sum(|m| m.requests_rejected.get()) + self.router_rejected.get()
     }
 
     pub fn cache_bytes_reserved(&self) -> u64 {
@@ -230,6 +275,61 @@ impl PoolMetrics {
 
     pub fn cache_peak_bytes(&self) -> u64 {
         self.sum(|m| m.cache_peak_bytes.get())
+    }
+
+    /// Bytes held by radix-cached prefixes across all shards.
+    pub fn cache_cached_bytes(&self) -> u64 {
+        self.sum(|m| m.cache_cached_bytes())
+    }
+
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.sum(|m| m.prefix_hit_tokens.get())
+    }
+
+    pub fn prefix_lookup_tokens(&self) -> u64 {
+        self.sum(|m| m.prefix_lookup_tokens.get())
+    }
+
+    /// Pool-wide prefix hit rate (token-weighted across shards).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let lookups = self.prefix_lookup_tokens();
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hit_tokens() as f64 / lookups as f64
+    }
+
+    pub fn blocks_evicted(&self) -> u64 {
+        self.sum(|m| m.blocks_evicted.get())
+    }
+
+    /// Largest per-shard fragmentation peak (shards don't share pages, so
+    /// summing would overstate waste on any single allocator).
+    pub fn cache_frag_bytes(&self) -> u64 {
+        self.workers
+            .iter()
+            .map(|m| m.cache_frag_bytes.get())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Packed bytes per token as published by the first worker that built
+    /// its context (0 until then).  All shards share one geometry.
+    pub fn bytes_per_token(&self) -> u64 {
+        self.workers
+            .iter()
+            .map(|m| m.bytes_per_token.get())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Prefill prompt ceiling as published by the workers (0 until built).
+    pub fn max_prompt_tokens(&self) -> u64 {
+        self.workers
+            .iter()
+            .map(|m| m.max_prompt_tokens.get())
+            .max()
+            .unwrap_or(0)
     }
 
     /// All workers' decode-step latencies merged into one histogram.
@@ -255,7 +355,7 @@ impl PoolMetrics {
         let decode = self.merged_decode_latency();
         let e2e = self.merged_request_latency();
         let mut s = format!(
-            "pool[{}w]: requests={} rejected={} tokens={} tput={:.1} tok/s  decode p50={:.2}ms  e2e p95={:.1}ms  cache in_use={}B peak<={}B",
+            "pool[{}w]: requests={} rejected={} tokens={} tput={:.1} tok/s  decode p50={:.2}ms  e2e p95={:.1}ms  cache in_use={}B peak<={}B  prefix hit={:.0}% cached={}B evicted={}",
             self.n_workers(),
             self.requests_done(),
             self.requests_rejected(),
@@ -265,6 +365,9 @@ impl PoolMetrics {
             e2e.percentile_ms(0.95),
             self.cache_bytes_in_use(),
             self.cache_peak_bytes(),
+            self.prefix_hit_rate() * 100.0,
+            self.cache_cached_bytes(),
+            self.blocks_evicted(),
         );
         for (i, m) in self.workers.iter().enumerate() {
             s.push_str(&format!("\n  worker {i}: {}", m.summary(wall_secs)));
@@ -359,6 +462,37 @@ mod tests {
         let s = pool.summary(1.0);
         assert!(s.contains("pool[2w]"), "{s}");
         assert!(s.contains("worker 1"), "{s}");
+    }
+
+    #[test]
+    fn prefix_and_eviction_counters_aggregate() {
+        let w0 = Arc::new(ServeMetrics::default());
+        let w1 = Arc::new(ServeMetrics::default());
+        for w in [&w0, &w1] {
+            w.block_bytes.observe_max(64);
+            w.bytes_per_token.observe_max(4);
+        }
+        w0.prefix_lookup_tokens.add(100);
+        w0.prefix_hit_tokens.add(75);
+        w1.prefix_lookup_tokens.add(100);
+        w1.prefix_hit_tokens.add(25);
+        w0.blocks_promoted.add(10);
+        w0.blocks_evicted.add(4);
+        assert_eq!(w0.cache_cached_bytes(), 6 * 64);
+        assert!((w0.prefix_hit_rate() - 0.75).abs() < 1e-12);
+
+        let pool = PoolMetrics::new(vec![w0.clone(), w1.clone()]);
+        assert_eq!(pool.prefix_hit_tokens(), 100);
+        assert!((pool.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(pool.blocks_evicted(), 4);
+        assert_eq!(pool.cache_cached_bytes(), 6 * 64);
+        assert_eq!(pool.bytes_per_token(), 4);
+        // Router rejections count toward the pool total.
+        w0.requests_rejected.add(1);
+        pool.router_rejected.add(2);
+        assert_eq!(pool.requests_rejected(), 3);
+        let s = pool.summary(1.0);
+        assert!(s.contains("prefix hit"), "{s}");
     }
 
     #[test]

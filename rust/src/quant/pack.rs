@@ -153,9 +153,10 @@ mod tests {
 
     #[test]
     fn prop_packing_is_dense_concatenable_records() {
-        // PackedSeqCache appends fixed-width per-token records and indexes
-        // them by multiplication; that is only sound if packing a whole
-        // stream equals concatenating byte-aligned record packings.
+        // The paged cache (kvcache::paged) stores fixed-width per-token
+        // records in blocks and indexes them by multiplication; that is only
+        // sound if packing a whole stream equals concatenating byte-aligned
+        // record packings.
         run_prop(40, 29, |rng| {
             let bits = 1 + rng.below(16) as u32;
             // Record length chosen so each record is byte-aligned.

@@ -3,8 +3,8 @@
 //! Request line:  `{"prompt": "...", "max_tokens": 32, "temperature": 0.8,
 //!                  "top_k": 40}`
 //! Response line: `{"id": 1, "text": "...", "prompt_tokens": 12,
-//!                  "gen_tokens": 32, "prefill_ms": ..., "decode_ms": ...,
-//!                  "cache_bytes": ...}`
+//!                  "prefix_hit_tokens": 8, "gen_tokens": 32,
+//!                  "prefill_ms": ..., "decode_ms": ..., "cache_bytes": ...}`
 //!
 //! Connection threads are thin: they parse, forward to the serve pool's
 //! router, and stream the response back.  All model work happens on the
@@ -40,6 +40,7 @@ pub fn format_response(r: &Response) -> String {
         ("id", Json::Num(r.id as f64)),
         ("text", Json::Str(r.text.clone())),
         ("prompt_tokens", Json::Num(r.prompt_tokens as f64)),
+        ("prefix_hit_tokens", Json::Num(r.prefix_hit_tokens as f64)),
         ("gen_tokens", Json::Num(r.gen_tokens as f64)),
         ("prefill_ms", Json::Num((r.prefill_ms * 100.0).round() / 100.0)),
         ("decode_ms", Json::Num((r.decode_ms * 100.0).round() / 100.0)),
@@ -140,6 +141,7 @@ mod tests {
             id: 9,
             text: "abc\ndef".into(),
             prompt_tokens: 4,
+            prefix_hit_tokens: 3,
             gen_tokens: 7,
             queue_ms: 0.0,
             prefill_ms: 1.25,
@@ -151,5 +153,6 @@ mod tests {
         assert_eq!(j.num_or("id", 0.0), 9.0);
         assert_eq!(j.str_or("text", ""), "abc\ndef");
         assert_eq!(j.num_or("cache_bytes", 0.0), 1234.0);
+        assert_eq!(j.num_or("prefix_hit_tokens", 0.0), 3.0);
     }
 }

@@ -87,6 +87,8 @@ fn serve_loop_fails_fast_on_missing_assets() {
         codebook_path: None,
         params_path: "/nonexistent/params.bin".into(),
         kernel: ServeConfig::default_kernel(),
+        block_tokens: ServeConfig::default_block_tokens(),
+        prefix_sharing: true,
     };
     let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
     let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
@@ -119,6 +121,8 @@ fn serve_config_validates_batch_and_codebook_tag() {
         codebook_path: None,
         params_path: dir.join("params.bin"),
         kernel: ServeConfig::default_kernel(),
+        block_tokens: ServeConfig::default_block_tokens(),
+        prefix_sharing: true,
     };
     let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
     let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());

@@ -34,6 +34,8 @@ fn cq_config(batch: usize) -> ServeConfig {
         codebook_path: Some(cq::train::ckpt_dir("small").join("cq_8c8b.cqb")),
         params_path: cq::train::ckpt_dir("small").join("params.bin"),
         kernel: ServeConfig::default_kernel(),
+        block_tokens: ServeConfig::default_block_tokens(),
+        prefix_sharing: true,
     }
 }
 

@@ -27,6 +27,8 @@ fn cq_config() -> ServeConfig {
         codebook_path: Some(cq::train::ckpt_dir("small").join("cq_8c8b.cqb")),
         params_path: cq::train::ckpt_dir("small").join("params.bin"),
         kernel: ServeConfig::default_kernel(),
+        block_tokens: ServeConfig::default_block_tokens(),
+        prefix_sharing: true,
     }
 }
 
@@ -90,8 +92,8 @@ fn run_pool(workers: usize) -> Vec<(u64, String, usize)> {
     assert_eq!(shard_sum, pool.metrics.cache_bytes_in_use());
     assert_eq!(
         pool.metrics.cache_bytes_in_use(),
-        0,
-        "all reservations released after completion"
+        pool.metrics.cache_cached_bytes(),
+        "after drain only radix-cached prefix blocks stay resident"
     );
     assert!(pool.metrics.cache_bytes_reserved() > 0, "budget was exercised");
     let shard_budget = BUDGET.div_ceil(workers);
@@ -134,6 +136,29 @@ fn two_worker_pool_serves_concurrent_clients_and_matches_single_worker() {
 }
 
 #[test]
+fn shared_prompt_hits_radix_cache_and_decodes_identically() {
+    if !cq::runtime_available() {
+        eprintln!("skipping: PJRT runtime / artifacts unavailable (run `make artifacts`)");
+        return;
+    }
+    ensure_assets();
+    // 32-byte prompt = exactly two 16-token blocks: a second request with
+    // the same system prompt must attach to the cached blocks (skipping
+    // quantize+store for the whole prompt) and still decode identically.
+    let prompt = "S".repeat(32);
+    let pool = ServePool::start(cq_config(), 1);
+    let a = pool.submit(Request::greedy(1, &prompt, 8)).expect("first");
+    assert_eq!(a.prefix_hit_tokens, 0, "cold cache");
+    let b = pool.submit(Request::greedy(2, &prompt, 8)).expect("second");
+    assert_eq!(b.prefix_hit_tokens, 32, "whole prompt served from cache");
+    assert_eq!(a.text, b.text, "prefix reuse must not change greedy output");
+    assert_eq!(pool.metrics.prefix_hit_tokens(), 32);
+    assert!(pool.metrics.prefix_hit_rate() > 0.0);
+    assert!(pool.metrics.cache_cached_bytes() > 0);
+    pool.shutdown().expect("clean shutdown");
+}
+
+#[test]
 fn pool_with_missing_assets_fails_fast_everywhere() {
     // Runs on build-only hosts too: a pool whose workers cannot start must
     // surface errors on submit and shutdown, never hang the client.
@@ -145,6 +170,8 @@ fn pool_with_missing_assets_fails_fast_everywhere() {
         codebook_path: None,
         params_path: "/nonexistent/cq-pool-test/params.bin".into(),
         kernel: ServeConfig::default_kernel(),
+        block_tokens: ServeConfig::default_block_tokens(),
+        prefix_sharing: true,
     };
     let pool = ServePool::start(cfg, 3);
     assert_eq!(pool.n_workers(), 3);
