@@ -231,7 +231,14 @@ impl ServePool {
     /// that cannot possibly fit the pool's remaining cache budget are
     /// rejected here, before any worker sees them.  A failed send marks
     /// that worker dead and reroutes to the next live one.
-    pub fn submit_async(&self, req: Request) -> Result<Receiver<Response>> {
+    pub fn submit_async(&self, mut req: Request) -> Result<Receiver<Response>> {
+        // Workers always serve at least one token (the decode loop appends
+        // before consulting must_stop), so clamp max_new ONCE — up front —
+        // and dispatch the clamped request.  The pool-wide byte estimate
+        // below and the shard's own reservation then gate the same value; a
+        // max_new = 0 request can no longer slip past the router with a
+        // smaller reservation than the shard actually takes.
+        req.max_new = req.max_new.max(1);
         let hard_in_use = self
             .metrics
             .cache_bytes_in_use()
@@ -249,8 +256,7 @@ impl ServePool {
             self.metrics.bytes_per_token(),
             hard_in_use,
             prompt_tokens,
-            // Workers serve at least one token (admission clamps max_new).
-            req.max_new.max(1),
+            req.max_new,
         ) {
             self.metrics.router_rejected.add(1);
             let (tx, rx) = channel();
@@ -433,6 +439,27 @@ mod tests {
         assert!(!pool_admission_rejects(Some(100), 4, 60, 5, 4));
         // Saturation: over-reserved pool admits nothing with a cost.
         assert!(pool_admission_rejects(Some(100), 4, 200, 1, 0));
+    }
+
+    #[test]
+    fn max_new_zero_is_clamped_before_the_pool_estimate() {
+        // The shard always reserves for >= 1 decode token; the router's
+        // byte estimate must gate the same clamped value, not the raw
+        // request.  16-token prompt at 4 B/token: (16 + 1) * 4 = 68 B can
+        // never fit a 64 B pool, even though the raw max_new = 0 estimate
+        // (64 B) would have slipped through.
+        let pool = ServePool::start(dead_worker_cfg(Some(64)), 1);
+        pool.metrics.worker(0).bytes_per_token.observe_max(4);
+        let resp = pool
+            .submit(Request::greedy(1, &"x".repeat(16), 0))
+            .expect("router replies directly");
+        assert!(resp.text.contains("pool budget"), "{}", resp.text);
+        assert_eq!(pool.metrics.router_rejected.get(), 1);
+        // One token smaller and the clamped estimate fits exactly — the
+        // request passes the gate (and then dies on the dead worker).
+        assert!(pool.submit(Request::greedy(2, &"x".repeat(15), 0)).is_err());
+        assert_eq!(pool.metrics.router_rejected.get(), 1);
+        assert!(pool.shutdown().is_err());
     }
 
     #[test]

@@ -281,24 +281,14 @@ fn prefill_fill(
 
     match &ctx.mode {
         CacheMode::Cq { books, .. } => {
-            let d = crate::quant::KvDims::of(k);
-            let per_side = ctx.geom.n_layers * ctx.geom.n_heads * ctx.geom.groups;
-            let mut kc = Vec::with_capacity(per_side);
-            let mut vc = Vec::with_capacity(per_side);
-            // Tokens [0, hit) are already attached from shared blocks —
-            // the whole point of the radix index is skipping this loop.
-            for t in adm.hit_tokens..p {
-                kc.clear();
-                vc.clear();
-                for l in 0..d.l {
-                    for h in 0..d.h {
-                        let off = d.vec_off(l, 0, h, t);
-                        kc.extend(books.encode_vec(l, KvKind::Key, h, &k.data[off..off + d.hd]));
-                        vc.extend(books.encode_vec(l, KvKind::Value, h, &v.data[off..off + d.hd]));
-                    }
-                }
-                adm.seq.append(&mut shard.pool, &kc, &vc)?;
-            }
+            // Tokens [0, hit) are already attached from shared blocks — the
+            // whole point of the radix index is skipping that span.  The
+            // rest runs the batched encode: per-layer work fans across
+            // scoped threads, each book's centroid table is walked once for
+            // the whole span, and the codes bulk-append as packed records.
+            let (kc, vc) = books.encode_span_parallel(k, v, adm.hit_tokens, p);
+            adm.seq
+                .append_span(&mut shard.pool, &kc, &vc, p - adm.hit_tokens)?;
         }
         CacheMode::Fp { .. } => {
             for _ in 0..p {
@@ -337,6 +327,9 @@ fn admit_request(
     // The decode loop always appends at least one token before `must_stop`
     // is consulted, so max_new = 0 would under-reserve by one block and the
     // unbacked append could fail mid-decode; serve at least one token.
+    // `ServePool::submit_async` already clamps before its pool-wide byte
+    // estimate — this repeat only covers callers driving a serve loop
+    // directly, so router estimate and shard reservation always agree.
     req.max_new = req.max_new.max(1);
     let prompt = prompt_ids(ctx, &req);
     let admitted = match &ctx.mode {
@@ -399,8 +392,20 @@ fn stage_admitted(ctx: &mut Ctx, shard: &PagedShard, slot: usize, batcher: &Batc
     }
 }
 
+/// Reusable per-token code buffers for the decode hot loop: staging
+/// write-back and paged-store append run allocation-free across steps.
+#[derive(Default)]
+struct CodeScratch {
+    kc: Vec<u32>,
+    vc: Vec<u32>,
+}
+
 /// One fused decode step over all lanes.  Returns per-slot logits rows.
-fn decode_step(ctx: &mut Ctx, batcher: &Batcher) -> Result<Vec<Vec<f32>>> {
+fn decode_step(
+    ctx: &mut Ctx,
+    batcher: &Batcher,
+    scratch: &mut CodeScratch,
+) -> Result<Vec<Vec<f32>>> {
     let b = ctx.batch;
     let mut tok = vec![0i32; b];
     let mut pos = vec![0i32; b];
@@ -449,7 +454,7 @@ fn decode_step(ctx: &mut Ctx, batcher: &Batcher) -> Result<Vec<Vec<f32>>> {
     };
 
     // Apply cache updates for occupied lanes.
-    apply_updates(ctx, batcher, &pos, updates)?;
+    apply_updates(ctx, batcher, &pos, updates, scratch)?;
 
     let v = ctx.vocab;
     Ok((0..b)
@@ -469,6 +474,7 @@ fn apply_updates(
     batcher: &Batcher,
     pos: &[i32],
     up: StepUpdate,
+    scratch: &mut CodeScratch,
 ) -> Result<()> {
     let b = ctx.batch;
     match (&mut ctx.mode, up) {
@@ -476,18 +482,18 @@ fn apply_updates(
             let (l_n, h_n, g_n) = (ctx.geom.n_layers, ctx.geom.n_heads, ctx.geom.groups);
             for i in batcher.occupied() {
                 let t = pos[i] as usize;
-                let mut kc = Vec::with_capacity(l_n * h_n * g_n);
-                let mut vc = Vec::with_capacity(l_n * h_n * g_n);
+                scratch.kc.clear();
+                scratch.vc.clear();
                 for l in 0..l_n {
                     for h in 0..h_n {
                         let off = ((l * b + i) * h_n + h) * g_n;
                         for g in 0..g_n {
-                            kc.push(kn.data[off + g] as u32);
-                            vc.push(vn.data[off + g] as u32);
+                            scratch.kc.push(kn.data[off + g] as u32);
+                            scratch.vc.push(vn.data[off + g] as u32);
                         }
                     }
                 }
-                stage.write_token(i, t, &kc, &vc);
+                stage.write_token(i, t, &scratch.kc, &scratch.vc);
                 stage.pos[i] = (t + 1) as i32;
             }
             Ok(())
@@ -564,6 +570,8 @@ pub fn serve_loop(
         .observe_max(ctx.prefills.last().unwrap().0 as u64);
     let mut rngs: Vec<Pcg64> = (0..ctx.batch).map(|i| Pcg64::seed(i as u64)).collect();
     let mut shutting_down = false;
+    // Decode-path code buffers, reused across every step and lane.
+    let mut scratch = CodeScratch::default();
 
     loop {
         // --- Router: drain inbound ------------------------------------
@@ -599,7 +607,7 @@ pub fn serve_loop(
         // --- Decode ------------------------------------------------------
         if batcher.active() > 0 {
             let t0 = Instant::now();
-            let logits = decode_step(&mut ctx, &batcher)?;
+            let logits = decode_step(&mut ctx, &batcher, &mut scratch)?;
             metrics.decode_step_latency.record(t0.elapsed());
 
             for i in batcher.occupied() {
@@ -611,8 +619,8 @@ pub fn serve_loop(
                             // Codes were staged; append to the paged store
                             // from the staging lane for durability.
                             let t = run.packed.len;
-                            let (kc, vc) = read_stage_token(&ctx, i, t);
-                            run.packed.append(&mut shard.pool, &kc, &vc)?;
+                            read_stage_token_into(&ctx, i, t, &mut scratch);
+                            run.packed.append(&mut shard.pool, &scratch.kc, &scratch.vc)?;
                         }
                         CacheMode::Fp { .. } => run.packed.append_unstored()?,
                     }
@@ -651,24 +659,26 @@ pub fn serve_loop(
     }
 }
 
-/// Read a token's codes back from the staging lane (CQ mode).
-fn read_stage_token(ctx: &Ctx, slot: usize, t: usize) -> (Vec<u32>, Vec<u32>) {
+/// Read a token's codes back from the staging lane (CQ mode) into the
+/// reusable decode scratch.
+fn read_stage_token_into(ctx: &Ctx, slot: usize, t: usize, scratch: &mut CodeScratch) {
     match &ctx.mode {
         CacheMode::Cq { stage, .. } => {
             let (l_n, h_n, g_n) = (ctx.geom.n_layers, ctx.geom.n_heads, ctx.geom.groups);
             let b = ctx.batch;
-            let mut kc = Vec::with_capacity(l_n * h_n * g_n);
-            let mut vc = Vec::with_capacity(l_n * h_n * g_n);
+            scratch.kc.clear();
+            scratch.vc.clear();
             for l in 0..l_n {
                 for h in 0..h_n {
                     let off = (((l * b + slot) * h_n + h) * ctx.geom.tmax + t) * g_n;
-                    for g in 0..g_n {
-                        kc.push(stage.k_codes.data[off + g] as u32);
-                        vc.push(stage.v_codes.data[off + g] as u32);
-                    }
+                    scratch
+                        .kc
+                        .extend(stage.k_codes.data[off..off + g_n].iter().map(|&c| c as u32));
+                    scratch
+                        .vc
+                        .extend(stage.v_codes.data[off..off + g_n].iter().map(|&c| c as u32));
                 }
             }
-            (kc, vc)
         }
         CacheMode::Fp { .. } => unreachable!("fp mode stores no codes"),
     }

@@ -20,6 +20,20 @@
 //! by active sequences + blocks cached by the radix index); the pool's
 //! allocator enforces the same cap as a hard ceiling.  The serve-throughput
 //! bench and the von-Neumann traffic model read this accounting.
+//!
+//! Batch-kernel dataflow (PR 3 — the hot path end to end):
+//!
+//! ```text
+//! prefill acts ──CqCodebooks::encode_span_parallel──▶ token-major codes
+//!   (per-layer threads, book-major centroid scan,     [span, L*H*G] × 2
+//!    ‖c‖² precomputed once per codebook)
+//!           ──PagedSeqCache::append_span──▶ packed records (word-level
+//!                                           pack_into, reused scratch)
+//!           ──BlockPool blocks──▶ durable store
+//! reload:   ──PagedSeqCache::read_span_into──▶ whole-block bulk unpack
+//!           ──BatchStage::load_sequence──▶ staging tensors via
+//!                                          precomputed (l,h) strides
+//! ```
 
 use anyhow::{bail, Result};
 
@@ -69,6 +83,9 @@ pub struct BatchStage {
     pub v_codes: TensorI,
     pub pos: Vec<i32>,
     pub occupied: Vec<bool>,
+    /// Reusable bulk-readout buffer: sequence reloads unpack into this, so
+    /// a warm stage admits without touching the allocator.
+    scratch: Vec<u32>,
 }
 
 impl BatchStage {
@@ -81,6 +98,7 @@ impl BatchStage {
             v_codes: TensorI::zeros(&shape),
             pos: vec![0; batch],
             occupied: vec![false; batch],
+            scratch: Vec::new(),
         }
     }
 
@@ -106,14 +124,41 @@ impl BatchStage {
     }
 
     /// Load a whole paged sequence into `slot` (prefill admission): shared
-    /// prefix blocks and private tail alike are read through the pool.
-    /// `pos` is left at the sequence length — the next write position the
-    /// decode step appends at.
+    /// prefix blocks and private tail alike are read through the pool, a
+    /// whole block of records per unpack call
+    /// ([`PagedSeqCache::read_span_into`]), then scattered into the staging
+    /// tensors with per-(layer, head) strides computed once — not re-derived
+    /// per (l, h, t) as the old per-token path did.  `pos` is left at the
+    /// sequence length — the next write position the decode step appends at.
     pub fn load_sequence(&mut self, slot: usize, seq: &PagedSeqCache, pool: &BlockPool) {
         assert!(seq.len <= self.geom.tmax);
-        for t in 0..seq.len {
-            let (k, v) = seq.token(pool, t);
-            self.write_token(slot, t, &k, &v);
+        let g = self.geom.groups;
+        let (l_n, h_n, tmax) = (self.geom.n_layers, self.geom.n_heads, self.geom.tmax);
+        let per_side = l_n * h_n * g;
+        let cpt = 2 * per_side;
+        let n = seq.len;
+        if n > 0 {
+            if self.scratch.len() < n * cpt {
+                self.scratch.resize(n * cpt, 0);
+            }
+            seq.read_span_into(pool, 0, n, &mut self.scratch[..n * cpt]);
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    // Stage offset of (l, slot, h, t=0, g=0); tokens advance
+                    // by `g`, record source by `cpt`.
+                    let base = (((l * self.batch + slot) * h_n + h) * tmax) * g;
+                    let src_lh = (l * h_n + h) * g;
+                    for t in 0..n {
+                        let rec = t * cpt + src_lh;
+                        let dst = base + t * g;
+                        for gi in 0..g {
+                            self.k_codes.data[dst + gi] = self.scratch[rec + gi] as i32;
+                            self.v_codes.data[dst + gi] =
+                                self.scratch[rec + per_side + gi] as i32;
+                        }
+                    }
+                }
+            }
         }
         self.pos[slot] = seq.len as i32;
         self.occupied[slot] = true;
@@ -246,6 +291,54 @@ mod tests {
         stage.release(1);
         assert_eq!(stage.free_slot(), Some(0));
         seq.release(&mut pool);
+    }
+
+    #[test]
+    fn prop_bulk_load_matches_per_token_staging() {
+        // load_sequence (bulk span readout + strided scatter) must leave the
+        // staging tensors exactly as the old per-token token()+write_token
+        // loop did, across random geometries and block sizes.
+        run_prop(15, 83, |rng| {
+            let g = CacheGeom {
+                n_layers: 1 + rng.below(3),
+                n_heads: 1 + rng.below(3),
+                groups: 1 + rng.below(6),
+                bits: 1 + rng.below(10) as u32,
+                tmax: 24,
+            };
+            let block_tokens = 1 + rng.below(5);
+            let mut pool =
+                BlockPool::new(BlockConfig::new(block_tokens, g.bytes_per_token()), None);
+            let per = g.n_layers * g.n_heads * g.groups;
+            let maxc = 1usize << g.bits;
+            let mut seq = PagedSeqCache::new(g);
+            let n_tok = 1 + rng.below(g.tmax);
+            for _ in 0..n_tok {
+                let k: Vec<u32> = (0..per).map(|_| rng.below(maxc) as u32).collect();
+                let v: Vec<u32> = (0..per).map(|_| rng.below(maxc) as u32).collect();
+                seq.append(&mut pool, &k, &v).map_err(|e| e.to_string())?;
+            }
+            let batch = 1 + rng.below(3);
+            let slot = rng.below(batch);
+            let mut bulk = BatchStage::new(g, batch);
+            bulk.load_sequence(slot, &seq, &pool);
+            let mut reference = BatchStage::new(g, batch);
+            for t in 0..seq.len {
+                let (k, v) = seq.token(&pool, t);
+                reference.write_token(slot, t, &k, &v);
+            }
+            if bulk.k_codes.data != reference.k_codes.data {
+                return Err("k staging diverged from per-token path".into());
+            }
+            if bulk.v_codes.data != reference.v_codes.data {
+                return Err("v staging diverged from per-token path".into());
+            }
+            if bulk.pos[slot] != seq.len as i32 || !bulk.occupied[slot] {
+                return Err("pos/occupied not set".into());
+            }
+            seq.release(&mut pool);
+            Ok(())
+        });
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod radix;
 use anyhow::{bail, Result};
 
 use crate::metrics::ServeMetrics;
-use crate::quant::pack::{pack_codes, unpack_codes};
+use crate::quant::pack::{pack_into, unpack_codes_ref, unpack_into};
 use crate::tensor::TensorF;
 
 use super::{CacheGeom, CacheManager};
@@ -55,6 +55,9 @@ pub struct PagedSeqCache {
     /// Blocks this sequence appends into; only the last may be partial.
     private: Vec<BlockId>,
     scratch: Vec<u32>,
+    /// Reusable packed-record buffer: appends pack into this instead of
+    /// allocating a fresh record per token.
+    rec_scratch: Vec<u8>,
     /// `false` for fp-cache sequences: length/block accounting only, the
     /// actual floats live in the serve loop's staging tensors.
     stored: bool,
@@ -72,6 +75,7 @@ impl PagedSeqCache {
             shared_tokens: 0,
             private: Vec::new(),
             scratch: Vec::new(),
+            rec_scratch: Vec::new(),
             stored: true,
             fp_seed: None,
         }
@@ -109,6 +113,8 @@ impl PagedSeqCache {
 
     /// Append one token's codes (`k`/`v` laid out `[L, H, G]`) into the
     /// private tail, allocating a fresh block when the tail is full.
+    /// Packing reuses the sequence's scratch buffers — steady-state appends
+    /// touch the allocator only when a new block is needed.
     pub fn append(&mut self, pool: &mut BlockPool, k_codes: &[u32], v_codes: &[u32]) -> Result<()> {
         let per_side = self.geom.n_layers * self.geom.n_heads * self.geom.groups;
         if k_codes.len() != per_side || v_codes.len() != per_side {
@@ -132,25 +138,120 @@ impl PagedSeqCache {
         self.scratch.clear();
         self.scratch.extend_from_slice(k_codes);
         self.scratch.extend_from_slice(v_codes);
-        let rec = pack_codes(&self.scratch, self.geom.bits);
-        pool.push_token(*self.private.last().unwrap(), &rec)?;
+        let bpt = self.geom.bytes_per_token();
+        if self.rec_scratch.len() != bpt {
+            self.rec_scratch.resize(bpt, 0);
+        }
+        // pack_into assigns every output byte, so the reused buffer needs no
+        // re-zeroing between tokens.
+        pack_into(&self.scratch, self.geom.bits, &mut self.rec_scratch);
+        pool.push_token(*self.private.last().unwrap(), &self.rec_scratch)?;
         self.len += 1;
         Ok(())
     }
 
-    /// Read one token's codes back as (k `[L,H,G]`, v `[L,H,G]`).
-    pub fn token(&self, pool: &BlockPool, t: usize) -> (Vec<u32>, Vec<u32>) {
-        assert!(self.stored, "unstored (fp) cache holds no codes");
-        assert!(t < self.len);
+    /// Bulk append: `n` tokens' codes, token-major `[n, per_side]` per side
+    /// (the layout `CqCodebooks::encode_span_parallel` produces).  Same
+    /// record format as [`Self::append`], one call per prefill span.
+    pub fn append_span(
+        &mut self,
+        pool: &mut BlockPool,
+        k_all: &[u32],
+        v_all: &[u32],
+        n: usize,
+    ) -> Result<()> {
+        let per_side = self.geom.n_layers * self.geom.n_heads * self.geom.groups;
+        if k_all.len() != n * per_side || v_all.len() != n * per_side {
+            bail!(
+                "append_span: want {n}x{per_side} codes per side, got {}/{}",
+                k_all.len(),
+                v_all.len()
+            );
+        }
+        for i in 0..n {
+            self.append(
+                pool,
+                &k_all[i * per_side..(i + 1) * per_side],
+                &v_all[i * per_side..(i + 1) * per_side],
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Block + record index holding logical token `t`.
+    #[inline]
+    fn locate(&self, pool: &BlockPool, t: usize) -> (BlockId, usize) {
         let bt = pool.cfg.block_tokens;
-        let (blk, rec) = if t < self.shared_tokens {
+        if t < self.shared_tokens {
             (self.shared[t / bt], t % bt)
         } else {
             let u = t - self.shared_tokens;
             (self.private[u / bt], u % bt)
-        };
+        }
+    }
+
+    /// Bulk readout: unpack tokens `[t0, t0+n)` into `out`, token-major
+    /// `[n, 2*per_side]` (k codes then v codes per token).  The block chain
+    /// is walked span-by-span: when records pack densely (codes-per-token ×
+    /// bits is byte-aligned with no padding) each block's resident records
+    /// decode with ONE word-level `unpack_into` call over
+    /// [`BlockPool::records_bytes`]; otherwise record-at-a-time — both into
+    /// caller-owned memory, so a warm reload allocates nothing.
+    pub fn read_span_into(&self, pool: &BlockPool, t0: usize, n: usize, out: &mut [u32]) {
+        assert!(self.stored, "unstored (fp) cache holds no codes");
+        assert!(t0 + n <= self.len, "span {t0}+{n} beyond {} tokens", self.len);
+        let cpt = 2 * self.geom.n_layers * self.geom.n_heads * self.geom.groups;
+        assert_eq!(out.len(), n * cpt);
+        let bt = pool.cfg.block_tokens;
+        let bpt = pool.cfg.bytes_per_token;
+        let bits = self.geom.bits;
+        let dense = (cpt * bits as usize) % 8 == 0;
+        let mut done = 0usize;
+        while done < n {
+            let t = t0 + done;
+            let (blk, rec) = self.locate(pool, t);
+            // Contiguous records available in this block, clipped to the
+            // shared/private boundary (shared spans are block-aligned by
+            // construction; the clip keeps this correct regardless).
+            let mut here = (bt - rec).min(n - done);
+            if t < self.shared_tokens {
+                here = here.min(self.shared_tokens - t);
+            }
+            let bytes = pool.records_bytes(blk);
+            let span_out = &mut out[done * cpt..(done + here) * cpt];
+            if dense {
+                unpack_into(&bytes[rec * bpt..(rec + here) * bpt], bits, span_out);
+            } else {
+                for r in 0..here {
+                    unpack_into(
+                        &bytes[(rec + r) * bpt..(rec + r + 1) * bpt],
+                        bits,
+                        &mut span_out[r * cpt..(r + 1) * cpt],
+                    );
+                }
+            }
+            done += here;
+        }
+    }
+
+    /// Read one token's codes back as (k `[L,H,G]`, v `[L,H,G]`).
+    pub fn token(&self, pool: &BlockPool, t: usize) -> (Vec<u32>, Vec<u32>) {
         let per_side = self.geom.n_layers * self.geom.n_heads * self.geom.groups;
-        let all = unpack_codes(pool.token_bytes(blk, rec), self.geom.bits, 2 * per_side);
+        let mut all = vec![0u32; 2 * per_side];
+        self.read_span_into(pool, t, 1, &mut all);
+        let v = all.split_off(per_side);
+        (all, v)
+    }
+
+    /// The pre-PR readout path: per-record slice + bit-at-a-time unpack +
+    /// fresh allocations.  Not on any hot path — kept as the equivalence
+    /// oracle for property tests and the `quant_hot_path` bench baseline.
+    pub fn token_reference(&self, pool: &BlockPool, t: usize) -> (Vec<u32>, Vec<u32>) {
+        assert!(self.stored, "unstored (fp) cache holds no codes");
+        assert!(t < self.len);
+        let (blk, rec) = self.locate(pool, t);
+        let per_side = self.geom.n_layers * self.geom.n_heads * self.geom.groups;
+        let all = unpack_codes_ref(pool.token_bytes(blk, rec), self.geom.bits, 2 * per_side);
         (all[..per_side].to_vec(), all[per_side..].to_vec())
     }
 
@@ -443,6 +544,115 @@ mod tests {
         assert_eq!(seq.block_bytes_held(&sh.pool), 3 * sh.block_bytes());
         seq.release(&mut sh.pool);
         assert_eq!(sh.pool.live_blocks(), 0, "release frees everything");
+    }
+
+    #[test]
+    fn prop_bulk_span_readout_matches_per_token_reads() {
+        // read_span_into (block-bulk unpack) must agree with token() for
+        // every sub-span, across block boundaries, for dense (byte-aligned
+        // record) and ragged (padded record) geometries alike.
+        use crate::util::proptest::run_prop;
+        run_prop(25, 61, |rng| {
+            let geom = CacheGeom {
+                n_layers: 1 + rng.below(2),
+                n_heads: 1 + rng.below(2),
+                groups: 1 + rng.below(5),
+                bits: 1 + rng.below(10) as u32,
+                tmax: 64,
+            };
+            let bt = 1 + rng.below(6);
+            let mut pool = BlockPool::new(BlockConfig::new(bt, geom.bytes_per_token()), None);
+            let per_side = geom.n_layers * geom.n_heads * geom.groups;
+            let maxc = 1usize << geom.bits;
+            let mut seq = PagedSeqCache::new(geom);
+            let n_tok = 2 + rng.below(20);
+            let mut expect: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+            for _ in 0..n_tok {
+                let k: Vec<u32> = (0..per_side).map(|_| rng.below(maxc) as u32).collect();
+                let v: Vec<u32> = (0..per_side).map(|_| rng.below(maxc) as u32).collect();
+                seq.append(&mut pool, &k, &v).map_err(|e| e.to_string())?;
+                expect.push((k, v));
+            }
+            let cpt = 2 * per_side;
+            for _ in 0..6 {
+                let t0 = rng.below(n_tok);
+                let n = 1 + rng.below(n_tok - t0);
+                let mut out = vec![0u32; n * cpt];
+                seq.read_span_into(&pool, t0, n, &mut out);
+                for i in 0..n {
+                    let (k, v) = seq.token(&pool, t0 + i);
+                    let rec = &out[i * cpt..(i + 1) * cpt];
+                    if rec[..per_side] != k[..] || rec[per_side..] != v[..] {
+                        return Err(format!(
+                            "span ({t0},{n}) token {i} mismatch (bits={}, bt={bt})",
+                            geom.bits
+                        ));
+                    }
+                    if (k, v) != expect[t0 + i] {
+                        return Err(format!("token({}) drifted from appended", t0 + i));
+                    }
+                    // And the pre-PR bit-loop path agrees with both.
+                    if seq.token_reference(&pool, t0 + i) != expect[t0 + i] {
+                        return Err(format!("token_reference({}) diverged", t0 + i));
+                    }
+                }
+            }
+            seq.release(&mut pool);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bulk_readout_spans_shared_and_private_blocks() {
+        // A radix-hit sequence reads its shared prefix and private tail
+        // through the same bulk call.
+        let mut sh = shard(None);
+        let m = ServeMetrics::default();
+        let prompt: Vec<i32> = (0..8).collect(); // 2 full blocks
+        run_client(&mut sh, &prompt, &[50, 51], &m);
+        let adm = sh.admit_stored(&prompt, 4, &m).expect("admit");
+        assert_eq!(adm.hit_tokens, 8);
+        let mut seq = adm.seq;
+        for id in [90i32, 91, 92] {
+            let (k, v) = codes(id);
+            seq.append(&mut sh.pool, &k, &v).unwrap();
+        }
+        let per_side = 2;
+        let cpt = 2 * per_side;
+        let mut out = vec![0u32; 11 * cpt];
+        seq.read_span_into(&sh.pool, 0, 11, &mut out);
+        for (t, want_id) in (0..8).map(|t| (t, t as i32)).chain([(8, 90), (9, 91), (10, 92)]) {
+            let (k, v) = codes(want_id);
+            let rec = &out[t * cpt..(t + 1) * cpt];
+            assert_eq!(&rec[..per_side], &k[..], "token {t}");
+            assert_eq!(&rec[per_side..], &v[..], "token {t}");
+        }
+        sh.abort(&mut seq, adm.reserved_blocks, &m);
+    }
+
+    #[test]
+    fn append_span_matches_token_by_token_append() {
+        let mut sh = shard(None);
+        let per_side = 2;
+        let n = 9usize;
+        let mut k_all = Vec::new();
+        let mut v_all = Vec::new();
+        for id in 0..n as i32 {
+            let (k, v) = codes(id);
+            k_all.extend(k);
+            v_all.extend(v);
+        }
+        let mut seq = PagedSeqCache::new(geom());
+        seq.append_span(&mut sh.pool, &k_all, &v_all, n).unwrap();
+        assert_eq!(seq.len, n);
+        for t in 0..n {
+            assert_eq!(seq.token(&sh.pool, t), codes(t as i32), "token {t}");
+        }
+        // Length mismatches are rejected before any mutation.
+        assert!(seq
+            .append_span(&mut sh.pool, &k_all[..per_side], &v_all, 1)
+            .is_err());
+        seq.release(&mut sh.pool);
     }
 
     #[test]

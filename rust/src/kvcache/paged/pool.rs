@@ -144,6 +144,15 @@ impl BlockPool {
         let bpt = self.cfg.bytes_per_token;
         &b.data[i * bpt..(i + 1) * bpt]
     }
+
+    /// All written token records of block `id` as one contiguous span
+    /// (`len(id) * bytes_per_token` bytes) — the bulk-readout input: a whole
+    /// block's records unpack with one kernel call instead of `len` slices.
+    pub fn records_bytes(&self, id: BlockId) -> &[u8] {
+        let b = &self.blocks[id];
+        assert!(b.refs > 0, "read of free block {id}");
+        &b.data[..b.len * self.cfg.bytes_per_token]
+    }
 }
 
 #[cfg(test)]

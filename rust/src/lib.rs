@@ -18,6 +18,10 @@
 //! * [`quant`]       — the paper's contribution + baselines: CQ codec,
 //!                     k-means(++/weighted), INT/NF/KVQuant codecs,
 //!                     bit-packing, entropy & correlation estimators.
+//!                     Hot paths are batched: book-major dot-product-
+//!                     expansion centroid assignment (`‖c‖²` precomputed per
+//!                     codebook, per-layer threads in prefill) and
+//!                     word-level pack/unpack into caller-owned scratch.
 //! * [`data`]        — synthetic corpora, byte tokenizer, batch assembly.
 //! * [`train`]       — Rust-driven AOT training loop + checkpoints.
 //! * [`calib`]       — Fisher calibration (activations + gradients).
@@ -25,6 +29,10 @@
 //! * [`kvcache`]     — paged quantized cache: slab block pool + radix-tree
 //!                     prefix sharing with LRU eviction (`kvcache::paged`),
 //!                     staging buffers, per-shard block-budget accounting.
+//!                     Encode span → pack records → block store → bulk
+//!                     whole-block unpack → batch stage, all through reused
+//!                     scratch (see the `kvcache` module doc for the full
+//!                     batch-kernel dataflow).
 //! * [`coordinator`] — sharded serve pool: least-loaded router with
 //!                     pool-wide admission control over N engine workers,
 //!                     continuous batcher, decode scheduler.

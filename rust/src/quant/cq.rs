@@ -15,6 +15,7 @@ use super::kmeans::{kmeans, KMeans, KMeansCfg};
 use super::{Codec, KvDims, KvKind};
 use crate::tensor::TensorF;
 use crate::util::json::Json;
+use crate::util::rng::Pcg64;
 
 /// A CQ-<c>c<b>b configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -137,6 +138,137 @@ impl CqCodebooks {
         (0..self.spec.n_groups(self.head_dim))
             .map(|g| self.book(l, kind, h, g).assign(&x[g * c..(g + 1) * c]) as u32)
             .collect()
+    }
+
+    /// Batch-encode tokens `t0..t1` of batch row `b` for ONE layer into
+    /// `out`, laid out `[t1-t0, n_heads, groups]`.
+    ///
+    /// This is the loop inversion the prefill hot path rides: books are the
+    /// OUTER loops and tokens the inner one, so each centroid table (plus
+    /// its `‖c‖²` norms, computed once here) stays cache-resident across the
+    /// whole span instead of being re-walked per token, and assignment runs
+    /// the dot-product expansion kernel.  Produces exactly the codes
+    /// [`Self::encode_vec`] would, token by token.
+    pub fn encode_layer_span_into(
+        &self,
+        l: usize,
+        kind: KvKind,
+        acts: &TensorF,
+        b: usize,
+        t0: usize,
+        t1: usize,
+        out: &mut [u32],
+    ) {
+        let d = KvDims::of(acts);
+        assert_eq!(d.hd, self.head_dim);
+        let c = self.spec.channels;
+        let groups = self.spec.n_groups(self.head_dim);
+        let span = t1 - t0;
+        assert_eq!(out.len(), span * d.h * groups);
+        let mut cnorms = Vec::with_capacity(self.spec.n_centroids());
+        for h in 0..d.h {
+            for g in 0..groups {
+                let book = self.book(l, kind, h, g);
+                book.centroid_sq_norms_into(&mut cnorms);
+                for t in 0..span {
+                    let off = d.vec_off(l, b, h, t0 + t) + g * c;
+                    out[(t * d.h + h) * groups + g] =
+                        book.assign_with_norms(&acts.data[off..off + c], &cnorms) as u32;
+                }
+            }
+        }
+    }
+
+    /// Batched prefill encode: K and V codes for tokens `t0..t1` of batch
+    /// row 0, with per-layer work fanned across `std::thread::scope`
+    /// threads.  Returns token-major per-side buffers (`[t1-t0, L*H*G]`
+    /// each, layout `[t][l][h][g]`) — the record shape
+    /// `PagedSeqCache::append_span` consumes.
+    pub fn encode_span_parallel(
+        &self,
+        k: &TensorF,
+        v: &TensorF,
+        t0: usize,
+        t1: usize,
+    ) -> (Vec<u32>, Vec<u32>) {
+        let d = KvDims::of(k);
+        assert_eq!(k.shape, v.shape);
+        let groups = self.spec.n_groups(self.head_dim);
+        let hg = d.h * groups;
+        let per_side = d.l * hg;
+        let span = t1 - t0;
+        if span == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        // Thread spawn costs tens of µs; a mostly-radix-hit prompt encodes
+        // only a few private tokens, where the batched kernel alone already
+        // wins — run those (and single-layer models) inline.
+        const PARALLEL_MIN_SPAN: usize = 4;
+        let mut layer_codes: Vec<(Vec<u32>, Vec<u32>)> = Vec::with_capacity(d.l);
+        if d.l == 1 || span < PARALLEL_MIN_SPAN {
+            for l in 0..d.l {
+                let mut kc = vec![0u32; span * hg];
+                let mut vc = vec![0u32; span * hg];
+                self.encode_layer_span_into(l, KvKind::Key, k, 0, t0, t1, &mut kc);
+                self.encode_layer_span_into(l, KvKind::Value, v, 0, t0, t1, &mut vc);
+                layer_codes.push((kc, vc));
+            }
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..d.l)
+                    .map(|l| {
+                        s.spawn(move || {
+                            let mut kc = vec![0u32; span * hg];
+                            let mut vc = vec![0u32; span * hg];
+                            self.encode_layer_span_into(l, KvKind::Key, k, 0, t0, t1, &mut kc);
+                            self.encode_layer_span_into(l, KvKind::Value, v, 0, t0, t1, &mut vc);
+                            (kc, vc)
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    layer_codes.push(h.join().expect("encode worker panicked"));
+                }
+            });
+        }
+        // Interleave per-layer [t][h][g] buffers into token-major records.
+        let mut k_all = vec![0u32; span * per_side];
+        let mut v_all = vec![0u32; span * per_side];
+        for (l, (kc, vc)) in layer_codes.iter().enumerate() {
+            for t in 0..span {
+                let src = t * hg;
+                let dst = t * per_side + l * hg;
+                k_all[dst..dst + hg].copy_from_slice(&kc[src..src + hg]);
+                v_all[dst..dst + hg].copy_from_slice(&vc[src..src + hg]);
+            }
+        }
+        (k_all, v_all)
+    }
+
+    /// Random unit-normal codebooks — no calibration pass needed.  Used by
+    /// the `quant_hot_path` bench and kernel-equivalence tests, where only
+    /// the geometry (not the learned quality) matters.
+    pub fn synthetic(
+        spec: CqSpec,
+        n_layers: usize,
+        n_heads: usize,
+        head_dim: usize,
+        seed: u64,
+    ) -> CqCodebooks {
+        let groups = spec.n_groups(head_dim);
+        let mut rng = Pcg64::seed(seed);
+        let books = (0..n_layers * 2 * n_heads * groups)
+            .map(|_| KMeans {
+                k: spec.n_centroids(),
+                dim: spec.channels,
+                centroids: (0..spec.n_centroids() * spec.channels)
+                    .map(|_| rng.normal() as f32)
+                    .collect(),
+                inertia: 0.0,
+                iters_run: 0,
+            })
+            .collect();
+        CqCodebooks { spec, n_layers, n_heads, head_dim, books, learn_secs: 0.0 }
     }
 
     /// Decode per-group codes back into a head vector.
@@ -322,14 +454,20 @@ impl Codec for CqCodec {
         assert_eq!(d.hd, self.books.head_dim);
         let c = self.books.spec.channels;
         let groups = self.books.spec.n_groups(d.hd);
+        // Same batch kernel as the serve path: book-major loops with `‖c‖²`
+        // precomputed once per codebook, tokens streamed innermost.
+        let mut cnorms = Vec::with_capacity(self.books.spec.n_centroids());
         for l in 0..d.l {
             for h in 0..d.h {
                 for g in 0..groups {
                     let book = self.books.book(l, kind, h, g);
+                    book.centroid_sq_norms_into(&mut cnorms);
                     for b in 0..d.b {
                         for t in 0..d.t {
                             let off = d.vec_off(l, b, h, t) + g * c;
-                            book.quantize_vec(&mut a.data[off..off + c]);
+                            let x = &mut a.data[off..off + c];
+                            let j = book.assign_with_norms(&*x, &cnorms);
+                            x.copy_from_slice(book.centroid(j));
                         }
                     }
                 }
@@ -455,6 +593,87 @@ mod tests {
             assert_eq!(spec.tag(), tag);
             assert_eq!(spec.n_centroids(), k, "{tag}");
             assert_eq!(spec.n_groups(64), g, "{tag}");
+        }
+    }
+
+    #[test]
+    fn batch_span_encode_matches_per_token_encode_vec() {
+        // The prefill batch kernel (book-major, threaded across layers) must
+        // produce exactly the codes the scalar per-token path yields —
+        // synthetic random codebooks over random activations.
+        let spec = CqSpec::new(2, 4);
+        let (l_n, h_n, hd, t_n) = (3usize, 2usize, 8usize, 17usize);
+        let books = CqCodebooks::synthetic(spec, l_n, h_n, hd, 7);
+        let mut rng = Pcg64::seed(8);
+        let mk = |rng: &mut Pcg64| {
+            let mut t = TensorF::zeros(&[l_n, 1, h_n, t_n, hd]);
+            for x in t.data.iter_mut() {
+                *x = rng.normal() as f32;
+            }
+            t
+        };
+        let k = mk(&mut rng);
+        let v = mk(&mut rng);
+        let groups = spec.n_groups(hd);
+        let per_side = l_n * h_n * groups;
+        // Spans cover the threaded path (>= PARALLEL_MIN_SPAN), the inline
+        // small-span path, and the empty span.
+        for (t0, t1) in [(0usize, t_n), (3, 11), (9, 11), (5, 5)] {
+            let (k_all, v_all) = books.encode_span_parallel(&k, &v, t0, t1);
+            assert_eq!(k_all.len(), (t1 - t0) * per_side);
+            let d = KvDims::of(&k);
+            for (i, t) in (t0..t1).enumerate() {
+                let mut want_k = Vec::new();
+                let mut want_v = Vec::new();
+                for l in 0..l_n {
+                    for h in 0..h_n {
+                        let off = d.vec_off(l, 0, h, t);
+                        want_k.extend(books.encode_vec(l, KvKind::Key, h, &k.data[off..off + hd]));
+                        want_v.extend(books.encode_vec(
+                            l,
+                            KvKind::Value,
+                            h,
+                            &v.data[off..off + hd],
+                        ));
+                    }
+                }
+                assert_eq!(
+                    &k_all[i * per_side..(i + 1) * per_side],
+                    &want_k[..],
+                    "k token {t} (span {t0}..{t1})"
+                );
+                assert_eq!(
+                    &v_all[i * per_side..(i + 1) * per_side],
+                    &want_v[..],
+                    "v token {t} (span {t0}..{t1})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn layer_span_kernel_matches_encode_vec_per_layer() {
+        let spec = CqSpec::new(4, 3);
+        let books = CqCodebooks::synthetic(spec, 2, 3, 8, 21);
+        let mut rng = Pcg64::seed(22);
+        let mut acts = TensorF::zeros(&[2, 1, 3, 9, 8]);
+        for x in acts.data.iter_mut() {
+            *x = rng.normal() as f32;
+        }
+        let d = KvDims::of(&acts);
+        let groups = spec.n_groups(8);
+        let mut out = vec![0u32; 4 * d.h * groups];
+        books.encode_layer_span_into(1, KvKind::Value, &acts, 0, 2, 6, &mut out);
+        for (i, t) in (2..6).enumerate() {
+            for h in 0..d.h {
+                let off = d.vec_off(1, 0, h, t);
+                let want = books.encode_vec(1, KvKind::Value, h, &acts.data[off..off + 8]);
+                assert_eq!(
+                    &out[(i * d.h + h) * groups..(i * d.h + h + 1) * groups],
+                    &want[..],
+                    "t={t} h={h}"
+                );
+            }
         }
     }
 

@@ -3,11 +3,55 @@
 //! the optimizer behind both uniform (paper Eq. 5) and Fisher-guided (Eq. 6)
 //! centroid learning.
 //!
-//! Distances use the MXU-friendly expansion `||x-c||² = ||x||² - 2x·c +
-//! ||c||²` with the `||x||²` term dropped for argmin; the inner loop is a
-//! plain dot product the compiler auto-vectorizes.
+//! Assignment uses the MXU-friendly expansion `||x-c||² = ||x||² - 2x·c +
+//! ||c||²` with the `||x||²` term dropped for argmin: [`KMeans::assign`]
+//! derives `||c||²` inline, the batched hot path
+//! ([`KMeans::assign_batch_into`] / [`KMeans::assign_with_norms`])
+//! precomputes it once per codebook via [`KMeans::centroid_sq_norms_into`]
+//! and then runs one plain dot product per (point, centroid) that the
+//! compiler auto-vectorizes.  Both paths execute identical float operation
+//! sequences, so batch and scalar assignments agree bit-for-bit (ties
+//! resolve to the lowest centroid index in either).  The pre-expansion
+//! brute-force scan survives as [`KMeans::assign_reference`] for property
+//! tests and the `quant_hot_path` bench baseline.
 
 use crate::util::rng::Pcg64;
+
+/// Argmin over `‖c_j‖² - 2·x·c_j` for one point against a centroid table.
+/// Shared by the scalar and batched entry points so both produce identical
+/// results (same accumulation order, same strict-`<` tie rule).
+#[inline]
+fn nearest_by_expansion(centroids: &[f32], cnorms: &[f32], dim: usize, x: &[f32]) -> usize {
+    debug_assert_eq!(x.len(), dim);
+    let mut best = 0usize;
+    let mut best_s = f32::INFINITY;
+    for (j, &cn) in cnorms.iter().enumerate() {
+        let c = &centroids[j * dim..(j + 1) * dim];
+        let mut dot = 0.0f32;
+        for i in 0..dim {
+            dot += x[i] * c[i];
+        }
+        let s = cn - 2.0 * dot;
+        if s < best_s {
+            best_s = s;
+            best = j;
+        }
+    }
+    best
+}
+
+/// `‖c_j‖²` for every centroid row of `centroids`, reusing `out`.
+#[inline]
+fn sq_norms_into(centroids: &[f32], dim: usize, out: &mut Vec<f32>) {
+    out.clear();
+    for c in centroids.chunks_exact(dim) {
+        let mut s = 0.0f32;
+        for i in 0..dim {
+            s += c[i] * c[i];
+        }
+        out.push(s);
+    }
+}
 
 /// Learned centroid table: `k` centroids of dimension `dim`, row-major.
 #[derive(Clone, Debug)]
@@ -27,8 +71,61 @@ impl KMeans {
         &self.centroids[j * self.dim..(j + 1) * self.dim]
     }
 
-    /// Index of the nearest centroid to `x` (L2).
+    /// Index of the nearest centroid to `x` (L2), via the dot-product
+    /// expansion with `‖c‖²` derived inline.  One-off calls only — hot loops
+    /// precompute the norms once ([`Self::centroid_sq_norms_into`]) and use
+    /// [`Self::assign_with_norms`] / [`Self::assign_batch_into`], which
+    /// return bit-identical results.
     pub fn assign(&self, x: &[f32]) -> usize {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut best = 0usize;
+        let mut best_s = f32::INFINITY;
+        for j in 0..self.k {
+            let c = self.centroid(j);
+            let mut dot = 0.0f32;
+            let mut cn = 0.0f32;
+            for i in 0..self.dim {
+                dot += x[i] * c[i];
+                cn += c[i] * c[i];
+            }
+            let s = cn - 2.0 * dot;
+            if s < best_s {
+                best_s = s;
+                best = j;
+            }
+        }
+        best
+    }
+
+    /// Fill `out` with `‖c_j‖²` for every centroid — the per-codebook
+    /// precompute the batched assignment kernels consume.
+    pub fn centroid_sq_norms_into(&self, out: &mut Vec<f32>) {
+        sq_norms_into(&self.centroids, self.dim, out);
+    }
+
+    /// Nearest centroid to `x` with caller-precomputed squared norms.
+    #[inline]
+    pub fn assign_with_norms(&self, x: &[f32], cnorms: &[f32]) -> usize {
+        debug_assert_eq!(cnorms.len(), self.k);
+        nearest_by_expansion(&self.centroids, cnorms, self.dim, x)
+    }
+
+    /// Batched assignment: `points` is row-major `[n, dim]`, one code per
+    /// point written to `out` (`out.len() == n`).  The centroid table is
+    /// streamed once per point with `‖c‖²` amortized across the whole batch
+    /// — this is the prefill-encode hot path.
+    pub fn assign_batch_into(&self, points: &[f32], cnorms: &[f32], out: &mut [u32]) {
+        assert_eq!(points.len(), out.len() * self.dim);
+        debug_assert_eq!(cnorms.len(), self.k);
+        for (x, o) in points.chunks_exact(self.dim).zip(out.iter_mut()) {
+            *o = nearest_by_expansion(&self.centroids, cnorms, self.dim, x) as u32;
+        }
+    }
+
+    /// Pre-expansion reference: brute-force `(x-c)²` scan.  Kept (not used
+    /// on any hot path) as the equivalence oracle for property tests and the
+    /// scalar baseline the `quant_hot_path` bench measures against.
+    pub fn assign_reference(&self, x: &[f32]) -> usize {
         debug_assert_eq!(x.len(), self.dim);
         let mut best = 0usize;
         let mut best_d = f32::INFINITY;
@@ -111,14 +208,16 @@ pub fn kmeans(points: &[f32], n: usize, dim: usize, weights: Option<&[f32]>, cfg
 
     // --- Lloyd iterations ------------------------------------------------
     let mut assign = vec![0usize; n];
+    let mut cnorms = Vec::with_capacity(k);
     let mut iters_run = 0;
     for _ in 0..cfg.max_iters {
         iters_run += 1;
-        // Assignment step.
+        // Assignment step: batched expansion kernel, norms amortized over
+        // the whole point set (no per-iteration centroid clone).
         let mut changed = false;
-        let km_view = KMeans { k, dim, centroids: centroids.clone(), inertia: 0.0, iters_run: 0 };
+        sq_norms_into(&centroids, dim, &mut cnorms);
         for i in 0..n {
-            let a = km_view.assign(pt(i));
+            let a = nearest_by_expansion(&centroids, &cnorms, dim, pt(i));
             if a != assign[i] {
                 assign[i] = a;
                 changed = true;
@@ -333,6 +432,93 @@ mod tests {
         // still be visible in the centroids.
         let c = kmeans(&pts, 150, 2, Some(&w), KMeansCfg { seed: 22, ..cfg });
         assert_ne!(a.centroids, c.centroids, "different seed => different init");
+    }
+
+    #[test]
+    fn prop_batch_assignment_matches_scalar_assign() {
+        // The batched kernel (precomputed ‖c‖², assign_batch_into) must agree
+        // bit-for-bit with the scalar `assign` on random codebooks — same
+        // expansion, same accumulation order, same tie rule.
+        run_prop(30, 41, |rng| {
+            let dim = 1 + rng.below(8);
+            let k = 1 + rng.below(32);
+            let n = 1 + rng.below(120);
+            let km = KMeans {
+                k,
+                dim,
+                centroids: (0..k * dim).map(|_| rng.normal() as f32).collect(),
+                inertia: 0.0,
+                iters_run: 0,
+            };
+            let pts: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+            let mut cnorms = Vec::new();
+            km.centroid_sq_norms_into(&mut cnorms);
+            let mut batch = vec![0u32; n];
+            km.assign_batch_into(&pts, &cnorms, &mut batch);
+            for i in 0..n {
+                let x = &pts[i * dim..(i + 1) * dim];
+                let scalar = km.assign(x);
+                let with_norms = km.assign_with_norms(x, &cnorms);
+                if batch[i] as usize != scalar || with_norms != scalar {
+                    return Err(format!(
+                        "point {i}: batch={} with_norms={with_norms} scalar={scalar}",
+                        batch[i]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ties_resolve_to_lowest_index_in_every_kernel() {
+        // Duplicate + mirrored centroids with small-integer coordinates:
+        // distances are exact in f32, so all four paths see true ties and
+        // must pick the earliest centroid.
+        let km = KMeans {
+            k: 4,
+            dim: 2,
+            // c0 == c2 (exact duplicate); c1 and c3 equidistant from origin.
+            centroids: vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0, -1.0],
+            inertia: 0.0,
+            iters_run: 0,
+        };
+        let mut cnorms = Vec::new();
+        km.centroid_sq_norms_into(&mut cnorms);
+        // Origin ties all four centroids at distance 1.
+        let origin = [0.0f32, 0.0];
+        assert_eq!(km.assign(&origin), 0);
+        assert_eq!(km.assign_with_norms(&origin, &cnorms), 0);
+        assert_eq!(km.assign_reference(&origin), 0);
+        // A point nearest the duplicated centroid must report the first copy.
+        let near_dup = [2.0f32, 0.0];
+        assert_eq!(km.assign(&near_dup), 0);
+        assert_eq!(km.assign_reference(&near_dup), 0);
+        let mut batch = vec![9u32; 2];
+        let pts = [0.0f32, 0.0, 2.0, 0.0];
+        km.assign_batch_into(&pts, &cnorms, &mut batch);
+        assert_eq!(batch, vec![0, 0]);
+    }
+
+    #[test]
+    fn expansion_matches_reference_on_exact_grids() {
+        // Small-integer coordinates: both the naive (x-c)² scan and the
+        // expansion compute exact f32 arithmetic, so argmins must coincide
+        // everywhere (including tie points, via the shared lowest-index rule).
+        let mut rng = Pcg64::seed(99);
+        let dim = 3;
+        let k = 9;
+        let km = KMeans {
+            k,
+            dim,
+            centroids: (0..k * dim).map(|_| (rng.below(7) as f32) - 3.0).collect(),
+            inertia: 0.0,
+            iters_run: 0,
+        };
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..dim).map(|_| (rng.below(9) as f32) - 4.0).collect();
+            assert_eq!(km.assign(&x), km.assign_reference(&x), "x={x:?}");
+        }
     }
 
     #[test]

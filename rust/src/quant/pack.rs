@@ -4,9 +4,146 @@
 //! within a little-endian bit stream), which is what makes the paper's
 //! "1 bit per channel" footprint real on the Rust side: a CQ-8c8b cache of
 //! `T` tokens × `G` groups occupies exactly `ceil(T*G*8 / 8)` bytes.
+//!
+//! Two kernel tiers share one wire format:
+//!
+//! * [`pack_into`] / [`unpack_into`] — the hot path: a `u64` accumulator
+//!   moves whole words through the stream (one shift+mask per code, one
+//!   store per byte) and bits ∈ {8, 16, 32} degrade to straight byte copies.
+//!   Both write caller-owned buffers, so the paged cache's per-token
+//!   append/readout allocates nothing in steady state.
+//! * [`pack_codes_ref`] / [`unpack_codes_ref`] — the original bit-at-a-time
+//!   loops, kept as the equivalence oracle for property tests and as the
+//!   pre-PR baseline the `quant_hot_path` bench measures against.
+//!
+//! [`pack_codes`] / [`unpack_codes`] are allocating wrappers over the fast
+//! kernels for callers that want owned buffers.
 
 /// Pack `codes` (each `< 2^bits`) into an LSB-first bit stream.
 pub fn pack_codes(codes: &[u32], bits: u32) -> Vec<u8> {
+    let mut out = vec![0u8; packed_len(codes.len(), bits)];
+    pack_into(codes, bits, &mut out);
+    out
+}
+
+/// Unpack `n` codes of `bits` width from an LSB-first bit stream.
+pub fn unpack_codes(bytes: &[u8], bits: u32, n: usize) -> Vec<u32> {
+    let mut out = vec![0u32; n];
+    unpack_into(bytes, bits, &mut out);
+    out
+}
+
+/// Bytes needed to store `n` codes of `bits` width.
+pub fn packed_len(n: usize, bits: u32) -> usize {
+    (n * bits as usize).div_ceil(8)
+}
+
+/// Word-level pack: write the LSB-first stream of `codes` into `out`
+/// (`out.len() == packed_len(codes.len(), bits)`).  Every output byte is
+/// assigned (no read-modify-write), so `out` need not be zeroed.  Byte-
+/// aligned widths (8/16/32) take straight little-endian copy fast paths.
+pub fn pack_into(codes: &[u32], bits: u32, out: &mut [u8]) {
+    assert!((1..=32).contains(&bits));
+    assert_eq!(out.len(), packed_len(codes.len(), bits), "output size mismatch");
+    match bits {
+        8 => {
+            for (o, &c) in out.iter_mut().zip(codes) {
+                debug_assert!(c < 1 << 8, "code {c} exceeds 8 bits");
+                *o = c as u8;
+            }
+        }
+        16 => {
+            for (o, &c) in out.chunks_exact_mut(2).zip(codes) {
+                debug_assert!(c < 1 << 16, "code {c} exceeds 16 bits");
+                o.copy_from_slice(&(c as u16).to_le_bytes());
+            }
+        }
+        32 => {
+            for (o, &c) in out.chunks_exact_mut(4).zip(codes) {
+                o.copy_from_slice(&c.to_le_bytes());
+            }
+        }
+        _ => {
+            // Accumulate codes into a u64 window, flushing whole bytes:
+            // fill stays < 8 after flushing, so fill + bits <= 7 + 31 < 64.
+            // Masking keeps an out-of-range code from corrupting its
+            // neighbors (the bit-loop reference truncated the same way).
+            let mask: u64 = (1u64 << bits) - 1;
+            let mut acc: u64 = 0;
+            let mut fill: u32 = 0;
+            let mut o = 0usize;
+            for &c in codes {
+                debug_assert!(c < (1u32 << bits), "code {c} exceeds {bits} bits");
+                acc |= (c as u64 & mask) << fill;
+                fill += bits;
+                while fill >= 8 {
+                    out[o] = acc as u8;
+                    o += 1;
+                    acc >>= 8;
+                    fill -= 8;
+                }
+            }
+            if fill > 0 {
+                out[o] = acc as u8;
+                o += 1;
+            }
+            debug_assert_eq!(o, out.len());
+        }
+    }
+}
+
+/// Word-level unpack: read `out.len()` codes of `bits` width from the
+/// LSB-first stream in `bytes` into the caller's buffer.  Mirror of
+/// [`pack_into`], with the same byte-aligned fast paths.
+pub fn unpack_into(bytes: &[u8], bits: u32, out: &mut [u32]) {
+    assert!((1..=32).contains(&bits));
+    assert!(
+        bytes.len() >= packed_len(out.len(), bits),
+        "stream too short: {} bytes for {} codes of {bits} bits",
+        bytes.len(),
+        out.len()
+    );
+    match bits {
+        8 => {
+            for (o, &b) in out.iter_mut().zip(bytes) {
+                *o = b as u32;
+            }
+        }
+        16 => {
+            for (o, ch) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                *o = u16::from_le_bytes([ch[0], ch[1]]) as u32;
+            }
+        }
+        32 => {
+            for (o, ch) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+                *o = u32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            }
+        }
+        _ => {
+            let mask: u64 = (1u64 << bits) - 1;
+            let mut acc: u64 = 0;
+            let mut fill: u32 = 0;
+            let mut i = 0usize;
+            for o in out.iter_mut() {
+                // fill < bits <= 31 before each refill byte lands at
+                // position fill <= 30, so acc never overflows 64 bits.
+                while fill < bits {
+                    acc |= (bytes[i] as u64) << fill;
+                    i += 1;
+                    fill += 8;
+                }
+                *o = (acc & mask) as u32;
+                acc >>= bits;
+                fill -= bits;
+            }
+        }
+    }
+}
+
+/// Reference bit-at-a-time pack (the pre-word-level implementation).  Not on
+/// any hot path — property tests and the `quant_hot_path` bench use it as
+/// the equivalence/speed baseline.
+pub fn pack_codes_ref(codes: &[u32], bits: u32) -> Vec<u8> {
     assert!((1..=32).contains(&bits));
     let total_bits = codes.len() * bits as usize;
     let mut out = vec![0u8; total_bits.div_ceil(8)];
@@ -28,8 +165,8 @@ pub fn pack_codes(codes: &[u32], bits: u32) -> Vec<u8> {
     out
 }
 
-/// Unpack `n` codes of `bits` width from an LSB-first bit stream.
-pub fn unpack_codes(bytes: &[u8], bits: u32, n: usize) -> Vec<u32> {
+/// Reference bit-at-a-time unpack — counterpart of [`pack_codes_ref`].
+pub fn unpack_codes_ref(bytes: &[u8], bits: u32, n: usize) -> Vec<u32> {
     assert!((1..=32).contains(&bits));
     let mut out = Vec::with_capacity(n);
     let mut bitpos = 0usize;
@@ -48,11 +185,6 @@ pub fn unpack_codes(bytes: &[u8], bits: u32, n: usize) -> Vec<u32> {
         out.push(v as u32);
     }
     out
-}
-
-/// Bytes needed to store `n` codes of `bits` width.
-pub fn packed_len(n: usize, bits: u32) -> usize {
-    (n * bits as usize).div_ceil(8)
 }
 
 #[cfg(test)]
@@ -135,6 +267,50 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_fast_kernels_match_bit_loop_reference() {
+        // Word-level pack/unpack (including the 8/16-bit memcpy fast paths)
+        // must produce the exact stream of the bit-at-a-time reference, at
+        // ragged lengths, for every configurable width 1..=16.
+        run_prop(120, 53, |rng| {
+            let bits = 1 + rng.below(16) as u32; // 1..=16 hits both fast paths
+            let n = 1 + rng.below(300);
+            let max = 1u64 << bits;
+            let codes: Vec<u32> =
+                (0..n).map(|_| rng.below(max as usize) as u32).collect();
+            let fast = pack_codes(&codes, bits);
+            let slow = pack_codes_ref(&codes, bits);
+            if fast != slow {
+                return Err(format!("pack stream diverges at bits={bits} n={n}"));
+            }
+            let back_fast = unpack_codes(&fast, bits, n);
+            let back_slow = unpack_codes_ref(&slow, bits, n);
+            if back_fast != codes || back_slow != codes {
+                return Err(format!("unpack mismatch at bits={bits} n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn into_variants_reuse_caller_buffers() {
+        // pack_into overwrites every byte (stale garbage must not leak into
+        // the stream) and unpack_into fills exactly out.len() codes.
+        let codes = vec![5u32, 0, 7, 3, 1];
+        let bits = 3;
+        let mut buf = vec![0xffu8; packed_len(codes.len(), bits)];
+        pack_into(&codes, bits, &mut buf);
+        assert_eq!(buf, pack_codes_ref(&codes, bits));
+        let mut out = vec![99u32; codes.len()];
+        unpack_into(&buf, bits, &mut out);
+        assert_eq!(out, codes);
+        // Byte-aligned fast path: same contract.
+        let codes8 = vec![200u32, 0, 17];
+        let mut buf8 = vec![0xaau8; 3];
+        pack_into(&codes8, 8, &mut buf8);
+        assert_eq!(buf8, vec![200, 0, 17]);
     }
 
     #[test]

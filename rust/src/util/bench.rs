@@ -135,6 +135,35 @@ impl Table {
     }
 }
 
+/// Resolve `name` against the workspace root — the outermost ancestor
+/// directory containing a `Cargo.toml` — so machine-readable bench results
+/// (`BENCH_*.json`) land at the repo root whether the bench runs from the
+/// workspace root or the package directory.
+pub fn workspace_file(name: &str) -> std::path::PathBuf {
+    let mut d = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut best: Option<std::path::PathBuf> = None;
+    loop {
+        if d.join("Cargo.toml").exists() {
+            best = Some(d.clone());
+        }
+        if !d.pop() {
+            break;
+        }
+    }
+    best.unwrap_or_else(|| ".".into()).join(name)
+}
+
+/// Write a machine-readable result file next to the human tables.  The perf
+/// trajectory (ROADMAP) is tracked through these dumps, so failures warn
+/// instead of panicking — a read-only checkout must not kill the bench.
+pub fn emit_json(file_name: &str, json: &crate::util::json::Json) {
+    let path = workspace_file(file_name);
+    match std::fs::write(&path, json.dump() + "\n") {
+        Ok(()) => println!("[json] {}", path.display()),
+        Err(e) => eprintln!("warn: could not write {}: {e}", path.display()),
+    }
+}
+
 /// Format seconds as an adaptive human string.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {
@@ -178,6 +207,17 @@ mod tests {
         let t = time_fn(2, 5, || n += 1);
         assert_eq!(n, 7);
         assert_eq!(t.iters, 5);
+    }
+
+    #[test]
+    fn workspace_file_resolves_to_outermost_cargo_dir() {
+        let p = workspace_file("BENCH_probe.json");
+        assert_eq!(p.file_name().unwrap(), "BENCH_probe.json");
+        assert!(
+            p.parent().unwrap().join("Cargo.toml").exists(),
+            "{} has no Cargo.toml",
+            p.parent().unwrap().display()
+        );
     }
 
     #[test]
