@@ -9,11 +9,12 @@
 //! throughput on a multi-core host while per-shard cache accounting still
 //! sums to the pool totals printed at the end.
 
+use std::io::Write as _;
 use std::time::Instant;
 
 use anyhow::Result;
 use cq::bench_support::Pipeline;
-use cq::coordinator::{Request, ServeConfig, ServePool};
+use cq::coordinator::{Event, Request, ServeConfig, ServePool};
 use cq::quant::cq::CqSpec;
 use cq::util::cli::Args;
 use cq::util::human_bytes;
@@ -69,6 +70,75 @@ fn run_mode(cq: Option<String>, workers: usize, n_requests: usize, max_new: usiz
     Ok(())
 }
 
+/// Streaming lifecycle demo: token events as they decode, a mid-stream
+/// cancellation that hands its lane and cache blocks back immediately, and
+/// a session follow-up that resumes from the first turn's cached blocks.
+fn run_streaming_demo() -> Result<()> {
+    let cfg = ServeConfig {
+        model: "small".into(),
+        cq: Some("8c8b".into()),
+        batch: 8,
+        cache_budget: Some(64 * 1024 * 1024),
+        codebook_path: Some(cq::train::ckpt_dir("small").join("cq_8c8b.cqb")),
+        params_path: cq::train::ckpt_dir("small").join("params.bin"),
+        kernel: ServeConfig::default_kernel(),
+        block_tokens: ServeConfig::default_block_tokens(),
+        prefix_sharing: true,
+    };
+    let pool = ServePool::start(cfg, 1);
+
+    // 1. Stream a generation token by token (session 1 records the turn).
+    print!("[stream]  \"The castle of Aldenport \" -> ");
+    let handle =
+        pool.submit_stream(Request::greedy(1, "The castle of Aldenport ", 24).in_session(1))?;
+    for ev in handle {
+        match ev {
+            Event::Token { text, .. } => {
+                print!("{text}");
+                let _ = std::io::stdout().flush();
+            }
+            Event::Done(r) => {
+                println!("\n[stream]  done: ttft {:.1} ms, decode {:.1} ms", r.ttft_ms, r.decode_ms)
+            }
+            Event::Failed { reason, .. } => println!("\n[stream]  failed: {reason}"),
+            Event::Started { .. } => {}
+        }
+    }
+
+    // 2. Cancel mid-decode: ask for 200 tokens, stop after 6.
+    let handle = pool.submit_stream(Request::greedy(2, "Travellers often mention ", 200))?;
+    let canceller = handle.canceller();
+    let mut n = 0;
+    for ev in handle {
+        match ev {
+            Event::Token { .. } => {
+                n += 1;
+                if n == 6 {
+                    canceller.cancel();
+                }
+            }
+            Event::Failed { reason, .. } => {
+                println!("[cancel]  stopped after {n} of 200 tokens ({reason}); lane + blocks reclaimed");
+            }
+            Event::Done(_) => println!("[cancel]  raced completion (ok)"),
+            Event::Started { .. } => {}
+        }
+    }
+
+    // 3. Session follow-up: only the new text is sent; the prior turn's
+    // prompt+generation is served from radix-cached blocks.
+    let r = pool.submit(Request::greedy(3, " The second traveller ", 16).in_session(1))?;
+    println!(
+        "[session] follow-up turn: prompt {} tokens, {} served from cache ({:.0}%)",
+        r.prompt_tokens,
+        r.prefix_hit_tokens,
+        100.0 * r.prefix_hit_tokens as f64 / r.prompt_tokens.max(1) as f64
+    );
+    println!("        {}", pool.metrics.worker(0).summary(1.0));
+    pool.shutdown()?;
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>())?;
     let n = args.usize("requests", 12);
@@ -86,6 +156,10 @@ fn main() -> Result<()> {
     run_mode(None, workers, n, max_new)?;
     run_mode(Some("8c8b".into()), 1, n, max_new)?;
     run_mode(Some("8c8b".into()), workers, n, max_new)?;
+
+    println!("\n== streaming lifecycle: token events, cancellation, sessions ==");
+    run_streaming_demo()?;
+
     println!("\nNote: on this CPU-interpret testbed the single-worker win is cache");
     println!("*footprint* (16x smaller); extra workers add decode parallelism, and");
     println!("on bandwidth-bound hardware the same 16x ratio also bounds decode");

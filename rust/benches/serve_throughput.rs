@@ -15,10 +15,10 @@
 use std::time::Instant;
 
 use cq::bench_support::Pipeline;
-use cq::coordinator::{Request, ServeConfig, ServePool};
+use cq::coordinator::{Event, Request, ServeConfig, ServePool};
 use cq::metrics::TrafficModel;
 use cq::quant::cq::CqSpec;
-use cq::util::bench::{emit_json, Table};
+use cq::util::bench::{emit_json, Table, Timing};
 use cq::util::cli::Args;
 use cq::util::json::Json;
 
@@ -314,5 +314,100 @@ fn main() {
         pool.shutdown().unwrap();
     }
     reuse.emit("serve_prefix_reuse");
+
+    // --- Table 4: streaming lifecycle — TTFT + cancel-reclaim latency ----
+    // TTFT is the streaming API's headline number (arrival -> first Token
+    // event); cancel-reclaim is how long a disconnecting client occupies a
+    // lane + its cache reservation before the worker hands both back.
+    let n_stream = args.usize("stream-requests", 8);
+    let pool = ServePool::start(mode_cfg(Some("8c8b"), 8), 1);
+    let mut ttft_ms: Vec<f64> = Vec::new();
+    for i in 0..n_stream as u64 {
+        let t0 = Instant::now();
+        let handle = pool
+            .submit_stream(Request::greedy(9000 + i, "The castle of Aldenport ", max_new))
+            .expect("stream");
+        let mut first: Option<f64> = None;
+        for ev in handle {
+            match ev {
+                Event::Token { .. } => {
+                    if first.is_none() {
+                        first = Some(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                Event::Done(_) | Event::Failed { .. } => break,
+                Event::Started { .. } => {}
+            }
+        }
+        if let Some(ms) = first {
+            ttft_ms.push(ms);
+        }
+    }
+    let mut reclaim_ms: Vec<f64> = Vec::new();
+    for i in 0..4u64 {
+        let handle = pool
+            .submit_stream(Request::greedy(9500 + i, "The castle of Aldenport ", 256))
+            .expect("stream");
+        // Wait for decode to be genuinely under way, then cancel and time
+        // until the worker confirms (the Failed event is emitted only after
+        // the lane, blocks and reservation were handed back).
+        loop {
+            match handle.recv() {
+                Ok(Event::Token { index, .. }) if index >= 1 => break,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        let t0 = Instant::now();
+        handle.cancel();
+        let _ = handle.drain();
+        reclaim_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    // Timing::from_samples asserts non-empty; an all-failed run (or
+    // --stream-requests 0) must degrade to missing rows, not a panic that
+    // loses the tables already measured above.
+    let mut stream_tbl = Table::new(
+        "Streaming lifecycle: TTFT and cancel-reclaim latency (CQ-8c8b, 1 worker)",
+        &["metric", "samples", "p50 (ms)", "p95 (ms)", "mean (ms)"],
+    );
+    if !ttft_ms.is_empty() {
+        let ttft = Timing::from_samples(ttft_ms);
+        stream_tbl.row(vec![
+            "ttft".into(),
+            ttft.iters.to_string(),
+            format!("{:.2}", ttft.p50),
+            format!("{:.2}", ttft.p95),
+            format!("{:.2}", ttft.mean),
+        ]);
+        eprintln!("  streaming: ttft p50 {:.1} ms", ttft.p50);
+        scenario_rows.push(Json::obj(vec![
+            ("name", Json::Str("streaming,ttft".into())),
+            ("ttft_ms_p50", Json::Num(ttft.p50)),
+            ("ttft_ms_p95", Json::Num(ttft.p95)),
+        ]));
+    }
+    if !reclaim_ms.is_empty() {
+        let reclaim = Timing::from_samples(reclaim_ms);
+        stream_tbl.row(vec![
+            "cancel_reclaim".into(),
+            reclaim.iters.to_string(),
+            format!("{:.2}", reclaim.p50),
+            format!("{:.2}", reclaim.p95),
+            format!("{:.2}", reclaim.mean),
+        ]);
+        eprintln!(
+            "  streaming: cancel reclaim p50 {:.2} ms, cancelled={}",
+            reclaim.p50,
+            pool.metrics.requests_cancelled()
+        );
+        scenario_rows.push(Json::obj(vec![
+            ("name", Json::Str("streaming,cancel_reclaim".into())),
+            ("cancel_reclaim_ms_p50", Json::Num(reclaim.p50)),
+            ("cancelled", Json::Num(pool.metrics.requests_cancelled() as f64)),
+        ]));
+    }
+    stream_tbl.emit("serve_streaming");
+    pool.shutdown().unwrap();
+
     emit_serve_json(true, scenario_rows);
 }

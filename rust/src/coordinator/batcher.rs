@@ -12,12 +12,14 @@ use std::time::Instant;
 use crate::kvcache::{CacheGeom, PagedSeqCache};
 
 use super::pool::LoadToken;
-use super::{Request, Response};
+use super::{Event, Request};
 
 /// One running sequence occupying a batch lane.
 pub struct SeqRun {
     pub req: Request,
-    pub respond: Option<Sender<Response>>,
+    /// Per-request event stream (None for headless runs); `Token` events go
+    /// out as they are sampled, then one terminal `Done`/`Failed`.
+    pub events: Option<Sender<Event>>,
     /// Router in-flight marker; dropping it (with this run) decrements the
     /// owning worker's load in the serve pool.
     pub load_token: Option<LoadToken>,
@@ -36,6 +38,9 @@ pub struct SeqRun {
     pub packed: PagedSeqCache,
     pub enqueued_at: Instant,
     pub prefill_ms: f64,
+    /// Arrival-to-first-token latency, fixed at the end of prefill (the
+    /// first `Token` event's emission time).
+    pub ttft_ms: f64,
     pub decode_started: Option<Instant>,
 }
 
@@ -135,6 +140,20 @@ impl Batcher {
             .map(|r| r.done() || r.cached_len() + 1 >= self.geom.tmax)
             .unwrap_or(false)
     }
+
+    /// Lane currently running request `id` (cancellation lookup).
+    pub fn slot_of(&self, id: u64) -> Option<usize> {
+        (0..self.batch).find(|&i| {
+            self.slots[i].as_ref().map(|r| r.req.id == id).unwrap_or(false)
+        })
+    }
+
+    /// Remove a queued (prefilled but not yet admitted into a lane) run by
+    /// request id, preserving FIFO order for the rest of the queue.
+    pub fn take_queued(&mut self, id: u64) -> Option<SeqRun> {
+        let pos = self.queue.iter().position(|r| r.req.id == id)?;
+        self.queue.remove(pos)
+    }
 }
 
 #[cfg(test)]
@@ -156,7 +175,7 @@ mod tests {
         }
         SeqRun {
             req: Request::greedy(id, "x", max_new),
-            respond: None,
+            events: None,
             load_token: None,
             reserved_blocks: 0,
             prompt_tokens: prompt_len,
@@ -166,6 +185,7 @@ mod tests {
             packed,
             enqueued_at: Instant::now(),
             prefill_ms: 0.0,
+            ttft_ms: 0.0,
             decode_started: None,
         }
     }
@@ -203,6 +223,28 @@ mod tests {
         let r = b2.slot_mut(0).unwrap();
         r.packed.append_unstored().unwrap(); // len 15, tmax 16
         assert!(b2.must_stop(0), "cache lane nearly full");
+    }
+
+    #[test]
+    fn cancel_lookups_find_queued_and_slotted_runs() {
+        let mut b = Batcher::new(1, geom());
+        for id in 0..3 {
+            b.enqueue(mk_run(id, 2, 4));
+        }
+        b.admit();
+        assert_eq!(b.slot_of(0), Some(0), "admitted run is in its lane");
+        assert_eq!(b.slot_of(1), None, "queued run is not in a lane");
+        assert_eq!(b.slot_of(99), None);
+        // Cancel the middle queued run; FIFO order survives for the rest.
+        let run = b.take_queued(1).expect("queued run removable by id");
+        assert_eq!(run.req.id, 1);
+        assert!(b.take_queued(1).is_none(), "second take is a no-op");
+        assert!(b.take_queued(0).is_none(), "slotted run is not in the queue");
+        assert_eq!(b.queue_len(), 1);
+        b.take(0);
+        let filled = b.admit();
+        assert_eq!(filled, vec![0]);
+        assert_eq!(b.slot(0).unwrap().req.id, 2, "survivor admitted in order");
     }
 
     #[test]

@@ -7,6 +7,27 @@
 //! [`pool::ServePool`] fronts N such workers with a least-loaded router;
 //! the TCP frontend (`server`) and in-process clients talk to the pool over
 //! per-worker mpsc channels.  [`pool::ServeHandle`] is the 1-worker case.
+//!
+//! Request lifecycle (v2): every request is an **event stream**.  The worker
+//! pushes [`Event`]s — `Started` at admission, one `Token` per generated
+//! token (the first arrives at end of prefill: that emission *is* the TTFT
+//! mark), then a terminal `Done(Response)` or `Failed` — into the per-request
+//! channel carried by [`Inbound::Submit`].  [`pool::StreamHandle`] is the
+//! client end; `ServePool::submit`/`submit_async` survive as thin
+//! drain-to-[`Response`] wrappers.  [`Inbound::Cancel`] (sent by
+//! `StreamHandle::cancel`, or implied by a dropped event receiver) aborts a
+//! request mid-decode: the batch lane frees immediately, the shard releases
+//! its reserved blocks (completed full blocks still promote into the radix
+//! index so the interrupted prefix stays warm) and the router's in-flight
+//! token drops.
+//!
+//! Multi-turn continuation: a [`Request::session_id`] keys a per-worker
+//! session table mapping the conversation so far (prompt ++ generated token
+//! ids) to the radix key a follow-up turn resumes from — the client sends
+//! only the new turn's text, the worker prepends the stored history, and the
+//! paged cache serves the shared span from already-quantized blocks.  The
+//! pool routes session requests by affinity hash so every turn lands on the
+//! shard holding those blocks.
 
 pub mod batcher;
 pub mod pool;
@@ -14,7 +35,7 @@ pub mod sampler;
 pub mod serve_loop;
 
 pub use batcher::{Batcher, SeqRun};
-pub use pool::{LoadToken, ServeHandle, ServePool, WorkerLoad};
+pub use pool::{CancelHandle, LoadToken, ServeHandle, ServePool, StreamHandle, WorkerLoad};
 pub use sampler::{sample, SampleCfg};
 pub use serve_loop::{serve_loop, ServeConfig};
 
@@ -29,6 +50,10 @@ pub struct Request {
     pub temperature: f32,
     pub top_k: usize,
     pub seed: u64,
+    /// Multi-turn continuation key: a follow-up turn with the same session
+    /// id resumes from the session's accumulated prompt+generated token ids
+    /// (served from radix-cached blocks) and routes to the same shard.
+    pub session_id: Option<u64>,
 }
 
 impl Request {
@@ -40,7 +65,14 @@ impl Request {
             temperature: 0.0,
             top_k: 0,
             seed: id,
+            session_id: None,
         }
+    }
+
+    /// Attach this request to a multi-turn session.
+    pub fn in_session(mut self, session_id: u64) -> Request {
+        self.session_id = Some(session_id);
+        self
     }
 }
 
@@ -55,6 +87,9 @@ pub struct Response {
     pub prefix_hit_tokens: usize,
     pub gen_tokens: usize,
     pub queue_ms: f64,
+    /// Time-to-first-token: request arrival at the worker to the first
+    /// `Token` event (end of prefill).
+    pub ttft_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
     pub cache_bytes: usize,
@@ -70,6 +105,7 @@ impl Response {
             prefix_hit_tokens: 0,
             gen_tokens: 0,
             queue_ms: 0.0,
+            ttft_ms: 0.0,
             prefill_ms: 0.0,
             decode_ms: 0.0,
             cache_bytes: 0,
@@ -77,11 +113,41 @@ impl Response {
     }
 }
 
+/// One request-lifecycle event, pushed by the serve worker into the
+/// per-request channel.  `Done` and `Failed` are terminal; exactly one of
+/// them ends every stream the worker accepted.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// The worker accepted the request and is about to admit it.
+    Started { id: u64 },
+    /// One generated token (`index` counts from 0; index 0 is emitted at the
+    /// end of prefill).  `text` is the token's own decoded bytes — for the
+    /// byte-level tokenizer, concatenating all token texts reproduces the
+    /// final `Response::text` for ASCII output.
+    Token { id: u64, index: usize, text: String },
+    /// Terminal: the full aggregated response.
+    Done(Response),
+    /// Terminal: rejection, prefill failure, or cancellation.
+    Failed { id: u64, reason: String },
+}
+
+impl Event {
+    /// True for the stream-ending variants.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Event::Done(_) | Event::Failed { .. })
+    }
+}
+
 /// Messages into one serve-loop worker.  The optional [`LoadToken`] is the
 /// router's in-flight marker; it is dropped (decrementing the worker's load)
 /// when the request reaches any terminal state.
 pub enum Inbound {
-    Submit(Request, Sender<Response>, Option<LoadToken>),
+    /// A request plus its event stream's sender.
+    Submit(Request, Sender<Event>, Option<LoadToken>),
+    /// Cancel the in-flight request with this id: free its lane, release its
+    /// cache reservation (full blocks still promote) and emit
+    /// [`Event::Failed`].  Unknown ids (already completed) are ignored.
+    Cancel(u64),
     /// Drain in-flight work and exit.
     Shutdown,
 }

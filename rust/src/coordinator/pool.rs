@@ -7,12 +7,20 @@
 //! Routing is **least-loaded**: the router tracks per-worker in-flight
 //! requests ([`WorkerLoad`]) and picks the worker with the shallowest
 //! virtual queue, breaking ties by most free lanes and then round-robin
-//! (a rotating scan start).  In-flight accounting is crash-safe: every
+//! (a rotating scan start).  Requests carrying a session id instead route
+//! by **affinity hash** (`session_id % n_workers`, skipping dead workers)
+//! so every turn of a conversation lands on the shard holding its
+//! radix-cached blocks.  In-flight accounting is crash-safe: every
 //! dispatched request carries a [`LoadToken`] that decrements the counter
 //! on drop, whatever path the request dies on (completion, budget
-//! rejection, prefill failure, shutdown drain).  A worker whose loop has
-//! exited is marked dead on the first failed send and excluded from
-//! routing; the submission reroutes to the next live worker.
+//! rejection, prefill failure, cancellation, shutdown drain).  A worker
+//! whose loop has exited is marked dead on the first failed send and
+//! excluded from routing; the submission reroutes to the next live worker.
+//!
+//! The streaming lifecycle API is [`ServePool::submit_stream`]: it returns
+//! a [`StreamHandle`] — an iterator of [`Event`]s plus `cancel()` — and the
+//! legacy `submit` / `submit_async` are thin drain-to-[`Response`] wrappers
+//! over it, so one code path serves every caller.
 //!
 //! The global cache byte budget becomes a **per-shard budget**
 //! (`ceil(total / n_workers)`); per-shard accounting is re-aggregated by
@@ -28,12 +36,12 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::{PoolMetrics, ServeMetrics};
 
 use super::serve_loop::{serve_loop, ServeConfig};
-use super::{Inbound, Request, Response};
+use super::{Event, Inbound, Request, Response};
 
 /// Shared load snapshot for one worker: how many requests have been
 /// dispatched to it and not yet completed/rejected.
@@ -77,6 +85,93 @@ impl LoadToken {
 impl Drop for LoadToken {
     fn drop(&mut self) {
         self.0.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Client end of one request's event stream: iterate (or `recv`) the
+/// [`Event`]s as the worker produces them, and/or cancel mid-decode.
+/// Dropping the handle without draining also cancels implicitly — the
+/// worker treats a dead event receiver as a disconnected client and
+/// reclaims the lane on its next token.
+pub struct StreamHandle {
+    id: u64,
+    rx: Receiver<Event>,
+    /// Clone of the owning worker's inbound sender (None when the request
+    /// was terminated at the router and never reached a worker).
+    cancel_tx: Option<Sender<Inbound>>,
+}
+
+/// Detached cancel trigger for a stream (cheap to clone out of a
+/// [`StreamHandle`] before iterating it away).
+pub struct CancelHandle {
+    id: u64,
+    tx: Option<Sender<Inbound>>,
+}
+
+impl CancelHandle {
+    /// Ask the worker to cancel this request.  Safe at any time: unknown or
+    /// already-completed ids are ignored worker-side.
+    pub fn cancel(&self) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Inbound::Cancel(self.id));
+        }
+    }
+}
+
+impl StreamHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// A detached cancel trigger (usable while this handle is being
+    /// iterated or after it was consumed by [`Self::drain`]).
+    pub fn canceller(&self) -> CancelHandle {
+        CancelHandle { id: self.id, tx: self.cancel_tx.clone() }
+    }
+
+    /// Ask the worker to cancel this request mid-decode: its lane frees,
+    /// reserved blocks return to the shard budget, and the stream ends with
+    /// a `Failed` event.
+    pub fn cancel(&self) {
+        self.canceller().cancel();
+    }
+
+    /// Block for the next event.  Errors only when the worker dropped the
+    /// stream without a terminal event (worker death).
+    pub fn recv(&self) -> Result<Event> {
+        match self.rx.recv() {
+            Ok(ev) => Ok(ev),
+            Err(_) => bail!("serve worker dropped event stream"),
+        }
+    }
+
+    /// Non-blocking poll for the next event.
+    pub fn try_recv(&self) -> Option<Event> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Consume the stream to its terminal event and fold it into the legacy
+    /// [`Response`]: `Done` passes through, `Failed` becomes
+    /// [`Response::failure`] (preserving the v1 rejection/error texts).
+    pub fn drain(self) -> Result<Response> {
+        loop {
+            match self.rx.recv() {
+                Ok(Event::Done(resp)) => return Ok(resp),
+                Ok(Event::Failed { id, reason }) => return Ok(Response::failure(id, reason)),
+                Ok(_) => {}
+                Err(_) => bail!("serve worker dropped response"),
+            }
+        }
+    }
+}
+
+impl Iterator for StreamHandle {
+    type Item = Event;
+
+    /// Yields events until the worker drops its sender (which happens right
+    /// after the terminal event).
+    fn next(&mut self) -> Option<Event> {
+        self.rx.recv().ok()
     }
 }
 
@@ -227,11 +322,28 @@ impl ServePool {
         Some(live[select_least_loaded(&loads, 0)])
     }
 
-    /// Dispatch without waiting; returns the response receiver.  Requests
-    /// that cannot possibly fit the pool's remaining cache budget are
-    /// rejected here, before any worker sees them.  A failed send marks
-    /// that worker dead and reroutes to the next live one.
-    pub fn submit_async(&self, mut req: Request) -> Result<Receiver<Response>> {
+    /// Session-affinity pick: deterministic hash of the session id onto the
+    /// worker ring, scanning forward past dead workers.  Every turn of a
+    /// session lands on the shard whose radix index holds its blocks (the
+    /// ROADMAP "prefix-affinity" follow-up), trading a little load balance
+    /// for prefix locality.
+    fn pick_session_worker(&self, session_id: u64) -> Option<usize> {
+        let n = self.workers.len();
+        let start = (session_id % n as u64) as usize;
+        (0..n)
+            .map(|k| (start + k) % n)
+            .find(|&i| self.workers[i].alive.load(Ordering::Relaxed))
+    }
+
+    /// Dispatch a request as an event stream.  Requests that cannot
+    /// possibly fit the pool's remaining cache budget are terminated here
+    /// with a `Failed` event, before any worker sees them.  A failed send
+    /// marks that worker dead and reroutes to the next live one.  Session
+    /// requests route by affinity hash instead of least-loaded (the byte
+    /// estimate sees only the new turn's text — conservative in the wrong
+    /// direction, but the shard's own reservation still gates the true
+    /// length).
+    pub fn submit_stream(&self, mut req: Request) -> Result<StreamHandle> {
         // Workers always serve at least one token (the decode loop appends
         // before consulting must_stop), so clamp max_new ONCE — up front —
         // and dispatch the clamped request.  The pool-wide byte estimate
@@ -260,19 +372,26 @@ impl ServePool {
         ) {
             self.metrics.router_rejected.add(1);
             let (tx, rx) = channel();
-            let _ = tx.send(Response::failure(
-                req.id,
-                String::from("[rejected: pool budget]"),
-            ));
-            return Ok(rx);
+            let _ = tx.send(Event::Failed {
+                id: req.id,
+                reason: String::from("[rejected: pool budget]"),
+            });
+            return Ok(StreamHandle { id: req.id, rx, cancel_tx: None });
         }
+        let id = req.id;
         for _ in 0..self.workers.len() {
-            let Some(wi) = self.pick_worker() else { break };
+            let picked = match req.session_id {
+                Some(sid) => self.pick_session_worker(sid),
+                None => self.pick_worker(),
+            };
+            let Some(wi) = picked else { break };
             let w = &self.workers[wi];
             let token = LoadToken::acquire(&w.load);
             let (tx, rx) = channel();
             match w.tx.send(Inbound::Submit(req.clone(), tx, Some(token))) {
-                Ok(()) => return Ok(rx),
+                Ok(()) => {
+                    return Ok(StreamHandle { id, rx, cancel_tx: Some(w.tx.clone()) })
+                }
                 Err(_) => {
                     // Worker loop exited: exclude it and retry elsewhere.
                     w.alive.store(false, Ordering::Relaxed);
@@ -283,11 +402,29 @@ impl ServePool {
         Err(anyhow!("no live serve workers"))
     }
 
-    /// Dispatch and block for the response.
+    /// Dispatch without waiting; returns the legacy response receiver.  A
+    /// small drain thread folds the event stream into its terminal
+    /// [`Response`]; worker death surfaces as a dropped receiver, exactly
+    /// as before the streaming redesign.
+    pub fn submit_async(&self, req: Request) -> Result<Receiver<Response>> {
+        let stream = self.submit_stream(req)?;
+        let (tx, rx) = channel();
+        std::thread::Builder::new()
+            .name("cq-stream-drain".into())
+            .spawn(move || {
+                if let Ok(resp) = stream.drain() {
+                    let _ = tx.send(resp);
+                }
+                // Drain error: tx drops unsent -> the receiver observes a
+                // disconnect, matching the old dropped-response behavior.
+            })
+            .expect("spawn stream drain thread");
+        Ok(rx)
+    }
+
+    /// Dispatch and block for the terminal response.
     pub fn submit(&self, req: Request) -> Result<Response> {
-        self.submit_async(req)?
-            .recv()
-            .context("serve worker dropped response")
+        self.submit_stream(req)?.drain()
     }
 
     /// Drain all workers and join them; the first worker error propagates.
@@ -346,6 +483,11 @@ impl ServeHandle {
     /// Submit without waiting; returns the response receiver.
     pub fn submit_async(&self, req: Request) -> Result<Receiver<Response>> {
         self.pool.submit_async(req)
+    }
+
+    /// Submit as an event stream (token events + cancellation).
+    pub fn submit_stream(&self, req: Request) -> Result<StreamHandle> {
+        self.pool.submit_stream(req)
     }
 
     /// Drain and stop the loop.
@@ -489,6 +631,53 @@ mod tests {
             1,
             "trimmed estimate must not be rejected again"
         );
+        assert!(pool.shutdown().is_err());
+    }
+
+    #[test]
+    fn router_rejection_is_a_failed_event_on_the_stream() {
+        let pool = ServePool::start(dead_worker_cfg(Some(64)), 1);
+        pool.metrics.worker(0).bytes_per_token.observe_max(4);
+        let h = pool
+            .submit_stream(Request::greedy(7, &"x".repeat(100), 4))
+            .expect("router replies directly");
+        assert_eq!(h.id(), 7);
+        match h.recv().expect("one terminal event") {
+            Event::Failed { id, reason } => {
+                assert_eq!(id, 7);
+                assert!(reason.contains("pool budget"), "{reason}");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        // cancel on a router-terminated stream is a harmless no-op.
+        h.cancel();
+        assert_eq!(pool.metrics.router_rejected.get(), 1);
+        assert!(pool.shutdown().is_err());
+    }
+
+    #[test]
+    fn session_requests_route_by_affinity_hash() {
+        let pool = ServePool::start(dead_worker_cfg(None), 3);
+        // Deterministic ring position, independent of load.
+        assert_eq!(pool.pick_session_worker(0), Some(0));
+        assert_eq!(pool.pick_session_worker(4), Some(1));
+        assert_eq!(pool.pick_session_worker(5), Some(2));
+        assert_eq!(
+            pool.pick_session_worker(3),
+            pool.pick_session_worker(3),
+            "same session id always maps to the same worker"
+        );
+        // Dead workers are skipped by scanning forward on the ring.
+        pool.workers[1].alive.store(false, Ordering::Relaxed);
+        assert_eq!(pool.pick_session_worker(4), Some(2));
+        pool.workers[2].alive.store(false, Ordering::Relaxed);
+        assert_eq!(pool.pick_session_worker(4), Some(0));
+        pool.workers[0].alive.store(false, Ordering::Relaxed);
+        assert_eq!(pool.pick_session_worker(4), None, "all dead");
+        // With every worker dead the submission errors instead of hanging.
+        assert!(pool
+            .submit_stream(Request::greedy(1, "x", 2).in_session(4))
+            .is_err());
         assert!(pool.shutdown().is_err());
     }
 }

@@ -6,18 +6,28 @@
 //! loop {
 //!   drain inbound -> radix match + block reserve    (admission, eviction
 //!                  -> prefill + enqueue              under pressure)
+//!                 -> cancel: free lane/queue entry,  (full blocks still
+//!                    release blocks + reservation     promote)
 //!   admit queued sequences into free lanes          (batcher)
 //!   if any lane active: one fused decode step       (decode_cq / decode_fp)
-//!   sample, append codes, complete finished lanes   (promote full blocks
-//!                                                    into the radix index)
+//!   sample, append codes, stream Token events,      (a dead event receiver
+//!   complete finished lanes                          is an implicit cancel)
 //! }
 //! ```
+//!
+//! Every request is an event stream (see [`super::Event`]): `Started` at
+//! acceptance, `Token` per sampled token — the first at end of prefill,
+//! which is also the TTFT mark — then `Done` or `Failed`.  A per-worker
+//! session table maps [`Request::session_id`] to the conversation's token
+//! ids so a follow-up turn resumes from radix-cached blocks instead of
+//! re-sending (and re-quantizing) its whole history.
 //!
 //! Cache representation is selected by [`ServeConfig::cq`]: `Some(tag)` uses
 //! the channel-coupled quantized cache (the paper's system); `None` the fp
 //! baseline.  Both run the same batcher, so the serve-throughput bench
 //! isolates exactly the cache effect.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::Instant;
@@ -36,7 +46,11 @@ use crate::util::rng::Pcg64;
 use super::batcher::{Batcher, SeqRun};
 use super::pool::LoadToken;
 use super::sampler::{sample, SampleCfg};
-use super::{Inbound, Request, Response};
+use super::{Event, Inbound, Request, Response};
+
+/// Per-worker session table: session id → prompt ++ generated token ids of
+/// the conversation so far (the radix key the next turn resumes from).
+type Sessions = HashMap<u64, Vec<i32>>;
 
 /// Serving configuration.
 #[derive(Clone, Debug)]
@@ -199,10 +213,19 @@ fn build_ctx(cfg: &ServeConfig) -> Result<Ctx> {
 }
 
 /// Tokenize + router-trim one request's prompt (sliding-window tail policy,
-/// like a chat server keeping the most recent context).
-fn prompt_ids(ctx: &Ctx, req: &Request) -> Vec<i32> {
+/// like a chat server keeping the most recent context).  A session request
+/// prepends the session's accumulated token ids, so the follow-up turn's
+/// effective prompt is the whole conversation — and its prefix matches the
+/// blocks the previous turn promoted.
+fn prompt_ids(ctx: &Ctx, sessions: &Sessions, req: &Request) -> Vec<i32> {
     let tok = ByteTokenizer;
-    let mut prompt = tok.encode(&req.prompt);
+    let mut prompt = Vec::new();
+    if let Some(sid) = req.session_id {
+        if let Some(hist) = sessions.get(&sid) {
+            prompt.extend_from_slice(hist);
+        }
+    }
+    prompt.extend(tok.encode(&req.prompt));
     if prompt.is_empty() {
         prompt.push(b'\n' as i32);
     }
@@ -232,7 +255,7 @@ fn prefill(
             metrics.prefill_latency.record(t0.elapsed());
             Ok(SeqRun {
                 req: req.clone(),
-                respond: None,
+                events: None,
                 load_token: None,
                 reserved_blocks: adm.reserved_blocks,
                 prompt_tokens: prompt.len(),
@@ -242,6 +265,7 @@ fn prefill(
                 packed: adm.seq,
                 enqueued_at: Instant::now(),
                 prefill_ms,
+                ttft_ms: 0.0,
                 decode_started: None,
             })
         }
@@ -309,29 +333,34 @@ fn prefill_fill(
     ))
 }
 
-/// Router admission for one inbound request: match the prompt against this
-/// shard's radix index, reserve blocks (evicting cold cached prefixes under
-/// pressure), prefill, and enqueue.  On budget exhaustion the client gets an
-/// explicit rejection; on prefill failure the admission is rolled back.
+/// Router admission for one inbound request: match the prompt (with any
+/// session history prepended) against this shard's radix index, reserve
+/// blocks (evicting cold cached prefixes under pressure), prefill, and
+/// enqueue.  Lifecycle events: `Started` on acceptance, the first `Token`
+/// at end of prefill (TTFT), `Failed` on rejection or prefill error.
 /// The [`LoadToken`] rides in the `SeqRun` so the pool's in-flight count
 /// drops on every terminal path.
+#[allow(clippy::too_many_arguments)]
 fn admit_request(
     ctx: &Ctx,
     shard: &mut PagedShard,
     batcher: &mut Batcher,
+    sessions: &mut Sessions,
     metrics: &ServeMetrics,
     mut req: Request,
-    resp_tx: Sender<Response>,
+    events: Sender<Event>,
     token: Option<LoadToken>,
 ) {
+    let arrived = Instant::now();
+    let _ = events.send(Event::Started { id: req.id });
     // The decode loop always appends at least one token before `must_stop`
     // is consulted, so max_new = 0 would under-reserve by one block and the
     // unbacked append could fail mid-decode; serve at least one token.
-    // `ServePool::submit_async` already clamps before its pool-wide byte
+    // `ServePool::submit_stream` already clamps before its pool-wide byte
     // estimate — this repeat only covers callers driving a serve loop
     // directly, so router estimate and shard reservation always agree.
     req.max_new = req.max_new.max(1);
-    let prompt = prompt_ids(ctx, &req);
+    let prompt = prompt_ids(ctx, sessions, &req);
     let admitted = match &ctx.mode {
         CacheMode::Cq { .. } => shard.admit_stored(&prompt, req.max_new, metrics),
         CacheMode::Fp { .. } => shard.admit_unstored(prompt.len(), req.max_new, metrics),
@@ -340,13 +369,26 @@ fn admit_request(
         Ok(adm) => adm,
         Err(_) => {
             metrics.requests_rejected.add(1);
-            let _ = resp_tx.send(Response::failure(req.id, "[rejected: cache budget]".into()));
+            let _ = events.send(Event::Failed {
+                id: req.id,
+                reason: "[rejected: cache budget]".into(),
+            });
             return; // token drops here -> router sees the slot free again
         }
     };
     match prefill(ctx, shard, &req, prompt, adm, metrics) {
         Ok(mut run) => {
-            run.respond = Some(resp_tx);
+            let ttft = arrived.elapsed();
+            metrics.ttft.record(ttft);
+            run.ttft_ms = ttft.as_secs_f64() * 1e3;
+            // First token: sampled by prefill, streamed before the run ever
+            // waits on a decode lane.
+            let _ = events.send(Event::Token {
+                id: run.req.id,
+                index: 0,
+                text: ByteTokenizer.decode(&run.generated[..1]),
+            });
+            run.events = Some(events);
             run.load_token = token;
             batcher.enqueue(run);
         }
@@ -355,10 +397,10 @@ fn admit_request(
             // Explicit error reply (like the rejection path) so pipelined
             // TCP clients keep their connection instead of a dropped-channel
             // error tearing it down.
-            let _ = resp_tx.send(Response::failure(
-                req.id,
-                format!("[error: prefill failed: {e:#}]"),
-            ));
+            let _ = events.send(Event::Failed {
+                id: req.id,
+                reason: format!("[error: prefill failed: {e:#}]"),
+            });
         }
     }
 }
@@ -562,6 +604,8 @@ pub fn serve_loop(
         budget_blocks,
         cfg.prefix_sharing && cfg.cq.is_some(),
     );
+    // Multi-turn continuation state: session id -> conversation token ids.
+    let mut sessions: Sessions = HashMap::new();
     // Publish shard geometry for the router's pool-wide admission estimate.
     metrics.bytes_per_token.observe_max(ctx.geom.bytes_per_token() as u64);
     metrics.block_bytes.observe_max(block_bytes as u64);
@@ -577,10 +621,20 @@ pub fn serve_loop(
         // --- Router: drain inbound ------------------------------------
         loop {
             match rx.try_recv() {
-                Ok(Inbound::Submit(req, resp_tx, token)) => {
+                Ok(Inbound::Submit(req, events, token)) => {
                     admit_request(
-                        &ctx, &mut shard, &mut batcher, &metrics, req, resp_tx, token,
+                        &ctx,
+                        &mut shard,
+                        &mut batcher,
+                        &mut sessions,
+                        &metrics,
+                        req,
+                        events,
+                        token,
                     );
+                }
+                Ok(Inbound::Cancel(id)) => {
+                    cancel_request(&mut ctx, &mut batcher, &mut shard, &mut sessions, &metrics, id);
                 }
                 Ok(Inbound::Shutdown) => shutting_down = true,
                 Err(TryRecvError::Empty) => break,
@@ -634,8 +688,28 @@ pub fn serve_loop(
                 run.generated.push(next);
                 metrics.tokens_out.add(1);
 
+                // Stream the token out.  A dead receiver (dropped
+                // StreamHandle, exited drain thread, disconnected TCP
+                // writer) means nobody can ever read the rest of this
+                // generation: treat it as an implicit cancel and reclaim
+                // the lane + blocks right away.
+                let receiver_gone = match &run.events {
+                    Some(tx) => tx
+                        .send(Event::Token {
+                            id: run.req.id,
+                            index: run.generated.len() - 1,
+                            text: ByteTokenizer.decode(&[next]),
+                        })
+                        .is_err(),
+                    None => false,
+                };
+                if receiver_gone {
+                    cancel_lane(&mut ctx, &mut batcher, &mut shard, &mut sessions, &metrics, i);
+                    continue;
+                }
+
                 if batcher.must_stop(i) {
-                    complete(&mut ctx, &mut batcher, &mut shard, i, &metrics);
+                    complete(&mut ctx, &mut batcher, &mut shard, &mut sessions, i, &metrics);
                 }
             }
         } else if shutting_down && batcher.is_idle() {
@@ -643,10 +717,20 @@ pub fn serve_loop(
         } else if batcher.is_idle() {
             // Idle: block briefly for the next request.
             match rx.recv_timeout(std::time::Duration::from_millis(20)) {
-                Ok(Inbound::Submit(req, resp_tx, token)) => {
+                Ok(Inbound::Submit(req, events, token)) => {
                     admit_request(
-                        &ctx, &mut shard, &mut batcher, &metrics, req, resp_tx, token,
+                        &ctx,
+                        &mut shard,
+                        &mut batcher,
+                        &mut sessions,
+                        &metrics,
+                        req,
+                        events,
+                        token,
                     );
+                }
+                Ok(Inbound::Cancel(id)) => {
+                    cancel_request(&mut ctx, &mut batcher, &mut shard, &mut sessions, &metrics, id);
                 }
                 Ok(Inbound::Shutdown) => shutting_down = true,
                 Err(_) => {
@@ -684,10 +768,90 @@ fn read_stage_token_into(ctx: &Ctx, slot: usize, t: usize, scratch: &mut CodeScr
     }
 }
 
+/// The radix key a run's cached tokens are promoted under: prompt ids plus
+/// every generated token whose KV actually landed in the paged store (the
+/// final sampled token is returned but never decoded, so it is not cached).
+fn promote_key(run: &SeqRun) -> Vec<i32> {
+    let cached_gen = run.packed.len.saturating_sub(run.prompt_tokens);
+    let mut key = run.prompt_ids.clone();
+    key.extend_from_slice(&run.generated[..cached_gen.min(run.generated.len())]);
+    key
+}
+
+/// Record the finished (or cancelled) turn in the session table so the next
+/// turn with this session id resumes from the full conversation.
+fn note_session(sessions: &mut Sessions, run: &SeqRun) {
+    if let Some(sid) = run.req.session_id {
+        let mut hist = run.prompt_ids.clone();
+        hist.extend_from_slice(&run.generated);
+        sessions.insert(sid, hist);
+    }
+}
+
+/// Handle `Inbound::Cancel(id)`: the request may be decoding in a lane,
+/// still queued behind full lanes, or already gone (no-op — cancellation is
+/// idempotent).
+fn cancel_request(
+    ctx: &mut Ctx,
+    batcher: &mut Batcher,
+    shard: &mut PagedShard,
+    sessions: &mut Sessions,
+    metrics: &ServeMetrics,
+    id: u64,
+) {
+    if let Some(slot) = batcher.slot_of(id) {
+        cancel_lane(ctx, batcher, shard, sessions, metrics, slot);
+    } else if let Some(run) = batcher.take_queued(id) {
+        // Prefilled but never staged: no lane to release.
+        settle_cancelled(shard, sessions, metrics, run);
+    }
+}
+
+/// Cancel the sequence occupying `slot`: free the stage lane immediately,
+/// then settle its cache state.
+fn cancel_lane(
+    ctx: &mut Ctx,
+    batcher: &mut Batcher,
+    shard: &mut PagedShard,
+    sessions: &mut Sessions,
+    metrics: &ServeMetrics,
+    slot: usize,
+) {
+    if let Some(run) = batcher.take(slot) {
+        match &mut ctx.mode {
+            CacheMode::Cq { stage, .. } => stage.release(slot),
+            CacheMode::Fp { pos, .. } => pos[slot] = 0,
+        }
+        settle_cancelled(shard, sessions, metrics, run);
+    }
+}
+
+/// Common cancel settlement: promote the completed full blocks (the decoded
+/// prefix stays warm for a session follow-up), release the rest + the whole
+/// reservation, record the session, emit the terminal `Failed` event, and
+/// drop the run — which releases its [`LoadToken`], so the router's
+/// in-flight count for this worker falls the moment the cancel lands.
+fn settle_cancelled(
+    shard: &mut PagedShard,
+    sessions: &mut Sessions,
+    metrics: &ServeMetrics,
+    mut run: SeqRun,
+) {
+    let key = promote_key(&run);
+    shard.cancel(&mut run.packed, &key, run.reserved_blocks, metrics);
+    note_session(sessions, &run);
+    metrics.requests_cancelled.add(1);
+    if let Some(tx) = run.events.take() {
+        let _ = tx.send(Event::Failed { id: run.req.id, reason: "[cancelled]".into() });
+    }
+    // `run` (and its LoadToken) drops here.
+}
+
 fn complete(
     ctx: &mut Ctx,
     batcher: &mut Batcher,
     shard: &mut PagedShard,
+    sessions: &mut Sessions,
     slot: usize,
     metrics: &ServeMetrics,
 ) {
@@ -700,10 +864,9 @@ fn complete(
         // Promote the sequence's full blocks into the radix index under its
         // (prompt ++ generated) token key, then settle blocks + reservation.
         // Cache position `prompt_tokens + j` holds the KV of generated[j].
-        let cached_gen = run.packed.len.saturating_sub(run.prompt_tokens);
-        let mut key = run.prompt_ids.clone();
-        key.extend_from_slice(&run.generated[..cached_gen.min(run.generated.len())]);
+        let key = promote_key(&run);
         shard.finish(&mut run.packed, &key, run.reserved_blocks, metrics);
+        note_session(sessions, &run);
         let tok = ByteTokenizer;
         let text = tok.decode(&run.generated);
         let decode_ms = run
@@ -718,18 +881,19 @@ fn complete(
         metrics
             .request_latency
             .record(run.enqueued_at.elapsed());
-        if let Some(tx) = run.respond {
-            let _ = tx.send(Response {
+        if let Some(tx) = run.events.take() {
+            let _ = tx.send(Event::Done(Response {
                 id: run.req.id,
                 text,
                 prompt_tokens: run.prompt_tokens,
                 prefix_hit_tokens: run.prefix_hit_tokens,
                 gen_tokens: run.generated.len(),
                 queue_ms,
+                ttft_ms: run.ttft_ms,
                 prefill_ms: run.prefill_ms,
                 decode_ms,
                 cache_bytes,
-            });
+            }));
         }
         // `run` (and its LoadToken) drops here: the router's in-flight count
         // for this worker decrements only after the response is sent.

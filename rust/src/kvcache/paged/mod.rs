@@ -468,6 +468,22 @@ impl PagedShard {
         promoted
     }
 
+    /// Tear down a **cancelled** sequence mid-decode.  Identical settlement
+    /// to [`Self::finish`]: the tokens decoded before the cancel landed are
+    /// real, so their completed full blocks still promote into the radix
+    /// index (the interrupted turn's prefix stays warm for a session
+    /// follow-up), while the partial tail block and the whole reservation
+    /// return to the budget immediately.  Returns promoted blocks.
+    pub fn cancel(
+        &mut self,
+        seq: &mut PagedSeqCache,
+        token_ids: &[i32],
+        reserved_blocks: usize,
+        metrics: &ServeMetrics,
+    ) -> usize {
+        self.finish(seq, token_ids, reserved_blocks, metrics)
+    }
+
     /// Tear down a sequence that never completed (prefill failure): release
     /// its blocks and the whole reservation.
     pub fn abort(&mut self, seq: &mut PagedSeqCache, reserved_blocks: usize, metrics: &ServeMetrics) {
@@ -744,6 +760,43 @@ mod tests {
         sh.finish(&mut seq, &prompt_b, adm.reserved_blocks, &m);
         assert!(sh.pool.live_bytes() <= budget * sh.block_bytes());
         assert_eq!(sh.mgr.blocks_in_use, 0);
+    }
+
+    #[test]
+    fn cancel_mid_decode_promotes_full_blocks_and_frees_reservation() {
+        let mut sh = shard(Some(8));
+        let m = ServeMetrics::default();
+        let prompt: Vec<i32> = (0..8).collect(); // 2 full blocks of 4
+        let adm = sh.admit_stored(&prompt, 8, &m).expect("admit");
+        assert_eq!(adm.reserved_blocks, 4, "prompt (2) + max_new (2) blocks");
+        let in_use_before = sh.mgr.blocks_in_use;
+        let mut seq = adm.seq;
+        let mut ids = prompt.clone();
+        for &id in &prompt {
+            let (k, v) = codes(id);
+            seq.append(&mut sh.pool, &k, &v).unwrap();
+        }
+        // Three decode tokens land before the cancel: 11 cached tokens =
+        // 2 full blocks + 1 partial tail.
+        for &id in &[100i32, 101, 102] {
+            let (k, v) = codes(id);
+            seq.append(&mut sh.pool, &k, &v).unwrap();
+            ids.push(id);
+        }
+        let promoted = sh.cancel(&mut seq, &ids, adm.reserved_blocks, &m);
+        assert_eq!(promoted, 2, "completed full blocks stay warm");
+        assert_eq!(
+            sh.mgr.blocks_in_use,
+            in_use_before - adm.reserved_blocks,
+            "reservation fully returned"
+        );
+        assert_eq!(sh.mgr.cached_blocks, 2);
+        assert_eq!(sh.pool.live_blocks(), 2, "partial tail block freed");
+        // The interrupted turn's prefix is immediately matchable (a session
+        // follow-up attaches to these blocks).
+        assert_eq!(sh.radix.match_prefix(&ids).hit_tokens, 8);
+        // Budget is genuinely recovered: the same admission succeeds again.
+        assert!(sh.admit_stored(&prompt, 8, &m).is_ok());
     }
 
     #[test]

@@ -33,11 +33,21 @@
 //!                     whole-block unpack → batch stage, all through reused
 //!                     scratch (see the `kvcache` module doc for the full
 //!                     batch-kernel dataflow).
-//! * [`coordinator`] — sharded serve pool: least-loaded router with
+//! * [`coordinator`] — sharded serve pool: least-loaded router (session-
+//!                     affinity hashing for multi-turn requests) with
 //!                     pool-wide admission control over N engine workers,
-//!                     continuous batcher, decode scheduler.
-//! * [`server`]      — TCP line-protocol server and client (fronts the pool).
-//! * [`metrics`]     — latency/throughput/memory-traffic telemetry, merged
+//!                     continuous batcher, decode scheduler.  Requests are
+//!                     event streams (`Started`/`Token`/`Done`/`Failed`)
+//!                     with mid-decode cancellation that frees the lane and
+//!                     cache blocks immediately; `submit`/`submit_async`
+//!                     are drain-to-`Response` wrappers.
+//! * [`server`]      — TCP wire protocol v2: v1 single-line requests plus
+//!                     `"stream": true` NDJSON event frames with a
+//!                     `ttft_ms`/`queue_ms`-bearing terminal frame;
+//!                     client disconnect cancels mid-decode.  Blocking
+//!                     accept + condvar `StopSignal` shutdown.
+//! * [`metrics`]     — latency/throughput/memory-traffic telemetry (incl.
+//!                     TTFT histograms and cancellation counts), merged
 //!                     per-worker into pool-level aggregates.
 
 pub mod bench_support;

@@ -8,9 +8,6 @@
 //! only needed once, for `make artifacts`.
 
 
-use std::sync::atomic::AtomicBool;
-use std::sync::Arc;
-
 use anyhow::{bail, Context, Result};
 
 use cq::calib::CalibData;
@@ -25,6 +22,7 @@ use cq::runtime::Engine;
 use cq::train::{ckpt_dir, load_checkpoint, save_checkpoint, train, TrainCfg};
 use cq::util::cli::Args;
 use cq::util::human_bytes;
+use cq::util::json::Json;
 
 const USAGE: &str = "\
 cq-serve — Coupled Quantization KV-cache serving stack
@@ -44,7 +42,8 @@ COMMANDS
   serve       --model small --port 7878 [--cq 8c8b] [--batch 8]
               [--workers 2] [--cache-budget-mb 64] [--block-tokens 16]
               [--no-prefix-sharing]
-  client      --port 7878 --prompt \"...\" [--max-tokens 32]
+  client      --port 7878 --prompt \"...\" [--max-tokens 32] [--top-k 40]
+              [--seed 7] [--session 12] [--stream]
   gen-corpus  --corpus wiki2s --split train --bytes 200000 [--out file]
 ";
 
@@ -313,6 +312,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         temperature: args.f64("temperature", 0.0) as f32,
         top_k: args.usize("top-k", 0),
         seed: args.u64("seed", 1),
+        session_id: None,
     };
     let resp = handle.submit(req)?;
     println!("--- completion ({} tokens, cache {}) ---", resp.gen_tokens, human_bytes(resp.cache_bytes));
@@ -337,19 +337,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.batch
     );
     let pool = ServePool::start(cfg, workers);
-    let stop = Arc::new(AtomicBool::new(false));
+    let stop = cq::server::StopSignal::new();
     cq::server::serve_tcp(&pool, &format!("127.0.0.1:{port}"), stop)?;
     pool.shutdown()
 }
 
 fn cmd_client(args: &Args) -> Result<()> {
     let port = args.usize("port", 7878);
-    let resp = cq::server::client_request(
-        &format!("127.0.0.1:{port}"),
-        &args.str("prompt", "The castle of Aldenport "),
-        args.usize("max-tokens", 32),
-        args.f64("temperature", 0.0) as f32,
-    )?;
+    let addr = format!("127.0.0.1:{port}");
+    let mut pairs = vec![
+        ("prompt", Json::Str(args.str("prompt", "The castle of Aldenport "))),
+        ("max_tokens", Json::Num(args.usize("max-tokens", 32) as f64)),
+        ("temperature", Json::Num(args.f64("temperature", 0.0))),
+        ("top_k", Json::Num(args.usize("top-k", 0) as f64)),
+    ];
+    if args.has("seed") {
+        pairs.push(("seed", Json::Num(args.u64("seed", 0) as f64)));
+    }
+    if args.has("session") {
+        pairs.push(("session", Json::Num(args.u64("session", 0) as f64)));
+    }
+    if args.flag("stream") {
+        // Protocol v2: print token text as frames arrive, then the terminal
+        // done/failed frame with its latency breakdown.
+        pairs.push(("stream", Json::Bool(true)));
+        let line = Json::obj(pairs).dump();
+        let terminal = cq::server::client_stream(&addr, &line, |frame| {
+            if frame.str_or("event", "") == "token" {
+                print!("{}", frame.str_or("text", ""));
+                use std::io::Write as _;
+                let _ = std::io::stdout().flush();
+            }
+        })?;
+        println!();
+        println!("{}", terminal.dump());
+        return Ok(());
+    }
+    let resp = cq::server::client_request_line(&addr, &Json::obj(pairs).dump())?;
     println!("{}", resp.dump());
     Ok(())
 }

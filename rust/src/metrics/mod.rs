@@ -142,9 +142,17 @@ pub struct ServeMetrics {
     pub prefill_latency: Histogram,
     pub decode_step_latency: Histogram,
     pub request_latency: Histogram,
+    /// Time-to-first-token: request arrival at the worker to the first
+    /// `Token` event (end of prefill) — the streaming API's headline
+    /// latency.
+    pub ttft: Histogram,
     pub tokens_out: Counter,
     pub requests_done: Counter,
     pub requests_rejected: Counter,
+    /// Requests cancelled mid-flight (explicit `Inbound::Cancel` or a
+    /// disconnected event stream): their lane and cache reservation were
+    /// reclaimed before `max_new` was exhausted.
+    pub requests_cancelled: Counter,
     /// Cache-budget accounting: bytes reserved / released by this shard's
     /// `CacheManager` (in_use = reserved - released, cached radix blocks
     /// included) and the shard's peak.
@@ -199,11 +207,13 @@ impl ServeMetrics {
 
     pub fn summary(&self, wall_secs: f64) -> String {
         format!(
-            "requests={} rejected={} tokens={} tput={:.1} tok/s  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms  cache peak={}B  prefix hit={:.0}% evicted={} frag={}B",
+            "requests={} rejected={} cancelled={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms  cache peak={}B  prefix hit={:.0}% evicted={} frag={}B",
             self.requests_done.get(),
             self.requests_rejected.get(),
+            self.requests_cancelled.get(),
             self.tokens_out.get(),
             self.tokens_out.get() as f64 / wall_secs.max(1e-9),
+            self.ttft.percentile_ms(0.5),
             self.decode_step_latency.percentile_ms(0.5),
             self.decode_step_latency.percentile_ms(0.95),
             self.request_latency.percentile_ms(0.5),
@@ -263,6 +273,11 @@ impl PoolMetrics {
     /// admission control) rejections.
     pub fn requests_rejected(&self) -> u64 {
         self.sum(|m| m.requests_rejected.get()) + self.router_rejected.get()
+    }
+
+    /// Requests cancelled mid-flight across all workers.
+    pub fn requests_cancelled(&self) -> u64 {
+        self.sum(|m| m.requests_cancelled.get())
     }
 
     pub fn cache_bytes_reserved(&self) -> u64 {
@@ -350,17 +365,28 @@ impl PoolMetrics {
         h
     }
 
+    /// All workers' time-to-first-token samples merged into one histogram.
+    pub fn merged_ttft(&self) -> Histogram {
+        let h = Histogram::new();
+        for m in &self.workers {
+            h.merge_from(&m.ttft);
+        }
+        h
+    }
+
     /// Pool summary line followed by one indented line per worker.
     pub fn summary(&self, wall_secs: f64) -> String {
         let decode = self.merged_decode_latency();
         let e2e = self.merged_request_latency();
         let mut s = format!(
-            "pool[{}w]: requests={} rejected={} tokens={} tput={:.1} tok/s  decode p50={:.2}ms  e2e p95={:.1}ms  cache in_use={}B peak<={}B  prefix hit={:.0}% cached={}B evicted={}",
+            "pool[{}w]: requests={} rejected={} cancelled={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms  decode p50={:.2}ms  e2e p95={:.1}ms  cache in_use={}B peak<={}B  prefix hit={:.0}% cached={}B evicted={}",
             self.n_workers(),
             self.requests_done(),
             self.requests_rejected(),
+            self.requests_cancelled(),
             self.tokens_out(),
             self.tokens_out() as f64 / wall_secs.max(1e-9),
+            self.merged_ttft().percentile_ms(0.5),
             decode.percentile_ms(0.5),
             e2e.percentile_ms(0.95),
             self.cache_bytes_in_use(),
@@ -493,6 +519,24 @@ mod tests {
         assert_eq!(pool.requests_rejected(), 3);
         let s = pool.summary(1.0);
         assert!(s.contains("prefix hit"), "{s}");
+    }
+
+    #[test]
+    fn cancelled_and_ttft_aggregate_across_workers() {
+        let w0 = Arc::new(ServeMetrics::default());
+        let w1 = Arc::new(ServeMetrics::default());
+        w0.requests_cancelled.add(2);
+        w1.requests_cancelled.add(1);
+        w0.ttft.record(Duration::from_millis(4));
+        w1.ttft.record(Duration::from_millis(16));
+        let pool = PoolMetrics::new(vec![w0.clone(), w1]);
+        assert_eq!(pool.requests_cancelled(), 3);
+        assert_eq!(pool.merged_ttft().count(), 2);
+        assert!(pool.merged_ttft().percentile_ms(1.0) >= 16.0);
+        let s = pool.summary(1.0);
+        assert!(s.contains("cancelled=3"), "{s}");
+        assert!(s.contains("ttft"), "{s}");
+        assert!(w0.summary(1.0).contains("cancelled=2"));
     }
 
     #[test]

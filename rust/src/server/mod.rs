@@ -1,83 +1,213 @@
-//! TCP inference server + client (line-delimited JSON protocol).
+//! TCP inference server + client (line-delimited JSON, protocol v2).
 //!
-//! Request line:  `{"prompt": "...", "max_tokens": 32, "temperature": 0.8,
-//!                  "top_k": 40}`
-//! Response line: `{"id": 1, "text": "...", "prompt_tokens": 12,
-//!                  "prefix_hit_tokens": 8, "gen_tokens": 32,
-//!                  "prefill_ms": ..., "decode_ms": ..., "cache_bytes": ...}`
+//! **v1 (non-streaming)** — one request line, one response line:
+//!
+//! ```text
+//! -> {"prompt": "...", "max_tokens": 32, "temperature": 0.8, "top_k": 40,
+//!     "seed": 7, "session": 12}
+//! <- {"id": 1, "text": "...", "prompt_tokens": 12, "prefix_hit_tokens": 8,
+//!     "gen_tokens": 32, "queue_ms": ..., "ttft_ms": ..., "prefill_ms": ...,
+//!     "decode_ms": ..., "cache_bytes": ...}
+//! ```
+//!
+//! **v2 (streaming)** — add `"stream": true` and the same connection
+//! receives NDJSON event frames as the worker produces them:
+//!
+//! ```text
+//! <- {"event": "started", "id": 1}
+//! <- {"event": "token", "id": 1, "index": 0, "text": "T"}
+//! <- ...
+//! <- {"event": "done", "id": 1, "text": "...", "ttft_ms": ..., ...}   (or)
+//! <- {"event": "failed", "id": 1, "error": "..."}
+//! ```
+//!
+//! The terminal `done` frame carries the full v1 response fields (including
+//! `ttft_ms` and `queue_ms`).  A failed frame write — the client
+//! disconnected mid-stream — cancels the request on its worker: the decode
+//! lane frees and the shard's reserved blocks return to the budget instead
+//! of burning until `max_new`.  Malformed requests (including a missing or
+//! empty `prompt`) get an `{"error": ...}` line and the connection lives
+//! on.  `"session": N` keys multi-turn continuation: a follow-up turn sends
+//! only its new text and resumes from the session's radix-cached history.
+//! Note the byte-level tokenizer: token frames carry per-byte text, so
+//! non-ASCII output surfaces as replacement characters in frames while the
+//! terminal `text` decodes the full byte string.
 //!
 //! Connection threads are thin: they parse, forward to the serve pool's
-//! router, and stream the response back.  All model work happens on the
-//! pool's engine worker threads (`coordinator::pool` + `serve_loop`); the
-//! router spreads concurrent connections across workers least-loaded-first.
+//! router, and stream events back.  All model work happens on the pool's
+//! engine worker threads (`coordinator::pool` + `serve_loop`).  The accept
+//! loop blocks in `accept()` — zero idle wakeups — and shutdown is a
+//! condvar [`StopSignal`] whose waker pokes the listener with a loopback
+//! connection, so `stop` latency is a connect round-trip, not a poll tick.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{Request, Response, ServePool};
+use crate::coordinator::{Event, Request, Response, ServePool};
 use crate::util::json::Json;
 
-/// Parse one request line into a [`Request`].
-pub fn parse_request(line: &str, id: u64) -> Result<Request> {
+/// Condvar-backed stop flag for [`serve_tcp`]: `raise()` wakes the waiter
+/// immediately (no sleep-poll anywhere on the shutdown path).
+pub struct StopSignal {
+    raised: AtomicBool,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl StopSignal {
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> Arc<StopSignal> {
+        Arc::new(StopSignal {
+            raised: AtomicBool::new(false),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Raise the signal and wake every waiter.  Idempotent.
+    pub fn raise(&self) {
+        self.raised.store(true, Ordering::SeqCst);
+        let _guard = self.lock.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    pub fn raised(&self) -> bool {
+        self.raised.load(Ordering::SeqCst)
+    }
+
+    /// Park until the signal is raised (condvar wait, zero wakeups while
+    /// idle).
+    pub fn wait(&self) {
+        let mut guard = self.lock.lock().unwrap();
+        while !self.raised() {
+            guard = self.cv.wait(guard).unwrap();
+        }
+    }
+}
+
+/// Parse one request line into a [`Request`] plus its `stream` flag.
+/// A missing or empty `prompt` is a protocol error (the old behavior of
+/// silently serving the empty prompt hid client bugs).
+pub fn parse_request(line: &str, id: u64) -> Result<(Request, bool)> {
     let j = Json::parse(line).context("request JSON")?;
-    Ok(Request {
+    let prompt = j.str_or("prompt", "");
+    if prompt.is_empty() {
+        bail!("missing or empty 'prompt'");
+    }
+    let req = Request {
         id,
-        prompt: j.str_or("prompt", ""),
+        prompt,
         max_new: j.num_or("max_tokens", 32.0) as usize,
         temperature: j.num_or("temperature", 0.0) as f32,
         top_k: j.num_or("top_k", 0.0) as usize,
         seed: j.num_or("seed", id as f64) as u64,
-    })
+        session_id: j.get("session").and_then(Json::as_f64).map(|s| s as u64),
+    };
+    let stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    Ok((req, stream))
 }
 
-/// Serialize a [`Response`] to its wire line.
-pub fn format_response(r: &Response) -> String {
-    Json::obj(vec![
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
+}
+
+/// The wire fields of a [`Response`] (shared by the v1 response line and
+/// the v2 terminal `done` frame).
+fn response_fields(r: &Response) -> Vec<(&'static str, Json)> {
+    vec![
         ("id", Json::Num(r.id as f64)),
         ("text", Json::Str(r.text.clone())),
         ("prompt_tokens", Json::Num(r.prompt_tokens as f64)),
         ("prefix_hit_tokens", Json::Num(r.prefix_hit_tokens as f64)),
         ("gen_tokens", Json::Num(r.gen_tokens as f64)),
-        ("prefill_ms", Json::Num((r.prefill_ms * 100.0).round() / 100.0)),
-        ("decode_ms", Json::Num((r.decode_ms * 100.0).round() / 100.0)),
+        ("queue_ms", Json::Num(round2(r.queue_ms))),
+        ("ttft_ms", Json::Num(round2(r.ttft_ms))),
+        ("prefill_ms", Json::Num(round2(r.prefill_ms))),
+        ("decode_ms", Json::Num(round2(r.decode_ms))),
         ("cache_bytes", Json::Num(r.cache_bytes as f64)),
-    ])
-    .dump()
+    ]
+}
+
+/// Serialize a [`Response`] to its v1 wire line.
+pub fn format_response(r: &Response) -> String {
+    Json::obj(response_fields(r)).dump()
+}
+
+/// Serialize one lifecycle [`Event`] to its v2 NDJSON frame.
+pub fn format_event(ev: &Event) -> String {
+    match ev {
+        Event::Started { id } => Json::obj(vec![
+            ("event", Json::Str("started".into())),
+            ("id", Json::Num(*id as f64)),
+        ])
+        .dump(),
+        Event::Token { id, index, text } => Json::obj(vec![
+            ("event", Json::Str("token".into())),
+            ("id", Json::Num(*id as f64)),
+            ("index", Json::Num(*index as f64)),
+            ("text", Json::Str(text.clone())),
+        ])
+        .dump(),
+        Event::Done(r) => {
+            let mut fields = response_fields(r);
+            fields.push(("event", Json::Str("done".into())));
+            Json::obj(fields).dump()
+        }
+        Event::Failed { id, reason } => Json::obj(vec![
+            ("event", Json::Str("failed".into())),
+            ("id", Json::Num(*id as f64)),
+            ("error", Json::Str(reason.clone())),
+        ])
+        .dump(),
+    }
 }
 
 /// Serve on `addr` until `stop` is raised.  Each connection may pipeline
 /// multiple newline-delimited requests; concurrent connections are routed
-/// across the pool's workers.
-pub fn serve_tcp(pool: &ServePool, addr: &str, stop: Arc<AtomicBool>) -> Result<()> {
+/// across the pool's workers.  The listener blocks in `accept()`; raising
+/// `stop` wakes it via a loopback connection from the waker thread.
+pub fn serve_tcp(pool: &ServePool, addr: &str, stop: Arc<StopSignal>) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    listener.set_nonblocking(true)?;
+    let local = listener.local_addr()?;
     println!("[server] listening on {addr}");
     let next_id = Arc::new(AtomicU64::new(1));
     std::thread::scope(|scope| -> Result<()> {
+        // Waker: parks on the stop condvar (no idle wakeups) and pokes the
+        // blocking accept when the signal is raised.  Every return path
+        // below raises the signal, so this thread always exits and the
+        // scope can close.
+        {
+            let stop = stop.clone();
+            scope.spawn(move || {
+                stop.wait();
+                let _ = TcpStream::connect(local);
+            });
+        }
         loop {
-            match listener.accept() {
-                Ok((stream, peer)) => {
-                    log::info!("connection from {peer}");
-                    let ids = next_id.clone();
-                    let p = pool;
-                    scope.spawn(move || {
-                        if let Err(e) = handle_conn(p, stream, &ids) {
-                            log::warn!("connection error: {e:#}");
-                        }
-                    });
+            let (stream, peer) = match listener.accept() {
+                Ok(conn) => conn,
+                Err(e) => {
+                    stop.raise();
+                    return Err(e).with_context(|| format!("accept on {addr}"));
                 }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if stop.load(Ordering::Relaxed) {
-                        return Ok(());
-                    }
-                    std::thread::sleep(std::time::Duration::from_millis(20));
-                }
-                Err(e) => return Err(e.into()),
+            };
+            if stop.raised() {
+                // Either the waker's poke or a client racing the shutdown;
+                // drop it and exit.
+                return Ok(());
             }
+            log::info!("connection from {peer}");
+            let ids = next_id.clone();
+            let p = pool;
+            scope.spawn(move || {
+                if let Err(e) = handle_conn(p, stream, &ids) {
+                    log::warn!("connection error: {e:#}");
+                }
+            });
         }
     })
 }
@@ -91,8 +221,8 @@ fn handle_conn(pool: &ServePool, stream: TcpStream, ids: &AtomicU64) -> Result<(
             continue;
         }
         let id = ids.fetch_add(1, Ordering::Relaxed);
-        let resp = match parse_request(&line, id) {
-            Ok(req) => pool.submit(req)?,
+        let (req, streaming) = match parse_request(&line, id) {
+            Ok(parsed) => parsed,
             Err(e) => {
                 writeln!(writer, "{}", Json::obj(vec![
                     ("error", Json::Str(format!("{e:#}"))),
@@ -100,24 +230,97 @@ fn handle_conn(pool: &ServePool, stream: TcpStream, ids: &AtomicU64) -> Result<(
                 continue;
             }
         };
-        writeln!(writer, "{}", format_response(&resp))?;
+        if streaming {
+            stream_response(pool, &mut writer, req)?;
+        } else {
+            let resp = pool.submit(req)?;
+            writeln!(writer, "{}", format_response(&resp))?;
+        }
     }
     Ok(())
 }
 
-/// Blocking client: send one prompt, return the parsed response line.
-pub fn client_request(addr: &str, prompt: &str, max_tokens: usize, temperature: f32) -> Result<Json> {
+/// Drive one v2 streaming request: forward every event as an NDJSON frame.
+/// A failed write means the client disconnected — cancel the request so its
+/// lane and reserved cache blocks are reclaimed mid-decode instead of
+/// decoding to `max_new` for nobody.
+fn stream_response(pool: &ServePool, writer: &mut TcpStream, req: Request) -> Result<()> {
+    let handle = pool.submit_stream(req)?;
+    let canceller = handle.canceller();
+    for ev in handle {
+        let terminal = ev.is_terminal();
+        let wrote = writeln!(writer, "{}", format_event(&ev)).and_then(|()| writer.flush());
+        if wrote.is_err() {
+            canceller.cancel();
+            // Dropping the handle (loop exit) also disconnects the event
+            // channel, so the worker's next token send observes the dead
+            // receiver even if the Cancel message races a completion.
+            bail!("client disconnected mid-stream; request cancelled");
+        }
+        if terminal {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Blocking v1 client: send one raw request line, return the parsed
+/// response line.
+pub fn client_request_line(addr: &str, line: &str) -> Result<Json> {
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-    let req = Json::obj(vec![
+    writeln!(stream, "{line}")?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    Json::parse(resp.trim())
+}
+
+/// Blocking client: send one prompt, return the parsed response line.
+/// `seed: None` lets the server derive its default (the request id).
+pub fn client_request(
+    addr: &str,
+    prompt: &str,
+    max_tokens: usize,
+    temperature: f32,
+    top_k: usize,
+    seed: Option<u64>,
+) -> Result<Json> {
+    let mut pairs = vec![
         ("prompt", Json::Str(prompt.to_string())),
         ("max_tokens", Json::Num(max_tokens as f64)),
         ("temperature", Json::Num(temperature as f64)),
-    ]);
-    writeln!(stream, "{}", req.dump())?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    Json::parse(line.trim())
+        ("top_k", Json::Num(top_k as f64)),
+    ];
+    if let Some(s) = seed {
+        pairs.push(("seed", Json::Num(s as f64)));
+    }
+    client_request_line(addr, &Json::obj(pairs).dump())
+}
+
+/// Streaming v2 client: send one raw request line (the caller sets
+/// `"stream": true`), invoke `on_frame` for every NDJSON frame, and return
+/// the terminal (`done`/`failed`) frame.
+pub fn client_stream(
+    addr: &str,
+    line: &str,
+    mut on_frame: impl FnMut(&Json),
+) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    writeln!(stream, "{line}")?;
+    let reader = BufReader::new(stream);
+    for frame_line in reader.lines() {
+        let frame_line = frame_line?;
+        if frame_line.trim().is_empty() {
+            continue;
+        }
+        let frame = Json::parse(frame_line.trim())?;
+        on_frame(&frame);
+        let ev = frame.str_or("event", "");
+        if ev == "done" || ev == "failed" || frame.get("error").is_some() {
+            return Ok(frame);
+        }
+    }
+    bail!("stream ended without a terminal frame")
 }
 
 #[cfg(test)]
@@ -126,33 +329,115 @@ mod tests {
 
     #[test]
     fn parse_request_fields_and_defaults() {
-        let r = parse_request(r#"{"prompt": "hi", "max_tokens": 8}"#, 3).unwrap();
+        let (r, stream) = parse_request(r#"{"prompt": "hi", "max_tokens": 8}"#, 3).unwrap();
+        assert!(!stream, "v1 requests default to non-streaming");
         assert_eq!(r.id, 3);
         assert_eq!(r.prompt, "hi");
         assert_eq!(r.max_new, 8);
         assert_eq!(r.temperature, 0.0);
         assert_eq!(r.seed, 3);
+        assert_eq!(r.session_id, None);
         assert!(parse_request("not json", 1).is_err());
     }
 
     #[test]
-    fn response_roundtrips_through_wire_format() {
-        let r = Response {
+    fn parse_request_v2_fields() {
+        let (r, stream) = parse_request(
+            r#"{"prompt": "hi", "stream": true, "session": 12, "top_k": 5, "seed": 99}"#,
+            4,
+        )
+        .unwrap();
+        assert!(stream);
+        assert_eq!(r.session_id, Some(12));
+        assert_eq!(r.top_k, 5);
+        assert_eq!(r.seed, 99);
+        // stream: false is the explicit v1 form.
+        let (_, s2) = parse_request(r#"{"prompt": "x", "stream": false}"#, 5).unwrap();
+        assert!(!s2);
+    }
+
+    #[test]
+    fn missing_or_empty_prompt_is_rejected() {
+        for bad in [r#"{"max_tokens": 4}"#, r#"{"prompt": ""}"#, "{}"] {
+            let err = parse_request(bad, 1).unwrap_err();
+            assert!(err.to_string().contains("prompt"), "{bad}: {err}");
+        }
+    }
+
+    fn sample_response() -> Response {
+        Response {
             id: 9,
             text: "abc\ndef".into(),
             prompt_tokens: 4,
             prefix_hit_tokens: 3,
             gen_tokens: 7,
-            queue_ms: 0.0,
+            queue_ms: 3.456,
+            ttft_ms: 1.234,
             prefill_ms: 1.25,
             decode_ms: 10.5,
             cache_bytes: 1234,
-        };
+        }
+    }
+
+    #[test]
+    fn response_roundtrips_through_wire_format() {
+        let r = sample_response();
         let line = format_response(&r);
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.num_or("id", 0.0), 9.0);
         assert_eq!(j.str_or("text", ""), "abc\ndef");
         assert_eq!(j.num_or("cache_bytes", 0.0), 1234.0);
         assert_eq!(j.num_or("prefix_hit_tokens", 0.0), 3.0);
+        // queue_ms and ttft_ms are on the wire (rounded to 2 decimals).
+        assert_eq!(j.num_or("queue_ms", 0.0), 3.46);
+        assert_eq!(j.num_or("ttft_ms", 0.0), 1.23);
+    }
+
+    #[test]
+    fn event_frames_serialize_and_roundtrip() {
+        let started = Json::parse(&format_event(&Event::Started { id: 2 })).unwrap();
+        assert_eq!(started.str_or("event", ""), "started");
+        assert_eq!(started.num_or("id", 0.0), 2.0);
+
+        let token = Json::parse(&format_event(&Event::Token {
+            id: 2,
+            index: 5,
+            text: "x".into(),
+        }))
+        .unwrap();
+        assert_eq!(token.str_or("event", ""), "token");
+        assert_eq!(token.num_or("index", 0.0), 5.0);
+        assert_eq!(token.str_or("text", ""), "x");
+
+        let done = Json::parse(&format_event(&Event::Done(sample_response()))).unwrap();
+        assert_eq!(done.str_or("event", ""), "done");
+        assert_eq!(done.str_or("text", ""), "abc\ndef");
+        assert_eq!(done.num_or("ttft_ms", 0.0), 1.23);
+        assert_eq!(done.num_or("queue_ms", 0.0), 3.46);
+
+        let failed = Json::parse(&format_event(&Event::Failed {
+            id: 3,
+            reason: "[cancelled]".into(),
+        }))
+        .unwrap();
+        assert_eq!(failed.str_or("event", ""), "failed");
+        assert_eq!(failed.str_or("error", ""), "[cancelled]");
+    }
+
+    #[test]
+    fn stop_signal_wakes_a_parked_waiter() {
+        let stop = StopSignal::new();
+        assert!(!stop.raised());
+        let s2 = stop.clone();
+        let waiter = std::thread::spawn(move || {
+            s2.wait();
+            s2.raised()
+        });
+        // Give the waiter a moment to park, then raise.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        stop.raise();
+        assert!(waiter.join().unwrap());
+        stop.raise(); // idempotent
+        assert!(stop.raised());
     }
 }

@@ -1,15 +1,18 @@
-//! Serving-stack integration: ServeHandle + TCP server against the real
-//! decode artifacts.  Requires a trained `small` checkpoint + CQ-8c8b
-//! codebooks; builds them on demand via bench_support (slow first run,
-//! cached afterwards).  Skips gracefully when artifacts/PJRT are absent.
+//! Serving-stack integration: ServeHandle + TCP server (wire protocol v2)
+//! against the real decode artifacts.  Requires a trained `small`
+//! checkpoint + CQ-8c8b codebooks; builds them on demand via bench_support
+//! (slow first run, cached afterwards).  Skips gracefully when
+//! artifacts/PJRT are absent.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 use cq::bench_support::Pipeline;
 use cq::coordinator::{Request, ServeConfig, ServeHandle};
 use cq::quant::cq::CqSpec;
-use cq::server::{client_request, serve_tcp};
+use cq::server::{client_request, client_stream, serve_tcp, StopSignal};
+use cq::util::json::Json;
 
 /// Skip (returning false) when the PJRT runtime or artifacts are missing.
 fn ready() -> bool {
@@ -77,6 +80,53 @@ fn serve_loop_cq_and_fp_agree_on_shapes_and_make_text() {
 }
 
 #[test]
+fn streamed_request_matches_blocking_submit() {
+    if !ready() {
+        return;
+    }
+    ensure_assets();
+    let handle = ServeHandle::start(cq_config(1));
+    let blocking = handle
+        .submit(Request::greedy(1, "The castle of Aldenport ", 10))
+        .unwrap();
+
+    use cq::coordinator::Event;
+    let stream = handle
+        .submit_stream(Request::greedy(2, "The castle of Aldenport ", 10))
+        .unwrap();
+    let mut started = 0;
+    let mut tokens = String::new();
+    let mut n_tokens = 0usize;
+    let mut done = None;
+    for ev in stream {
+        match ev {
+            Event::Started { id } => {
+                assert_eq!(id, 2);
+                started += 1;
+            }
+            Event::Token { index, text, .. } => {
+                assert_eq!(index, n_tokens, "token indices are contiguous");
+                n_tokens += 1;
+                tokens.push_str(&text);
+            }
+            Event::Done(r) => done = Some(r),
+            Event::Failed { reason, .. } => panic!("unexpected failure: {reason}"),
+        }
+    }
+    assert_eq!(started, 1);
+    let done = done.expect("terminal Done event");
+    assert!(n_tokens >= 1, "at least one Token event before Done");
+    assert_eq!(n_tokens, done.gen_tokens);
+    assert_eq!(tokens, done.text, "token texts concatenate to the response");
+    assert_eq!(
+        done.text, blocking.text,
+        "streaming must not change greedy decode"
+    );
+    assert!(done.ttft_ms > 0.0, "TTFT is measured");
+    handle.shutdown().unwrap();
+}
+
+#[test]
 fn cq_serving_learns_the_corpus_grammar() {
     if !ready() {
         return;
@@ -103,7 +153,7 @@ fn tcp_server_roundtrip() {
     }
     ensure_assets();
     let handle = ServeHandle::start(cq_config(8));
-    let stop = Arc::new(AtomicBool::new(false));
+    let stop = StopSignal::new();
     let stop2 = stop.clone();
     let addr = "127.0.0.1:17917";
 
@@ -111,12 +161,160 @@ fn tcp_server_roundtrip() {
         let h = handle.pool();
         let server = scope.spawn(move || serve_tcp(h, addr, stop2).unwrap());
         // Wait for bind.
-        std::thread::sleep(std::time::Duration::from_millis(300));
-        let resp = client_request(addr, "Travellers often mention the ancient ", 10, 0.0)
+        std::thread::sleep(Duration::from_millis(300));
+        let resp = client_request(addr, "Travellers often mention the ancient ", 10, 0.0, 0, None)
             .expect("client roundtrip");
         assert!(resp.get("text").is_some(), "{}", resp.dump());
         assert_eq!(resp.num_or("gen_tokens", 0.0) as usize, 10);
-        stop.store(true, Ordering::Relaxed);
+        // v2 satellite: queue_ms and ttft_ms ride the v1 wire line too.
+        assert!(resp.get("queue_ms").is_some(), "{}", resp.dump());
+        assert!(resp.get("ttft_ms").is_some(), "{}", resp.dump());
+        // An empty prompt is a wire error, not an empty-prompt generation.
+        let err = cq::server::client_request_line(addr, r#"{"prompt": ""}"#)
+            .expect("error line");
+        assert!(err.get("error").is_some(), "{}", err.dump());
+        stop.raise();
+        server.join().unwrap();
+    });
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn tcp_streaming_frames_and_session_continuation() {
+    if !ready() {
+        return;
+    }
+    ensure_assets();
+    let handle = ServeHandle::start(cq_config(8));
+    let stop = StopSignal::new();
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:17918";
+
+    std::thread::scope(|scope| {
+        let h = handle.pool();
+        let server = scope.spawn(move || serve_tcp(h, addr, stop2).unwrap());
+        std::thread::sleep(Duration::from_millis(300));
+
+        // Turn 1 (streaming, 32-byte prompt = two full 16-token blocks).
+        let prompt = "S".repeat(32);
+        let line = Json::obj(vec![
+            ("prompt", Json::Str(prompt.clone())),
+            ("max_tokens", Json::Num(17.0)),
+            ("stream", Json::Bool(true)),
+            ("session", Json::Num(5.0)),
+        ])
+        .dump();
+        let mut n_tokens = 0usize;
+        let mut text = String::new();
+        let terminal = client_stream(addr, &line, |frame| {
+            if frame.str_or("event", "") == "token" {
+                n_tokens += 1;
+                text.push_str(&frame.str_or("text", ""));
+            }
+        })
+        .expect("streaming roundtrip");
+        assert_eq!(terminal.str_or("event", ""), "done", "{}", terminal.dump());
+        assert!(n_tokens >= 1, "token frames precede the done frame");
+        assert_eq!(terminal.num_or("gen_tokens", 0.0) as usize, n_tokens);
+        assert_eq!(terminal.str_or("text", ""), text);
+        assert!(terminal.get("ttft_ms").is_some());
+        assert!(terminal.get("queue_ms").is_some());
+        let turn1_len = prompt.len() + n_tokens;
+
+        // Turn 2: same session, only the new text goes over the wire.  The
+        // worker prepends the stored history, so the reported prompt span
+        // covers the whole conversation and the radix hit covers at least
+        // the prior turn (block-floored: 32 + 17 tokens cached -> 48).
+        let line2 = Json::obj(vec![
+            ("prompt", Json::Str(" and so ".into())),
+            ("max_tokens", Json::Num(4.0)),
+            ("session", Json::Num(5.0)),
+        ])
+        .dump();
+        let resp2 = cq::server::client_request_line(addr, &line2).expect("turn 2");
+        assert_eq!(
+            resp2.num_or("prompt_tokens", 0.0) as usize,
+            turn1_len + " and so ".len(),
+            "{}",
+            resp2.dump()
+        );
+        let block = 16;
+        let prior_cached = (turn1_len - 1) / block * block;
+        assert!(
+            resp2.num_or("prefix_hit_tokens", 0.0) as usize >= prior_cached,
+            "follow-up turn resumes from the prior turn's blocks: {}",
+            resp2.dump()
+        );
+
+        stop.raise();
+        server.join().unwrap();
+    });
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn tcp_disconnect_cancels_mid_decode() {
+    if !ready() {
+        return;
+    }
+    ensure_assets();
+    let handle = ServeHandle::start(cq_config(1));
+    let stop = StopSignal::new();
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:17919";
+
+    std::thread::scope(|scope| {
+        let h = handle.pool();
+        let server = scope.spawn(move || serve_tcp(h, addr, stop2).unwrap());
+        std::thread::sleep(Duration::from_millis(300));
+
+        // Ask for a long generation, read a couple of frames, then vanish.
+        {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            writeln!(
+                stream,
+                r#"{{"prompt": "The castle of Aldenport ", "max_tokens": 200, "stream": true}}"#
+            )
+            .unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            for _ in 0..2 {
+                line.clear();
+                reader.read_line(&mut line).unwrap();
+                assert!(!line.trim().is_empty(), "got an event frame");
+            }
+            // Drop both halves: the server's next frame write fails and
+            // must cancel the request on its worker.
+        }
+
+        let metrics = handle.metrics();
+        let t0 = Instant::now();
+        while metrics.requests_cancelled.get() == 0 && t0.elapsed() < Duration::from_secs(30)
+        {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(
+            metrics.requests_cancelled.get(),
+            1,
+            "disconnect observed as a cancellation"
+        );
+        assert!(
+            metrics.tokens_out.get() < 200,
+            "decode stopped well before max_new"
+        );
+        // The lane and cache reservation are reclaimed: a follow-up request
+        // on the same (batch=1) worker completes normally.
+        let resp = client_request(addr, "The castle of Aldenport ", 4, 0.0, 0, None)
+            .expect("lane reusable after cancel");
+        assert_eq!(resp.num_or("gen_tokens", 0.0) as usize, 4);
+        // After the drain, only radix-cached blocks stay resident.
+        assert_eq!(
+            metrics.cache_bytes_in_use(),
+            metrics.cache_cached_bytes(),
+            "cancel returned its reservation"
+        );
+
+        stop.raise();
         server.join().unwrap();
     });
     handle.shutdown().unwrap();

@@ -1,13 +1,16 @@
 //! Sharded serve-pool integration: a 2-worker pool under concurrent client
-//! threads against the real decode artifacts.
+//! threads against the real decode artifacts, plus the v2 streaming
+//! lifecycle (token events, mid-decode cancellation, session continuation).
 //!
 //! Engine-dependent tests gate on `cq::runtime_available()` and skip
 //! gracefully when artifacts/PJRT are absent; the fail-fast test below runs
 //! everywhere.  Requires a trained `small` checkpoint + CQ-8c8b codebooks;
 //! builds them on demand via bench_support (slow first run, cached after).
 
+use std::time::{Duration, Instant};
+
 use cq::bench_support::Pipeline;
-use cq::coordinator::{Request, ServeConfig, ServePool};
+use cq::coordinator::{Event, Request, ServeConfig, ServePool};
 use cq::quant::cq::CqSpec;
 
 const BUDGET: usize = 16 * 1024 * 1024;
@@ -155,6 +158,113 @@ fn shared_prompt_hits_radix_cache_and_decodes_identically() {
     assert_eq!(pool.metrics.prefix_hit_tokens(), 32);
     assert!(pool.metrics.prefix_hit_rate() > 0.0);
     assert!(pool.metrics.cache_cached_bytes() > 0);
+    pool.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn cancel_mid_decode_reclaims_lane_blocks_and_load() {
+    if !cq::runtime_available() {
+        eprintln!("skipping: PJRT runtime / artifacts unavailable (run `make artifacts`)");
+        return;
+    }
+    ensure_assets();
+    let pool = ServePool::start(cq_config(), 1);
+    // Baseline: one completed request so the radix cache is warm and the
+    // steady-state accounting (in_use == cached) is established.
+    let prompt = "The castle of Aldenport ";
+    pool.submit(Request::greedy(1, prompt, 4)).expect("warmup");
+    let m = pool.metrics.worker(0);
+    let in_use_before = m.cache_bytes_in_use();
+
+    // Long-running stream: wait for a mid-decode token, then cancel.
+    let handle = pool
+        .submit_stream(Request::greedy(2, prompt, 200))
+        .expect("stream");
+    let mut saw_token = false;
+    loop {
+        match handle.recv().expect("live stream") {
+            Event::Started { id } => assert_eq!(id, 2),
+            Event::Token { index, .. } => {
+                saw_token = true;
+                if index >= 2 {
+                    break; // genuinely mid-decode
+                }
+            }
+            other => panic!("unexpected pre-cancel event: {other:?}"),
+        }
+    }
+    assert!(saw_token);
+    assert_eq!(pool.loads()[0].1, 7, "one of 8 lanes claimed");
+    handle.cancel();
+    let resp = handle.drain().expect("terminal event after cancel");
+    assert_eq!(resp.text, "[cancelled]");
+    assert_eq!(resp.gen_tokens, 0, "failure response carries no tokens");
+    assert_eq!(m.requests_cancelled.get(), 1);
+
+    // The LoadToken dropped with the run: in-flight returns to zero (the
+    // drop races the Failed event by a hair, so poll briefly).
+    let t0 = Instant::now();
+    while pool.loads()[0].1 != 8 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(pool.loads()[0], (0, 8), "router load fully released");
+
+    // Reserved bytes/blocks return to pre-request levels; only the blocks
+    // promoted at warmup/cancel stay resident as reclaimable cache.
+    assert_eq!(m.cache_bytes_in_use(), m.cache_cached_bytes());
+    assert!(m.cache_bytes_in_use() >= in_use_before);
+    assert!(
+        m.tokens_out.get() < 200,
+        "decode stopped well before max_new"
+    );
+
+    // The lane is immediately reusable for a fresh request.
+    let again = pool.submit(Request::greedy(3, prompt, 4)).expect("reuse");
+    assert_eq!(again.gen_tokens, 4);
+    pool.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn session_follow_up_resumes_from_prior_turn_blocks() {
+    if !cq::runtime_available() {
+        eprintln!("skipping: PJRT runtime / artifacts unavailable (run `make artifacts`)");
+        return;
+    }
+    ensure_assets();
+    // Two workers: session affinity must send both turns to the SAME shard
+    // (least-loaded routing would prefer the idle second worker for turn 2).
+    let pool = ServePool::start(cq_config(), 2);
+    let sid = 7u64;
+    let prompt = "S".repeat(32); // two full 16-token blocks
+    let r1 = pool
+        .submit(Request::greedy(1, &prompt, 17).in_session(sid))
+        .expect("turn 1");
+    assert_eq!(r1.gen_tokens, 17);
+    // Turn 1 cached prompt+gen-1 = 48 tokens = 3 full blocks.
+    let turn1_cached = (r1.prompt_tokens + r1.gen_tokens - 1) / 16 * 16;
+
+    let r2 = pool
+        .submit(Request::greedy(2, " and then", 4).in_session(sid))
+        .expect("turn 2");
+    assert_eq!(
+        r2.prompt_tokens,
+        prompt.len() + 17 + " and then".len(),
+        "the follow-up turn's effective prompt is the whole conversation"
+    );
+    assert!(
+        r2.prefix_hit_tokens >= turn1_cached,
+        "hit {} < prior turn's {} cached tokens",
+        r2.prefix_hit_tokens,
+        turn1_cached
+    );
+    // Exactly one shard served both turns.
+    let busy = pool
+        .metrics
+        .workers()
+        .iter()
+        .filter(|m| m.requests_done.get() > 0)
+        .count();
+    assert_eq!(busy, 1, "session affinity pinned both turns to one shard");
     pool.shutdown().expect("clean shutdown");
 }
 
