@@ -36,6 +36,11 @@ fn main() -> Result<()> {
         kernel: ServeConfig::default_kernel(),
         block_tokens: ServeConfig::default_block_tokens(),
         prefix_sharing: true,
+        sim: None,
+        faults: None,
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
     };
     let handle = ServeHandle::start(cfg);
     let req = Request::greedy(1, "The castle of Aldenport ", 64);

@@ -31,6 +31,11 @@ fn run_mode(cq: Option<String>, workers: usize, n_requests: usize, max_new: usiz
         kernel: ServeConfig::default_kernel(),
         block_tokens: ServeConfig::default_block_tokens(),
         prefix_sharing: true,
+        sim: None,
+        faults: None,
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
     };
     let pool = ServePool::start(cfg, workers);
     let prompts = [
@@ -84,6 +89,11 @@ fn run_streaming_demo() -> Result<()> {
         kernel: ServeConfig::default_kernel(),
         block_tokens: ServeConfig::default_block_tokens(),
         prefix_sharing: true,
+        sim: None,
+        faults: None,
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
     };
     let pool = ServePool::start(cfg, 1);
 

@@ -6,20 +6,21 @@
 //! it to the real decode artifacts.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::Sender;
 use std::time::Instant;
 
 use crate::kvcache::{CacheGeom, PagedSeqCache};
 
 use super::pool::LoadToken;
-use super::{Event, Request};
+use super::{EventSink, Request};
 
 /// One running sequence occupying a batch lane.
 pub struct SeqRun {
     pub req: Request,
     /// Per-request event stream (None for headless runs); `Token` events go
-    /// out as they are sampled, then one terminal `Done`/`Failed`.
-    pub events: Option<Sender<Event>>,
+    /// out as they are sampled, then one terminal `Done`/`Failed`.  The
+    /// sink's drop hook guarantees a terminal event even if this run is
+    /// destroyed by a worker crash (see [`EventSink`]).
+    pub events: Option<EventSink>,
     /// Router in-flight marker; dropping it (with this run) decrements the
     /// owning worker's load in the serve pool.
     pub load_token: Option<LoadToken>,

@@ -1,0 +1,250 @@
+//! Deterministic fault injection for the serve pool — the chaos-test
+//! harness' control plane.
+//!
+//! A [`FaultPlan`] is a shared, scripted schedule of failures that test
+//! scenarios arm *before or during* a run and serve-loop workers consult at
+//! two well-defined points:
+//!
+//! * the **loop top** (once per scheduler iteration, idle iterations
+//!   included): the hold gate ([`FaultPlan::hold_worker`] /
+//!   [`FaultPlan::release_worker`]) and the immediate kill
+//!   ([`FaultPlan::kill_worker`]);
+//! * **just before a decode step**: the step-indexed kill
+//!   ([`FaultPlan::kill_worker_at_step`], counting the worker's lifetime
+//!   decode steps from 0) and the per-step delay
+//!   ([`FaultPlan::delay_steps`], a slow-shard simulation).
+//!
+//! Prefill poisoning ([`FaultPlan::poison_prefill`]) is keyed by request id
+//! and consumed by the first prefill that sees it, driving the
+//! prefill-failure path without touching the runtime.
+//!
+//! Kills are real `panic!`s on the worker thread: the stack unwinds exactly
+//! as a genuine crash would, dropping the batcher (whose in-flight
+//! [`super::EventSink`]s emit terminal `Failed { retryable: true }` events),
+//! then the inbound receiver (whose still-queued sinks re-dispatch through
+//! the pool supervisor).  Tests therefore exercise the same recovery
+//! machinery a production panic would.
+//!
+//! [`SimSpec`] selects the engine-free deterministic serve backend (see
+//! `serve_loop`): synthetic per-token codes and a fixed token-successor
+//! function stand in for the PJRT artifacts, so every chaos scenario runs
+//! on hosts without the XLA runtime.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Geometry of the engine-free simulated backend (chaos/fault tests).
+///
+/// The sim worker stores real packed codes in the real paged shard — only
+/// the model math is synthetic — so block/budget accounting behaves exactly
+/// as in CQ serving.
+#[derive(Clone, Copy, Debug)]
+pub struct SimSpec {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub groups: usize,
+    pub bits: u32,
+    /// Cache lane capacity in tokens (prompt + generated must fit).
+    pub tmax: usize,
+    /// Largest prompt accepted; longer prompts keep their tail (the same
+    /// sliding-window trim the prefill buckets apply).
+    pub max_prompt: usize,
+}
+
+impl SimSpec {
+    /// Small geometry for fast deterministic tests: 4 codes/token at
+    /// 4 bits = 2 packed bytes per token.
+    pub fn tiny() -> SimSpec {
+        SimSpec { n_layers: 1, n_heads: 1, groups: 2, bits: 4, tmax: 96, max_prompt: 48 }
+    }
+}
+
+#[derive(Debug, Default)]
+struct WorkerFaults {
+    kill_now: bool,
+    kill_at_step: Option<u64>,
+    step_delay: Option<Duration>,
+    held: bool,
+    /// Set by the worker while parked at the hold gate (lets tests wait for
+    /// a worker to be provably frozen before scripting around it).
+    paused: bool,
+}
+
+/// Scripted failure schedule shared between a test scenario and the serve
+/// workers (via `ServeConfig::faults`).  All methods are safe to call from
+/// any thread at any time; worker-side hooks are no-ops for workers with no
+/// armed faults.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    workers: Mutex<HashMap<usize, WorkerFaults>>,
+    poisoned: Mutex<HashSet<u64>>,
+    cv: Condvar,
+}
+
+/// Safety valve: a held worker un-parks after this long even if the test
+/// never releases it, so a buggy scenario fails an assertion instead of
+/// hanging the suite.
+const HOLD_TIMEOUT: Duration = Duration::from_secs(30);
+
+impl FaultPlan {
+    /// Fresh, empty plan (shared handle; clone the `Arc` into
+    /// `ServeConfig::faults`).
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> Arc<FaultPlan> {
+        Arc::new(FaultPlan::default())
+    }
+
+    /// Panic worker `w` at its next loop top (even while idle).
+    pub fn kill_worker(&self, w: usize) {
+        self.workers.lock().unwrap().entry(w).or_default().kill_now = true;
+    }
+
+    /// Panic worker `w` just before its `step`-th decode step (0-based,
+    /// counted over the worker's lifetime since start).
+    pub fn kill_worker_at_step(&self, w: usize, step: u64) {
+        self.workers.lock().unwrap().entry(w).or_default().kill_at_step = Some(step);
+    }
+
+    /// Sleep `d` before every decode step of worker `w` (slow shard).
+    pub fn delay_steps(&self, w: usize, d: Duration) {
+        self.workers.lock().unwrap().entry(w).or_default().step_delay = Some(d);
+    }
+
+    /// Freeze worker `w` at its next loop top until released: inbound
+    /// requests queue in its channel without being admitted.
+    pub fn hold_worker(&self, w: usize) {
+        self.workers.lock().unwrap().entry(w).or_default().held = true;
+    }
+
+    /// Release a held worker (wakes it at the gate).
+    pub fn release_worker(&self, w: usize) {
+        self.workers.lock().unwrap().entry(w).or_default().held = false;
+        self.cv.notify_all();
+    }
+
+    /// Block until worker `w` is provably parked at the hold gate.
+    pub fn await_paused(&self, w: usize) {
+        let mut g = self.workers.lock().unwrap();
+        while !g.get(&w).map(|f| f.paused).unwrap_or(false) {
+            let (guard, timed_out) = self.cv.wait_timeout(g, HOLD_TIMEOUT).unwrap();
+            g = guard;
+            if timed_out.timed_out() {
+                panic!("worker {w} never reached the hold gate");
+            }
+        }
+    }
+
+    /// Make the next prefill of request `id` fail (consumed on first use).
+    pub fn poison_prefill(&self, id: u64) {
+        self.poisoned.lock().unwrap().insert(id);
+    }
+
+    // --- Worker-side hooks ------------------------------------------------
+
+    /// Loop-top gate: park while held (bounded by [`HOLD_TIMEOUT`]).
+    pub fn pause_point(&self, w: usize) {
+        let mut g = self.workers.lock().unwrap();
+        if !g.get(&w).map(|f| f.held).unwrap_or(false) {
+            return;
+        }
+        g.get_mut(&w).unwrap().paused = true;
+        self.cv.notify_all();
+        while g.get(&w).map(|f| f.held).unwrap_or(false) {
+            let (guard, timed_out) = self.cv.wait_timeout(g, HOLD_TIMEOUT).unwrap();
+            g = guard;
+            if timed_out.timed_out() {
+                break;
+            }
+        }
+        if let Some(f) = g.get_mut(&w) {
+            f.paused = false;
+        }
+    }
+
+    /// True exactly once after [`Self::kill_worker`] was armed for `w`.
+    pub fn take_kill_now(&self, w: usize) -> bool {
+        let mut g = self.workers.lock().unwrap();
+        match g.get_mut(&w) {
+            Some(f) if f.kill_now => {
+                f.kill_now = false;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// True exactly once, the first time `step` reaches the armed threshold.
+    pub fn take_kill_at_step(&self, w: usize, step: u64) -> bool {
+        let mut g = self.workers.lock().unwrap();
+        match g.get_mut(&w) {
+            Some(f) if f.kill_at_step.map(|k| step >= k).unwrap_or(false) => {
+                f.kill_at_step = None;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Armed per-step delay for worker `w`, if any.
+    pub fn step_delay(&self, w: usize) -> Option<Duration> {
+        self.workers.lock().unwrap().get(&w).and_then(|f| f.step_delay)
+    }
+
+    /// True exactly once if request `id` was poisoned.
+    pub fn take_poison(&self, id: u64) -> bool {
+        self.poisoned.lock().unwrap().remove(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_and_poison_are_consumed_once() {
+        let plan = FaultPlan::new();
+        assert!(!plan.take_kill_now(0), "unarmed worker");
+        plan.kill_worker(0);
+        assert!(plan.take_kill_now(0));
+        assert!(!plan.take_kill_now(0), "consumed");
+        assert!(!plan.take_kill_now(1), "other worker unaffected");
+
+        plan.poison_prefill(7);
+        assert!(!plan.take_poison(6));
+        assert!(plan.take_poison(7));
+        assert!(!plan.take_poison(7), "consumed");
+    }
+
+    #[test]
+    fn step_kill_fires_at_threshold() {
+        let plan = FaultPlan::new();
+        plan.kill_worker_at_step(2, 3);
+        for step in 0..3 {
+            assert!(!plan.take_kill_at_step(2, step), "step {step} too early");
+        }
+        assert!(!plan.take_kill_at_step(1, 5), "wrong worker");
+        assert!(plan.take_kill_at_step(2, 3));
+        assert!(!plan.take_kill_at_step(2, 4), "consumed");
+    }
+
+    #[test]
+    fn hold_gate_parks_until_release() {
+        let plan = FaultPlan::new();
+        plan.hold_worker(0);
+        let p2 = plan.clone();
+        let t = std::thread::spawn(move || {
+            p2.pause_point(0); // parks
+            true
+        });
+        plan.await_paused(0);
+        assert!(!t.is_finished(), "worker must be parked while held");
+        plan.release_worker(0);
+        assert!(t.join().unwrap());
+        // Unheld worker passes straight through.
+        plan.pause_point(0);
+        assert_eq!(plan.step_delay(0), None);
+        plan.delay_steps(0, Duration::from_millis(1));
+        assert_eq!(plan.step_delay(0), Some(Duration::from_millis(1)));
+    }
+}

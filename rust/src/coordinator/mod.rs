@@ -26,18 +26,37 @@
 //! ids) to the radix key a follow-up turn resumes from — the client sends
 //! only the new turn's text, the worker prepends the stored history, and the
 //! paged cache serves the shared span from already-quantized blocks.  The
-//! pool routes session requests by affinity hash so every turn lands on the
-//! shard holding those blocks.
+//! pool registers each session's owning worker on its first turn and pins
+//! every follow-up to it.  The table is bounded ([`session::SessionTable`]):
+//! LRU capacity + idle TTL, with evictions surfaced as `session_evicted`
+//! failures so the client resends history instead of being silently served
+//! from partial context.
+//!
+//! Fault tolerance (PR 5): every dispatched request travels inside an
+//! [`EventSink`] whose drop hook guarantees stream termination.  If a worker
+//! dies (panic or loop error) before *processing* a request, the sink
+//! re-routes it through the pool supervisor to a live worker
+//! (`requests_redispatched`); if the worker dies mid-flight, the sink emits
+//! a terminal `Failed { retryable: true }` so the client can retry — no
+//! stream ever hangs.  A per-worker death notice retires crashed workers
+//! from rotation (`workers_dead`), and [`fault::FaultPlan`] scripts
+//! deterministic failures (kills, holds, delays, prefill poison) for the
+//! chaos suite in `rust/tests/chaos.rs`, using the engine-free
+//! [`fault::SimSpec`] backend.
 
 pub mod batcher;
+pub mod fault;
 pub mod pool;
 pub mod sampler;
 pub mod serve_loop;
+pub mod session;
 
 pub use batcher::{Batcher, SeqRun};
+pub use fault::{FaultPlan, SimSpec};
 pub use pool::{CancelHandle, LoadToken, ServeHandle, ServePool, StreamHandle, WorkerLoad};
 pub use sampler::{sample, SampleCfg};
 pub use serve_loop::{serve_loop, ServeConfig};
+pub use session::{SessionLookup, SessionTable};
 
 use std::sync::mpsc::Sender;
 
@@ -127,8 +146,13 @@ pub enum Event {
     Token { id: u64, index: usize, text: String },
     /// Terminal: the full aggregated response.
     Done(Response),
-    /// Terminal: rejection, prefill failure, or cancellation.
-    Failed { id: u64, reason: String },
+    /// Terminal: rejection, prefill failure, cancellation, session
+    /// eviction/reroute, or worker death.  `retryable` tells the client
+    /// whether resubmitting the identical request can succeed (transient
+    /// capacity or infrastructure failure) or not (cancellation, protocol
+    /// errors, and the `session_evicted` / `resend_history` signals, which
+    /// require the client to resend its conversation history first).
+    Failed { id: u64, reason: String, retryable: bool },
 }
 
 impl Event {
@@ -142,12 +166,172 @@ impl Event {
 /// router's in-flight marker; it is dropped (decrementing the worker's load)
 /// when the request reaches any terminal state.
 pub enum Inbound {
-    /// A request plus its event stream's sender.
-    Submit(Request, Sender<Event>, Option<LoadToken>),
+    /// A request riding inside its [`EventSink`] (request + event-stream
+    /// sender + crash-recovery state).
+    Submit(EventSink, Option<LoadToken>),
     /// Cancel the in-flight request with this id: free its lane, release its
     /// cache reservation (full blocks still promote) and emit
     /// [`Event::Failed`].  Unknown ids (already completed) are ignored.
     Cancel(u64),
     /// Drain in-flight work and exit.
     Shutdown,
+}
+
+/// Messages to the pool supervisor thread (worker lifecycle + recovery).
+pub enum SupervisorMsg {
+    /// A worker thread exited.  `clean` distinguishes an orderly shutdown
+    /// from a crash (panic / loop error); only crashes count as dead.
+    WorkerDied { worker: usize, clean: bool },
+    /// A request died *unprocessed* with its worker: re-dispatch it to a
+    /// live worker on the same event stream.  `attempts` counts dispatches
+    /// so a request cannot ping-pong across dying workers forever.
+    Redispatch { req: Request, events: Sender<Event>, attempts: usize },
+    /// A session turn died mid-flight with its worker: scrub the session
+    /// from every published directory so the client's resent-history turn
+    /// places fresh instead of bouncing off the dead owner again.
+    SessionLost(u64),
+    /// Stop the supervisor (pool shutdown/drop).
+    Stop,
+}
+
+/// One request's server-side event channel plus the crash-recovery state
+/// that makes stream termination unconditional.
+///
+/// Invariant: every stream the router dispatched ends with exactly one
+/// terminal event, on every path:
+///
+/// * normal processing sends `Done`/`Failed` via [`Self::send_terminal`];
+/// * a worker dying with the request still *queued* (never picked up — see
+///   [`Self::begin`]) re-routes the pending request through the supervisor,
+///   which dispatches it to a live worker on the same channel;
+/// * a worker dying with the request *mid-flight* (admitted, possibly
+///   already streaming tokens) emits a terminal `Failed` from the drop
+///   hook — re-running a half-streamed request would duplicate its token
+///   events, so the retry decision belongs to the client.  Non-session
+///   requests get `retryable: true` (resubmitting the identical line can
+///   succeed); session turns get the non-retryable `resend_history` signal
+///   instead, because their history died with the worker and an identical
+///   resubmission could never be served correctly.
+pub struct EventSink {
+    id: u64,
+    /// Session id of the request (kept past `begin()` so the drop hook can
+    /// emit the right death signal for session turns).
+    session_id: Option<u64>,
+    tx: Sender<Event>,
+    /// `Some` until the worker picks the request up; the redispatch payload.
+    pending: Option<(Request, usize)>,
+    /// Recovery route for unprocessed requests (absent for direct
+    /// serve-loop callers, which fall back to the `Failed` drop path).
+    supervisor: Option<Sender<SupervisorMsg>>,
+    terminal: bool,
+}
+
+impl EventSink {
+    /// Sink without supervisor recovery (tests / direct serve-loop callers).
+    pub fn new(req: Request, tx: Sender<Event>) -> EventSink {
+        EventSink {
+            id: req.id,
+            session_id: req.session_id,
+            tx,
+            pending: Some((req, 0)),
+            supervisor: None,
+            terminal: false,
+        }
+    }
+
+    /// Sink whose unprocessed-death path re-dispatches via the supervisor.
+    pub fn supervised(
+        req: Request,
+        tx: Sender<Event>,
+        supervisor: Sender<SupervisorMsg>,
+        attempts: usize,
+    ) -> EventSink {
+        EventSink {
+            id: req.id,
+            session_id: req.session_id,
+            tx,
+            pending: Some((req, attempts)),
+            supervisor: Some(supervisor),
+            terminal: false,
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The worker starts processing: takes the request out and switches the
+    /// death behavior from "re-dispatch" to "fail the stream".  `None` on a
+    /// second call (the request was already begun).
+    pub fn begin(&mut self) -> Option<Request> {
+        self.pending.take().map(|(req, _)| req)
+    }
+
+    /// Dismantle an *undispatched* sink (e.g. a failed channel send the
+    /// caller retries inline): returns the request and suppresses every
+    /// drop-hook action.
+    pub fn recover(mut self) -> Option<Request> {
+        self.terminal = true;
+        self.pending.take().map(|(req, _)| req)
+    }
+
+    /// Send a non-terminal event; `false` when the receiver is gone (the
+    /// worker treats that as an implicit cancel).
+    pub fn send(&self, ev: Event) -> bool {
+        debug_assert!(!ev.is_terminal(), "terminal events go through send_terminal");
+        self.tx.send(ev).is_ok()
+    }
+
+    /// Send the stream's single terminal event and disarm the drop hook.
+    pub fn send_terminal(&mut self, ev: Event) {
+        debug_assert!(ev.is_terminal(), "non-terminal event sent as terminal");
+        self.terminal = true;
+        self.pending = None;
+        let _ = self.tx.send(ev);
+    }
+}
+
+impl Drop for EventSink {
+    fn drop(&mut self) {
+        if self.terminal {
+            return;
+        }
+        // Dropped without a terminal event: the owning worker died (its
+        // channel queue or batcher unwound), or the message never reached a
+        // worker at all.
+        if let Some((req, attempts)) = self.pending.take() {
+            if let Some(sup) = &self.supervisor {
+                let msg = SupervisorMsg::Redispatch {
+                    req,
+                    events: self.tx.clone(),
+                    attempts: attempts + 1,
+                };
+                if sup.send(msg).is_ok() {
+                    return; // the supervisor owns termination now
+                }
+            }
+        }
+        // Mid-flight death.  A session turn's history died with the worker:
+        // resubmitting the identical line can never be served correctly, so
+        // signal resend_history (and have the supervisor scrub the session's
+        // directory entry so the resent turn places fresh immediately).
+        if let Some(sid) = self.session_id {
+            if let Some(sup) = &self.supervisor {
+                let _ = sup.send(SupervisorMsg::SessionLost(sid));
+            }
+            let _ = self.tx.send(Event::Failed {
+                id: self.id,
+                reason: format!(
+                    "[resend_history: session {sid} lost with its worker; resend full history]"
+                ),
+                retryable: false,
+            });
+            return;
+        }
+        let _ = self.tx.send(Event::Failed {
+            id: self.id,
+            reason: "[error: serve worker died]".into(),
+            retryable: true,
+        });
+    }
 }

@@ -7,41 +7,64 @@
 //! Routing is **least-loaded**: the router tracks per-worker in-flight
 //! requests ([`WorkerLoad`]) and picks the worker with the shallowest
 //! virtual queue, breaking ties by most free lanes and then round-robin
-//! (a rotating scan start).  Requests carrying a session id instead route
-//! by **affinity hash** (`session_id % n_workers`, skipping dead workers)
+//! (a rotating scan start).  Requests carrying a session id route to the
+//! worker **owning that session's history** — derived from the per-worker
+//! published session-token directories (no router-side session table, so
+//! router session state is bounded by the worker tables), with the
+//! deterministic affinity hash placing sessions that have no history yet —
 //! so every turn of a conversation lands on the shard holding its
 //! radix-cached blocks.  In-flight accounting is crash-safe: every
 //! dispatched request carries a [`LoadToken`] that decrements the counter
-//! on drop, whatever path the request dies on (completion, budget
-//! rejection, prefill failure, cancellation, shutdown drain).  A worker
-//! whose loop has exited is marked dead on the first failed send and
-//! excluded from routing; the submission reroutes to the next live worker.
+//! on drop, whatever path the request dies on.
 //!
-//! The streaming lifecycle API is [`ServePool::submit_stream`]: it returns
-//! a [`StreamHandle`] — an iterator of [`Event`]s plus `cancel()` — and the
-//! legacy `submit` / `submit_async` are thin drain-to-[`Response`] wrappers
-//! over it, so one code path serves every caller.
+//! **Fault tolerance (PR 5).**  A dedicated *supervisor thread* owns
+//! worker-lifecycle recovery:
+//!
+//! * every worker thread carries a death notice that reports its exit
+//!   (clean shutdown vs crash) — crashed workers are retired from rotation
+//!   (`PoolMetrics::workers_dead`) without waiting for the next failed send;
+//! * every dispatched request rides in a [`super::EventSink`]; when a worker
+//!   dies, sinks still *queued* in its channel re-route through the
+//!   supervisor and are **speculatively re-dispatched** to a live worker
+//!   (`PoolMetrics::requests_redispatched`) — the client just sees its
+//!   stream start a little late.  Requests already mid-decode get a terminal
+//!   `Failed { retryable: true }` instead, because re-running them would
+//!   duplicate already-streamed token events;
+//! * a follow-up session turn whose owning worker died is failed with a
+//!   `resend_history` reason (retryable: false) — its history died with the
+//!   shard, and serving only the new text would be silently wrong.  The
+//!   dead worker's directory entry is forgotten so the client's
+//!   resent-history turn places fresh on a live worker.  A session first
+//!   turn that dies queued (no history recorded anywhere) is simply
+//!   re-dispatched like any other request.
+//!
+//! The router's pool-wide admission estimate counts a session's **full
+//! published token count** (history + new text, from
+//! `ServeMetrics::session_tokens`), closing the PR 4 follow-up where session
+//! turns were gated only on their new text.
+//!
+//! The streaming lifecycle API is [`ServePool::submit_stream`]; `submit` /
+//! `submit_async` are drain-to-[`Response`] wrappers.  `submit_async` is
+//! served by one shared multiplexing drain thread (not one thread per
+//! request): it polls every active stream and resolves each terminal event
+//! into the legacy `Receiver<Response>` contract.
 //!
 //! The global cache byte budget becomes a **per-shard budget**
 //! (`ceil(total / n_workers)`); per-shard accounting is re-aggregated by
-//! [`crate::metrics::PoolMetrics`].  On top of the per-shard enforcement the
-//! router runs **pool-wide admission control**: once any worker has
-//! published its cache geometry, a request whose prefill+decode reservation
-//! estimate exceeds the *total* remaining pool budget is rejected up front
-//! — instead of being dispatched to a shard that is guaranteed to refuse it
-//! after prefill work was already queued.  [`ServeHandle`] survives as the
+//! [`crate::metrics::PoolMetrics`].  [`ServeHandle`] survives as the
 //! `n_workers = 1` special case so single-stream callers keep a simple API.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::{PoolMetrics, ServeMetrics};
 
 use super::serve_loop::{serve_loop, ServeConfig};
-use super::{Event, Inbound, Request, Response};
+use super::{Event, EventSink, Inbound, Request, Response, SupervisorMsg};
 
 /// Shared load snapshot for one worker: how many requests have been
 /// dispatched to it and not yet completed/rejected.
@@ -99,6 +122,10 @@ pub struct StreamHandle {
     /// Clone of the owning worker's inbound sender (None when the request
     /// was terminated at the router and never reached a worker).
     cancel_tx: Option<Sender<Inbound>>,
+    /// Worker index the request was dispatched to (None when terminated at
+    /// the router).  Chaos scenarios use it as per-request ground truth; a
+    /// supervisor re-dispatch may later move the request elsewhere.
+    worker: Option<usize>,
 }
 
 /// Detached cancel trigger for a stream (cheap to clone out of a
@@ -121,6 +148,12 @@ impl CancelHandle {
 impl StreamHandle {
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// Worker this request was originally dispatched to (`None` when the
+    /// router terminated it without dispatching).
+    pub fn worker(&self) -> Option<usize> {
+        self.worker
     }
 
     /// A detached cancel trigger (usable while this handle is being
@@ -150,6 +183,24 @@ impl StreamHandle {
         self.rx.try_recv().ok()
     }
 
+    /// Block up to `timeout` for the next event; `None` on timeout or a
+    /// dropped stream.  The chaos suite drives every stream through this so
+    /// a hang is an assertion failure, never a stuck test.
+    pub fn recv_deadline(&self, timeout: Duration) -> Option<Event> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
+    /// Non-blocking poll that distinguishes "nothing yet" (`Ok(None)`) from
+    /// a dropped stream (`Err`) — the shared drain thread needs the
+    /// difference to retire dead streams instead of polling them forever.
+    pub fn try_event(&self) -> Result<Option<Event>> {
+        match self.rx.try_recv() {
+            Ok(ev) => Ok(Some(ev)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => bail!("serve worker dropped event stream"),
+        }
+    }
+
     /// Consume the stream to its terminal event and fold it into the legacy
     /// [`Response`]: `Done` passes through, `Failed` becomes
     /// [`Response::failure`] (preserving the v1 rejection/error texts).
@@ -157,7 +208,7 @@ impl StreamHandle {
         loop {
             match self.rx.recv() {
                 Ok(Event::Done(resp)) => return Ok(resp),
-                Ok(Event::Failed { id, reason }) => return Ok(Response::failure(id, reason)),
+                Ok(Event::Failed { id, reason, .. }) => return Ok(Response::failure(id, reason)),
                 Ok(_) => {}
                 Err(_) => bail!("serve worker dropped response"),
             }
@@ -222,81 +273,67 @@ pub(crate) fn pool_admission_rejects(
     est > (budget as u64).saturating_sub(bytes_in_use)
 }
 
+/// Effective prompt-token count for the router's pool-wide estimate: the
+/// session's published history (0 for non-session / first turns) plus the
+/// new turn's text, clamped to the published prefill ceiling (`max_ctx ==
+/// 0` means no worker has published one yet).  Session turns are thereby
+/// gated on the reservation the shard will actually take — not just the new
+/// text (the PR 4 follow-up).
+pub(crate) fn estimate_prompt_tokens(
+    history_tokens: usize,
+    new_text_len: usize,
+    max_ctx: usize,
+) -> usize {
+    let t = history_tokens + new_text_len;
+    if max_ctx > 0 {
+        t.min(max_ctx)
+    } else {
+        t
+    }
+}
+
 struct PoolWorker {
     tx: Sender<Inbound>,
     load: Arc<WorkerLoad>,
-    /// Cleared when a send to this worker fails (its loop exited); dead
-    /// workers are excluded from routing — otherwise a crashed worker's
-    /// empty load would make it a magnet for all subsequent traffic.
+    /// Cleared when the worker's loop exits (supervisor death notice or a
+    /// failed send); dead workers are excluded from routing — otherwise a
+    /// crashed worker's empty load would make it a magnet for all
+    /// subsequent traffic.
     alive: AtomicBool,
-    join: Option<std::thread::JoinHandle<Result<()>>>,
 }
 
-/// Handle to a sharded pool of serve-loop workers.
-///
-/// `Sync`: submissions from many threads (TCP connection handlers, bench
-/// clients) go through `&self`; each picks a worker and sends on its
-/// channel.  Workers own all non-`Send` PJRT state.
-pub struct ServePool {
+/// Router state shared between the pool handle and the supervisor thread.
+struct RouterState {
     workers: Vec<PoolWorker>,
     rr: AtomicUsize,
     /// Total cache budget across all shards (admission-control ceiling).
     total_budget: Option<usize>,
-    pub metrics: PoolMetrics,
+    metrics: Arc<PoolMetrics>,
 }
 
-impl ServePool {
-    /// Spawn `n_workers` replica serve loops (each compiles its own
-    /// executables and owns a cache shard of `cache_budget / n_workers`).
-    pub fn start(cfg: ServeConfig, n_workers: usize) -> ServePool {
-        let n = n_workers.max(1);
-        let per_shard = shard_budget(cfg.cache_budget, n);
-        let mut workers = Vec::with_capacity(n);
-        let mut worker_metrics = Vec::with_capacity(n);
-        for w in 0..n {
-            let mut wcfg = cfg.clone();
-            wcfg.cache_budget = per_shard;
-            let (tx, rx) = channel();
-            let metrics = Arc::new(ServeMetrics::default());
-            let m2 = metrics.clone();
-            let join = std::thread::Builder::new()
-                .name(format!("cq-serve-worker-{w}"))
-                .spawn(move || serve_loop(wcfg, rx, m2))
-                .expect("spawn serve worker");
-            workers.push(PoolWorker {
-                tx,
-                load: Arc::new(WorkerLoad::new(cfg.batch)),
-                alive: AtomicBool::new(true),
-                join: Some(join),
-            });
-            worker_metrics.push(metrics);
+/// Outcome of one routing attempt.
+enum Dispatched {
+    /// Handed to this worker's queue.
+    Sent(usize),
+    /// Terminated at the router; a terminal `Failed` event is already on
+    /// the stream (budget rejection, resend-history, retries exhausted).
+    Terminal,
+    /// No live worker and nothing sent: the caller surfaces an error.
+    NoWorkers,
+}
+
+impl RouterState {
+    fn alive(&self, w: usize) -> bool {
+        self.workers[w].alive.load(Ordering::Relaxed)
+    }
+
+    /// Take a worker out of rotation; `count` distinguishes a crash (counts
+    /// toward `workers_dead`) from a clean shutdown.
+    fn retire(&self, w: usize, count: bool) {
+        if self.workers[w].alive.swap(false, Ordering::Relaxed) && count {
+            self.metrics.workers_dead.add(1);
+            log::warn!("serve worker {w} is gone; retired from rotation");
         }
-        ServePool {
-            workers,
-            rr: AtomicUsize::new(0),
-            total_budget: cfg.cache_budget,
-            metrics: PoolMetrics::new(worker_metrics),
-        }
-    }
-
-    pub fn n_workers(&self) -> usize {
-        self.workers.len()
-    }
-
-    /// Current `(queue_depth, free_lanes)` per worker (router's view).
-    pub fn loads(&self) -> Vec<(usize, usize)> {
-        self.workers
-            .iter()
-            .map(|w| (w.load.queue_depth(), w.load.free_lanes()))
-            .collect()
-    }
-
-    /// Workers still accepting traffic.
-    pub fn live_workers(&self) -> usize {
-        self.workers
-            .iter()
-            .filter(|w| w.alive.load(Ordering::Relaxed))
-            .count()
     }
 
     /// Least-loaded live worker, or `None` when every worker is dead.  The
@@ -307,7 +344,7 @@ impl ServePool {
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
         let live: Vec<usize> = (0..n)
             .map(|k| (start + k) % n)
-            .filter(|&i| self.workers[i].alive.load(Ordering::Relaxed))
+            .filter(|&i| self.alive(i))
             .collect();
         if live.is_empty() {
             return None;
@@ -322,47 +359,122 @@ impl ServePool {
         Some(live[select_least_loaded(&loads, 0)])
     }
 
-    /// Session-affinity pick: deterministic hash of the session id onto the
-    /// worker ring, scanning forward past dead workers.  Every turn of a
-    /// session lands on the shard whose radix index holds its blocks (the
-    /// ROADMAP "prefix-affinity" follow-up), trading a little load balance
-    /// for prefix locality.
+    /// First-turn session placement: deterministic hash of the session id
+    /// onto the worker ring, scanning forward past dead workers.  The
+    /// placement is stable (the alive set only shrinks), so a session's
+    /// turns keep landing on the same shard without any router-side table.
     fn pick_session_worker(&self, session_id: u64) -> Option<usize> {
         let n = self.workers.len();
         let start = (session_id % n as u64) as usize;
-        (0..n)
-            .map(|k| (start + k) % n)
-            .find(|&i| self.workers[i].alive.load(Ordering::Relaxed))
+        (0..n).map(|k| (start + k) % n).find(|&i| self.alive(i))
     }
 
-    /// Dispatch a request as an event stream.  Requests that cannot
-    /// possibly fit the pool's remaining cache budget are terminated here
-    /// with a `Failed` event, before any worker sees them.  A failed send
-    /// marks that worker dead and reroutes to the next live one.  Session
-    /// requests route by affinity hash instead of least-loaded (the byte
-    /// estimate sees only the new turn's text — conservative in the wrong
-    /// direction, but the shard's own reservation still gates the true
-    /// length).
-    pub fn submit_stream(&self, mut req: Request) -> Result<StreamHandle> {
-        // Workers always serve at least one token (the decode loop appends
-        // before consulting must_stop), so clamp max_new ONCE — up front —
-        // and dispatch the clamped request.  The pool-wide byte estimate
-        // below and the shard's own reservation then gate the same value; a
-        // max_new = 0 request can no longer slip past the router with a
-        // smaller reservation than the shard actually takes.
-        req.max_new = req.max_new.max(1);
+    /// The worker holding this session's history, if any — derived from the
+    /// per-worker published session-token directory, so the router carries
+    /// **no unbounded session state** of its own (the directories are
+    /// bounded by each worker's `SessionTable` cap).  `None` until the
+    /// session's first turn completes somewhere.
+    fn session_owner(&self, sid: u64) -> Option<usize> {
+        (0..self.workers.len())
+            .find(|&w| self.metrics.worker(w).session_tokens.get(sid).is_some())
+    }
+
+    /// Send to worker `w` inside a fresh supervised [`EventSink`]; on
+    /// failure retire the worker and hand the request back for an inline
+    /// retry elsewhere.
+    fn try_send(
+        &self,
+        w: usize,
+        req: Request,
+        tx: &Sender<Event>,
+        sup: &Sender<SupervisorMsg>,
+        attempts: usize,
+    ) -> std::result::Result<(), Request> {
+        let token = LoadToken::acquire(&self.workers[w].load);
+        let sink = EventSink::supervised(req, tx.clone(), sup.clone(), attempts);
+        match self.workers[w].tx.send(Inbound::Submit(sink, Some(token))) {
+            Ok(()) => Ok(()),
+            Err(std::sync::mpsc::SendError(msg)) => {
+                self.retire(w, true);
+                match msg {
+                    Inbound::Submit(sink, _token) => {
+                        Err(sink.recover().expect("undispatched sink holds its request"))
+                    }
+                    _ => unreachable!("submit send bounced a different message"),
+                }
+            }
+        }
+    }
+
+    /// Route + dispatch one request.  All router-terminal outcomes push a
+    /// terminal `Failed` event onto `tx` before returning, so a dispatched
+    /// or `Terminal` stream can never hang.
+    fn dispatch(
+        &self,
+        mut req: Request,
+        tx: &Sender<Event>,
+        sup: &Sender<SupervisorMsg>,
+        attempts: usize,
+    ) -> Dispatched {
+        let id = req.id;
+        // Re-dispatch bound: a request that keeps landing on dying workers
+        // must not ping-pong forever.
+        if attempts > self.workers.len() {
+            let _ = tx.send(Event::Failed {
+                id,
+                reason: "[error: serve worker died; re-dispatch retries exhausted]".into(),
+                retryable: true,
+            });
+            return Dispatched::Terminal;
+        }
+        // --- Session affinity: resolve the owning worker first ----------
+        // "Owner" = the worker that published history for this session.  A
+        // session with no published history anywhere (first turn, or a
+        // first turn recovered from a crashed worker before it ever ran)
+        // has lost nothing and is placed fresh by the affinity hash.
+        let mut session_target = None;
+        let mut history_tokens = 0usize;
+        let mut has_history = false;
+        if let Some(sid) = req.session_id {
+            match self.session_owner(sid) {
+                Some(w) if self.alive(w) => {
+                    history_tokens =
+                        self.metrics.worker(w).session_tokens.get(sid).unwrap_or(0) as usize;
+                    has_history = true;
+                    session_target = Some(w);
+                }
+                Some(w) => {
+                    // The shard holding this session's history is dead;
+                    // generating from only the new turn's text would be
+                    // wrong, silently.  Forget the dead worker's entry so
+                    // the resent-history turn places fresh on a live shard.
+                    self.metrics.worker(w).session_tokens.forget(sid);
+                    let _ = tx.send(Event::Failed {
+                        id,
+                        reason: format!(
+                            "[resend_history: session {sid} lost with worker {w}; \
+                             resend full history]"
+                        ),
+                        retryable: false,
+                    });
+                    return Dispatched::Terminal;
+                }
+                None => match self.pick_session_worker(sid) {
+                    Some(w) => session_target = Some(w),
+                    None => return Dispatched::NoWorkers,
+                },
+            }
+        }
+        // --- Pool-wide admission estimate -------------------------------
         let hard_in_use = self
             .metrics
             .cache_bytes_in_use()
             .saturating_sub(self.metrics.cache_cached_bytes());
-        // Workers trim prompts to their prefill ceiling before reserving, so
-        // the estimate must too (once a worker has published that ceiling).
-        let max_ctx = self.metrics.max_prompt_tokens() as usize;
-        let prompt_tokens = if max_ctx > 0 {
-            req.prompt.len().min(max_ctx)
-        } else {
-            req.prompt.len()
-        };
+        let prompt_tokens = estimate_prompt_tokens(
+            history_tokens,
+            req.prompt.len(),
+            self.metrics.max_prompt_tokens() as usize,
+        );
         if pool_admission_rejects(
             self.total_budget,
             self.metrics.bytes_per_token(),
@@ -371,54 +483,325 @@ impl ServePool {
             req.max_new,
         ) {
             self.metrics.router_rejected.add(1);
-            let (tx, rx) = channel();
             let _ = tx.send(Event::Failed {
-                id: req.id,
+                id,
                 reason: String::from("[rejected: pool budget]"),
+                retryable: true,
             });
-            return Ok(StreamHandle { id: req.id, rx, cancel_tx: None });
+            return Dispatched::Terminal;
         }
-        let id = req.id;
-        for _ in 0..self.workers.len() {
-            let picked = match req.session_id {
-                Some(sid) => self.pick_session_worker(sid),
-                None => self.pick_worker(),
-            };
-            let Some(wi) = picked else { break };
-            let w = &self.workers[wi];
-            let token = LoadToken::acquire(&w.load);
-            let (tx, rx) = channel();
-            match w.tx.send(Inbound::Submit(req.clone(), tx, Some(token))) {
-                Ok(()) => {
-                    return Ok(StreamHandle { id, rx, cancel_tx: Some(w.tx.clone()) })
-                }
-                Err(_) => {
-                    // Worker loop exited: exclude it and retry elsewhere.
-                    w.alive.store(false, Ordering::Relaxed);
-                    log::warn!("serve worker {wi} is gone; rerouting");
+        // --- Hand off ----------------------------------------------------
+        if let Some(w0) = session_target {
+            let sid = req.session_id.expect("session target implies session id");
+            let mut w = w0;
+            loop {
+                match self.try_send(w, req, tx, sup, attempts) {
+                    Ok(()) => return Dispatched::Sent(w),
+                    Err(back) => {
+                        req = back;
+                        if has_history {
+                            // The owner died between the aliveness check and
+                            // the send: same resend-history outcome.
+                            self.metrics.worker(w).session_tokens.forget(sid);
+                            let _ = tx.send(Event::Failed {
+                                id,
+                                reason: format!(
+                                    "[resend_history: session {sid} lost with worker {w}; \
+                                     resend full history]"
+                                ),
+                                retryable: false,
+                            });
+                            return Dispatched::Terminal;
+                        }
+                        match self.pick_session_worker(sid) {
+                            Some(n) => w = n,
+                            None => return Dispatched::NoWorkers,
+                        }
+                    }
                 }
             }
         }
-        Err(anyhow!("no live serve workers"))
+        for _ in 0..self.workers.len() {
+            let Some(w) = self.pick_worker() else { break };
+            match self.try_send(w, req, tx, sup, attempts) {
+                Ok(()) => return Dispatched::Sent(w),
+                Err(back) => req = back,
+            }
+        }
+        Dispatched::NoWorkers
+    }
+}
+
+/// Reports a worker thread's exit to the supervisor on every path out of
+/// the thread closure — normal return, startup error, or panic unwind.
+struct DeathNotice {
+    worker: usize,
+    clean: bool,
+    tx: Sender<SupervisorMsg>,
+}
+
+impl Drop for DeathNotice {
+    fn drop(&mut self) {
+        let _ = self
+            .tx
+            .send(SupervisorMsg::WorkerDied { worker: self.worker, clean: self.clean });
+    }
+}
+
+/// Supervisor: retires dead workers and re-dispatches recovered requests.
+/// Exits on [`SupervisorMsg::Stop`] (pool shutdown/drop).
+fn supervisor_loop(
+    state: Arc<RouterState>,
+    rx: Receiver<SupervisorMsg>,
+    sup_tx: Sender<SupervisorMsg>,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            SupervisorMsg::Stop => break,
+            SupervisorMsg::WorkerDied { worker, clean } => {
+                state.retire(worker, !clean);
+                if !clean {
+                    log::warn!("serve worker {worker} died; recovering its queued requests");
+                }
+            }
+            SupervisorMsg::SessionLost(sid) => {
+                // The session's mid-flight turn died with its worker: scrub
+                // every directory so the resent-history turn places fresh
+                // instead of bouncing off the dead owner a second time.
+                for w in state.metrics.workers() {
+                    w.session_tokens.forget(sid);
+                }
+            }
+            SupervisorMsg::Redispatch { req, events, attempts } => {
+                let id = req.id;
+                match state.dispatch(req, &events, &sup_tx, attempts) {
+                    Dispatched::Sent(w) => {
+                        state.metrics.requests_redispatched.add(1);
+                        log::info!("request {id} re-dispatched to worker {w}");
+                    }
+                    Dispatched::Terminal => {}
+                    Dispatched::NoWorkers => {
+                        let _ = events.send(Event::Failed {
+                            id,
+                            reason: String::from("[error: no live serve workers]"),
+                            retryable: true,
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Shared `submit_async` drain: multiplexes every active stream through one
+/// thread, resolving each terminal event into its `Receiver<Response>`.
+/// Parks on the control channel while nothing is in flight; while streams
+/// are active it polls with an exponential idle backoff (100 µs → 5 ms), so
+/// a long-running generation costs at most a few hundred wakeups/second
+/// instead of a busy spin, and responses surface within one backoff step.
+fn drain_loop(ctl: Receiver<(StreamHandle, Sender<Response>)>) {
+    const BACKOFF_MIN: Duration = Duration::from_micros(100);
+    const BACKOFF_MAX: Duration = Duration::from_millis(5);
+    let mut active: Vec<(StreamHandle, Sender<Response>)> = Vec::new();
+    let mut open = true;
+    let mut backoff = BACKOFF_MIN;
+    loop {
+        if active.is_empty() {
+            if !open {
+                return;
+            }
+            match ctl.recv() {
+                Ok(pair) => active.push(pair),
+                Err(_) => return,
+            }
+        }
+        loop {
+            match ctl.try_recv() {
+                Ok(pair) => active.push(pair),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        let mut progressed = false;
+        active.retain_mut(|(stream, out)| loop {
+            match stream.try_event() {
+                Ok(Some(Event::Done(resp))) => {
+                    progressed = true;
+                    let _ = out.send(resp);
+                    return false;
+                }
+                Ok(Some(Event::Failed { id, reason, .. })) => {
+                    progressed = true;
+                    let _ = out.send(Response::failure(id, reason));
+                    return false;
+                }
+                Ok(Some(_)) => progressed = true,
+                Ok(None) => return true,
+                // Stream dropped without a terminal event: dropping `out`
+                // unsent surfaces the legacy disconnected-receiver error.
+                Err(_) => {
+                    progressed = true;
+                    return false;
+                }
+            }
+        });
+        if progressed {
+            backoff = BACKOFF_MIN;
+        } else {
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(BACKOFF_MAX);
+        }
+    }
+}
+
+/// Handle to a sharded pool of serve-loop workers.
+///
+/// `Sync`: submissions from many threads (TCP connection handlers, bench
+/// clients) go through `&self`; each picks a worker and sends on its
+/// channel.  Workers own all non-`Send` PJRT state.
+pub struct ServePool {
+    state: Arc<RouterState>,
+    joins: Vec<Option<std::thread::JoinHandle<Result<()>>>>,
+    sup_tx: Sender<SupervisorMsg>,
+    sup_join: Option<std::thread::JoinHandle<()>>,
+    drain_tx: Option<Sender<(StreamHandle, Sender<Response>)>>,
+    drain_join: Option<std::thread::JoinHandle<()>>,
+    /// Pool + per-worker telemetry (shared with the supervisor thread).
+    pub metrics: Arc<PoolMetrics>,
+}
+
+impl ServePool {
+    /// Spawn `n_workers` replica serve loops (each compiles its own
+    /// executables and owns a cache shard of `cache_budget / n_workers`),
+    /// plus the supervisor and shared drain threads.
+    pub fn start(cfg: ServeConfig, n_workers: usize) -> ServePool {
+        let n = n_workers.max(1);
+        let per_shard = shard_budget(cfg.cache_budget, n);
+        let (sup_tx, sup_rx) = channel();
+        let mut workers = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
+        let mut worker_metrics = Vec::with_capacity(n);
+        for w in 0..n {
+            let mut wcfg = cfg.clone();
+            wcfg.cache_budget = per_shard;
+            wcfg.worker_index = w;
+            let (tx, rx) = channel();
+            let metrics = Arc::new(ServeMetrics::default());
+            let m2 = metrics.clone();
+            let sup = sup_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("cq-serve-worker-{w}"))
+                .spawn(move || {
+                    // The notice fires on every exit path: a normal return
+                    // reports clean, a startup/loop error or panic unwind
+                    // reports a crash.  The loop's receiver drops first, so
+                    // queued sinks re-dispatch before the death notice lands.
+                    let mut notice = DeathNotice { worker: w, clean: false, tx: sup };
+                    let res = serve_loop(wcfg, rx, m2);
+                    notice.clean = res.is_ok();
+                    res
+                })
+                .expect("spawn serve worker");
+            workers.push(PoolWorker {
+                tx,
+                load: Arc::new(WorkerLoad::new(cfg.batch)),
+                alive: AtomicBool::new(true),
+            });
+            joins.push(Some(join));
+            worker_metrics.push(metrics);
+        }
+        let metrics = Arc::new(PoolMetrics::new(worker_metrics));
+        let state = Arc::new(RouterState {
+            workers,
+            rr: AtomicUsize::new(0),
+            total_budget: cfg.cache_budget,
+            metrics: metrics.clone(),
+        });
+        let sup_state = state.clone();
+        let sup_tx2 = sup_tx.clone();
+        let sup_join = std::thread::Builder::new()
+            .name("cq-serve-supervisor".into())
+            .spawn(move || supervisor_loop(sup_state, sup_rx, sup_tx2))
+            .expect("spawn pool supervisor");
+        let (drain_tx, drain_rx) = channel();
+        let drain_join = std::thread::Builder::new()
+            .name("cq-stream-drain".into())
+            .spawn(move || drain_loop(drain_rx))
+            .expect("spawn shared stream drain");
+        ServePool {
+            state,
+            joins,
+            sup_tx,
+            sup_join: Some(sup_join),
+            drain_tx: Some(drain_tx),
+            drain_join: Some(drain_join),
+            metrics,
+        }
     }
 
-    /// Dispatch without waiting; returns the legacy response receiver.  A
-    /// small drain thread folds the event stream into its terminal
-    /// [`Response`]; worker death surfaces as a dropped receiver, exactly
-    /// as before the streaming redesign.
+    pub fn n_workers(&self) -> usize {
+        self.state.workers.len()
+    }
+
+    /// Current `(queue_depth, free_lanes)` per worker (router's view).
+    pub fn loads(&self) -> Vec<(usize, usize)> {
+        self.state
+            .workers
+            .iter()
+            .map(|w| (w.load.queue_depth(), w.load.free_lanes()))
+            .collect()
+    }
+
+    /// Workers still accepting traffic.
+    pub fn live_workers(&self) -> usize {
+        (0..self.state.workers.len())
+            .filter(|&i| self.state.alive(i))
+            .count()
+    }
+
+    /// Dispatch a request as an event stream.  Requests that cannot
+    /// possibly fit the pool's remaining cache budget — counting a
+    /// session's full published history — are terminated here with a
+    /// `Failed` event, before any worker sees them; so are follow-up
+    /// session turns whose owning worker died (`resend_history`).  A failed
+    /// send retires that worker and reroutes to the next live one.
+    pub fn submit_stream(&self, mut req: Request) -> Result<StreamHandle> {
+        // Workers always serve at least one token (the decode loop appends
+        // before consulting must_stop), so clamp max_new ONCE — up front —
+        // and dispatch the clamped request.  The pool-wide byte estimate
+        // and the shard's own reservation then gate the same value; a
+        // max_new = 0 request can no longer slip past the router with a
+        // smaller reservation than the shard actually takes.
+        req.max_new = req.max_new.max(1);
+        let id = req.id;
+        let (tx, rx) = channel();
+        match self.state.dispatch(req, &tx, &self.sup_tx, 0) {
+            Dispatched::Sent(w) => Ok(StreamHandle {
+                id,
+                rx,
+                cancel_tx: Some(self.state.workers[w].tx.clone()),
+                worker: Some(w),
+            }),
+            Dispatched::Terminal => Ok(StreamHandle { id, rx, cancel_tx: None, worker: None }),
+            Dispatched::NoWorkers => Err(anyhow!("no live serve workers")),
+        }
+    }
+
+    /// Dispatch without waiting; returns the legacy response receiver.  The
+    /// shared drain thread folds the event stream into its terminal
+    /// [`Response`]; worker death without a terminal event surfaces as a
+    /// dropped receiver, exactly as before the streaming redesign.
     pub fn submit_async(&self, req: Request) -> Result<Receiver<Response>> {
         let stream = self.submit_stream(req)?;
         let (tx, rx) = channel();
-        std::thread::Builder::new()
-            .name("cq-stream-drain".into())
-            .spawn(move || {
-                if let Ok(resp) = stream.drain() {
-                    let _ = tx.send(resp);
-                }
-                // Drain error: tx drops unsent -> the receiver observes a
-                // disconnect, matching the old dropped-response behavior.
-            })
-            .expect("spawn stream drain thread");
+        self.drain_tx
+            .as_ref()
+            .expect("drain thread runs for the pool's lifetime")
+            .send((stream, tx))
+            .map_err(|_| anyhow!("stream drain thread exited"))?;
         Ok(rx)
     }
 
@@ -429,12 +812,12 @@ impl ServePool {
 
     /// Drain all workers and join them; the first worker error propagates.
     pub fn shutdown(mut self) -> Result<()> {
-        for w in &self.workers {
+        for w in &self.state.workers {
             let _ = w.tx.send(Inbound::Shutdown);
         }
         let mut first_err: Option<anyhow::Error> = None;
-        for w in &mut self.workers {
-            if let Some(j) = w.join.take() {
+        for j in &mut self.joins {
+            if let Some(j) = j.take() {
                 let res = match j.join() {
                     Ok(r) => r,
                     Err(_) => Err(anyhow!("serve worker panicked")),
@@ -446,10 +829,33 @@ impl ServePool {
                 }
             }
         }
+        // Workers are joined: every death notice and recovered request is
+        // already queued ahead of this Stop, so the supervisor settles them
+        // before exiting.
+        let _ = self.sup_tx.send(SupervisorMsg::Stop);
+        if let Some(j) = self.sup_join.take() {
+            let _ = j.join();
+        }
+        // Closing the control channel lets the drain thread exit once its
+        // in-flight streams (all terminal by now) are resolved.
+        self.drain_tx.take();
+        if let Some(j) = self.drain_join.take() {
+            let _ = j.join();
+        }
         match first_err {
             Some(e) => Err(e),
             None => Ok(()),
         }
+    }
+}
+
+impl Drop for ServePool {
+    fn drop(&mut self) {
+        // Covers pools dropped without an explicit `shutdown` (tests, early
+        // returns): without this the supervisor would park on its queue
+        // forever, since it holds its own re-dispatch sender.
+        let _ = self.sup_tx.send(SupervisorMsg::Stop);
+        self.drain_tx.take();
     }
 }
 
@@ -555,6 +961,21 @@ mod tests {
             kernel: ServeConfig::default_kernel(),
             block_tokens: ServeConfig::default_block_tokens(),
             prefix_sharing: true,
+            sim: None,
+            faults: None,
+            worker_index: 0,
+            session_cap: ServeConfig::default_session_cap(),
+            session_ttl: None,
+        }
+    }
+
+    /// Dead-worker submissions race the supervisor: the send either fails
+    /// inline (`Err`) or lands in a dying channel and comes back as a
+    /// terminal `[error: ...]` failure event.  Both are fail-fast.
+    fn failed_fast(r: Result<Response>) -> bool {
+        match r {
+            Err(_) => true,
+            Ok(resp) => resp.gen_tokens == 0 && resp.text.starts_with("[error"),
         }
     }
 
@@ -564,7 +985,7 @@ mod tests {
         // submissions must surface an error, never block forever.
         let pool = ServePool::start(dead_worker_cfg(None), 2);
         assert_eq!(pool.n_workers(), 2);
-        assert!(pool.submit(Request::greedy(1, "x", 4)).is_err());
+        assert!(failed_fast(pool.submit(Request::greedy(1, "x", 4))));
         assert!(pool.shutdown().is_err(), "worker startup error propagates");
     }
 
@@ -584,6 +1005,23 @@ mod tests {
     }
 
     #[test]
+    fn session_history_counts_toward_the_prompt_estimate() {
+        // The PR 4 follow-up, pinned: a follow-up session turn is estimated
+        // against history + new text, not just the new text.
+        assert_eq!(estimate_prompt_tokens(0, 12, 0), 12, "non-session unchanged");
+        assert_eq!(estimate_prompt_tokens(1000, 5, 0), 1005);
+        assert_eq!(estimate_prompt_tokens(1000, 5, 64), 64, "prefill ceiling clamps");
+        assert_eq!(estimate_prompt_tokens(0, 5, 64), 5);
+        // Combined with the byte gate: 40-token history + 5 new + 30 decode
+        // at 2 B/token = 150 B can never fit a 128 B pool, while the old
+        // new-text-only estimate (70 B) would have slipped through.
+        let est_new = estimate_prompt_tokens(40, 5, 0);
+        let est_old = estimate_prompt_tokens(0, 5, 0);
+        assert!(pool_admission_rejects(Some(128), 2, 0, est_new, 30));
+        assert!(!pool_admission_rejects(Some(128), 2, 0, est_old, 30));
+    }
+
+    #[test]
     fn max_new_zero_is_clamped_before_the_pool_estimate() {
         // The shard always reserves for >= 1 decode token; the router's
         // byte estimate must gate the same clamped value, not the raw
@@ -599,7 +1037,7 @@ mod tests {
         assert_eq!(pool.metrics.router_rejected.get(), 1);
         // One token smaller and the clamped estimate fits exactly — the
         // request passes the gate (and then dies on the dead worker).
-        assert!(pool.submit(Request::greedy(2, &"x".repeat(15), 0)).is_err());
+        assert!(failed_fast(pool.submit(Request::greedy(2, &"x".repeat(15), 0))));
         assert_eq!(pool.metrics.router_rejected.get(), 1);
         assert!(pool.shutdown().is_err());
     }
@@ -619,13 +1057,13 @@ mod tests {
         assert_eq!(pool.metrics.requests_rejected(), 1);
         // A small request passes the gate and then surfaces the dead-worker
         // error instead.
-        assert!(pool.submit(Request::greedy(2, "hi", 1)).is_err());
+        assert!(failed_fast(pool.submit(Request::greedy(2, "hi", 1))));
         // Once a worker publishes its prefill ceiling, the estimate clamps
         // to it: the same huge prompt trims to (64 + 16) * 4 = 320 B, fits
         // the 1024 B pool, and reaches the (dead) workers instead of being
         // router-rejected.
         pool.metrics.worker(0).max_prompt_tokens.observe_max(64);
-        assert!(pool.submit(Request::greedy(3, &"x".repeat(2000), 16)).is_err());
+        assert!(failed_fast(pool.submit(Request::greedy(3, &"x".repeat(2000), 16))));
         assert_eq!(
             pool.metrics.router_rejected.get(),
             1,
@@ -642,10 +1080,12 @@ mod tests {
             .submit_stream(Request::greedy(7, &"x".repeat(100), 4))
             .expect("router replies directly");
         assert_eq!(h.id(), 7);
+        assert_eq!(h.worker(), None, "router-terminated: no worker");
         match h.recv().expect("one terminal event") {
-            Event::Failed { id, reason } => {
+            Event::Failed { id, reason, retryable } => {
                 assert_eq!(id, 7);
                 assert!(reason.contains("pool budget"), "{reason}");
+                assert!(retryable, "capacity rejection is retryable");
             }
             other => panic!("expected Failed, got {other:?}"),
         }
@@ -658,26 +1098,56 @@ mod tests {
     #[test]
     fn session_requests_route_by_affinity_hash() {
         let pool = ServePool::start(dead_worker_cfg(None), 3);
+        let state = &pool.state;
         // Deterministic ring position, independent of load.
-        assert_eq!(pool.pick_session_worker(0), Some(0));
-        assert_eq!(pool.pick_session_worker(4), Some(1));
-        assert_eq!(pool.pick_session_worker(5), Some(2));
+        assert_eq!(state.pick_session_worker(0), Some(0));
+        assert_eq!(state.pick_session_worker(4), Some(1));
+        assert_eq!(state.pick_session_worker(5), Some(2));
         assert_eq!(
-            pool.pick_session_worker(3),
-            pool.pick_session_worker(3),
+            state.pick_session_worker(3),
+            state.pick_session_worker(3),
             "same session id always maps to the same worker"
         );
         // Dead workers are skipped by scanning forward on the ring.
-        pool.workers[1].alive.store(false, Ordering::Relaxed);
-        assert_eq!(pool.pick_session_worker(4), Some(2));
-        pool.workers[2].alive.store(false, Ordering::Relaxed);
-        assert_eq!(pool.pick_session_worker(4), Some(0));
-        pool.workers[0].alive.store(false, Ordering::Relaxed);
-        assert_eq!(pool.pick_session_worker(4), None, "all dead");
+        state.workers[1].alive.store(false, Ordering::Relaxed);
+        assert_eq!(state.pick_session_worker(4), Some(2));
+        state.workers[2].alive.store(false, Ordering::Relaxed);
+        assert_eq!(state.pick_session_worker(4), Some(0));
+        state.workers[0].alive.store(false, Ordering::Relaxed);
+        assert_eq!(state.pick_session_worker(4), None, "all dead");
         // With every worker dead the submission errors instead of hanging.
         assert!(pool
             .submit_stream(Request::greedy(1, "x", 2).in_session(4))
             .is_err());
+        assert!(pool.shutdown().is_err());
+    }
+
+    #[test]
+    fn follow_up_turn_on_dead_session_worker_gets_resend_history() {
+        let pool = ServePool::start(dead_worker_cfg(None), 2);
+        // Simulate a session whose owning worker published history (turn 1
+        // completed there) and then died.
+        pool.metrics.worker(0).session_tokens.publish(9, 40);
+        pool.state.workers[0].alive.store(false, Ordering::Relaxed);
+        assert_eq!(pool.state.session_owner(9), Some(0));
+        let h = pool
+            .submit_stream(Request::greedy(2, "next turn", 4).in_session(9))
+            .expect("router replies directly");
+        match h.recv().expect("terminal event") {
+            Event::Failed { reason, retryable, .. } => {
+                assert!(reason.contains("resend_history"), "{reason}");
+                assert!(!retryable, "blind retry would reuse the lost history");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        // The dead worker's directory entry is forgotten: the resent-history
+        // turn sees no owner and places fresh (on the live worker 1).
+        assert_eq!(pool.state.session_owner(9), None);
+        assert_eq!(pool.state.pick_session_worker(9), Some(1));
+        // A session with NO published history anywhere is never failed with
+        // resend_history — nothing was lost, it routes like a first turn
+        // (and here dies on the dead-worker pool like any other request).
+        assert!(failed_fast(pool.submit(Request::greedy(3, "x", 2).in_session(11))));
         assert!(pool.shutdown().is_err());
     }
 }

@@ -25,12 +25,27 @@
 //! Cache representation is selected by [`ServeConfig::cq`]: `Some(tag)` uses
 //! the channel-coupled quantized cache (the paper's system); `None` the fp
 //! baseline.  Both run the same batcher, so the serve-throughput bench
-//! isolates exactly the cache effect.
+//! isolates exactly the cache effect.  A third, engine-free **sim** backend
+//! ([`ServeConfig::sim`]) runs the identical scheduler, paged shard,
+//! batcher, session and cancellation machinery against a synthetic
+//! deterministic model — the substrate the chaos suite injects faults into
+//! on hosts without the XLA runtime.
+//!
+//! Fault hooks (all no-ops without a [`FaultPlan`]): the loop top passes the
+//! plan's hold gate and immediate-kill check every iteration; each decode
+//! step passes the step-indexed kill and slow-shard delay.  Injected kills
+//! are genuine panics, so recovery is exercised through real stack
+//! unwinding: lane [`EventSink`]s fail their streams, channel-queued sinks
+//! re-dispatch via the pool supervisor.
+//!
+//! Sessions live in a bounded [`SessionTable`] (LRU cap + idle TTL,
+//! `ServeConfig::{session_cap, session_ttl}`).  A turn referencing an
+//! evicted session fails with a `session_evicted` reason instead of being
+//! silently served from partial context.
 
-use std::collections::HashMap;
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -44,13 +59,14 @@ use crate::tensor::{TensorF, TensorI};
 use crate::util::rng::Pcg64;
 
 use super::batcher::{Batcher, SeqRun};
+use super::fault::{FaultPlan, SimSpec};
 use super::pool::LoadToken;
 use super::sampler::{sample, SampleCfg};
-use super::{Event, Inbound, Request, Response};
+use super::session::{SessionLookup, SessionTable};
+use super::{Event, EventSink, Inbound, Request, Response};
 
-/// Per-worker session table: session id → prompt ++ generated token ids of
-/// the conversation so far (the radix key the next turn resumes from).
-type Sessions = HashMap<u64, Vec<i32>>;
+/// Token-id space of the sim backend (matches the byte tokenizer).
+const SIM_VOCAB: usize = 256;
 
 /// Serving configuration.
 #[derive(Clone, Debug)]
@@ -77,6 +93,23 @@ pub struct ServeConfig {
     /// attach to already-quantized prompt-prefix blocks and skip
     /// quantize+store for the matched span.
     pub prefix_sharing: bool,
+    /// Engine-free deterministic backend (chaos/fault tests): when set, the
+    /// worker never touches PJRT and `params_path`/`codebook_path` are
+    /// ignored.
+    pub sim: Option<SimSpec>,
+    /// Scripted fault-injection plan shared across the pool (tests only;
+    /// `None` in production — every hook is then a no-op).
+    pub faults: Option<Arc<FaultPlan>>,
+    /// This worker's index in its pool (`ServePool::start` assigns it; 0
+    /// for standalone loops) — the key fault hooks and logs identify the
+    /// worker by.
+    pub worker_index: usize,
+    /// Bound on live sessions per worker; beyond it the least-recently-used
+    /// session is evicted (surfaced as a `session_evicted` failure).
+    pub session_cap: usize,
+    /// Idle TTL for sessions (`None` = no TTL; the LRU cap still bounds the
+    /// table).
+    pub session_ttl: Option<Duration>,
 }
 
 impl ServeConfig {
@@ -91,6 +124,35 @@ impl ServeConfig {
     /// Default paging granularity (tokens per block).
     pub fn default_block_tokens() -> usize {
         DEFAULT_BLOCK_TOKENS
+    }
+
+    /// Default live-session bound per worker.
+    pub fn default_session_cap() -> usize {
+        256
+    }
+}
+
+impl Default for ServeConfig {
+    /// Every knob at its default (fp16 cache, batch 1, no budget, no sim,
+    /// no faults).  Callers override the fields they care about with
+    /// struct-update syntax instead of re-listing the whole config.
+    fn default() -> ServeConfig {
+        ServeConfig {
+            model: String::from("small"),
+            cq: None,
+            batch: 1,
+            cache_budget: None,
+            codebook_path: None,
+            params_path: std::path::PathBuf::new(),
+            kernel: ServeConfig::default_kernel(),
+            block_tokens: ServeConfig::default_block_tokens(),
+            prefix_sharing: true,
+            sim: None,
+            faults: None,
+            worker_index: 0,
+            session_cap: ServeConfig::default_session_cap(),
+            session_ttl: None,
+        }
     }
 }
 
@@ -110,13 +172,17 @@ enum CacheMode {
         art: String,
         tmax: usize,
     },
+    /// Engine-free deterministic backend: same staging tensors and paged
+    /// store as CQ, synthetic codes/logits instead of PJRT artifacts.
+    Sim { stage: BatchStage },
 }
 
 /// Everything the loop needs per model.
 struct Ctx {
-    engine: Engine,
-    /// Parameter vector resident on device (uploaded once).
-    params_buf: DevBuf,
+    /// `None` in sim mode — no PJRT anywhere near the loop.
+    engine: Option<Engine>,
+    /// Parameter vector resident on device (uploaded once; `None` in sim).
+    params_buf: Option<DevBuf>,
     mode: CacheMode,
     geom: CacheGeom,
     batch: usize,
@@ -124,9 +190,60 @@ struct Ctx {
     prefills: Vec<(usize, String)>,
     head_dim: usize,
     vocab: usize,
+    /// Pool worker index (fault hooks + logs).
+    worker: usize,
+    faults: Option<Arc<FaultPlan>>,
+}
+
+/// Deterministic sim "quantization": per-token codes derived from the token
+/// id — the same token always stores the same record, so radix sharing and
+/// re-dispatch reproduce byte-identical cache state on any worker.
+fn sim_codes(geom: &CacheGeom, tok: i32, k_out: &mut Vec<u32>, v_out: &mut Vec<u32>) {
+    let per_side = geom.n_layers * geom.n_heads * geom.groups;
+    let mask = (1u32 << geom.bits.min(31)) - 1;
+    k_out.clear();
+    v_out.clear();
+    let t = tok as u32;
+    for j in 0..per_side as u32 {
+        k_out.push(t.wrapping_mul(2_654_435_761).wrapping_add(j) & mask);
+        v_out.push(t.wrapping_mul(40_503).wrapping_add(j.wrapping_mul(7).wrapping_add(1)) & mask);
+    }
+}
+
+/// The sim model's token-successor function: greedy decode follows a fixed
+/// deterministic walk, reproducible across workers and re-dispatches.
+fn sim_next(tok: i32) -> i32 {
+    (tok.wrapping_mul(31).wrapping_add(17)).rem_euclid(SIM_VOCAB as i32)
 }
 
 fn build_ctx(cfg: &ServeConfig) -> Result<Ctx> {
+    if let Some(sim) = &cfg.sim {
+        anyhow::ensure!(
+            sim.max_prompt < sim.tmax,
+            "sim max_prompt ({}) must leave decode room under tmax ({})",
+            sim.max_prompt,
+            sim.tmax
+        );
+        let geom = CacheGeom {
+            n_layers: sim.n_layers,
+            n_heads: sim.n_heads,
+            groups: sim.groups,
+            bits: sim.bits,
+            tmax: sim.tmax,
+        };
+        return Ok(Ctx {
+            engine: None,
+            params_buf: None,
+            mode: CacheMode::Sim { stage: BatchStage::new(geom, cfg.batch) },
+            geom,
+            batch: cfg.batch,
+            prefills: vec![(sim.max_prompt, String::from("sim"))],
+            head_dim: 1,
+            vocab: SIM_VOCAB,
+            worker: cfg.worker_index,
+            faults: cfg.faults.clone(),
+        });
+    }
     let engine = Engine::load_default()?;
     let mm = engine.manifest.model(&cfg.model)?.clone();
     let params = Value::F(
@@ -201,29 +318,29 @@ fn build_ctx(cfg: &ServeConfig) -> Result<Ctx> {
     prefills.sort();
     anyhow::ensure!(!prefills.is_empty(), "no prefill artifact for {}", cfg.model);
     Ok(Ctx {
-        engine,
-        params_buf,
+        engine: Some(engine),
+        params_buf: Some(params_buf),
         mode,
         geom,
         batch,
         prefills,
         head_dim: mm.head_dim,
         vocab: mm.vocab,
+        worker: cfg.worker_index,
+        faults: cfg.faults.clone(),
     })
 }
 
 /// Tokenize + router-trim one request's prompt (sliding-window tail policy,
 /// like a chat server keeping the most recent context).  A session request
-/// prepends the session's accumulated token ids, so the follow-up turn's
-/// effective prompt is the whole conversation — and its prefix matches the
-/// blocks the previous turn promoted.
-fn prompt_ids(ctx: &Ctx, sessions: &Sessions, req: &Request) -> Vec<i32> {
+/// prepends its resolved history, so the follow-up turn's effective prompt
+/// is the whole conversation — and its prefix matches the blocks the
+/// previous turn promoted.
+fn prompt_ids(ctx: &Ctx, history: Option<&[i32]>, req: &Request) -> Vec<i32> {
     let tok = ByteTokenizer;
     let mut prompt = Vec::new();
-    if let Some(sid) = req.session_id {
-        if let Some(hist) = sessions.get(&sid) {
-            prompt.extend_from_slice(hist);
-        }
+    if let Some(hist) = history {
+        prompt.extend_from_slice(hist);
     }
     prompt.extend(tok.encode(&req.prompt));
     if prompt.is_empty() {
@@ -286,6 +403,21 @@ fn prefill_fill(
     adm: &mut Admission,
 ) -> Result<i32> {
     let p = prompt.len();
+    if let Some(plan) = &ctx.faults {
+        if plan.take_poison(req.id) {
+            bail!("[chaos] poisoned prefill (request {})", req.id);
+        }
+    }
+    if let CacheMode::Sim { .. } = ctx.mode {
+        // Synthetic quantize+store over the unmatched span only — the radix
+        // hit skips exactly the same tokens as in CQ serving.
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        for &t in &prompt[adm.hit_tokens..] {
+            sim_codes(&ctx.geom, t, &mut k, &mut v);
+            adm.seq.append(&mut shard.pool, &k, &v)?;
+        }
+        return Ok(sim_next(*prompt.last().unwrap()));
+    }
     // Smallest compiled prefill bucket that fits the prompt.
     let (bucket_ctx, art) = ctx
         .prefills
@@ -295,10 +427,11 @@ fn prefill_fill(
     let mut padded = prompt.to_vec();
     padded.resize(*bucket_ctx, b' ' as i32);
     let tokens = Value::I(TensorI::from_vec(&[1, *bucket_ctx], padded)?);
-    let out = ctx
-        .engine
+    let engine = ctx.engine.as_ref().expect("engine present outside sim mode");
+    let params_buf = ctx.params_buf.as_ref().expect("params resident outside sim mode");
+    let out = engine
         .executable(art)?
-        .run_mixed(&[Arg::B(&ctx.params_buf), Arg::V(&tokens)])?;
+        .run_mixed(&[Arg::B(params_buf), Arg::V(&tokens)])?;
     let logits = out[0].as_f()?;
     let k = out[1].as_f()?;
     let v = out[2].as_f()?;
@@ -321,6 +454,7 @@ fn prefill_fill(
             // Stash prefill K/V for staging at admission time.
             adm.seq.fp_seed = Some((k.clone(), v.clone()));
         }
+        CacheMode::Sim { .. } => unreachable!("sim prefill returned above"),
     }
 
     // First generated token from the last prompt position.
@@ -333,26 +467,28 @@ fn prefill_fill(
     ))
 }
 
-/// Router admission for one inbound request: match the prompt (with any
-/// session history prepended) against this shard's radix index, reserve
+/// Router admission for one inbound request: resolve its session (failing
+/// evicted sessions with the `session_evicted` signal), match the prompt
+/// (with any history prepended) against this shard's radix index, reserve
 /// blocks (evicting cold cached prefixes under pressure), prefill, and
 /// enqueue.  Lifecycle events: `Started` on acceptance, the first `Token`
 /// at end of prefill (TTFT), `Failed` on rejection or prefill error.
 /// The [`LoadToken`] rides in the `SeqRun` so the pool's in-flight count
 /// drops on every terminal path.
-#[allow(clippy::too_many_arguments)]
 fn admit_request(
     ctx: &Ctx,
     shard: &mut PagedShard,
     batcher: &mut Batcher,
-    sessions: &mut Sessions,
+    sessions: &mut SessionTable,
     metrics: &ServeMetrics,
-    mut req: Request,
-    events: Sender<Event>,
+    mut sink: EventSink,
     token: Option<LoadToken>,
 ) {
+    // From here on a worker crash fails this stream instead of silently
+    // re-dispatching a half-served request.
+    let Some(mut req) = sink.begin() else { return };
     let arrived = Instant::now();
-    let _ = events.send(Event::Started { id: req.id });
+    let _ = sink.send(Event::Started { id: req.id });
     // The decode loop always appends at least one token before `must_stop`
     // is consulted, so max_new = 0 would under-reserve by one block and the
     // unbacked append could fail mid-decode; serve at least one token.
@@ -360,18 +496,38 @@ fn admit_request(
     // estimate — this repeat only covers callers driving a serve loop
     // directly, so router estimate and shard reservation always agree.
     req.max_new = req.max_new.max(1);
-    let prompt = prompt_ids(ctx, sessions, &req);
+    let history: Option<&[i32]> = match req.session_id {
+        None => None,
+        Some(sid) => match sessions.lookup(sid, metrics) {
+            SessionLookup::Hit(ids) => Some(ids),
+            SessionLookup::New => None,
+            SessionLookup::Evicted => {
+                // Serving only the new turn's text would silently answer
+                // from partial context; make the client resend history.
+                sink.send_terminal(Event::Failed {
+                    id: req.id,
+                    reason: format!("[session_evicted: session {sid} expired; resend history]"),
+                    retryable: false,
+                });
+                return;
+            }
+        },
+    };
+    let prompt = prompt_ids(ctx, history, &req);
     let admitted = match &ctx.mode {
-        CacheMode::Cq { .. } => shard.admit_stored(&prompt, req.max_new, metrics),
         CacheMode::Fp { .. } => shard.admit_unstored(prompt.len(), req.max_new, metrics),
+        CacheMode::Cq { .. } | CacheMode::Sim { .. } => {
+            shard.admit_stored(&prompt, req.max_new, metrics)
+        }
     };
     let adm = match admitted {
         Ok(adm) => adm,
         Err(_) => {
             metrics.requests_rejected.add(1);
-            let _ = events.send(Event::Failed {
+            sink.send_terminal(Event::Failed {
                 id: req.id,
                 reason: "[rejected: cache budget]".into(),
+                retryable: true,
             });
             return; // token drops here -> router sees the slot free again
         }
@@ -383,12 +539,12 @@ fn admit_request(
             run.ttft_ms = ttft.as_secs_f64() * 1e3;
             // First token: sampled by prefill, streamed before the run ever
             // waits on a decode lane.
-            let _ = events.send(Event::Token {
+            let _ = sink.send(Event::Token {
                 id: run.req.id,
                 index: 0,
                 text: ByteTokenizer.decode(&run.generated[..1]),
             });
-            run.events = Some(events);
+            run.events = Some(sink);
             run.load_token = token;
             batcher.enqueue(run);
         }
@@ -397,9 +553,10 @@ fn admit_request(
             // Explicit error reply (like the rejection path) so pipelined
             // TCP clients keep their connection instead of a dropped-channel
             // error tearing it down.
-            let _ = events.send(Event::Failed {
+            sink.send_terminal(Event::Failed {
                 id: req.id,
                 reason: format!("[error: prefill failed: {e:#}]"),
+                retryable: false,
             });
         }
     }
@@ -410,7 +567,7 @@ fn admit_request(
 fn stage_admitted(ctx: &mut Ctx, shard: &PagedShard, slot: usize, batcher: &Batcher) {
     let run = batcher.slot(slot).expect("admitted slot");
     match &mut ctx.mode {
-        CacheMode::Cq { stage, .. } => {
+        CacheMode::Cq { stage, .. } | CacheMode::Sim { stage } => {
             // load_sequence leaves pos at the next write position.
             stage.load_sequence(slot, &run.packed, &shard.pool);
         }
@@ -456,16 +613,20 @@ fn decode_step(
         tok[i] = *run.generated.last().unwrap();
         pos[i] = run.packed.len as i32;
     }
+    // Both vectors are still read below (pos by apply_updates, tok by the
+    // sim decode arm), so the tensors take clones.
     let pos_t = Value::I(TensorI::from_vec(&[b], pos.clone())?);
-    let tok_t = Value::I(TensorI::from_vec(&[b], tok)?);
+    let tok_t = Value::I(TensorI::from_vec(&[b], tok.clone())?);
 
     let (logits, updates) = match &ctx.mode {
         CacheMode::Cq { stage, ck_buf, cv_buf, art, .. } => {
             // Staging code tensors are moved (not cloned): run_mixed borrows.
             let kc = Value::I(stage.k_codes.clone());
             let vc = Value::I(stage.v_codes.clone());
-            let out = ctx.engine.executable(art)?.run_mixed(&[
-                Arg::B(&ctx.params_buf),
+            let engine = ctx.engine.as_ref().expect("engine present in cq mode");
+            let params_buf = ctx.params_buf.as_ref().expect("params resident in cq mode");
+            let out = engine.executable(art)?.run_mixed(&[
+                Arg::B(params_buf),
                 Arg::B(ck_buf),
                 Arg::B(cv_buf),
                 Arg::V(&kc),
@@ -481,8 +642,10 @@ fn decode_step(
         CacheMode::Fp { k_cache, v_cache, art, .. } => {
             let kc = Value::F(k_cache.clone());
             let vc = Value::F(v_cache.clone());
-            let out = ctx.engine.executable(art)?.run_mixed(&[
-                Arg::B(&ctx.params_buf),
+            let engine = ctx.engine.as_ref().expect("engine present in fp mode");
+            let params_buf = ctx.params_buf.as_ref().expect("params resident in fp mode");
+            let out = engine.executable(art)?.run_mixed(&[
+                Arg::B(params_buf),
                 Arg::V(&kc),
                 Arg::V(&vc),
                 Arg::V(&pos_t),
@@ -492,6 +655,34 @@ fn decode_step(
             let kn = out[1].as_f()?.clone();
             let vn = out[2].as_f()?.clone();
             (logits, StepUpdate::Fp(kn, vn))
+        }
+        CacheMode::Sim { .. } => {
+            // Emulate the decode artifact's contract exactly: new KV codes
+            // `[L, B, H, G]` for each lane's input token plus a one-hot
+            // logits row at its deterministic successor.
+            let (l_n, h_n, g_n) = (ctx.geom.n_layers, ctx.geom.n_heads, ctx.geom.groups);
+            let mut kn = vec![0i32; l_n * b * h_n * g_n];
+            let mut vn = vec![0i32; l_n * b * h_n * g_n];
+            let mut lg = vec![0f32; b * ctx.vocab];
+            let (mut ks, mut vs) = (Vec::new(), Vec::new());
+            for i in batcher.occupied() {
+                sim_codes(&ctx.geom, tok[i], &mut ks, &mut vs);
+                for l in 0..l_n {
+                    for h in 0..h_n {
+                        let dst = ((l * b + i) * h_n + h) * g_n;
+                        let src = (l * h_n + h) * g_n;
+                        for g in 0..g_n {
+                            kn[dst + g] = ks[src + g] as i32;
+                            vn[dst + g] = vs[src + g] as i32;
+                        }
+                    }
+                }
+                lg[i * ctx.vocab + sim_next(tok[i]) as usize] = 1.0;
+            }
+            let logits = TensorF::from_vec(&[b, ctx.vocab], lg)?;
+            let kn = TensorI::from_vec(&[l_n, b, h_n, g_n], kn)?;
+            let vn = TensorI::from_vec(&[l_n, b, h_n, g_n], vn)?;
+            (logits, StepUpdate::Cq(kn, vn))
         }
     };
 
@@ -520,7 +711,8 @@ fn apply_updates(
 ) -> Result<()> {
     let b = ctx.batch;
     match (&mut ctx.mode, up) {
-        (CacheMode::Cq { stage, .. }, StepUpdate::Cq(kn, vn)) => {
+        (CacheMode::Cq { stage, .. }, StepUpdate::Cq(kn, vn))
+        | (CacheMode::Sim { stage }, StepUpdate::Cq(kn, vn)) => {
             let (l_n, h_n, g_n) = (ctx.geom.n_layers, ctx.geom.n_heads, ctx.geom.groups);
             for i in batcher.occupied() {
                 let t = pos[i] as usize;
@@ -572,14 +764,16 @@ pub fn serve_loop(
     let mut ctx = build_ctx(&cfg)?;
     // Warmup: compile the hot artifacts before the first request arrives so
     // first-token latency reflects steady state, not XLA compilation.
-    {
-        let art = match &ctx.mode {
-            CacheMode::Cq { art, .. } => art.clone(),
-            CacheMode::Fp { art, .. } => art.clone(),
-        };
-        ctx.engine.executable(&art)?;
-        for (_, p) in ctx.prefills.clone() {
-            ctx.engine.executable(&p)?;
+    // (Sim mode has no engine and nothing to warm.)
+    if let Some(engine) = &ctx.engine {
+        match &ctx.mode {
+            CacheMode::Cq { art, .. } | CacheMode::Fp { art, .. } => {
+                engine.executable(art)?;
+            }
+            CacheMode::Sim { .. } => {}
+        }
+        for (_, p) in &ctx.prefills {
+            engine.executable(p)?;
         }
     }
     let mut batcher = Batcher::new(ctx.batch, ctx.geom);
@@ -598,14 +792,16 @@ pub fn serve_loop(
         );
     }
     let budget_blocks = cfg.cache_budget.map(|b| b / block_bytes);
+    // The sim backend stores real packed codes, so it shares prefixes like
+    // CQ does; only the fp baseline serves unstored.
     let mut shard = PagedShard::new(
         ctx.geom,
         block_tokens,
         budget_blocks,
-        cfg.prefix_sharing && cfg.cq.is_some(),
+        cfg.prefix_sharing && (cfg.cq.is_some() || cfg.sim.is_some()),
     );
-    // Multi-turn continuation state: session id -> conversation token ids.
-    let mut sessions: Sessions = HashMap::new();
+    // Multi-turn continuation state, bounded by LRU cap + idle TTL.
+    let mut sessions = SessionTable::new(cfg.session_cap, cfg.session_ttl);
     // Publish shard geometry for the router's pool-wide admission estimate.
     metrics.bytes_per_token.observe_max(ctx.geom.bytes_per_token() as u64);
     metrics.block_bytes.observe_max(block_bytes as u64);
@@ -616,20 +812,30 @@ pub fn serve_loop(
     let mut shutting_down = false;
     // Decode-path code buffers, reused across every step and lane.
     let mut scratch = CodeScratch::default();
+    // Lifetime decode-step counter: the index `FaultPlan::kill_worker_at_step`
+    // schedules against.
+    let mut decode_steps: u64 = 0;
 
     loop {
+        // --- Fault gate (chaos harness; no-op without a plan) ----------
+        if let Some(plan) = &ctx.faults {
+            plan.pause_point(ctx.worker);
+            if plan.take_kill_now(ctx.worker) {
+                panic!("[chaos] worker {} killed by fault plan", ctx.worker);
+            }
+        }
+
         // --- Router: drain inbound ------------------------------------
         loop {
             match rx.try_recv() {
-                Ok(Inbound::Submit(req, events, token)) => {
+                Ok(Inbound::Submit(sink, token)) => {
                     admit_request(
                         &ctx,
                         &mut shard,
                         &mut batcher,
                         &mut sessions,
                         &metrics,
-                        req,
-                        events,
+                        sink,
                         token,
                     );
                 }
@@ -660,6 +866,18 @@ pub fn serve_loop(
 
         // --- Decode ------------------------------------------------------
         if batcher.active() > 0 {
+            if let Some(plan) = &ctx.faults {
+                if plan.take_kill_at_step(ctx.worker, decode_steps) {
+                    panic!(
+                        "[chaos] worker {} killed at decode step {decode_steps}",
+                        ctx.worker
+                    );
+                }
+                if let Some(d) = plan.step_delay(ctx.worker) {
+                    std::thread::sleep(d);
+                }
+            }
+            decode_steps += 1;
             let t0 = Instant::now();
             let logits = decode_step(&mut ctx, &batcher, &mut scratch)?;
             metrics.decode_step_latency.record(t0.elapsed());
@@ -669,7 +887,7 @@ pub fn serve_loop(
                 {
                     let run = batcher.slot_mut(i).unwrap();
                     match &ctx.mode {
-                        CacheMode::Cq { .. } => {
+                        CacheMode::Cq { .. } | CacheMode::Sim { .. } => {
                             // Codes were staged; append to the paged store
                             // from the staging lane for durability.
                             let t = run.packed.len;
@@ -694,13 +912,11 @@ pub fn serve_loop(
                 // generation: treat it as an implicit cancel and reclaim
                 // the lane + blocks right away.
                 let receiver_gone = match &run.events {
-                    Some(tx) => tx
-                        .send(Event::Token {
-                            id: run.req.id,
-                            index: run.generated.len() - 1,
-                            text: ByteTokenizer.decode(&[next]),
-                        })
-                        .is_err(),
+                    Some(sink) => !sink.send(Event::Token {
+                        id: run.req.id,
+                        index: run.generated.len() - 1,
+                        text: ByteTokenizer.decode(&[next]),
+                    }),
                     None => false,
                 };
                 if receiver_gone {
@@ -713,19 +929,19 @@ pub fn serve_loop(
                 }
             }
         } else if shutting_down && batcher.is_idle() {
+            debug_assert!(shard.idle(), "shard accounting not at idle baseline on shutdown");
             return Ok(());
         } else if batcher.is_idle() {
             // Idle: block briefly for the next request.
-            match rx.recv_timeout(std::time::Duration::from_millis(20)) {
-                Ok(Inbound::Submit(req, events, token)) => {
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(Inbound::Submit(sink, token)) => {
                     admit_request(
                         &ctx,
                         &mut shard,
                         &mut batcher,
                         &mut sessions,
                         &metrics,
-                        req,
-                        events,
+                        sink,
                         token,
                     );
                 }
@@ -735,6 +951,10 @@ pub fn serve_loop(
                 Ok(Inbound::Shutdown) => shutting_down = true,
                 Err(_) => {
                     if shutting_down {
+                        debug_assert!(
+                            shard.idle(),
+                            "shard accounting not at idle baseline on shutdown"
+                        );
                         return Ok(());
                     }
                 }
@@ -747,7 +967,7 @@ pub fn serve_loop(
 /// reusable decode scratch.
 fn read_stage_token_into(ctx: &Ctx, slot: usize, t: usize, scratch: &mut CodeScratch) {
     match &ctx.mode {
-        CacheMode::Cq { stage, .. } => {
+        CacheMode::Cq { stage, .. } | CacheMode::Sim { stage } => {
             let (l_n, h_n, g_n) = (ctx.geom.n_layers, ctx.geom.n_heads, ctx.geom.groups);
             let b = ctx.batch;
             scratch.kc.clear();
@@ -779,12 +999,14 @@ fn promote_key(run: &SeqRun) -> Vec<i32> {
 }
 
 /// Record the finished (or cancelled) turn in the session table so the next
-/// turn with this session id resumes from the full conversation.
-fn note_session(sessions: &mut Sessions, run: &SeqRun) {
+/// turn with this session id resumes from the full conversation.  The table
+/// publishes the session's token count for the router's reservation
+/// estimate and LRU-evicts over-cap sessions.
+fn note_session(sessions: &mut SessionTable, metrics: &ServeMetrics, run: &SeqRun) {
     if let Some(sid) = run.req.session_id {
         let mut hist = run.prompt_ids.clone();
         hist.extend_from_slice(&run.generated);
-        sessions.insert(sid, hist);
+        sessions.record(sid, hist, metrics);
     }
 }
 
@@ -795,7 +1017,7 @@ fn cancel_request(
     ctx: &mut Ctx,
     batcher: &mut Batcher,
     shard: &mut PagedShard,
-    sessions: &mut Sessions,
+    sessions: &mut SessionTable,
     metrics: &ServeMetrics,
     id: u64,
 ) {
@@ -813,13 +1035,13 @@ fn cancel_lane(
     ctx: &mut Ctx,
     batcher: &mut Batcher,
     shard: &mut PagedShard,
-    sessions: &mut Sessions,
+    sessions: &mut SessionTable,
     metrics: &ServeMetrics,
     slot: usize,
 ) {
     if let Some(run) = batcher.take(slot) {
         match &mut ctx.mode {
-            CacheMode::Cq { stage, .. } => stage.release(slot),
+            CacheMode::Cq { stage, .. } | CacheMode::Sim { stage } => stage.release(slot),
             CacheMode::Fp { pos, .. } => pos[slot] = 0,
         }
         settle_cancelled(shard, sessions, metrics, run);
@@ -833,16 +1055,20 @@ fn cancel_lane(
 /// in-flight count for this worker falls the moment the cancel lands.
 fn settle_cancelled(
     shard: &mut PagedShard,
-    sessions: &mut Sessions,
+    sessions: &mut SessionTable,
     metrics: &ServeMetrics,
     mut run: SeqRun,
 ) {
     let key = promote_key(&run);
     shard.cancel(&mut run.packed, &key, run.reserved_blocks, metrics);
-    note_session(sessions, &run);
+    note_session(sessions, metrics, &run);
     metrics.requests_cancelled.add(1);
-    if let Some(tx) = run.events.take() {
-        let _ = tx.send(Event::Failed { id: run.req.id, reason: "[cancelled]".into() });
+    if let Some(mut sink) = run.events.take() {
+        sink.send_terminal(Event::Failed {
+            id: run.req.id,
+            reason: "[cancelled]".into(),
+            retryable: false,
+        });
     }
     // `run` (and its LoadToken) drops here.
 }
@@ -851,13 +1077,13 @@ fn complete(
     ctx: &mut Ctx,
     batcher: &mut Batcher,
     shard: &mut PagedShard,
-    sessions: &mut Sessions,
+    sessions: &mut SessionTable,
     slot: usize,
     metrics: &ServeMetrics,
 ) {
     if let Some(mut run) = batcher.take(slot) {
         match &mut ctx.mode {
-            CacheMode::Cq { stage, .. } => stage.release(slot),
+            CacheMode::Cq { stage, .. } | CacheMode::Sim { stage } => stage.release(slot),
             CacheMode::Fp { pos, .. } => pos[slot] = 0,
         }
         let cache_bytes = run.packed.logical_bytes();
@@ -866,7 +1092,7 @@ fn complete(
         // Cache position `prompt_tokens + j` holds the KV of generated[j].
         let key = promote_key(&run);
         shard.finish(&mut run.packed, &key, run.reserved_blocks, metrics);
-        note_session(sessions, &run);
+        note_session(sessions, metrics, &run);
         let tok = ByteTokenizer;
         let text = tok.decode(&run.generated);
         let decode_ms = run
@@ -881,8 +1107,8 @@ fn complete(
         metrics
             .request_latency
             .record(run.enqueued_at.elapsed());
-        if let Some(tx) = run.events.take() {
-            let _ = tx.send(Event::Done(Response {
+        if let Some(mut sink) = run.events.take() {
+            sink.send_terminal(Event::Done(Response {
                 id: run.req.id,
                 text,
                 prompt_tokens: run.prompt_tokens,

@@ -1,0 +1,214 @@
+//! Bounded per-worker session table: LRU capacity + idle TTL eviction.
+//!
+//! PR 4's session table mapped `session_id -> conversation token ids` in a
+//! plain `HashMap` that grew without bound — a worker serving millions of
+//! one-shot "sessions" would eventually hold every dead conversation's
+//! history forever.  [`SessionTable`] bounds it two ways:
+//!
+//! * **LRU capacity** (`cap`): recording a turn for a new session beyond the
+//!   cap evicts the least-recently-used session;
+//! * **idle TTL** (`ttl`): a session untouched for longer than the TTL is
+//!   evicted on the next table access (lazy sweep — no timer thread).
+//!
+//! Eviction is *visible*, not silent: the evicted id moves to a tombstone
+//! set, and the next turn that references it gets
+//! [`SessionLookup::Evicted`] — the serve loop turns that into a terminal
+//! `Failed` event whose reason carries the `session_evicted` signal, telling
+//! the client to resend its history instead of being silently answered from
+//! partial context.  The failed lookup consumes the tombstone, so the
+//! client's resent-history turn recreates the session cleanly.  Tombstones
+//! are 8 bytes each and only accumulate for sessions that never return; the
+//! histories themselves (the unbounded part PR 4 left open) are freed at
+//! eviction time.
+//!
+//! The table also publishes each live session's total token count into
+//! `ServeMetrics::session_tokens` so the pool router can estimate a
+//! follow-up turn's true reservation (history + new text), not just the new
+//! turn's text.
+
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
+
+use crate::metrics::ServeMetrics;
+
+struct Entry {
+    ids: Vec<i32>,
+    last_used: Instant,
+    /// Logical recency (monotonic per table): LRU order without relying on
+    /// `Instant` resolution for same-instant touches.
+    touch: u64,
+}
+
+/// Outcome of a session lookup at turn admission.
+pub enum SessionLookup<'a> {
+    /// The conversation's token ids so far (prompt ++ generated of every
+    /// prior turn), borrowed from the table — the admission path reads them
+    /// once into the effective prompt without copying the history twice.
+    Hit(&'a [i32]),
+    /// The session existed but was evicted (LRU or TTL): the turn must fail
+    /// with a `session_evicted` signal so the client resends history.
+    Evicted,
+    /// Never seen: this is the session's first turn.
+    New,
+}
+
+/// Bounded session table for one serve worker.
+pub struct SessionTable {
+    cap: usize,
+    ttl: Option<Duration>,
+    clock: u64,
+    entries: HashMap<u64, Entry>,
+    evicted: HashSet<u64>,
+}
+
+impl SessionTable {
+    pub fn new(cap: usize, ttl: Option<Duration>) -> SessionTable {
+        SessionTable {
+            cap: cap.max(1),
+            ttl,
+            clock: 0,
+            entries: HashMap::new(),
+            evicted: HashSet::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Resolve a session at turn admission.  Sweeps TTL-expired sessions
+    /// first, so an idle-too-long session answers `Evicted` even if nothing
+    /// else touched the table since it expired.
+    pub fn lookup(&mut self, sid: u64, metrics: &ServeMetrics) -> SessionLookup<'_> {
+        self.sweep_expired(metrics);
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.entries.get_mut(&sid) {
+            e.last_used = Instant::now();
+            e.touch = clock;
+            return SessionLookup::Hit(&e.ids);
+        }
+        if self.evicted.remove(&sid) {
+            return SessionLookup::Evicted;
+        }
+        SessionLookup::New
+    }
+
+    /// Record a finished turn's full conversation, publishing its token
+    /// count and LRU-evicting over-cap sessions.
+    pub fn record(&mut self, sid: u64, ids: Vec<i32>, metrics: &ServeMetrics) {
+        self.clock += 1;
+        metrics.session_tokens.publish(sid, ids.len() as u64);
+        self.entries
+            .insert(sid, Entry { ids, last_used: Instant::now(), touch: self.clock });
+        while self.entries.len() > self.cap {
+            let coldest = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.touch)
+                .map(|(&k, _)| k)
+                .expect("non-empty over-cap table");
+            self.evict(coldest, metrics);
+        }
+    }
+
+    /// Tombstone bound: sessions that never return would otherwise grow the
+    /// evicted set by 8 bytes each, forever.  When the set overflows (far
+    /// beyond any live working set) it is cleared wholesale — the cleared
+    /// sessions lose their explicit `session_evicted` signal and simply
+    /// start fresh on their next turn, trading a rare soft reset for a hard
+    /// memory bound.
+    fn tombstone_cap(&self) -> usize {
+        (8 * self.cap).max(1024)
+    }
+
+    fn evict(&mut self, sid: u64, metrics: &ServeMetrics) {
+        if self.entries.remove(&sid).is_some() {
+            if self.evicted.len() >= self.tombstone_cap() {
+                self.evicted.clear();
+            }
+            self.evicted.insert(sid);
+            metrics.sessions_evicted.add(1);
+            metrics.session_tokens.forget(sid);
+        }
+    }
+
+    fn sweep_expired(&mut self, metrics: &ServeMetrics) {
+        let Some(ttl) = self.ttl else { return };
+        let expired: Vec<u64> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.last_used.elapsed() > ttl)
+            .map(|(&k, _)| k)
+            .collect();
+        for sid in expired {
+            self.evict(sid, metrics);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hit_ids(l: SessionLookup<'_>) -> Vec<i32> {
+        match l {
+            SessionLookup::Hit(ids) => ids.to_vec(),
+            SessionLookup::Evicted => panic!("unexpected Evicted"),
+            SessionLookup::New => panic!("unexpected New"),
+        }
+    }
+
+    #[test]
+    fn record_then_lookup_roundtrips_and_publishes_length() {
+        let m = ServeMetrics::default();
+        let mut t = SessionTable::new(8, None);
+        assert!(matches!(t.lookup(1, &m), SessionLookup::New));
+        t.record(1, vec![10, 11, 12], &m);
+        assert_eq!(hit_ids(t.lookup(1, &m)), vec![10, 11, 12]);
+        assert_eq!(m.session_tokens.get(1), Some(3));
+        t.record(1, vec![10, 11, 12, 13, 14], &m);
+        assert_eq!(hit_ids(t.lookup(1, &m)).len(), 5);
+        assert_eq!(m.session_tokens.get(1), Some(5));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn lru_cap_evicts_coldest_and_surfaces_evicted_once() {
+        let m = ServeMetrics::default();
+        let mut t = SessionTable::new(2, None);
+        t.record(1, vec![1], &m);
+        t.record(2, vec![2], &m);
+        // Touch 1 so 2 becomes coldest.
+        let _ = t.lookup(1, &m);
+        t.record(3, vec![3], &m);
+        assert_eq!(t.len(), 2);
+        assert_eq!(m.sessions_evicted.get(), 1);
+        assert_eq!(m.session_tokens.get(2), None, "evicted length forgotten");
+        assert!(matches!(t.lookup(2, &m), SessionLookup::Evicted));
+        // The failed turn consumed the tombstone: the resent-history turn
+        // starts the session fresh.
+        assert!(matches!(t.lookup(2, &m), SessionLookup::New));
+        assert!(matches!(t.lookup(1, &m), SessionLookup::Hit(_)));
+        assert!(matches!(t.lookup(3, &m), SessionLookup::Hit(_)));
+    }
+
+    #[test]
+    fn ttl_expiry_evicts_on_next_access() {
+        let m = ServeMetrics::default();
+        let mut t = SessionTable::new(8, Some(Duration::from_millis(1)));
+        t.record(5, vec![9, 9], &m);
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(matches!(t.lookup(5, &m), SessionLookup::Evicted));
+        assert_eq!(m.sessions_evicted.get(), 1);
+        assert!(t.is_empty());
+        // With a generous TTL the same access pattern stays live.
+        let mut t2 = SessionTable::new(8, Some(Duration::from_secs(600)));
+        t2.record(5, vec![1], &m);
+        assert!(matches!(t2.lookup(5, &m), SessionLookup::Hit(_)));
+    }
+}

@@ -340,6 +340,15 @@ impl PagedShard {
         self.pool.cfg.block_bytes()
     }
 
+    /// True when the shard is at its idle baseline: no active reservations
+    /// and every live pool block owned by the radix cache.  Every request
+    /// teardown path (finish / cancel / abort — including the paths driven
+    /// by worker-crash recovery) must restore this; the chaos suite and the
+    /// serve loop's shutdown assert it.
+    pub fn idle(&self) -> bool {
+        self.mgr.blocks_in_use == 0 && self.pool.live_blocks() == self.radix.cached_blocks
+    }
+
     /// Reserve `need` blocks, evicting cold cached prefixes to cover a
     /// shortfall.  Metric side effects: eviction + released bytes.
     fn reserve_with_eviction(&mut self, need: usize, metrics: &ServeMetrics) -> Result<()> {

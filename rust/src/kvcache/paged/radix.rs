@@ -463,6 +463,120 @@ mod tests {
     }
 
     #[test]
+    fn prop_lru_eviction_never_touches_referenced_chains() {
+        // Randomized insert / match / release / evict interleavings over
+        // disjoint-prefix chains (each insert is one leaf, so eviction is
+        // all-or-nothing per chain).  Invariants checked after every step:
+        //   1. a chain whose blocks we still hold (refcount > tree's own)
+        //      is never evicted — it always matches in full;
+        //   2. the pool's live-block count equals the blocks of held chains
+        //      plus the blocks of released-but-still-cached chains (free
+        //      list == capacity - live at all times, proven at the end by
+        //      allocating exactly to the cap).
+        use crate::util::proptest::run_prop;
+        run_prop(15, 9157, |rng| {
+            let cap = 24usize;
+            let mut pool = BlockPool::new(BlockConfig::new(BT, 2), Some(cap));
+            let mut rx = RadixIndex::new(BT);
+            // (tokens, blocks, held-by-us)
+            let mut chains: Vec<(Vec<i32>, Vec<BlockId>, bool)> = Vec::new();
+            let mut next_start = 0i32;
+            for _step in 0..80 {
+                match rng.below(4) {
+                    0 => {
+                        // Insert a fresh disjoint chain if the cap allows.
+                        let nb = 1 + rng.below(3);
+                        if pool.live_blocks() + nb <= cap {
+                            let tokens: Vec<i32> =
+                                (0..(nb * BT) as i32).map(|i| next_start + i).collect();
+                            next_start += 10_000;
+                            let blocks: Vec<BlockId> =
+                                (0..nb).map(|_| pool.alloc().unwrap()).collect();
+                            if rx.insert(&tokens, &blocks, &mut pool) != nb {
+                                return Err("disjoint insert must cache all blocks".into());
+                            }
+                            chains.push((tokens, blocks, true));
+                        }
+                    }
+                    1 => {
+                        // Drop our reference on a random held chain: it
+                        // becomes cold (evictable) but stays cached for now.
+                        let held: Vec<usize> = (0..chains.len())
+                            .filter(|&i| chains[i].2)
+                            .collect();
+                        if !held.is_empty() {
+                            let i = held[rng.below(held.len())];
+                            for &b in &chains[i].1 {
+                                pool.release(b);
+                            }
+                            chains[i].2 = false;
+                        }
+                    }
+                    2 => {
+                        // Touch a random chain (bumps LRU recency).
+                        if !chains.is_empty() {
+                            let i = rng.below(chains.len());
+                            let _ = rx.match_prefix(&chains[i].0);
+                        }
+                    }
+                    _ => {
+                        let _ = rx.evict_lru(&mut pool, 1 + rng.below(4));
+                    }
+                }
+                // Invariant 1: held chains always fully matchable.
+                for (tokens, _, held) in &chains {
+                    if *held && rx.match_prefix(tokens).hit_tokens != tokens.len() {
+                        return Err("eviction took a refcounted chain".into());
+                    }
+                }
+                // Invariant 2: live blocks = held + released-but-cached.
+                let mut expect_live = 0usize;
+                for (tokens, blocks, held) in &chains {
+                    if *held || rx.match_prefix(tokens).hit_tokens == tokens.len() {
+                        expect_live += blocks.len();
+                    }
+                }
+                if pool.live_blocks() != expect_live {
+                    return Err(format!(
+                        "live {} != expected {expect_live}",
+                        pool.live_blocks()
+                    ));
+                }
+                if rx.cached_blocks > pool.live_blocks() {
+                    return Err("index caches more blocks than are live".into());
+                }
+            }
+            // Drain: release everything and evict to empty.
+            for (_, blocks, held) in &mut chains {
+                if *held {
+                    for &b in blocks.iter() {
+                        pool.release(b);
+                    }
+                    *held = false;
+                }
+            }
+            rx.evict_lru(&mut pool, cap + 1);
+            if pool.live_blocks() != 0 || rx.cached_blocks != 0 {
+                return Err(format!(
+                    "drain leaked: {} live, {} cached",
+                    pool.live_blocks(),
+                    rx.cached_blocks
+                ));
+            }
+            // Free-list accounting: exactly `cap` allocations fit, the next
+            // fails — free count equaled capacity minus live throughout.
+            let all: Vec<BlockId> = (0..cap).map(|_| pool.alloc().unwrap()).collect();
+            if pool.alloc().is_ok() {
+                return Err("pool allocated beyond its cap".into());
+            }
+            for b in all {
+                pool.release(b);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn clear_releases_everything() {
         let mut pool = mk_pool();
         let mut rx = RadixIndex::new(BT);

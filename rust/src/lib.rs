@@ -33,17 +33,25 @@
 //!                     whole-block unpack → batch stage, all through reused
 //!                     scratch (see the `kvcache` module doc for the full
 //!                     batch-kernel dataflow).
-//! * [`coordinator`] — sharded serve pool: least-loaded router (session-
-//!                     affinity hashing for multi-turn requests) with
+//! * [`coordinator`] — sharded serve pool: least-loaded router (owner-
+//!                     pinned routing for multi-turn sessions) with
 //!                     pool-wide admission control over N engine workers,
 //!                     continuous batcher, decode scheduler.  Requests are
 //!                     event streams (`Started`/`Token`/`Done`/`Failed`)
 //!                     with mid-decode cancellation that frees the lane and
 //!                     cache blocks immediately; `submit`/`submit_async`
-//!                     are drain-to-`Response` wrappers.
+//!                     are drain-to-`Response` wrappers (one shared drain
+//!                     thread).  Fault-tolerant: a supervisor retires dead
+//!                     workers and re-dispatches their queued requests,
+//!                     `EventSink`s guarantee every stream terminates,
+//!                     session tables are bounded (LRU + TTL) with
+//!                     `session_evicted`/`resend_history` signals, and
+//!                     `coordinator::fault` scripts deterministic failures
+//!                     against an engine-free sim backend (tests/chaos.rs).
 //! * [`server`]      — TCP wire protocol v2: v1 single-line requests plus
 //!                     `"stream": true` NDJSON event frames with a
-//!                     `ttft_ms`/`queue_ms`-bearing terminal frame;
+//!                     `ttft_ms`/`queue_ms`-bearing terminal frame; failed
+//!                     frames carry `retryable` + session resend signals;
 //!                     client disconnect cancels mid-decode.  Blocking
 //!                     accept + condvar `StopSignal` shutdown.
 //! * [`metrics`]     — latency/throughput/memory-traffic telemetry (incl.

@@ -41,7 +41,7 @@ COMMANDS
   generate    --model small --prompt \"...\" [--max-tokens 48] [--cq 8c8b]
   serve       --model small --port 7878 [--cq 8c8b] [--batch 8]
               [--workers 2] [--cache-budget-mb 64] [--block-tokens 16]
-              [--no-prefix-sharing]
+              [--no-prefix-sharing] [--session-cap 256] [--session-ttl-s 3600]
   client      --port 7878 --prompt \"...\" [--max-tokens 32] [--top-k 40]
               [--seed 7] [--session 12] [--stream]
   gen-corpus  --corpus wiki2s --split train --bytes 200000 [--out file]
@@ -294,6 +294,13 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         kernel: args.str("kernel", &ServeConfig::default_kernel()),
         block_tokens: args.usize("block-tokens", ServeConfig::default_block_tokens()),
         prefix_sharing: !args.flag("no-prefix-sharing"),
+        sim: None,
+        faults: None,
+        worker_index: 0,
+        session_cap: args.usize("session-cap", ServeConfig::default_session_cap()),
+        session_ttl: args
+            .has("session-ttl-s")
+            .then(|| std::time::Duration::from_secs(args.u64("session-ttl-s", 3600))),
     })
 }
 

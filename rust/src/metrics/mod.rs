@@ -2,8 +2,9 @@
 //! aggregation across serve-pool workers, and the von-Neumann memory-traffic
 //! model the paper's §2.2 argument rests on.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Log-bucketed latency histogram (thread-safe, lock-free).
 pub struct Histogram {
@@ -111,6 +112,33 @@ impl Gauge {
     }
 }
 
+/// Per-worker session-length directory: session id → total conversation
+/// token count, published by the worker's session table.  The pool router
+/// reads it to estimate a follow-up turn's true reservation (history + new
+/// text) instead of only the new turn's text — the PR 4 follow-up where the
+/// pool-wide byte estimate under-counted session requests.
+#[derive(Default)]
+pub struct SessionTokens(Mutex<HashMap<u64, u64>>);
+
+impl SessionTokens {
+    pub fn publish(&self, sid: u64, tokens: u64) {
+        self.0.lock().unwrap().insert(sid, tokens);
+    }
+
+    pub fn forget(&self, sid: u64) {
+        self.0.lock().unwrap().remove(&sid);
+    }
+
+    pub fn get(&self, sid: u64) -> Option<u64> {
+        self.0.lock().unwrap().get(&sid).copied()
+    }
+
+    /// Sessions currently published (bounded by the worker's table cap).
+    pub fn live_sessions(&self) -> usize {
+        self.0.lock().unwrap().len()
+    }
+}
+
 /// Memory-traffic model for one decode step (paper §2.2): every generated
 /// token must read the entire cache of its sequence once.  Comparing fp16
 /// and packed-code traffic gives the bandwidth-bound speedup ceiling.
@@ -153,6 +181,13 @@ pub struct ServeMetrics {
     /// disconnected event stream): their lane and cache reservation were
     /// reclaimed before `max_new` was exhausted.
     pub requests_cancelled: Counter,
+    /// Sessions evicted from this worker's bounded session table (LRU
+    /// capacity or idle TTL); each surfaced a `session_evicted` failure to
+    /// its next turn.
+    pub sessions_evicted: Counter,
+    /// Live-session token counts published for the router's reservation
+    /// estimate (see [`SessionTokens`]).
+    pub session_tokens: SessionTokens,
     /// Cache-budget accounting: bytes reserved / released by this shard's
     /// `CacheManager` (in_use = reserved - released, cached radix blocks
     /// included) and the shard's peak.
@@ -207,10 +242,11 @@ impl ServeMetrics {
 
     pub fn summary(&self, wall_secs: f64) -> String {
         format!(
-            "requests={} rejected={} cancelled={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms  cache peak={}B  prefix hit={:.0}% evicted={} frag={}B",
+            "requests={} rejected={} cancelled={} sessions_evicted={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms  cache peak={}B  prefix hit={:.0}% evicted={} frag={}B",
             self.requests_done.get(),
             self.requests_rejected.get(),
             self.requests_cancelled.get(),
+            self.sessions_evicted.get(),
             self.tokens_out.get(),
             self.tokens_out.get() as f64 / wall_secs.max(1e-9),
             self.ttft.percentile_ms(0.5),
@@ -237,12 +273,23 @@ pub struct PoolMetrics {
     /// Requests refused by the router's pool-wide admission control before
     /// reaching any worker.
     pub router_rejected: Counter,
+    /// Workers that died uncleanly (panic or startup/loop error) and were
+    /// taken out of rotation by the supervisor.
+    pub workers_dead: Counter,
+    /// Queued (not-yet-admitted) requests the supervisor speculatively
+    /// re-dispatched to a live worker after their worker died.
+    pub requests_redispatched: Counter,
 }
 
 impl PoolMetrics {
     pub fn new(workers: Vec<Arc<ServeMetrics>>) -> PoolMetrics {
         assert!(!workers.is_empty(), "pool needs at least one worker");
-        PoolMetrics { workers, router_rejected: Counter::default() }
+        PoolMetrics {
+            workers,
+            router_rejected: Counter::default(),
+            workers_dead: Counter::default(),
+            requests_redispatched: Counter::default(),
+        }
     }
 
     pub fn n_workers(&self) -> usize {
@@ -278,6 +325,11 @@ impl PoolMetrics {
     /// Requests cancelled mid-flight across all workers.
     pub fn requests_cancelled(&self) -> u64 {
         self.sum(|m| m.requests_cancelled.get())
+    }
+
+    /// Sessions evicted (LRU/TTL) across all workers.
+    pub fn sessions_evicted(&self) -> u64 {
+        self.sum(|m| m.sessions_evicted.get())
     }
 
     pub fn cache_bytes_reserved(&self) -> u64 {
@@ -379,11 +431,14 @@ impl PoolMetrics {
         let decode = self.merged_decode_latency();
         let e2e = self.merged_request_latency();
         let mut s = format!(
-            "pool[{}w]: requests={} rejected={} cancelled={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms  decode p50={:.2}ms  e2e p95={:.1}ms  cache in_use={}B peak<={}B  prefix hit={:.0}% cached={}B evicted={}",
+            "pool[{}w]: requests={} rejected={} cancelled={} dead_workers={} redispatched={} sessions_evicted={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms  decode p50={:.2}ms  e2e p95={:.1}ms  cache in_use={}B peak<={}B  prefix hit={:.0}% cached={}B evicted={}",
             self.n_workers(),
             self.requests_done(),
             self.requests_rejected(),
             self.requests_cancelled(),
+            self.workers_dead.get(),
+            self.requests_redispatched.get(),
+            self.sessions_evicted(),
             self.tokens_out(),
             self.tokens_out() as f64 / wall_secs.max(1e-9),
             self.merged_ttft().percentile_ms(0.5),
@@ -537,6 +592,29 @@ mod tests {
         assert!(s.contains("cancelled=3"), "{s}");
         assert!(s.contains("ttft"), "{s}");
         assert!(w0.summary(1.0).contains("cancelled=2"));
+    }
+
+    #[test]
+    fn fault_and_session_counters_aggregate() {
+        let w0 = Arc::new(ServeMetrics::default());
+        let w1 = Arc::new(ServeMetrics::default());
+        w0.sessions_evicted.add(2);
+        w1.sessions_evicted.add(1);
+        w0.session_tokens.publish(7, 120);
+        assert_eq!(w0.session_tokens.get(7), Some(120));
+        assert_eq!(w0.session_tokens.live_sessions(), 1);
+        w0.session_tokens.forget(7);
+        assert_eq!(w0.session_tokens.get(7), None);
+
+        let pool = PoolMetrics::new(vec![w0.clone(), w1]);
+        assert_eq!(pool.sessions_evicted(), 3);
+        pool.workers_dead.add(1);
+        pool.requests_redispatched.add(4);
+        let s = pool.summary(1.0);
+        assert!(s.contains("dead_workers=1"), "{s}");
+        assert!(s.contains("redispatched=4"), "{s}");
+        assert!(s.contains("sessions_evicted=3"), "{s}");
+        assert!(w0.summary(1.0).contains("sessions_evicted=2"));
     }
 
     #[test]

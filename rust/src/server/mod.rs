@@ -33,6 +33,29 @@
 //! non-ASCII output surfaces as replacement characters in frames while the
 //! terminal `text` decodes the full byte string.
 //!
+//! **Error frames (v2.1, fault-tolerant serving).**  Every `failed` frame
+//! carries `"retryable": bool` alongside `"error"`:
+//!
+//! ```text
+//! <- {"event": "failed", "id": 1, "error": "...", "retryable": true}
+//! ```
+//!
+//! * `retryable: true` — transient capacity or infrastructure failure
+//!   (`[rejected: pool budget]`, `[rejected: cache budget]`,
+//!   `[error: serve worker died]`): resubmitting the identical request can
+//!   succeed.  A worker crash is invisible for requests that were still
+//!   queued — the pool supervisor re-dispatches them to a live shard and
+//!   the stream simply starts late.
+//! * `retryable: false` — resubmitting the same line cannot help:
+//!   `[cancelled]`, prefill errors, and the two **session signals**:
+//!   - `[session_evicted: ...]` — the session idled past its TTL or was
+//!     LRU-evicted from the worker's bounded table; resend the full
+//!     conversation history as the next turn's prompt (the session id is
+//!     reusable and starts fresh);
+//!   - `[resend_history: ...]` — the worker holding the session's history
+//!     died; same client action, after which the pool re-registers the
+//!     session on a live shard.
+//!
 //! Connection threads are thin: they parse, forward to the serve pool's
 //! router, and stream events back.  All model work happens on the pool's
 //! engine worker threads (`coordinator::pool` + `serve_loop`).  The accept
@@ -157,10 +180,11 @@ pub fn format_event(ev: &Event) -> String {
             fields.push(("event", Json::Str("done".into())));
             Json::obj(fields).dump()
         }
-        Event::Failed { id, reason } => Json::obj(vec![
+        Event::Failed { id, reason, retryable } => Json::obj(vec![
             ("event", Json::Str("failed".into())),
             ("id", Json::Num(*id as f64)),
             ("error", Json::Str(reason.clone())),
+            ("retryable", Json::Bool(*retryable)),
         ])
         .dump(),
     }
@@ -418,10 +442,29 @@ mod tests {
         let failed = Json::parse(&format_event(&Event::Failed {
             id: 3,
             reason: "[cancelled]".into(),
+            retryable: false,
         }))
         .unwrap();
         assert_eq!(failed.str_or("event", ""), "failed");
         assert_eq!(failed.str_or("error", ""), "[cancelled]");
+        assert_eq!(failed.get("retryable").and_then(Json::as_bool), Some(false));
+
+        let died = Json::parse(&format_event(&Event::Failed {
+            id: 4,
+            reason: "[error: serve worker died]".into(),
+            retryable: true,
+        }))
+        .unwrap();
+        assert_eq!(died.get("retryable").and_then(Json::as_bool), Some(true));
+
+        let evicted = Json::parse(&format_event(&Event::Failed {
+            id: 5,
+            reason: "[session_evicted: session 9 expired; resend history]".into(),
+            retryable: false,
+        }))
+        .unwrap();
+        assert!(evicted.str_or("error", "").contains("session_evicted"));
+        assert_eq!(evicted.get("retryable").and_then(Json::as_bool), Some(false));
     }
 
     #[test]

@@ -1,0 +1,437 @@
+//! Deterministic chaos suite: scripted fault scenarios against the real
+//! serve pool (router, supervisor, batcher, paged shards, session tables)
+//! driven by the engine-free sim backend — **no XLA runtime required**.
+//!
+//! Every scenario asserts the three fault-tolerance invariants:
+//!
+//! 1. **Termination** — every submitted stream reaches a terminal event
+//!    (`Done` or `Failed`), with a hard deadline so a hang fails loudly;
+//! 2. **Accounting** — per-worker router load returns to `(0, batch)` and
+//!    shard block accounting returns to the idle baseline
+//!    (`in_use == cached`) on every live worker;
+//! 3. **Ground truth** — the new pool counters (`workers_dead`,
+//!    `requests_redispatched`, `sessions_evicted`) match the scenario
+//!    script exactly.
+//!
+//! Scenarios are seeded ([`Pcg64`]) and run single-threaded in CI
+//! (`--test-threads=1`) so fault timing stays scripted, not scheduled.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cq::coordinator::{Event, FaultPlan, Request, ServeConfig, ServePool, SimSpec, StreamHandle};
+use cq::util::rng::Pcg64;
+
+const BATCH: usize = 2;
+const DEADLINE: Duration = Duration::from_secs(10);
+
+fn sim_cfg(plan: &Arc<FaultPlan>, cache_budget: Option<usize>) -> ServeConfig {
+    ServeConfig {
+        model: "sim".into(),
+        cq: None,
+        batch: BATCH,
+        cache_budget,
+        codebook_path: None,
+        params_path: "/nonexistent/sim-has-no-params.bin".into(),
+        kernel: ServeConfig::default_kernel(),
+        block_tokens: 4,
+        prefix_sharing: true,
+        sim: Some(SimSpec::tiny()),
+        faults: Some(plan.clone()),
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
+    }
+}
+
+/// Seeded prompt generator: printable, length 6..=17.
+fn seeded_prompt(rng: &mut Pcg64) -> String {
+    let n = 6 + rng.below(12);
+    (0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+}
+
+/// Drain a stream to its terminal event under a deadline.  Panics — with
+/// the partial transcript — if the stream hangs or its channel drops
+/// without a terminal event.
+fn drain_events(h: &StreamHandle) -> Vec<Event> {
+    let mut evs = Vec::new();
+    loop {
+        match h.recv_deadline(DEADLINE) {
+            Some(ev) => {
+                let terminal = ev.is_terminal();
+                evs.push(ev);
+                if terminal {
+                    return evs;
+                }
+            }
+            None => panic!("stream {} hung or dropped without a terminal event: {evs:?}", h.id()),
+        }
+    }
+}
+
+fn done_of(evs: &[Event]) -> &cq::coordinator::Response {
+    match evs.last() {
+        Some(Event::Done(r)) => r,
+        other => panic!("expected terminal Done, got {other:?}"),
+    }
+}
+
+fn failed_of(evs: &[Event]) -> (&str, bool) {
+    match evs.last() {
+        Some(Event::Failed { reason, retryable, .. }) => (reason.as_str(), *retryable),
+        other => panic!("expected terminal Failed, got {other:?}"),
+    }
+}
+
+/// Wait (bounded) until the supervisor has retired down to `n` live workers.
+fn await_live_workers(pool: &ServePool, n: usize) {
+    let t0 = Instant::now();
+    while pool.live_workers() != n {
+        assert!(
+            t0.elapsed() < DEADLINE,
+            "worker death never detected: {} live, want {n}",
+            pool.live_workers()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Wait (bounded) until every worker's router load is back to idle — the
+/// LoadToken drop races the terminal event by design.
+fn await_router_idle(pool: &ServePool) {
+    let t0 = Instant::now();
+    while !pool.loads().iter().all(|&(q, f)| q == 0 && f == BATCH) {
+        assert!(
+            t0.elapsed() < DEADLINE,
+            "router load never drained: {:?}",
+            pool.loads()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Shard block accounting at the idle baseline for the given workers:
+/// active reservations fully returned, only radix-cached blocks resident.
+fn assert_cache_baseline(pool: &ServePool, workers: &[usize]) {
+    for &w in workers {
+        let m = pool.metrics.worker(w);
+        assert_eq!(
+            m.cache_bytes_in_use(),
+            m.cache_cached_bytes(),
+            "worker {w}: reservations leaked ({}B in use, {}B cached)",
+            m.cache_bytes_in_use(),
+            m.cache_cached_bytes()
+        );
+    }
+}
+
+/// Scenario 1 — worker killed **pre-admission**: requests queued on a held
+/// worker are speculatively re-dispatched to a live shard when it dies, and
+/// every one completes with output identical to the never-failed path.
+#[test]
+fn kill_pre_admission_redispatches_queued_requests() {
+    let plan = FaultPlan::new();
+    // Freeze both workers before they can drain anything.
+    plan.hold_worker(0);
+    plan.hold_worker(1);
+    let pool = ServePool::start(sim_cfg(&plan, None), 2);
+    plan.await_paused(0);
+    plan.await_paused(1);
+
+    let prompt = "fault tolerant serving";
+    let handles: Vec<StreamHandle> = (0..6)
+        .map(|i| pool.submit_stream(Request::greedy(i, prompt, 6)).expect("dispatch"))
+        .collect();
+    let on_dead = handles.iter().filter(|h| h.worker() == Some(0)).count() as u64;
+    assert!(on_dead > 0, "scenario needs traffic on the doomed worker");
+    assert!(
+        handles.iter().any(|h| h.worker() == Some(1)),
+        "scenario needs traffic on the surviving worker too"
+    );
+
+    // Kill worker 0 at the hold gate — before it admits anything — then let
+    // worker 1 serve its own queue plus the re-dispatched strays.
+    plan.kill_worker(0);
+    plan.release_worker(0);
+    await_live_workers(&pool, 1);
+    plan.release_worker(1);
+
+    let mut texts = Vec::new();
+    for h in &handles {
+        let evs = drain_events(h);
+        let resp = done_of(&evs);
+        assert_eq!(resp.gen_tokens, 6, "request {} served in full", h.id());
+        texts.push(resp.text.clone());
+    }
+    assert!(
+        texts.iter().all(|t| t == &texts[0]),
+        "re-dispatched requests must decode identically to undisturbed ones"
+    );
+
+    // Ground truth: exactly the strays were re-dispatched, one worker died.
+    assert_eq!(pool.metrics.requests_redispatched.get(), on_dead);
+    assert_eq!(pool.metrics.workers_dead.get(), 1);
+    assert_eq!(pool.metrics.sessions_evicted(), 0);
+    assert_eq!(pool.metrics.worker(1).requests_done.get(), 6, "survivor served everything");
+    assert_eq!(pool.metrics.worker(0).requests_done.get(), 0);
+
+    await_router_idle(&pool);
+    assert_cache_baseline(&pool, &[0, 1]);
+    assert!(pool.shutdown().is_err(), "panicked worker surfaces at shutdown");
+}
+
+/// Scenario 2 — worker killed **mid-decode at a scripted step**: the stream
+/// gets exactly the tokens decoded before the kill, then a terminal
+/// retryable `Failed`; nothing hangs and the router load drains.
+#[test]
+fn kill_mid_decode_at_step_fails_streams_retryably() {
+    let plan = FaultPlan::new();
+    let pool = ServePool::start(sim_cfg(&plan, None), 1);
+    // Die just before the worker's 4th decode step (0-based step 3).
+    plan.kill_worker_at_step(0, 3);
+
+    let h = pool
+        .submit_stream(Request::greedy(1, "mid decode chaos", 64))
+        .expect("dispatch");
+    assert_eq!(h.worker(), Some(0));
+    let evs = drain_events(&h);
+    assert!(matches!(evs.first(), Some(Event::Started { id: 1 })));
+    let tokens = evs
+        .iter()
+        .filter(|e| matches!(e, Event::Token { .. }))
+        .count();
+    // Prefill token (index 0) + exactly 3 decode steps before the kill.
+    assert_eq!(tokens, 4, "token stream cut exactly at the scripted step: {evs:?}");
+    let (reason, retryable) = failed_of(&evs);
+    assert!(reason.contains("serve worker died"), "{reason}");
+    assert!(retryable, "mid-decode death is a transient failure");
+
+    await_live_workers(&pool, 0);
+    assert_eq!(pool.metrics.workers_dead.get(), 1);
+    assert_eq!(pool.metrics.requests_redispatched.get(), 0, "mid-flight is never re-run");
+    await_router_idle(&pool);
+    assert!(
+        pool.submit(Request::greedy(2, "x", 2)).is_err(),
+        "empty pool fails fast, never hangs"
+    );
+    assert!(pool.shutdown().is_err());
+}
+
+/// Scenario 3 — **session reroute after worker death**: the follow-up turn
+/// of a session whose shard died is failed with `resend_history` (never
+/// silently served from partial context); the resent-history turn
+/// re-registers on a live shard and completes.
+#[test]
+fn session_reroute_after_worker_death_signals_resend_history() {
+    let plan = FaultPlan::new();
+    let pool = ServePool::start(sim_cfg(&plan, None), 2);
+    let sid = 0u64; // affinity hash: 0 % 2 == worker 0
+
+    let h1 = pool
+        .submit_stream(Request::greedy(1, "hello worker zero", 6).in_session(sid))
+        .expect("turn 1");
+    assert_eq!(h1.worker(), Some(0), "affinity places the session on worker 0");
+    let turn1 = drain_events(&h1);
+    let r1 = done_of(&turn1);
+    assert_eq!(r1.gen_tokens, 6);
+    assert_eq!(pool.metrics.worker(0).session_tokens.get(sid), Some((r1.prompt_tokens + 6) as u64));
+
+    plan.kill_worker(0);
+    await_live_workers(&pool, 1);
+
+    // Turn 2 sends only its new text: the history died with worker 0, so
+    // the router fails the turn instead of generating from partial context.
+    let h2 = pool
+        .submit_stream(Request::greedy(2, " and then", 4).in_session(sid))
+        .expect("turn 2 terminates at the router");
+    assert_eq!(h2.worker(), None);
+    let (reason, retryable) = failed_of(&drain_events(&h2));
+    assert!(reason.contains("resend_history"), "{reason}");
+    assert!(!retryable, "a blind retry would reuse the lost history");
+
+    // Turn 3 resends the full conversation; the session re-registers on the
+    // surviving shard and completes.
+    let full_history = format!("hello worker zero{} and then", r1.text);
+    let h3 = pool
+        .submit_stream(Request::greedy(3, &full_history, 4).in_session(sid))
+        .expect("turn 3");
+    assert_eq!(h3.worker(), Some(1), "session re-registered on the live worker");
+    let r3 = drain_events(&h3);
+    assert_eq!(done_of(&r3).gen_tokens, 4);
+
+    assert_eq!(pool.metrics.workers_dead.get(), 1);
+    assert_eq!(pool.metrics.requests_redispatched.get(), 0);
+    await_router_idle(&pool);
+    assert_cache_baseline(&pool, &[1]);
+    assert!(pool.shutdown().is_err());
+}
+
+/// Scenario 4a — **session TTL eviction**: an idle session expires, its
+/// next turn gets `session_evicted`, and the resent-history turn recreates
+/// the session cleanly.
+#[test]
+fn session_ttl_eviction_surfaces_session_evicted() {
+    let plan = FaultPlan::new();
+    let mut cfg = sim_cfg(&plan, None);
+    cfg.session_ttl = Some(Duration::from_millis(5));
+    let pool = ServePool::start(cfg, 1);
+    let sid = 42u64;
+
+    let r1 = pool
+        .submit(Request::greedy(1, "turn one", 5).in_session(sid))
+        .expect("turn 1");
+    assert_eq!(r1.gen_tokens, 5);
+    std::thread::sleep(Duration::from_millis(30));
+
+    let h2 = pool
+        .submit_stream(Request::greedy(2, " turn two", 4).in_session(sid))
+        .expect("turn 2");
+    let (reason, retryable) = failed_of(&drain_events(&h2));
+    assert!(reason.contains("session_evicted"), "{reason}");
+    assert!(!retryable);
+    assert_eq!(pool.metrics.sessions_evicted(), 1);
+    assert_eq!(
+        pool.metrics.worker(0).session_tokens.get(sid),
+        None,
+        "eviction unpublishes the session length"
+    );
+
+    // The failed turn consumed the tombstone: resending history under the
+    // same id starts the session fresh (and promptly, within the TTL).
+    let r3 = pool
+        .submit(Request::greedy(3, "turn one<gen> turn two", 4).in_session(sid))
+        .expect("turn 3");
+    assert_eq!(r3.gen_tokens, 4);
+
+    await_router_idle(&pool);
+    assert_cache_baseline(&pool, &[0]);
+    assert_eq!(pool.metrics.workers_dead.get(), 0);
+    pool.shutdown().expect("clean shutdown");
+}
+
+/// Scenario 4b — **session LRU eviction**: the bounded table evicts the
+/// coldest session when a new one exceeds the cap.
+#[test]
+fn session_lru_cap_evicts_coldest_session() {
+    let plan = FaultPlan::new();
+    let mut cfg = sim_cfg(&plan, None);
+    cfg.session_cap = 1;
+    let pool = ServePool::start(cfg, 1);
+
+    pool.submit(Request::greedy(1, "session A", 4).in_session(2)).expect("A turn 1");
+    pool.submit(Request::greedy(2, "session B", 4).in_session(4)).expect("B turn 1");
+    assert_eq!(pool.metrics.sessions_evicted(), 1, "cap 1: B evicted A");
+
+    let h = pool
+        .submit_stream(Request::greedy(3, " more A", 4).in_session(2))
+        .expect("A turn 2");
+    let (reason, retryable) = failed_of(&drain_events(&h));
+    assert!(reason.contains("session_evicted"), "{reason}");
+    assert!(!retryable);
+    // B stayed live: its follow-up turn resumes from its own history (the
+    // failed A turn created no session, so the table stays within cap).
+    let rb = pool
+        .submit(Request::greedy(4, " more B", 4).in_session(4))
+        .expect("B turn 2");
+    assert_eq!(rb.gen_tokens, 4);
+    assert_eq!(pool.metrics.sessions_evicted(), 1);
+    assert_eq!(pool.metrics.worker(0).session_tokens.live_sessions(), 1);
+
+    await_router_idle(&pool);
+    assert_cache_baseline(&pool, &[0]);
+    pool.shutdown().expect("clean shutdown");
+}
+
+/// Scenario 5 — **poisoned prefill**: the failure surfaces as a terminal
+/// non-retryable `Failed`, the reservation rolls back to baseline, and the
+/// worker keeps serving.
+#[test]
+fn poisoned_prefill_fails_cleanly_and_recovers() {
+    let plan = FaultPlan::new();
+    let pool = ServePool::start(sim_cfg(&plan, None), 1);
+    plan.poison_prefill(1);
+
+    let h = pool
+        .submit_stream(Request::greedy(1, "poisoned request", 8))
+        .expect("dispatch");
+    let evs = drain_events(&h);
+    assert!(matches!(evs.first(), Some(Event::Started { id: 1 })));
+    let (reason, retryable) = failed_of(&evs);
+    assert!(reason.contains("poisoned prefill"), "{reason}");
+    assert!(!retryable, "a deterministic prefill failure is not retryable");
+    assert_eq!(evs.len(), 2, "no tokens before the poison fired: {evs:?}");
+
+    // The worker is unharmed: the identical prompt now serves end to end.
+    let r = pool.submit(Request::greedy(2, "poisoned request", 8)).expect("recovered");
+    assert_eq!(r.gen_tokens, 8);
+    assert_eq!(pool.metrics.worker(0).requests_done.get(), 1);
+    assert_eq!(pool.metrics.workers_dead.get(), 0);
+    await_router_idle(&pool);
+    assert_cache_baseline(&pool, &[0]);
+    pool.shutdown().expect("clean shutdown");
+}
+
+/// Scenario 6 — **delayed shard**: a slow worker changes latency, never
+/// outcomes; all seeded traffic terminates and accounting reconciles.
+#[test]
+fn delayed_shard_still_terminates_and_reconciles() {
+    let plan = FaultPlan::new();
+    let pool = ServePool::start(sim_cfg(&plan, None), 2);
+    plan.delay_steps(0, Duration::from_millis(2));
+
+    let mut rng = Pcg64::seed(0xC8A05);
+    let reqs: Vec<Request> = (0..8)
+        .map(|i| Request::greedy(i, &seeded_prompt(&mut rng), 3 + rng.below(4)))
+        .collect();
+    let handles: Vec<StreamHandle> = reqs
+        .iter()
+        .map(|r| pool.submit_stream(r.clone()).expect("dispatch"))
+        .collect();
+    for (r, h) in reqs.iter().zip(&handles) {
+        let evs = drain_events(h);
+        assert_eq!(done_of(&evs).gen_tokens, r.max_new, "request {}", r.id);
+    }
+
+    assert_eq!(pool.metrics.workers_dead.get(), 0);
+    assert_eq!(pool.metrics.requests_redispatched.get(), 0);
+    assert_eq!(pool.metrics.requests_done(), 8);
+    await_router_idle(&pool);
+    assert_cache_baseline(&pool, &[0, 1]);
+    pool.shutdown().expect("clean shutdown");
+}
+
+/// Scenario 7 — pool-size sweep (1, 2, 4 workers): one worker death leaves
+/// survivors serving; an emptied pool fails fast instead of hanging.
+#[test]
+fn pool_size_sweep_recovers_from_one_worker_death() {
+    for &workers in &[1usize, 2, 4] {
+        let plan = FaultPlan::new();
+        let pool = ServePool::start(sim_cfg(&plan, None), workers);
+
+        // Round 1: normal traffic across the whole pool.
+        let handles: Vec<StreamHandle> = (0..2 * workers as u64)
+            .map(|i| pool.submit_stream(Request::greedy(i, "sweep round one", 4)).unwrap())
+            .collect();
+        for h in &handles {
+            assert_eq!(done_of(&drain_events(h)).gen_tokens, 4);
+        }
+
+        plan.kill_worker(workers - 1);
+        await_live_workers(&pool, workers - 1);
+        assert_eq!(pool.metrics.workers_dead.get(), 1, "{workers}-worker pool");
+
+        // Round 2: survivors absorb the traffic; an empty pool fails fast.
+        if workers > 1 {
+            for i in 0..2 * (workers - 1) as u64 {
+                let r = pool.submit(Request::greedy(100 + i, "sweep round two", 4)).unwrap();
+                assert_eq!(r.gen_tokens, 4);
+            }
+            await_router_idle(&pool);
+            let live: Vec<usize> = (0..workers - 1).collect();
+            assert_cache_baseline(&pool, &live);
+        } else {
+            assert!(pool.submit(Request::greedy(100, "x", 2)).is_err());
+        }
+        assert!(pool.shutdown().is_err(), "panicked worker propagates at shutdown");
+    }
+}

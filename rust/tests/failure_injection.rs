@@ -1,9 +1,13 @@
 //! Failure injection: the coordinator and runtime must fail loudly and
 //! specifically at the boundary, never deep inside XLA or with corrupted
-//! state.
+//! state.  The worker-crash tests at the bottom run runtime-free on the
+//! sim backend (`SimSpec`), driving genuine panics through the pool's
+//! recovery machinery.
+
+use std::time::{Duration, Instant};
 
 use cq::coordinator::serve_loop::{serve_loop, ServeConfig};
-use cq::coordinator::Inbound;
+use cq::coordinator::{Event, FaultPlan, Inbound, Request, ServePool, SimSpec};
 use cq::quant::cq::CqCodebooks;
 use cq::runtime::{Engine, Manifest};
 use cq::tensor::TensorF;
@@ -89,6 +93,11 @@ fn serve_loop_fails_fast_on_missing_assets() {
         kernel: ServeConfig::default_kernel(),
         block_tokens: ServeConfig::default_block_tokens(),
         prefix_sharing: true,
+        sim: None,
+        faults: None,
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
     };
     let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
     let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
@@ -123,9 +132,101 @@ fn serve_config_validates_batch_and_codebook_tag() {
         kernel: ServeConfig::default_kernel(),
         block_tokens: ServeConfig::default_block_tokens(),
         prefix_sharing: true,
+        sim: None,
+        faults: None,
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
     };
     let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
     let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
     let err = serve_loop(cfg, rx, metrics).unwrap_err();
     assert!(err.to_string().contains("batch"), "{err}");
+}
+
+// --- Worker-crash recovery (runtime-free, sim backend) ----------------------
+
+fn sim_pool_cfg(plan: &std::sync::Arc<FaultPlan>) -> ServeConfig {
+    ServeConfig {
+        model: "sim".into(),
+        cq: None,
+        batch: 2,
+        cache_budget: None,
+        codebook_path: None,
+        params_path: "/nonexistent/sim.bin".into(),
+        kernel: ServeConfig::default_kernel(),
+        block_tokens: 4,
+        prefix_sharing: true,
+        sim: Some(SimSpec::tiny()),
+        faults: Some(plan.clone()),
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
+    }
+}
+
+/// A worker panic mid-decode must surface as a terminal `Failed` event on
+/// EVERY affected stream — no hang, no dropped channel — and the crashed
+/// worker's lanes and router load must be fully reclaimed (empty slot map:
+/// every `SeqRun`, its `LoadToken` and its stage lane died with the
+/// unwind).
+#[test]
+fn worker_panic_mid_decode_fails_all_streams_and_frees_lanes() {
+    let plan = FaultPlan::new();
+    // Slow the shard down so the kill provably lands mid-decode (the sim
+    // backend would otherwise finish both requests in microseconds).
+    plan.delay_steps(0, Duration::from_millis(5));
+    let pool = ServePool::start(sim_pool_cfg(&plan), 1);
+
+    // Two concurrent streams sharing the batch (both lanes occupied).
+    let h1 = pool.submit_stream(Request::greedy(1, "lane one", 200)).expect("h1");
+    let h2 = pool.submit_stream(Request::greedy(2, "lane two", 200)).expect("h2");
+    for h in [&h1, &h2] {
+        // Wait until the stream is genuinely mid-decode (a token past
+        // prefill's index 0).
+        loop {
+            match h.recv_deadline(Duration::from_secs(10)) {
+                Some(Event::Token { index, .. }) if index >= 1 => break,
+                Some(ev) => assert!(!ev.is_terminal(), "premature terminal: {ev:?}"),
+                None => panic!("stream {} made no progress", h.id()),
+            }
+        }
+    }
+
+    plan.kill_worker(0);
+
+    // Both streams end with a terminal retryable Failed — never a hang and
+    // never a bare channel drop.
+    for h in [&h1, &h2] {
+        let terminal = loop {
+            match h.recv_deadline(Duration::from_secs(10)) {
+                Some(ev) if ev.is_terminal() => break ev,
+                Some(_) => {}
+                None => panic!("stream {} hung after worker panic", h.id()),
+            }
+        };
+        match terminal {
+            Event::Failed { reason, retryable, .. } => {
+                assert!(reason.contains("serve worker died"), "{reason}");
+                assert!(retryable);
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+
+    // No leaked lane: every SeqRun (and its LoadToken) died with the
+    // unwind, so the router's view returns to an empty slot map.
+    let t0 = Instant::now();
+    while pool.loads()[0] != (0, 2) {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "router load leaked: {:?}",
+            pool.loads()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(pool.metrics.workers_dead.get(), 1);
+    assert_eq!(pool.metrics.worker(0).requests_done.get(), 0, "nothing completed");
+    assert!(pool.submit(Request::greedy(3, "x", 2)).is_err(), "pool is empty, fails fast");
+    assert!(pool.shutdown().is_err(), "panic propagates at shutdown");
 }

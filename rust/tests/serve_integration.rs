@@ -39,6 +39,11 @@ fn cq_config(batch: usize) -> ServeConfig {
         kernel: ServeConfig::default_kernel(),
         block_tokens: ServeConfig::default_block_tokens(),
         prefix_sharing: true,
+        sim: None,
+        faults: None,
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
     }
 }
 

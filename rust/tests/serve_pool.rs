@@ -10,7 +10,7 @@
 use std::time::{Duration, Instant};
 
 use cq::bench_support::Pipeline;
-use cq::coordinator::{Event, Request, ServeConfig, ServePool};
+use cq::coordinator::{Event, FaultPlan, Request, ServeConfig, ServePool, SimSpec};
 use cq::quant::cq::CqSpec;
 
 const BUDGET: usize = 16 * 1024 * 1024;
@@ -32,6 +32,32 @@ fn cq_config() -> ServeConfig {
         kernel: ServeConfig::default_kernel(),
         block_tokens: ServeConfig::default_block_tokens(),
         prefix_sharing: true,
+        sim: None,
+        faults: None,
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
+    }
+}
+
+/// Engine-free sim config (chaos-grade tests that must run on build-only
+/// hosts: shared drain thread, router session estimate).
+fn sim_config(cache_budget: Option<usize>) -> ServeConfig {
+    ServeConfig {
+        model: "sim".into(),
+        cq: None,
+        batch: 4,
+        cache_budget,
+        codebook_path: None,
+        params_path: "/nonexistent/sim.bin".into(),
+        kernel: ServeConfig::default_kernel(),
+        block_tokens: 4,
+        prefix_sharing: true,
+        sim: Some(SimSpec::tiny()),
+        faults: Some(FaultPlan::new()),
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
     }
 }
 
@@ -282,11 +308,93 @@ fn pool_with_missing_assets_fails_fast_everywhere() {
         kernel: ServeConfig::default_kernel(),
         block_tokens: ServeConfig::default_block_tokens(),
         prefix_sharing: true,
+        sim: None,
+        faults: None,
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
     };
     let pool = ServePool::start(cfg, 3);
     assert_eq!(pool.n_workers(), 3);
     for i in 0..3 {
-        assert!(pool.submit(Request::greedy(i, "x", 2)).is_err());
+        // The send either fails inline (Err) or reaches a dying channel and
+        // comes back as a terminal `[error: ...]` event — both fail fast.
+        match pool.submit(Request::greedy(i, "x", 2)) {
+            Err(_) => {}
+            Ok(resp) => {
+                assert_eq!(resp.gen_tokens, 0);
+                assert!(resp.text.starts_with("[error"), "{}", resp.text);
+            }
+        }
     }
     assert!(pool.shutdown().is_err(), "worker error must propagate");
+}
+
+/// Regression for the shared `submit_async` drain thread: the legacy
+/// `Receiver<Response>` contract survives the one-thread multiplexer —
+/// interleaved requests all resolve, a dropped receiver doesn't wedge the
+/// thread, and router-terminated requests resolve through it too.
+/// Runtime-free (sim backend).
+#[test]
+fn submit_async_contract_survives_shared_drain_thread() {
+    let pool = ServePool::start(sim_config(None), 2);
+    let rxs: Vec<_> = (0..8)
+        .map(|i| {
+            pool.submit_async(Request::greedy(i, "hello shared drain", 4 + (i as usize % 3)))
+                .expect("submit")
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().expect("response via shared drain");
+        assert_eq!(r.id, i as u64);
+        assert_eq!(r.gen_tokens, 4 + (i % 3), "respects max_new");
+        assert!(!r.text.is_empty());
+    }
+    // A dropped response receiver must not wedge the multiplexer...
+    drop(pool.submit_async(Request::greedy(100, "dropped receiver", 64)).expect("submit"));
+    // ...later requests still resolve.
+    let r = pool
+        .submit_async(Request::greedy(101, "after the drop", 2))
+        .expect("submit")
+        .recv()
+        .expect("response");
+    assert_eq!(r.gen_tokens, 2);
+    assert_eq!(pool.metrics.workers_dead.get(), 0);
+    pool.shutdown().expect("clean shutdown");
+}
+
+/// End-to-end proof of the router's session-aware byte estimate: a
+/// follow-up turn whose published history + new text + decode reservation
+/// exceeds the pool budget is rejected at the router, where the old
+/// new-text-only estimate would have admitted it.  Runtime-free.
+#[test]
+fn router_estimates_session_turns_against_full_history() {
+    // Sim geometry: 2 packed bytes/token, 4-token blocks (8 B/block).
+    // Budget 128 B = 16 blocks = 64 tokens total.
+    let pool = ServePool::start(sim_config(Some(128)), 1);
+    let sid = 9u64;
+    // Turn 1: 10 prompt + 30 generated = 40-token published history.
+    let r1 = pool
+        .submit(Request::greedy(1, "0123456789", 30).in_session(sid))
+        .expect("turn 1");
+    assert_eq!(r1.gen_tokens, 30);
+    assert_eq!(pool.metrics.worker(0).session_tokens.get(sid), Some(40));
+
+    // Turn 2: history 40 + new 5 + max_new 30 = 75 tokens * 2 B = 150 B
+    // can never fit the 128 B pool — the router must reject it up front.
+    // (The old estimate saw only 5 + 30 = 70 B and would have admitted.)
+    let r2 = pool
+        .submit(Request::greedy(2, "next!", 30).in_session(sid))
+        .expect("router replies directly");
+    assert_eq!(r2.gen_tokens, 0);
+    assert!(r2.text.contains("pool budget"), "{}", r2.text);
+    assert_eq!(pool.metrics.router_rejected.get(), 1);
+
+    // A shorter follow-up fits: 40 + 5 + 8 = 53 tokens = 106 B <= 128 B.
+    let r3 = pool
+        .submit(Request::greedy(3, "next!", 8).in_session(sid))
+        .expect("turn 3");
+    assert_eq!(r3.gen_tokens, 8);
+    assert_eq!(pool.metrics.router_rejected.get(), 1, "fitting turn admitted");
+    pool.shutdown().expect("clean shutdown");
 }
