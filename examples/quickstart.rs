@@ -41,6 +41,8 @@ fn main() -> Result<()> {
         worker_index: 0,
         session_cap: ServeConfig::default_session_cap(),
         session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
     };
     let handle = ServeHandle::start(cfg);
     let req = Request::greedy(1, "The castle of Aldenport ", 64);

@@ -36,6 +36,8 @@ fn run_mode(cq: Option<String>, workers: usize, n_requests: usize, max_new: usiz
         worker_index: 0,
         session_cap: ServeConfig::default_session_cap(),
         session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
     };
     let pool = ServePool::start(cfg, workers);
     let prompts = [
@@ -94,6 +96,8 @@ fn run_streaming_demo() -> Result<()> {
         worker_index: 0,
         session_cap: ServeConfig::default_session_cap(),
         session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
     };
     let pool = ServePool::start(cfg, 1);
 

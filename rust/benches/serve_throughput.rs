@@ -15,7 +15,7 @@
 use std::time::Instant;
 
 use cq::bench_support::Pipeline;
-use cq::coordinator::{Event, Request, ServeConfig, ServePool};
+use cq::coordinator::{Event, Request, ServeConfig, ServePool, StreamHandle};
 use cq::metrics::TrafficModel;
 use cq::quant::cq::CqSpec;
 use cq::util::bench::{emit_json, Table, Timing};
@@ -74,6 +74,8 @@ fn mode_cfg(cq: Option<&str>, batch: usize) -> ServeConfig {
         worker_index: 0,
         session_cap: ServeConfig::default_session_cap(),
         session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
     }
 }
 
@@ -412,6 +414,82 @@ fn main() {
         ]));
     }
     stream_tbl.emit("serve_streaming");
+    pool.shutdown().unwrap();
+
+    // --- Table 5: mixed workload — interactive TTFT under batch prefill --
+    // The chunked-prefill scheduler's headline: one long batch-priority
+    // prompt is mid-prefill while N short interactive requests arrive, and
+    // the interactive class must still see low TTFT because its chunks
+    // preempt the pending batch chunks at every boundary.
+    let n_inter = args.usize("interactive-requests", 8);
+    let mut mixed_cfg = mode_cfg(Some("8c8b"), 8);
+    mixed_cfg.prefill_chunk = args.usize("prefill-chunk", 64);
+    let pool = ServePool::start(mixed_cfg, 1);
+    let batch_handle = pool
+        .submit_stream(Request::greedy(9800, &shared_prompt, max_new).batch_priority())
+        .expect("batch stream");
+    let interactives: Vec<(Instant, StreamHandle)> = (0..n_inter as u64)
+        .map(|i| {
+            let t0 = Instant::now();
+            let h = pool
+                .submit_stream(Request::greedy(9900 + i, "Quick turn. ", max_new))
+                .expect("interactive stream");
+            (t0, h)
+        })
+        .collect();
+    let mut inter_ttft_ms: Vec<f64> = Vec::new();
+    for (t0, h) in interactives {
+        let mut first: Option<f64> = None;
+        for ev in h {
+            match ev {
+                Event::Token { .. } => {
+                    if first.is_none() {
+                        first = Some(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                Event::Done(_) | Event::Failed { .. } => break,
+                Event::Started { .. } => {}
+            }
+        }
+        if let Some(ms) = first {
+            inter_ttft_ms.push(ms);
+        }
+    }
+    let _ = batch_handle.drain();
+    let mut mixed_tbl = Table::new(
+        "Mixed workload: N interactive under one long batch prefill (CQ-8c8b, 1 worker)",
+        &["class", "requests", "ttft p50 (ms)", "ttft p95 (ms)", "preempted chunks"],
+    );
+    if !inter_ttft_ms.is_empty() {
+        let t = Timing::from_samples(inter_ttft_ms);
+        let preempts = pool.metrics.prefill_preemptions();
+        mixed_tbl.row(vec![
+            "interactive".into(),
+            t.iters.to_string(),
+            format!("{:.2}", t.p50),
+            format!("{:.2}", t.p95),
+            preempts.to_string(),
+        ]);
+        mixed_tbl.row(vec![
+            "batch".into(),
+            "1".into(),
+            format!("{:.2}", pool.metrics.merged_ttft_batch().percentile_ms(0.5)),
+            format!("{:.2}", pool.metrics.merged_ttft_batch().percentile_ms(0.95)),
+            "-".into(),
+        ]);
+        eprintln!(
+            "  mixed: interactive ttft p95 {:.1} ms under batch prefill, {preempts} preemptions",
+            t.p95
+        );
+        scenario_rows.push(Json::obj(vec![
+            ("name", Json::Str(format!("mixed,batch=1,interactive={n_inter}"))),
+            ("ttft_ms_p50", Json::Num(t.p50)),
+            ("ttft_ms_p95", Json::Num(t.p95)),
+            ("batch_ttft_ms_p50", Json::Num(pool.metrics.merged_ttft_batch().percentile_ms(0.5))),
+            ("prefill_preemptions", Json::Num(preempts as f64)),
+        ]));
+    }
+    mixed_tbl.emit("serve_mixed_workload");
     pool.shutdown().unwrap();
 
     emit_serve_json(true, scenario_rows);

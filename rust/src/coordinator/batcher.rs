@@ -1,17 +1,99 @@
-//! Continuous batcher: slot lifecycle + FIFO admission + step bookkeeping.
+//! Continuous batcher: slot lifecycle, priority admission, chunked-prefill
+//! queue state and step bookkeeping.
 //!
 //! The batcher is engine-agnostic (it never touches PJRT), which makes its
-//! invariants property-testable: FIFO admission, no token loss, slot
-//! conservation, and cache-byte accounting (see tests).  `serve_loop` binds
-//! it to the real decode artifacts.
+//! invariants property-testable: priority admission (interactive before
+//! batch, FIFO within a class), no token loss, slot conservation, and
+//! cache-byte accounting (see tests).  `serve_loop` binds it to the real
+//! decode artifacts.
+//!
+//! Chunked prefill: a queued [`SeqRun`] carries an optional
+//! [`PrefillState`] while its prompt is still being quantized+stored chunk
+//! by chunk.  Such runs are *not admissible* into a decode lane; the serve
+//! loop advances one chunk per scheduler iteration
+//! ([`Batcher::next_prefill_index`] picks whose) and clears the state when
+//! the prompt is fully cached, at which point ordinary admission takes
+//! over.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::kvcache::{CacheGeom, PagedSeqCache};
+use crate::metrics::ServeMetrics;
+use crate::tensor::TensorF;
 
 use super::pool::LoadToken;
-use super::{EventSink, Request};
+use super::{EventSink, Priority, Request};
+
+/// Resumable chunked-prefill progress, held on a queued run.  The serve
+/// loop advances it one `--prefill-chunk` token span at a time; every
+/// boundary between advances is a yield point (cancel / chaos gates /
+/// decode steps run there).
+pub struct PrefillState {
+    /// Prompt tokens already cached (starts at the radix-hit span).
+    pub filled: usize,
+    /// Chunks this run has completed.
+    pub chunks: usize,
+    /// Set when the first chunk starts computing.
+    pub started: Option<Instant>,
+    /// Accumulated chunk compute time (becomes the response's prefill_ms;
+    /// queue time between chunks is excluded on purpose).
+    pub work_ms: f64,
+    /// Mode-specific artifact output needed to sample the first token,
+    /// produced by the first chunk (`None` on the sim backend).
+    pub seed: Option<PrefillSeed>,
+}
+
+impl PrefillState {
+    pub fn new(filled: usize) -> PrefillState {
+        PrefillState { filled, chunks: 0, started: None, work_ms: 0.0, seed: None }
+    }
+}
+
+/// What survives the single full-prompt artifact run that CQ/FP prefill
+/// still performs (the model forward is not incremental — only
+/// quantize+store is chunked): the activations to encode span by span and
+/// the last-position logits row that samples the first token.
+pub enum PrefillSeed {
+    /// CQ: raw K/V activations for per-chunk span encoding + logits row.
+    Cq { k: TensorF, v: TensorF, row: Vec<f32> },
+    /// FP: the K/V seed already lives on the packed cache; only the
+    /// logits row remains to carry.
+    Fp { row: Vec<f32> },
+}
+
+/// Crash guard for a run's cache reservation.  If the worker panics while
+/// the run is alive (mid-prefill or mid-decode), the unwind drops this
+/// guard, which credits the whole reservation back to the shard's
+/// released-bytes counter — the dead worker's accounting returns to its
+/// idle baseline (in_use == cached) and pool-level cache sums stay
+/// truthful.  Every orderly settlement path (complete / cancel / abort)
+/// disarms the guard first, because the shard credits the release itself
+/// there.
+pub struct ReservationGuard {
+    metrics: Arc<ServeMetrics>,
+    bytes: u64,
+}
+
+impl ReservationGuard {
+    pub fn new(metrics: Arc<ServeMetrics>, bytes: u64) -> ReservationGuard {
+        ReservationGuard { metrics, bytes }
+    }
+
+    /// Orderly settlement: the shard accounts the release itself.
+    pub fn disarm(mut self) {
+        self.bytes = 0;
+    }
+}
+
+impl Drop for ReservationGuard {
+    fn drop(&mut self) {
+        if self.bytes > 0 {
+            self.metrics.cache_released_bytes.add(self.bytes);
+        }
+    }
+}
 
 /// One running sequence occupying a batch lane.
 pub struct SeqRun {
@@ -43,6 +125,12 @@ pub struct SeqRun {
     /// first `Token` event's emission time).
     pub ttft_ms: f64,
     pub decode_started: Option<Instant>,
+    /// `Some` while chunked prefill is still in progress; the run stays in
+    /// the batcher queue (inadmissible) until this clears.
+    pub prefill: Option<PrefillState>,
+    /// Restores the shard's reservation accounting if the worker unwinds
+    /// with this run alive (see [`ReservationGuard`]).
+    pub crash_guard: Option<ReservationGuard>,
 }
 
 impl SeqRun {
@@ -94,26 +182,73 @@ impl Batcher {
         self.active() == 0 && self.queue.is_empty()
     }
 
-    /// Admit queued sequences into free slots (FIFO).  Returns the slots
-    /// filled this call so the serve loop can stage their caches.
+    /// Admit queued, *prefill-complete* sequences into free slots:
+    /// interactive runs jump ahead of batch runs, FIFO within each class.
+    /// Runs still mid-prefill stay queued.  Returns the slots filled this
+    /// call so the serve loop can stage their caches.
     pub fn admit(&mut self) -> Vec<usize> {
         let mut filled = Vec::new();
         for i in 0..self.batch {
             if self.slots[i].is_none() {
-                if let Some(run) = self.queue.pop_front() {
-                    // Capacity guard: a sequence that can never fit is a
-                    // protocol error caught at submit time; here we only
-                    // check remaining room.
-                    debug_assert!(run.cached_len() < self.geom.tmax);
-                    self.slots[i] = Some(run);
-                    self.total_admitted += 1;
-                    filled.push(i);
-                } else {
-                    break;
-                }
+                let ready = |r: &SeqRun| r.prefill.is_none();
+                let pos = self
+                    .queue
+                    .iter()
+                    .position(|r| ready(r) && r.req.priority == Priority::Interactive)
+                    .or_else(|| self.queue.iter().position(ready));
+                let Some(pos) = pos else { break };
+                let run = self.queue.remove(pos).expect("position within queue");
+                // Capacity guard: a sequence that can never fit is a
+                // protocol error caught at submit time; here we only
+                // check remaining room.
+                debug_assert!(run.cached_len() < self.geom.tmax);
+                self.slots[i] = Some(run);
+                self.total_admitted += 1;
+                filled.push(i);
             }
         }
         filled
+    }
+
+    /// Queue position of the next run with pending prefill work:
+    /// interactive before batch, FIFO within each class.  Batch prefill
+    /// chunks are thereby deferred while any interactive request still has
+    /// un-prefilled prompt tokens.
+    pub fn next_prefill_index(&self) -> Option<usize> {
+        let pending = |r: &SeqRun| r.prefill.is_some();
+        self.queue
+            .iter()
+            .position(|r| pending(r) && r.req.priority == Priority::Interactive)
+            .or_else(|| self.queue.iter().position(pending))
+    }
+
+    /// True when any queued run of class `priority` still has prefill work.
+    pub fn has_pending_prefill(&self, priority: Priority) -> bool {
+        self.queue.iter().any(|r| r.prefill.is_some() && r.req.priority == priority)
+    }
+
+    /// Prompt tokens still un-prefilled across the queue (the worker
+    /// publishes this as `prefill_backlog_tokens` for SLO admission).
+    pub fn pending_prefill_tokens(&self) -> u64 {
+        self.queue
+            .iter()
+            .filter_map(|r| {
+                r.prefill.as_ref().map(|p| r.prompt_tokens.saturating_sub(p.filled) as u64)
+            })
+            .sum()
+    }
+
+    pub fn queued(&self, i: usize) -> Option<&SeqRun> {
+        self.queue.get(i)
+    }
+
+    pub fn queued_mut(&mut self, i: usize) -> Option<&mut SeqRun> {
+        self.queue.get_mut(i)
+    }
+
+    /// Remove a queued run by queue position (prefill-failure path).
+    pub fn remove_queued(&mut self, i: usize) -> Option<SeqRun> {
+        self.queue.remove(i)
     }
 
     pub fn slot(&self, i: usize) -> Option<&SeqRun> {
@@ -188,6 +323,8 @@ mod tests {
             prefill_ms: 0.0,
             ttft_ms: 0.0,
             decode_started: None,
+            prefill: None,
+            crash_guard: None,
         }
     }
 
@@ -246,6 +383,52 @@ mod tests {
         let filled = b.admit();
         assert_eq!(filled, vec![0]);
         assert_eq!(b.slot(0).unwrap().req.id, 2, "survivor admitted in order");
+    }
+
+    #[test]
+    fn mid_prefill_runs_are_not_admissible() {
+        let mut b = Batcher::new(2, geom());
+        let mut r0 = mk_run(0, 4, 2);
+        r0.prefill = Some(PrefillState::new(1));
+        b.enqueue(r0);
+        b.enqueue(mk_run(1, 2, 2));
+        // Only the prefill-complete run is admitted; the mid-prefill one
+        // stays queued even with a free lane.
+        let filled = b.admit();
+        assert_eq!(filled, vec![0]);
+        assert_eq!(b.slot(0).unwrap().req.id, 1);
+        assert_eq!(b.queue_len(), 1);
+        assert_eq!(b.pending_prefill_tokens(), 3, "4 prompt - 1 filled");
+        // Finishing its prefill makes it admissible.
+        b.queued_mut(0).unwrap().prefill = None;
+        assert_eq!(b.admit(), vec![1]);
+        assert_eq!(b.slot(1).unwrap().req.id, 0);
+        assert_eq!(b.pending_prefill_tokens(), 0);
+    }
+
+    #[test]
+    fn prefill_scheduling_prefers_interactive_over_batch() {
+        let mut b = Batcher::new(1, geom());
+        let mut batch_run = mk_run(0, 6, 2);
+        batch_run.req = batch_run.req.batch_priority();
+        batch_run.prefill = Some(PrefillState::new(0));
+        b.enqueue(batch_run);
+        let mut inter = mk_run(1, 3, 2);
+        inter.prefill = Some(PrefillState::new(0));
+        b.enqueue(inter);
+        // The interactive run's chunks run first despite arriving second.
+        assert_eq!(b.next_prefill_index(), Some(1));
+        assert!(b.has_pending_prefill(Priority::Batch));
+        assert!(b.has_pending_prefill(Priority::Interactive));
+        b.queued_mut(1).unwrap().prefill = None;
+        assert_eq!(b.next_prefill_index(), Some(0), "batch resumes after");
+        assert!(!b.has_pending_prefill(Priority::Interactive));
+        // Admission prefers the ready interactive run too.
+        assert_eq!(b.admit(), vec![0]);
+        assert_eq!(b.slot(0).unwrap().req.id, 1);
+        // Lane full: the batch run keeps its queue spot for later.
+        assert_eq!(b.queue_len(), 1);
+        assert_eq!(b.remove_queued(0).unwrap().req.id, 0);
     }
 
     #[test]

@@ -12,7 +12,14 @@
 //! * **just before a decode step**: the step-indexed kill
 //!   ([`FaultPlan::kill_worker_at_step`], counting the worker's lifetime
 //!   decode steps from 0) and the per-step delay
-//!   ([`FaultPlan::delay_steps`], a slow-shard simulation).
+//!   ([`FaultPlan::delay_steps`], a slow-shard simulation);
+//! * **at every prefill chunk boundary** (chunked prefill makes these real
+//!   yield points): the chunk-indexed kill
+//!   ([`FaultPlan::kill_worker_at_prefill_chunk`]) and hold
+//!   ([`FaultPlan::hold_worker_at_prefill_chunk`]), both counting the
+//!   worker's lifetime prefill chunks from 0.  The chunk hold converts into
+//!   the ordinary held/paused park, so [`FaultPlan::await_paused`] /
+//!   [`FaultPlan::release_worker`] script around it.
 //!
 //! Prefill poisoning ([`FaultPlan::poison_prefill`]) is keyed by request id
 //! and consumed by the first prefill that sees it, driving the
@@ -64,6 +71,8 @@ impl SimSpec {
 struct WorkerFaults {
     kill_now: bool,
     kill_at_step: Option<u64>,
+    kill_at_prefill_chunk: Option<u64>,
+    hold_at_prefill_chunk: Option<u64>,
     step_delay: Option<Duration>,
     held: bool,
     /// Set by the worker while parked at the hold gate (lets tests wait for
@@ -104,6 +113,20 @@ impl FaultPlan {
     /// counted over the worker's lifetime since start).
     pub fn kill_worker_at_step(&self, w: usize, step: u64) {
         self.workers.lock().unwrap().entry(w).or_default().kill_at_step = Some(step);
+    }
+
+    /// Panic worker `w` at its `chunk`-th prefill chunk boundary (0-based,
+    /// counted over the worker's lifetime): the kill lands *before* the
+    /// chunk is computed, i.e. exactly at a yield point.
+    pub fn kill_worker_at_prefill_chunk(&self, w: usize, chunk: u64) {
+        self.workers.lock().unwrap().entry(w).or_default().kill_at_prefill_chunk = Some(chunk);
+    }
+
+    /// Freeze worker `w` at its `chunk`-th prefill chunk boundary (0-based,
+    /// lifetime-counted).  The gate converts into the ordinary held park:
+    /// use [`Self::await_paused`] / [`Self::release_worker`] around it.
+    pub fn hold_worker_at_prefill_chunk(&self, w: usize, chunk: u64) {
+        self.workers.lock().unwrap().entry(w).or_default().hold_at_prefill_chunk = Some(chunk);
     }
 
     /// Sleep `d` before every decode step of worker `w` (slow shard).
@@ -186,6 +209,35 @@ impl FaultPlan {
         }
     }
 
+    /// True exactly once, the first time the worker's lifetime prefill
+    /// chunk counter reaches the armed threshold.
+    pub fn take_kill_at_prefill_chunk(&self, w: usize, chunk: u64) -> bool {
+        let mut g = self.workers.lock().unwrap();
+        match g.get_mut(&w) {
+            Some(f) if f.kill_at_prefill_chunk.map(|k| chunk >= k).unwrap_or(false) => {
+                f.kill_at_prefill_chunk = None;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Prefill-chunk-boundary gate: if a chunk hold is armed and due, the
+    /// worker converts it into the ordinary held park (consumed once).
+    pub fn prefill_chunk_gate(&self, w: usize, chunk: u64) {
+        {
+            let mut g = self.workers.lock().unwrap();
+            match g.get_mut(&w) {
+                Some(f) if f.hold_at_prefill_chunk.map(|k| chunk >= k).unwrap_or(false) => {
+                    f.hold_at_prefill_chunk = None;
+                    f.held = true;
+                }
+                _ => return,
+            }
+        }
+        self.pause_point(w);
+    }
+
     /// Armed per-step delay for worker `w`, if any.
     pub fn step_delay(&self, w: usize) -> Option<Duration> {
         self.workers.lock().unwrap().get(&w).and_then(|f| f.step_delay)
@@ -226,6 +278,36 @@ mod tests {
         assert!(!plan.take_kill_at_step(1, 5), "wrong worker");
         assert!(plan.take_kill_at_step(2, 3));
         assert!(!plan.take_kill_at_step(2, 4), "consumed");
+    }
+
+    #[test]
+    fn prefill_chunk_kill_fires_at_threshold_once() {
+        let plan = FaultPlan::new();
+        plan.kill_worker_at_prefill_chunk(1, 2);
+        assert!(!plan.take_kill_at_prefill_chunk(1, 0));
+        assert!(!plan.take_kill_at_prefill_chunk(1, 1));
+        assert!(!plan.take_kill_at_prefill_chunk(0, 5), "wrong worker");
+        assert!(plan.take_kill_at_prefill_chunk(1, 2));
+        assert!(!plan.take_kill_at_prefill_chunk(1, 3), "consumed");
+    }
+
+    #[test]
+    fn prefill_chunk_hold_converts_to_pause_and_releases() {
+        let plan = FaultPlan::new();
+        plan.hold_worker_at_prefill_chunk(0, 1);
+        // Chunk 0: not due yet, passes straight through.
+        plan.prefill_chunk_gate(0, 0);
+        let p2 = plan.clone();
+        let t = std::thread::spawn(move || {
+            p2.prefill_chunk_gate(0, 1); // due: parks as held
+            true
+        });
+        plan.await_paused(0);
+        assert!(!t.is_finished(), "worker must be parked at the chunk gate");
+        plan.release_worker(0);
+        assert!(t.join().unwrap());
+        // Consumed: the same boundary passes through on a later chunk.
+        plan.prefill_chunk_gate(0, 2);
     }
 
     #[test]

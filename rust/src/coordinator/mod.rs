@@ -43,6 +43,18 @@
 //! deterministic failures (kills, holds, delays, prefill poison) for the
 //! chaos suite in `rust/tests/chaos.rs`, using the engine-free
 //! [`fault::SimSpec`] backend.
+//!
+//! Chunked, preemptible prefill (PR 6): prefill runs in fixed-token chunks
+//! (`--prefill-chunk`) interleaved with decode steps, so a long prompt never
+//! monopolizes its worker.  Every chunk boundary is a yield point — cancels,
+//! chaos kill/hold gates and worker-death redispatch all take effect there,
+//! and a request is only *begun* (in the [`EventSink`] sense) once its
+//! prefill completes, so a mid-prefill worker death re-dispatches the whole
+//! request to a live worker.  [`Priority`] splits traffic into `Interactive`
+//! (latency-sensitive, prefill-first) and `Batch` (throughput, chunks
+//! deferred while interactive prefill is pending); the router can reject
+//! interactive requests whose estimated TTFT against the current chunk
+//! backlog exceeds `--ttft-slo-chunks`.
 
 pub mod batcher;
 pub mod fault;
@@ -60,6 +72,23 @@ pub use session::{SessionLookup, SessionTable};
 
 use std::sync::mpsc::Sender;
 
+/// Scheduling class of a request.  `Interactive` requests are
+/// latency-sensitive: their prefill chunks run before any `Batch` prefill
+/// work on the same worker, and the router may hold them to a TTFT SLO.
+/// `Batch` requests are throughput traffic whose prefill chunks are
+/// deferred while interactive work is pending.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    Interactive,
+    Batch,
+}
+
+impl Default for Priority {
+    fn default() -> Priority {
+        Priority::Interactive
+    }
+}
+
 /// An inference request.
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -73,6 +102,8 @@ pub struct Request {
     /// id resumes from the session's accumulated prompt+generated token ids
     /// (served from radix-cached blocks) and routes to the same shard.
     pub session_id: Option<u64>,
+    /// Scheduling class (wire field `priority`); defaults to interactive.
+    pub priority: Priority,
 }
 
 impl Request {
@@ -85,12 +116,20 @@ impl Request {
             top_k: 0,
             seed: id,
             session_id: None,
+            priority: Priority::Interactive,
         }
     }
 
     /// Attach this request to a multi-turn session.
     pub fn in_session(mut self, session_id: u64) -> Request {
         self.session_id = Some(session_id);
+        self
+    }
+
+    /// Mark this request as batch (throughput) traffic: its prefill chunks
+    /// yield to any pending interactive prefill on the same worker.
+    pub fn batch_priority(mut self) -> Request {
+        self.priority = Priority::Batch;
         self
     }
 }
@@ -263,8 +302,20 @@ impl EventSink {
     /// The worker starts processing: takes the request out and switches the
     /// death behavior from "re-dispatch" to "fail the stream".  `None` on a
     /// second call (the request was already begun).
+    ///
+    /// With chunked prefill the worker defers this call until the *prefill
+    /// completes*: a worker death anywhere during prefill then re-dispatches
+    /// the whole request instead of failing a stream that never produced a
+    /// token.  The re-dispatched request may re-emit `Started`.
     pub fn begin(&mut self) -> Option<Request> {
         self.pending.take().map(|(req, _)| req)
+    }
+
+    /// Peek at the pending request without consuming it (admission builds
+    /// run state from this while `begin()` stays deferred to the end of
+    /// prefill).  `None` once the request was begun.
+    pub fn request(&self) -> Option<Request> {
+        self.pending.as_ref().map(|(req, _)| req.clone())
     }
 
     /// Dismantle an *undispatched* sink (e.g. a failed channel send the

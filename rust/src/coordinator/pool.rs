@@ -64,7 +64,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::metrics::{PoolMetrics, ServeMetrics};
 
 use super::serve_loop::{serve_loop, ServeConfig};
-use super::{Event, EventSink, Inbound, Request, Response, SupervisorMsg};
+use super::{Event, EventSink, Inbound, Priority, Request, Response, SupervisorMsg};
 
 /// Shared load snapshot for one worker: how many requests have been
 /// dispatched to it and not yet completed/rejected.
@@ -273,6 +273,19 @@ pub(crate) fn pool_admission_rejects(
     est > (budget as u64).saturating_sub(bytes_in_use)
 }
 
+/// Estimated time-to-first-token for a new request on a worker that already
+/// has `backlog_tokens` of prefill pending, in prefill chunks: the worker
+/// advances one chunk per loop iteration, and the new prompt queues behind
+/// the backlog.  Conservative for interactive requests (they preempt batch
+/// chunks), exact for a FIFO same-class queue.
+pub(crate) fn estimate_ttft_chunks(
+    backlog_tokens: u64,
+    prompt_tokens: usize,
+    prefill_chunk: usize,
+) -> u64 {
+    (backlog_tokens + prompt_tokens as u64).div_ceil(prefill_chunk.max(1) as u64)
+}
+
 /// Effective prompt-token count for the router's pool-wide estimate: the
 /// session's published history (0 for non-session / first turns) plus the
 /// new turn's text, clamped to the published prefill ceiling (`max_ctx ==
@@ -308,6 +321,13 @@ struct RouterState {
     rr: AtomicUsize,
     /// Total cache budget across all shards (admission-control ceiling).
     total_budget: Option<usize>,
+    /// Workers' prefill yield granularity (denominator of the TTFT
+    /// admission estimate).
+    prefill_chunk: usize,
+    /// Interactive TTFT admission bound in chunks (`None` = gate off): an
+    /// interactive request whose best-case estimate across live workers
+    /// exceeds this is rejected retryably at the router.
+    ttft_slo_chunks: Option<u64>,
     metrics: Arc<PoolMetrics>,
 }
 
@@ -418,8 +438,15 @@ impl RouterState {
     ) -> Dispatched {
         let id = req.id;
         // Re-dispatch bound: a request that keeps landing on dying workers
-        // must not ping-pong forever.
-        if attempts > self.workers.len() {
+        // must not ping-pong forever.  Bounded by the LIVE worker count
+        // (floor 1), not the historical pool size — in a pool where most
+        // workers have been retired, each extra attempt can only land on
+        // the same survivors again.
+        let live = (0..self.workers.len())
+            .filter(|&w| self.alive(w))
+            .count()
+            .max(1);
+        if attempts > live {
             let _ = tx.send(Event::Failed {
                 id,
                 reason: "[error: serve worker died; re-dispatch retries exhausted]".into(),
@@ -446,9 +473,14 @@ impl RouterState {
                 Some(w) => {
                     // The shard holding this session's history is dead;
                     // generating from only the new turn's text would be
-                    // wrong, silently.  Forget the dead worker's entry so
-                    // the resent-history turn places fresh on a live shard.
-                    self.metrics.worker(w).session_tokens.forget(sid);
+                    // wrong, silently.  Scrub EVERY directory (matching the
+                    // supervisor's `SessionLost` path) — a stale replica
+                    // entry on another worker would otherwise capture the
+                    // resent-history turn and serve it from partial
+                    // context.
+                    for wm in self.metrics.workers() {
+                        wm.session_tokens.forget(sid);
+                    }
                     let _ = tx.send(Event::Failed {
                         id,
                         reason: format!(
@@ -490,6 +522,30 @@ impl RouterState {
             });
             return Dispatched::Terminal;
         }
+        // --- Interactive TTFT admission (chunk-backlog estimate) ---------
+        // Admitting an interactive request the pool cannot serve inside the
+        // SLO just converts a fast retryable rejection into a slow one; the
+        // estimate uses the best (minimum) published prefill backlog among
+        // live workers.  Batch requests are exempt — they queue.
+        if let Some(slo) = self.ttft_slo_chunks {
+            if req.priority == Priority::Interactive {
+                let backlog = (0..self.workers.len())
+                    .filter(|&w| self.alive(w))
+                    .map(|w| self.metrics.worker(w).prefill_backlog_tokens.get())
+                    .min();
+                if let Some(backlog) = backlog {
+                    if estimate_ttft_chunks(backlog, prompt_tokens, self.prefill_chunk) > slo {
+                        self.metrics.router_rejected.add(1);
+                        let _ = tx.send(Event::Failed {
+                            id,
+                            reason: String::from("[rejected: ttft slo]"),
+                            retryable: true,
+                        });
+                        return Dispatched::Terminal;
+                    }
+                }
+            }
+        }
         // --- Hand off ----------------------------------------------------
         if let Some(w0) = session_target {
             let sid = req.session_id.expect("session target implies session id");
@@ -501,8 +557,11 @@ impl RouterState {
                         req = back;
                         if has_history {
                             // The owner died between the aliveness check and
-                            // the send: same resend-history outcome.
-                            self.metrics.worker(w).session_tokens.forget(sid);
+                            // the send: same resend-history outcome, same
+                            // scrub-all (no stale replica may survive).
+                            for wm in self.metrics.workers() {
+                                wm.session_tokens.forget(sid);
+                            }
                             let _ = tx.send(Event::Failed {
                                 id,
                                 reason: format!(
@@ -718,6 +777,8 @@ impl ServePool {
             workers,
             rr: AtomicUsize::new(0),
             total_budget: cfg.cache_budget,
+            prefill_chunk: cfg.prefill_chunk,
+            ttft_slo_chunks: cfg.ttft_slo_chunks,
             metrics: metrics.clone(),
         });
         let sup_state = state.clone();
@@ -786,7 +847,18 @@ impl ServePool {
                 worker: Some(w),
             }),
             Dispatched::Terminal => Ok(StreamHandle { id, rx, cancel_tx: None, worker: None }),
-            Dispatched::NoWorkers => Err(anyhow!("no live serve workers")),
+            Dispatched::NoWorkers => {
+                // Same contract as every other router-terminal outcome: a
+                // stream that already holds its terminal event.  The
+                // supervisor's re-dispatch path resolves NoWorkers this way
+                // too, so first dispatch and re-dispatch now agree.
+                let _ = tx.send(Event::Failed {
+                    id,
+                    reason: String::from("[error: no live serve workers]"),
+                    retryable: true,
+                });
+                Ok(StreamHandle { id, rx, cancel_tx: None, worker: None })
+            }
         }
     }
 
@@ -966,6 +1038,8 @@ mod tests {
             worker_index: 0,
             session_cap: ServeConfig::default_session_cap(),
             session_ttl: None,
+            prefill_chunk: ServeConfig::default_prefill_chunk(),
+            ttft_slo_chunks: None,
         }
     }
 
@@ -1115,11 +1189,152 @@ mod tests {
         assert_eq!(state.pick_session_worker(4), Some(0));
         state.workers[0].alive.store(false, Ordering::Relaxed);
         assert_eq!(state.pick_session_worker(4), None, "all dead");
-        // With every worker dead the submission errors instead of hanging.
-        assert!(pool
+        // With every worker dead the submission fails fast with a terminal
+        // retryable event instead of erroring or hanging.
+        let h = pool
             .submit_stream(Request::greedy(1, "x", 2).in_session(4))
-            .is_err());
+            .expect("NoWorkers yields a terminal stream");
+        match h.recv().expect("terminal event") {
+            Event::Failed { reason, retryable, .. } => {
+                assert!(reason.contains("no live serve workers"), "{reason}");
+                assert!(retryable);
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
         assert!(pool.shutdown().is_err());
+    }
+
+    #[test]
+    fn redispatch_retry_bound_tracks_live_workers() {
+        let pool = ServePool::start(dead_worker_cfg(None), 4);
+        for w in 0..3 {
+            pool.state.workers[w].alive.store(false, Ordering::Relaxed);
+        }
+        // 2 attempts already: more than the single live worker, so the
+        // request terminates instead of ping-ponging up to the historical
+        // pool size (the old `attempts > workers.len()` bound would have
+        // allowed 4 attempts against 1 survivor).
+        let (tx, rx) = channel();
+        let (sup_tx, _sup_rx) = channel();
+        let out = pool
+            .state
+            .dispatch(Request::greedy(1, "x", 2), &tx, &sup_tx, 2);
+        assert!(matches!(out, Dispatched::Terminal));
+        match rx.try_recv().expect("terminal event already on the stream") {
+            Event::Failed { reason, retryable, .. } => {
+                assert!(reason.contains("retries exhausted"), "{reason}");
+                assert!(retryable);
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert!(pool.shutdown().is_err());
+    }
+
+    #[test]
+    fn dead_owner_failure_scrubs_every_session_directory() {
+        let pool = ServePool::start(dead_worker_cfg(None), 3);
+        // Session 9's history lives on worker 0; a stale replica of the
+        // directory entry survives on worker 2 (e.g. published by an
+        // earlier turn before the session moved).
+        pool.metrics.worker(0).session_tokens.publish(9, 40);
+        pool.metrics.worker(2).session_tokens.publish(9, 12);
+        pool.state.workers[0].alive.store(false, Ordering::Relaxed);
+        let h = pool
+            .submit_stream(Request::greedy(2, "next turn", 4).in_session(9))
+            .expect("router replies directly");
+        match h.recv().expect("terminal event") {
+            Event::Failed { reason, retryable, .. } => {
+                assert!(reason.contains("resend_history"), "{reason}");
+                assert!(!retryable);
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        // EVERY directory is scrubbed — not just the dead owner's — so the
+        // resent-history turn cannot route to the stale replica and be
+        // served from partial context.
+        for w in 0..3 {
+            assert_eq!(
+                pool.metrics.worker(w).session_tokens.get(9),
+                None,
+                "worker {w} directory must be scrubbed"
+            );
+        }
+        assert_eq!(pool.state.session_owner(9), None);
+        assert_eq!(pool.state.pick_session_worker(9), Some(1), "places fresh on a live worker");
+        assert!(pool.shutdown().is_err());
+    }
+
+    #[test]
+    fn submit_on_all_dead_pool_fails_fast_with_terminal_event() {
+        let pool = ServePool::start(dead_worker_cfg(None), 2);
+        for w in 0..2 {
+            pool.state.workers[w].alive.store(false, Ordering::Relaxed);
+        }
+        // First dispatch against an all-dead pool: a stream that already
+        // holds its terminal retryable Failed — never an Err, never a
+        // stream that hangs.
+        let h = pool
+            .submit_stream(Request::greedy(5, "x", 2))
+            .expect("NoWorkers yields a terminal stream");
+        assert_eq!(h.worker(), None, "router-terminated: no worker");
+        match h.recv().expect("terminal event, never a hung stream") {
+            Event::Failed { id, reason, retryable } => {
+                assert_eq!(id, 5);
+                assert!(reason.contains("no live serve workers"), "{reason}");
+                assert!(retryable);
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert!(pool.shutdown().is_err());
+    }
+
+    #[test]
+    fn ttft_estimate_counts_backlog_plus_own_prompt_in_chunks() {
+        assert_eq!(estimate_ttft_chunks(0, 512, 512), 1);
+        assert_eq!(estimate_ttft_chunks(0, 513, 512), 2);
+        assert_eq!(estimate_ttft_chunks(1024, 1, 512), 3);
+        assert_eq!(estimate_ttft_chunks(0, 0, 512), 0, "nothing pending, nothing to wait for");
+        // Degenerate chunk size never divides by zero.
+        assert_eq!(estimate_ttft_chunks(3, 1, 0), 4);
+    }
+
+    #[test]
+    fn ttft_slo_gate_rejects_interactive_behind_a_deep_backlog() {
+        use crate::coordinator::fault::{FaultPlan, SimSpec};
+        let plan = FaultPlan::new();
+        plan.hold_worker(0);
+        let mut cfg = dead_worker_cfg(None);
+        cfg.sim = Some(SimSpec::tiny());
+        cfg.faults = Some(plan.clone());
+        cfg.prefill_chunk = 4;
+        cfg.ttft_slo_chunks = Some(2);
+        let pool = ServePool::start(cfg, 1);
+        // The worker is parked at its loop-top gate, so the backlog level
+        // we plant here is exactly what the router reads.
+        plan.await_paused(0);
+        pool.metrics.worker(0).prefill_backlog_tokens.set(64);
+        let h = pool
+            .submit_stream(Request::greedy(1, "hi", 2))
+            .expect("router replies directly");
+        match h.recv().expect("terminal event") {
+            Event::Failed { reason, retryable, .. } => {
+                assert!(reason.contains("ttft slo"), "{reason}");
+                assert!(retryable, "the client can retry once the backlog drains");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert_eq!(pool.metrics.router_rejected.get(), 1);
+        // Batch-priority requests are exempt from the gate: they dispatch
+        // and queue behind the backlog.
+        let batch = pool
+            .submit_stream(Request::greedy(2, "hi", 2).batch_priority())
+            .expect("batch dispatches");
+        assert_eq!(batch.worker(), Some(0), "gate does not apply to batch priority");
+        assert_eq!(pool.metrics.router_rejected.get(), 1);
+        plan.release_worker(0);
+        let resp = batch.drain().expect("batch request completes");
+        assert!(resp.gen_tokens >= 1);
+        pool.shutdown().expect("clean shutdown");
     }
 
     #[test]

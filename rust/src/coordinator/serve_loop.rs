@@ -1,19 +1,53 @@
-//! The serve loop: binds the batcher to the PJRT decode artifacts.
+//! The serve loop: binds the batcher to the PJRT decode artifacts with a
+//! **chunked, preemptible prefill** state machine.
 //!
 //! One thread owns the [`Engine`] (PJRT handles are not `Send`) and runs:
 //!
 //! ```text
 //! loop {
-//!   drain inbound -> radix match + block reserve    (admission, eviction
-//!                  -> prefill + enqueue              under pressure)
-//!                 -> cancel: free lane/queue entry,  (full blocks still
-//!                    release blocks + reservation     promote)
-//!   admit queued sequences into free lanes          (batcher)
-//!   if any lane active: one fused decode step       (decode_cq / decode_fp)
+//!   fault gate (hold / kill)                        (chaos harness)
+//!   drain inbound -> radix match + block reserve    (admission: enqueue with
+//!                  -> enqueue w/ PrefillState        a resumable PrefillState,
+//!                 -> cancel: free lane/queue entry,  crash guard armed; no
+//!                    release blocks + reservation    prefill work yet)
+//!   advance ONE prefill chunk                       (interactive before
+//!     (chunk-boundary chaos gates fire here;         batch; completion
+//!      completion samples token 0 = TTFT mark)       makes run admissible)
+//!   admit prefill-complete sequences into lanes     (batcher, interactive
+//!   if any lane active: one fused decode step        first)
 //!   sample, append codes, stream Token events,      (a dead event receiver
 //!   complete finished lanes                          is an implicit cancel)
 //! }
 //! ```
+//!
+//! **Chunked prefill.** Admission no longer runs prefill inline: it
+//! tokenizes, reserves blocks, and enqueues a [`SeqRun`] carrying a
+//! [`super::batcher::PrefillState`] (`filled` starts at the radix-hit
+//! span).  The main loop advances exactly one `--prefill-chunk`-token span
+//! per iteration — quantize+store for that span only — so between any two
+//! chunks the worker drains cancels, fires chaos gates, admits ready runs
+//! and advances decode lanes.  A 32k-token batch prompt therefore cannot
+//! monopolize the worker: a short interactive request reaches its first
+//! `Token` while the long prefill is still mid-flight.  The model forward
+//! itself is not incremental, so the first CQ/FP chunk performs the single
+//! full-prompt artifact run and stashes its K/V + logits on the state
+//! (`PrefillSeed`); the sim backend needs no seed at all.
+//!
+//! **Yield-point semantics.** A queued run's [`super::EventSink`] is only
+//! *begun* when its prefill completes: a worker death at any chunk boundary
+//! re-dispatches the whole request to a live worker (PR 5 machinery), with
+//! the partial reservation credited back by the run's
+//! [`super::batcher::ReservationGuard`] so the dead shard's accounting
+//! returns to its idle baseline.  `Inbound::Cancel` on a mid-prefill run
+//! takes effect at the next chunk boundary, rolling the partial sequence
+//! back through [`PagedShard::cancel`].
+//!
+//! **Scheduling.** [`super::Priority`] orders both prefill chunks and lane
+//! admission: interactive before batch, FIFO within a class; decode always
+//! advances between chunks (decode-first within an iteration's budget).
+//! `prefill_preemptions` counts interactive chunks that deferred pending
+//! batch work, and the worker publishes `prefill_backlog_tokens` each
+//! iteration for the router's `--ttft-slo-chunks` admission estimate.
 //!
 //! Every request is an event stream (see [`super::Event`]): `Started` at
 //! acceptance, `Token` per sampled token — the first at end of prefill,
@@ -33,10 +67,11 @@
 //!
 //! Fault hooks (all no-ops without a [`FaultPlan`]): the loop top passes the
 //! plan's hold gate and immediate-kill check every iteration; each decode
-//! step passes the step-indexed kill and slow-shard delay.  Injected kills
-//! are genuine panics, so recovery is exercised through real stack
-//! unwinding: lane [`EventSink`]s fail their streams, channel-queued sinks
-//! re-dispatch via the pool supervisor.
+//! step passes the step-indexed kill and slow-shard delay; every prefill
+//! chunk boundary passes the chunk-indexed hold and kill gates.  Injected
+//! kills are genuine panics, so recovery is exercised through real stack
+//! unwinding: lane [`EventSink`]s fail their streams, channel-queued and
+//! mid-prefill sinks re-dispatch via the pool supervisor.
 //!
 //! Sessions live in a bounded [`SessionTable`] (LRU cap + idle TTL,
 //! `ServeConfig::{session_cap, session_ttl}`).  A turn referencing an
@@ -50,7 +85,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::tokenizer::{ByteTokenizer, Tokenizer};
-use crate::kvcache::{Admission, BatchStage, CacheGeom, PagedShard, DEFAULT_BLOCK_TOKENS};
+use crate::kvcache::{BatchStage, CacheGeom, PagedShard, DEFAULT_BLOCK_TOKENS};
 use crate::metrics::ServeMetrics;
 use crate::quant::cq::CqCodebooks;
 use crate::quant::KvKind;
@@ -58,12 +93,12 @@ use crate::runtime::{engine::{Arg, DevBuf}, Engine, Value};
 use crate::tensor::{TensorF, TensorI};
 use crate::util::rng::Pcg64;
 
-use super::batcher::{Batcher, SeqRun};
+use super::batcher::{Batcher, PrefillSeed, PrefillState, ReservationGuard, SeqRun};
 use super::fault::{FaultPlan, SimSpec};
 use super::pool::LoadToken;
 use super::sampler::{sample, SampleCfg};
 use super::session::{SessionLookup, SessionTable};
-use super::{Event, EventSink, Inbound, Request, Response};
+use super::{Event, EventSink, Inbound, Priority, Request, Response};
 
 /// Token-id space of the sim backend (matches the byte tokenizer).
 const SIM_VOCAB: usize = 256;
@@ -110,6 +145,17 @@ pub struct ServeConfig {
     /// Idle TTL for sessions (`None` = no TTL; the LRU cap still bounds the
     /// table).
     pub session_ttl: Option<Duration>,
+    /// Prefill chunk size in tokens: the scheduler's yield granularity.  The
+    /// loop quantizes+stores at most this many prompt tokens per iteration,
+    /// so cancels, chaos gates, admissions and decode steps all interleave
+    /// with a long prefill at chunk boundaries.
+    pub prefill_chunk: usize,
+    /// Router-side TTFT admission bound, in prefill chunks: an interactive
+    /// request whose estimated time-to-first-token (pending prefill backlog
+    /// plus its own prompt, divided by `prefill_chunk`) exceeds this on
+    /// every live worker is rejected retryably instead of queued behind a
+    /// long batch prefill.  `None` disables the gate.
+    pub ttft_slo_chunks: Option<u64>,
 }
 
 impl ServeConfig {
@@ -129,6 +175,13 @@ impl ServeConfig {
     /// Default live-session bound per worker.
     pub fn default_session_cap() -> usize {
         256
+    }
+
+    /// Default prefill chunk (tokens): small enough that an interactive
+    /// request waits at most one chunk of a batch prompt before its own
+    /// prefill starts, large enough to amortize per-chunk staging cost.
+    pub fn default_prefill_chunk() -> usize {
+        512
     }
 }
 
@@ -152,6 +205,8 @@ impl Default for ServeConfig {
             worker_index: 0,
             session_cap: ServeConfig::default_session_cap(),
             session_ttl: None,
+            prefill_chunk: ServeConfig::default_prefill_chunk(),
+            ttft_slo_chunks: None,
         }
     }
 }
@@ -353,72 +408,12 @@ fn prompt_ids(ctx: &Ctx, history: Option<&[i32]>, req: &Request) -> Vec<i32> {
     prompt
 }
 
-/// Prefill one admitted request: returns a ready [`SeqRun`] with its first
-/// sampled token and (for CQ) a block-backed packed cache.  Quantize+store
-/// runs ONLY over the prompt span not covered by the admission's radix hit.
-/// On failure the admission is rolled back (blocks + reservation returned).
-fn prefill(
-    ctx: &Ctx,
-    shard: &mut PagedShard,
-    req: &Request,
-    prompt: Vec<i32>,
-    mut adm: Admission,
-    metrics: &ServeMetrics,
-) -> Result<SeqRun> {
-    let t0 = Instant::now();
-    match prefill_fill(ctx, shard, req, &prompt, &mut adm) {
-        Ok(first_tok) => {
-            let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-            metrics.prefill_latency.record(t0.elapsed());
-            Ok(SeqRun {
-                req: req.clone(),
-                events: None,
-                load_token: None,
-                reserved_blocks: adm.reserved_blocks,
-                prompt_tokens: prompt.len(),
-                prompt_ids: prompt,
-                prefix_hit_tokens: adm.hit_tokens,
-                generated: vec![first_tok],
-                packed: adm.seq,
-                enqueued_at: Instant::now(),
-                prefill_ms,
-                ttft_ms: 0.0,
-                decode_started: None,
-            })
-        }
-        Err(e) => {
-            shard.abort(&mut adm.seq, adm.reserved_blocks, metrics);
-            Err(e)
-        }
-    }
-}
-
-/// Artifact run + cache fill for [`prefill`]; mutates `adm.seq` in place so
-/// a mid-way failure rolls back cleanly in the caller.
-fn prefill_fill(
-    ctx: &Ctx,
-    shard: &mut PagedShard,
-    req: &Request,
-    prompt: &[i32],
-    adm: &mut Admission,
-) -> Result<i32> {
+/// The one full-prompt artifact forward that chunked CQ/FP prefill still
+/// needs (the model itself is not incremental): pick the smallest compiled
+/// bucket that fits, run it, and return the last-position logits row plus
+/// the raw prompt K/V activations for per-chunk quantize+store.
+fn run_prefill_artifact(ctx: &Ctx, prompt: &[i32]) -> Result<(Vec<f32>, TensorF, TensorF)> {
     let p = prompt.len();
-    if let Some(plan) = &ctx.faults {
-        if plan.take_poison(req.id) {
-            bail!("[chaos] poisoned prefill (request {})", req.id);
-        }
-    }
-    if let CacheMode::Sim { .. } = ctx.mode {
-        // Synthetic quantize+store over the unmatched span only — the radix
-        // hit skips exactly the same tokens as in CQ serving.
-        let (mut k, mut v) = (Vec::new(), Vec::new());
-        for &t in &prompt[adm.hit_tokens..] {
-            sim_codes(&ctx.geom, t, &mut k, &mut v);
-            adm.seq.append(&mut shard.pool, &k, &v)?;
-        }
-        return Ok(sim_next(*prompt.last().unwrap()));
-    }
-    // Smallest compiled prefill bucket that fits the prompt.
     let (bucket_ctx, art) = ctx
         .prefills
         .iter()
@@ -433,60 +428,209 @@ fn prefill_fill(
         .executable(art)?
         .run_mixed(&[Arg::B(params_buf), Arg::V(&tokens)])?;
     let logits = out[0].as_f()?;
-    let k = out[1].as_f()?;
-    let v = out[2].as_f()?;
+    let row = logits.data[(p - 1) * ctx.vocab..p * ctx.vocab].to_vec();
+    Ok((row, out[1].as_f()?.clone(), out[2].as_f()?.clone()))
+}
 
+/// Advance one run's prefill by up to `chunk` tokens (quantize+store for
+/// that span only), mutating its [`PrefillState`] in place.  The first
+/// chunk of a CQ/FP run performs the single artifact forward and stashes
+/// its outputs as the state's [`PrefillSeed`]; the sim backend derives
+/// codes per token and needs no seed.  Returns Ok(true) once the whole
+/// prompt is cached.
+fn prefill_chunk_fill(
+    ctx: &Ctx,
+    shard: &mut PagedShard,
+    run: &mut SeqRun,
+    chunk: usize,
+) -> Result<bool> {
+    let p = run.prompt_ids.len();
+    let state = run.prefill.as_mut().expect("run has pending prefill");
+    if state.started.is_none() {
+        state.started = Some(Instant::now());
+        // Poisoned prefill (chaos) fails the first chunk, driving the same
+        // rollback path a real artifact error would.
+        if let Some(plan) = &ctx.faults {
+            if plan.take_poison(run.req.id) {
+                bail!("[chaos] poisoned prefill (request {})", run.req.id);
+            }
+        }
+    }
+    let t0 = Instant::now();
+    let end = (state.filled + chunk.max(1)).min(p);
     match &ctx.mode {
+        CacheMode::Sim { .. } => {
+            // Synthetic quantize+store over this chunk's span only — the
+            // radix hit skipped exactly the same tokens as in CQ serving.
+            let (mut k, mut v) = (Vec::new(), Vec::new());
+            for &t in &run.prompt_ids[state.filled..end] {
+                sim_codes(&ctx.geom, t, &mut k, &mut v);
+                run.packed.append(&mut shard.pool, &k, &v)?;
+            }
+        }
         CacheMode::Cq { books, .. } => {
-            // Tokens [0, hit) are already attached from shared blocks — the
-            // whole point of the radix index is skipping that span.  The
-            // rest runs the batched encode: per-layer work fans across
+            if state.seed.is_none() {
+                let (row, k, v) = run_prefill_artifact(ctx, &run.prompt_ids)?;
+                state.seed = Some(PrefillSeed::Cq { k, v, row });
+            }
+            let Some(PrefillSeed::Cq { k, v, .. }) = &state.seed else {
+                bail!("cq prefill seed missing");
+            };
+            // Batched encode for this chunk: per-layer work fans across
             // scoped threads, each book's centroid table is walked once for
-            // the whole span, and the codes bulk-append as packed records.
-            let (kc, vc) = books.encode_span_parallel(k, v, adm.hit_tokens, p);
-            adm.seq
-                .append_span(&mut shard.pool, &kc, &vc, p - adm.hit_tokens)?;
+            // the span, and the codes bulk-append as packed records.
+            let (kc, vc) = books.encode_span_parallel(k, v, state.filled, end);
+            run.packed.append_span(&mut shard.pool, &kc, &vc, end - state.filled)?;
         }
         CacheMode::Fp { .. } => {
-            for _ in 0..p {
-                adm.seq.append_unstored()?;
+            if state.seed.is_none() {
+                let (row, k, v) = run_prefill_artifact(ctx, &run.prompt_ids)?;
+                // Stash prefill K/V for staging at admission time.
+                run.packed.fp_seed = Some((k, v));
+                state.seed = Some(PrefillSeed::Fp { row });
             }
-            // Stash prefill K/V for staging at admission time.
-            adm.seq.fp_seed = Some((k.clone(), v.clone()));
+            for _ in state.filled..end {
+                run.packed.append_unstored()?;
+            }
         }
-        CacheMode::Sim { .. } => unreachable!("sim prefill returned above"),
     }
+    state.filled = end;
+    state.chunks += 1;
+    state.work_ms += t0.elapsed().as_secs_f64() * 1e3;
+    Ok(end == p)
+}
 
-    // First generated token from the last prompt position.
-    let row = &logits.data[(p - 1) * ctx.vocab..p * ctx.vocab];
-    let mut rng = Pcg64::seed(req.seed);
-    Ok(sample(
-        row,
-        SampleCfg { temperature: req.temperature, top_k: req.top_k },
-        &mut rng,
-    ))
+/// End of prefill: sample the first token (the TTFT mark), record prefill
+/// and TTFT metrics (per priority class), and switch the run's sink into
+/// mid-flight mode (`begin`) — from here a worker death fails the stream
+/// instead of re-dispatching a half-streamed request.
+fn finish_prefill(run: &mut SeqRun, metrics: &ServeMetrics) {
+    let state = run.prefill.take().expect("prefill completes exactly once");
+    let first = match &state.seed {
+        None => sim_next(*run.prompt_ids.last().expect("non-empty prompt")),
+        Some(PrefillSeed::Cq { row, .. }) | Some(PrefillSeed::Fp { row }) => {
+            let mut rng = Pcg64::seed(run.req.seed);
+            sample(
+                row,
+                SampleCfg { temperature: run.req.temperature, top_k: run.req.top_k },
+                &mut rng,
+            )
+        }
+    };
+    run.generated.push(first);
+    run.prefill_ms = state.work_ms;
+    metrics
+        .prefill_latency
+        .record(Duration::from_secs_f64(state.work_ms / 1e3));
+    let ttft = run.enqueued_at.elapsed();
+    run.ttft_ms = ttft.as_secs_f64() * 1e3;
+    metrics.ttft.record(ttft);
+    match run.req.priority {
+        Priority::Interactive => metrics.ttft_interactive.record(ttft),
+        Priority::Batch => metrics.ttft_batch.record(ttft),
+    }
+    if let Some(sink) = run.events.as_mut() {
+        let _ = sink.begin();
+        // First token: streamed before the run ever waits on a decode lane.
+        let _ = sink.send(Event::Token {
+            id: run.req.id,
+            index: 0,
+            text: ByteTokenizer.decode(&run.generated[..1]),
+        });
+    }
+}
+
+/// Advance chunked prefill by ONE chunk — the scheduler's yield
+/// granularity.  Picks the next run (interactive before batch, FIFO within
+/// a class), fires the chunk-boundary chaos gates against the worker's
+/// lifetime chunk counter, computes the chunk, and on prompt completion
+/// finishes the run (first token + TTFT + lane admissibility).  A failed
+/// chunk rolls the whole admission back (blocks + reservation returned)
+/// and fails the stream.  Returns true if any prefill work was done.
+fn advance_prefill(
+    ctx: &Ctx,
+    shard: &mut PagedShard,
+    batcher: &mut Batcher,
+    metrics: &ServeMetrics,
+    chunk_tokens: usize,
+    prefill_chunks: &mut u64,
+) -> bool {
+    let Some(qi) = batcher.next_prefill_index() else {
+        return false;
+    };
+    // Chunk-boundary chaos gates fire BEFORE the chunk is computed: a hold
+    // parks the worker with the chunk still pending, a kill panics at the
+    // exact boundary — both observe the same worker-lifetime chunk index.
+    if let Some(plan) = &ctx.faults {
+        plan.prefill_chunk_gate(ctx.worker, *prefill_chunks);
+        if plan.take_kill_at_prefill_chunk(ctx.worker, *prefill_chunks) {
+            panic!(
+                "[chaos] worker {} killed at prefill chunk {}",
+                ctx.worker, *prefill_chunks
+            );
+        }
+    }
+    let preempts = {
+        let run = batcher.queued(qi).expect("prefill index in queue");
+        run.req.priority == Priority::Interactive && batcher.has_pending_prefill(Priority::Batch)
+    };
+    let run = batcher.queued_mut(qi).expect("prefill index in queue");
+    match prefill_chunk_fill(ctx, shard, run, chunk_tokens) {
+        Ok(done) => {
+            if done {
+                finish_prefill(run, metrics);
+            }
+            *prefill_chunks += 1;
+            metrics.prefill_chunks.add(1);
+            if preempts {
+                metrics.prefill_preemptions.add(1);
+            }
+            true
+        }
+        Err(e) => {
+            log::error!("prefill failed: {e:#}");
+            let mut run = batcher.remove_queued(qi).expect("prefill index in queue");
+            shard.abort(&mut run.packed, run.reserved_blocks, metrics);
+            if let Some(g) = run.crash_guard.take() {
+                g.disarm();
+            }
+            // Explicit error reply (like the rejection path) so pipelined
+            // TCP clients keep their connection instead of a dropped-channel
+            // error tearing it down.
+            if let Some(mut sink) = run.events.take() {
+                sink.send_terminal(Event::Failed {
+                    id: run.req.id,
+                    reason: format!("[error: prefill failed: {e:#}]"),
+                    retryable: false,
+                });
+            }
+            true
+        }
+    }
 }
 
 /// Router admission for one inbound request: resolve its session (failing
 /// evicted sessions with the `session_evicted` signal), match the prompt
 /// (with any history prepended) against this shard's radix index, reserve
-/// blocks (evicting cold cached prefixes under pressure), prefill, and
-/// enqueue.  Lifecycle events: `Started` on acceptance, the first `Token`
-/// at end of prefill (TTFT), `Failed` on rejection or prefill error.
-/// The [`LoadToken`] rides in the `SeqRun` so the pool's in-flight count
-/// drops on every terminal path.
+/// blocks (evicting cold cached prefixes under pressure), and enqueue with
+/// a fresh [`PrefillState`] — NO prefill work happens here; the main loop
+/// advances it chunk by chunk.  Lifecycle events: `Started` on acceptance,
+/// the first `Token` at end of prefill (TTFT), `Failed` on rejection or
+/// prefill error.  The [`LoadToken`] rides in the `SeqRun` so the pool's
+/// in-flight count drops on every terminal path.
 fn admit_request(
     ctx: &Ctx,
     shard: &mut PagedShard,
     batcher: &mut Batcher,
     sessions: &mut SessionTable,
-    metrics: &ServeMetrics,
+    metrics: &Arc<ServeMetrics>,
     mut sink: EventSink,
     token: Option<LoadToken>,
 ) {
-    // From here on a worker crash fails this stream instead of silently
-    // re-dispatching a half-served request.
-    let Some(mut req) = sink.begin() else { return };
+    // Peek, don't `begin()`: the sink stays channel-armed until prefill
+    // completes, so a worker death anywhere mid-prefill re-dispatches the
+    // whole request instead of failing a stream that never saw a token.
+    let Some(mut req) = sink.request() else { return };
     let arrived = Instant::now();
     let _ = sink.send(Event::Started { id: req.id });
     // The decode loop always appends at least one token before `must_stop`
@@ -532,34 +676,30 @@ fn admit_request(
             return; // token drops here -> router sees the slot free again
         }
     };
-    match prefill(ctx, shard, &req, prompt, adm, metrics) {
-        Ok(mut run) => {
-            let ttft = arrived.elapsed();
-            metrics.ttft.record(ttft);
-            run.ttft_ms = ttft.as_secs_f64() * 1e3;
-            // First token: sampled by prefill, streamed before the run ever
-            // waits on a decode lane.
-            let _ = sink.send(Event::Token {
-                id: run.req.id,
-                index: 0,
-                text: ByteTokenizer.decode(&run.generated[..1]),
-            });
-            run.events = Some(sink);
-            run.load_token = token;
-            batcher.enqueue(run);
-        }
-        Err(e) => {
-            log::error!("prefill failed: {e:#}");
-            // Explicit error reply (like the rejection path) so pipelined
-            // TCP clients keep their connection instead of a dropped-channel
-            // error tearing it down.
-            sink.send_terminal(Event::Failed {
-                id: req.id,
-                reason: format!("[error: prefill failed: {e:#}]"),
-                retryable: false,
-            });
-        }
-    }
+    // The crash guard mirrors the shard's reservation: if this worker dies
+    // before the run settles through finish/cancel/abort, the guard's
+    // unwind-time credit returns the partial reservation so the dead
+    // shard's accounting reads idle again.  (`block_bytes` was published
+    // as a gauge before the loop started serving.)
+    let reserved_bytes = adm.reserved_blocks as u64 * metrics.block_bytes.get();
+    let guard = ReservationGuard::new(metrics.clone(), reserved_bytes);
+    batcher.enqueue(SeqRun {
+        req,
+        events: Some(sink),
+        load_token: token,
+        reserved_blocks: adm.reserved_blocks,
+        prompt_tokens: prompt.len(),
+        prompt_ids: prompt,
+        prefix_hit_tokens: adm.hit_tokens,
+        generated: Vec::new(),
+        packed: adm.seq,
+        enqueued_at: arrived,
+        prefill_ms: 0.0,
+        ttft_ms: 0.0,
+        decode_started: None,
+        prefill: Some(PrefillState::new(adm.hit_tokens)),
+        crash_guard: Some(guard),
+    });
 }
 
 /// Stage a newly admitted sequence into its lane.  Shared prefix blocks and
@@ -815,6 +955,10 @@ pub fn serve_loop(
     // Lifetime decode-step counter: the index `FaultPlan::kill_worker_at_step`
     // schedules against.
     let mut decode_steps: u64 = 0;
+    // Lifetime prefill-chunk counter: the index the chunk-boundary chaos
+    // gates (`kill_at_prefill_chunk` / `hold_at_prefill_chunk`) fire on.
+    let mut prefill_chunks: u64 = 0;
+    let chunk_tokens = cfg.prefill_chunk.max(1);
 
     loop {
         // --- Fault gate (chaos harness; no-op without a plan) ----------
@@ -850,6 +994,24 @@ pub fn serve_loop(
                 break;
             }
         }
+
+        // --- Prefill: one chunk per iteration ---------------------------
+        // Exactly one chunk between decode steps keeps both making
+        // progress: a long batch prefill yields to inbound cancels, chaos
+        // gates, interactive chunks and active lanes at every boundary.
+        advance_prefill(
+            &ctx,
+            &mut shard,
+            &mut batcher,
+            &metrics,
+            chunk_tokens,
+            &mut prefill_chunks,
+        );
+        // Published every iteration for the router's `--ttft-slo-chunks`
+        // admission estimate (instantaneous level, not a high-watermark).
+        metrics
+            .prefill_backlog_tokens
+            .set(batcher.pending_prefill_tokens());
 
         // --- Admission --------------------------------------------------
         for slot in batcher.admit() {
@@ -932,7 +1094,9 @@ pub fn serve_loop(
             debug_assert!(shard.idle(), "shard accounting not at idle baseline on shutdown");
             return Ok(());
         } else if batcher.is_idle() {
-            // Idle: block briefly for the next request.
+            // Idle: block briefly for the next request.  (A queue holding
+            // only mid-prefill runs is NOT idle — the loop falls through
+            // and advances their chunks without sleeping.)
             match rx.recv_timeout(Duration::from_millis(20)) {
                 Ok(Inbound::Submit(sink, token)) => {
                     admit_request(
@@ -1059,6 +1223,11 @@ fn settle_cancelled(
     metrics: &ServeMetrics,
     mut run: SeqRun,
 ) {
+    // Deliberate settlement: the shard's own cancel path does the
+    // accounting, so the crash guard must not also fire on drop.
+    if let Some(g) = run.crash_guard.take() {
+        g.disarm();
+    }
     let key = promote_key(&run);
     shard.cancel(&mut run.packed, &key, run.reserved_blocks, metrics);
     note_session(sessions, metrics, &run);
@@ -1085,6 +1254,11 @@ fn complete(
         match &mut ctx.mode {
             CacheMode::Cq { stage, .. } | CacheMode::Sim { stage } => stage.release(slot),
             CacheMode::Fp { pos, .. } => pos[slot] = 0,
+        }
+        // Deliberate settlement: `shard.finish` does the accounting, so the
+        // crash guard must not also fire on drop.
+        if let Some(g) = run.crash_guard.take() {
+            g.disarm();
         }
         let cache_bytes = run.packed.logical_bytes();
         // Promote the sequence's full blocks into the radix index under its

@@ -42,8 +42,9 @@ COMMANDS
   serve       --model small --port 7878 [--cq 8c8b] [--batch 8]
               [--workers 2] [--cache-budget-mb 64] [--block-tokens 16]
               [--no-prefix-sharing] [--session-cap 256] [--session-ttl-s 3600]
+              [--prefill-chunk 512] [--ttft-slo-chunks 8]
   client      --port 7878 --prompt \"...\" [--max-tokens 32] [--top-k 40]
-              [--seed 7] [--session 12] [--stream]
+              [--seed 7] [--session 12] [--stream] [--priority batch]
   gen-corpus  --corpus wiki2s --split train --bytes 200000 [--out file]
 ";
 
@@ -301,6 +302,10 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         session_ttl: args
             .has("session-ttl-s")
             .then(|| std::time::Duration::from_secs(args.u64("session-ttl-s", 3600))),
+        prefill_chunk: args.usize("prefill-chunk", ServeConfig::default_prefill_chunk()),
+        ttft_slo_chunks: args
+            .has("ttft-slo-chunks")
+            .then(|| args.u64("ttft-slo-chunks", 8)),
     })
 }
 
@@ -320,6 +325,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         top_k: args.usize("top-k", 0),
         seed: args.u64("seed", 1),
         session_id: None,
+        priority: cq::coordinator::Priority::Interactive,
     };
     let resp = handle.submit(req)?;
     println!("--- completion ({} tokens, cache {}) ---", resp.gen_tokens, human_bytes(resp.cache_bytes));
@@ -363,6 +369,9 @@ fn cmd_client(args: &Args) -> Result<()> {
     }
     if args.has("session") {
         pairs.push(("session", Json::Num(args.u64("session", 0) as f64)));
+    }
+    if args.has("priority") {
+        pairs.push(("priority", Json::Str(args.str("priority", "interactive"))));
     }
     if args.flag("stream") {
         // Protocol v2: print token text as frames arrive, then the terminal

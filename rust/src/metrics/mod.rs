@@ -112,6 +112,22 @@ impl Gauge {
     }
 }
 
+/// Instantaneous level gauge (last value set wins — unlike [`Gauge`], which
+/// only ever rises).  The serve worker publishes its current prefill chunk
+/// backlog here each loop iteration; the router reads it for TTFT-SLO
+/// admission.
+#[derive(Default)]
+pub struct Level(AtomicU64);
+
+impl Level {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Per-worker session-length directory: session id → total conversation
 /// token count, published by the worker's session table.  The pool router
 /// reads it to estimate a follow-up turn's true reservation (history + new
@@ -174,6 +190,20 @@ pub struct ServeMetrics {
     /// `Token` event (end of prefill) — the streaming API's headline
     /// latency.
     pub ttft: Histogram,
+    /// TTFT split by scheduling class: the chunked-prefill scheduler's
+    /// whole point is that interactive TTFT stays low while batch prefill
+    /// is mid-flight.
+    pub ttft_interactive: Histogram,
+    pub ttft_batch: Histogram,
+    /// Prefill chunks completed (a long prompt at `--prefill-chunk 512`
+    /// contributes ceil(prompt/512); every boundary was a yield point).
+    pub prefill_chunks: Counter,
+    /// Chunks where an interactive request's prefill ran while batch
+    /// prefill work was pending (the batch chunk was deferred).
+    pub prefill_preemptions: Counter,
+    /// Current prefill backlog: prompt tokens still un-prefilled across
+    /// this worker's queue (instantaneous; router TTFT-SLO input).
+    pub prefill_backlog_tokens: Level,
     pub tokens_out: Counter,
     pub requests_done: Counter,
     pub requests_rejected: Counter,
@@ -242,7 +272,7 @@ impl ServeMetrics {
 
     pub fn summary(&self, wall_secs: f64) -> String {
         format!(
-            "requests={} rejected={} cancelled={} sessions_evicted={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms  cache peak={}B  prefix hit={:.0}% evicted={} frag={}B",
+            "requests={} rejected={} cancelled={} sessions_evicted={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms (int p50={:.1}ms batch p50={:.1}ms)  prefill_chunks={} preempts={}  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms  cache peak={}B  prefix hit={:.0}% evicted={} frag={}B",
             self.requests_done.get(),
             self.requests_rejected.get(),
             self.requests_cancelled.get(),
@@ -250,6 +280,10 @@ impl ServeMetrics {
             self.tokens_out.get(),
             self.tokens_out.get() as f64 / wall_secs.max(1e-9),
             self.ttft.percentile_ms(0.5),
+            self.ttft_interactive.percentile_ms(0.5),
+            self.ttft_batch.percentile_ms(0.5),
+            self.prefill_chunks.get(),
+            self.prefill_preemptions.get(),
             self.decode_step_latency.percentile_ms(0.5),
             self.decode_step_latency.percentile_ms(0.95),
             self.request_latency.percentile_ms(0.5),
@@ -426,12 +460,40 @@ impl PoolMetrics {
         h
     }
 
+    /// Interactive-class TTFT merged across workers.
+    pub fn merged_ttft_interactive(&self) -> Histogram {
+        let h = Histogram::new();
+        for m in &self.workers {
+            h.merge_from(&m.ttft_interactive);
+        }
+        h
+    }
+
+    /// Batch-class TTFT merged across workers.
+    pub fn merged_ttft_batch(&self) -> Histogram {
+        let h = Histogram::new();
+        for m in &self.workers {
+            h.merge_from(&m.ttft_batch);
+        }
+        h
+    }
+
+    /// Prefill chunks completed across all workers.
+    pub fn prefill_chunks(&self) -> u64 {
+        self.sum(|m| m.prefill_chunks.get())
+    }
+
+    /// Interactive-over-batch prefill preemptions across all workers.
+    pub fn prefill_preemptions(&self) -> u64 {
+        self.sum(|m| m.prefill_preemptions.get())
+    }
+
     /// Pool summary line followed by one indented line per worker.
     pub fn summary(&self, wall_secs: f64) -> String {
         let decode = self.merged_decode_latency();
         let e2e = self.merged_request_latency();
         let mut s = format!(
-            "pool[{}w]: requests={} rejected={} cancelled={} dead_workers={} redispatched={} sessions_evicted={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms  decode p50={:.2}ms  e2e p95={:.1}ms  cache in_use={}B peak<={}B  prefix hit={:.0}% cached={}B evicted={}",
+            "pool[{}w]: requests={} rejected={} cancelled={} dead_workers={} redispatched={} sessions_evicted={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms (int p95={:.1}ms)  prefill_chunks={} preempts={}  decode p50={:.2}ms  e2e p95={:.1}ms  cache in_use={}B peak<={}B  prefix hit={:.0}% cached={}B evicted={}",
             self.n_workers(),
             self.requests_done(),
             self.requests_rejected(),
@@ -442,6 +504,9 @@ impl PoolMetrics {
             self.tokens_out(),
             self.tokens_out() as f64 / wall_secs.max(1e-9),
             self.merged_ttft().percentile_ms(0.5),
+            self.merged_ttft_interactive().percentile_ms(0.95),
+            self.prefill_chunks(),
+            self.prefill_preemptions(),
             decode.percentile_ms(0.5),
             e2e.percentile_ms(0.95),
             self.cache_bytes_in_use(),
@@ -615,6 +680,40 @@ mod tests {
         assert!(s.contains("redispatched=4"), "{s}");
         assert!(s.contains("sessions_evicted=3"), "{s}");
         assert!(w0.summary(1.0).contains("sessions_evicted=2"));
+    }
+
+    #[test]
+    fn level_gauge_is_instantaneous() {
+        let l = Level::default();
+        assert_eq!(l.get(), 0);
+        l.set(512);
+        assert_eq!(l.get(), 512);
+        l.set(64);
+        assert_eq!(l.get(), 64, "levels fall as the backlog drains");
+    }
+
+    #[test]
+    fn prefill_chunk_and_priority_ttft_aggregate() {
+        let w0 = Arc::new(ServeMetrics::default());
+        let w1 = Arc::new(ServeMetrics::default());
+        w0.prefill_chunks.add(5);
+        w1.prefill_chunks.add(3);
+        w0.prefill_preemptions.add(2);
+        w0.ttft_interactive.record(Duration::from_millis(2));
+        w1.ttft_interactive.record(Duration::from_millis(8));
+        w0.ttft_batch.record(Duration::from_millis(64));
+        w0.prefill_backlog_tokens.set(1024);
+
+        let pool = PoolMetrics::new(vec![w0.clone(), w1]);
+        assert_eq!(pool.prefill_chunks(), 8);
+        assert_eq!(pool.prefill_preemptions(), 2);
+        assert_eq!(pool.merged_ttft_interactive().count(), 2);
+        assert_eq!(pool.merged_ttft_batch().count(), 1);
+        assert!(pool.merged_ttft_batch().percentile_ms(1.0) >= 64.0);
+        let s = pool.summary(1.0);
+        assert!(s.contains("prefill_chunks=8"), "{s}");
+        assert!(s.contains("preempts=2"), "{s}");
+        assert!(w0.summary(1.0).contains("prefill_chunks=5"));
     }
 
     #[test]

@@ -4,11 +4,19 @@
 //!
 //! ```text
 //! -> {"prompt": "...", "max_tokens": 32, "temperature": 0.8, "top_k": 40,
-//!     "seed": 7, "session": 12}
+//!     "seed": 7, "session": 12, "priority": "interactive"}
 //! <- {"id": 1, "text": "...", "prompt_tokens": 12, "prefix_hit_tokens": 8,
 //!     "gen_tokens": 32, "queue_ms": ..., "ttft_ms": ..., "prefill_ms": ...,
 //!     "decode_ms": ..., "cache_bytes": ...}
 //! ```
+//!
+//! `"priority"` is `"interactive"` (default) or `"batch"`, and drives the
+//! chunked-prefill scheduler: workers prefer interactive prefill chunks and
+//! lane admissions over batch ones, and the router's optional
+//! `--ttft-slo-chunks` gate rejects interactive requests (retryably, with
+//! `[rejected: ttft slo]`) whose estimated first token would queue behind
+//! too deep a prefill backlog.  Batch requests are never TTFT-gated.  Any
+//! other `"priority"` string is a protocol error.
 //!
 //! **v2 (streaming)** — add `"stream": true` and the same connection
 //! receives NDJSON event frames as the worker produces them:
@@ -42,10 +50,14 @@
 //!
 //! * `retryable: true` — transient capacity or infrastructure failure
 //!   (`[rejected: pool budget]`, `[rejected: cache budget]`,
-//!   `[error: serve worker died]`): resubmitting the identical request can
-//!   succeed.  A worker crash is invisible for requests that were still
-//!   queued — the pool supervisor re-dispatches them to a live shard and
-//!   the stream simply starts late.
+//!   `[rejected: ttft slo]`, `[error: serve worker died]`,
+//!   `[error: no live serve workers]`): resubmitting the identical request
+//!   can succeed.  A worker crash is invisible for requests that were still
+//!   queued **or anywhere mid-prefill** — prefill runs in chunks and the
+//!   request's stream is only pinned to a worker once its first token is
+//!   sampled, so the pool supervisor re-dispatches it to a live shard and
+//!   the stream simply starts late (a re-dispatched request may emit
+//!   `started` again).
 //! * `retryable: false` — resubmitting the same line cannot help:
 //!   `[cancelled]`, prefill errors, and the two **session signals**:
 //!   - `[session_evicted: ...]` — the session idled past its TTL or was
@@ -55,6 +67,13 @@
 //!   - `[resend_history: ...]` — the worker holding the session's history
 //!     died; same client action, after which the pool re-registers the
 //!     session on a live shard.
+//!
+//! **Cancellation** (dropping the v2 connection mid-stream, or an explicit
+//! pool-side cancel) takes effect at the next scheduler yield point: a
+//! decoding request stops at its next token, a mid-prefill request stops at
+//! its next chunk boundary — partial prefill work is rolled back and the
+//! reserved blocks return to the budget.  Either way the stream terminates
+//! with `[cancelled]` (`retryable: false`).
 //!
 //! Connection threads are thin: they parse, forward to the serve pool's
 //! router, and stream events back.  All model work happens on the pool's
@@ -70,7 +89,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{Event, Request, Response, ServePool};
+use crate::coordinator::{Event, Priority, Request, Response, ServePool};
 use crate::util::json::Json;
 
 /// Condvar-backed stop flag for [`serve_tcp`]: `raise()` wakes the waiter
@@ -121,6 +140,11 @@ pub fn parse_request(line: &str, id: u64) -> Result<(Request, bool)> {
     if prompt.is_empty() {
         bail!("missing or empty 'prompt'");
     }
+    let priority = match j.str_or("priority", "interactive").as_str() {
+        "interactive" => Priority::Interactive,
+        "batch" => Priority::Batch,
+        other => bail!("unknown 'priority' {other:?} (use \"interactive\" or \"batch\")"),
+    };
     let req = Request {
         id,
         prompt,
@@ -129,6 +153,7 @@ pub fn parse_request(line: &str, id: u64) -> Result<(Request, bool)> {
         top_k: j.num_or("top_k", 0.0) as usize,
         seed: j.num_or("seed", id as f64) as u64,
         session_id: j.get("session").and_then(Json::as_f64).map(|s| s as u64),
+        priority,
     };
     let stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
     Ok((req, stream))
@@ -361,6 +386,7 @@ mod tests {
         assert_eq!(r.temperature, 0.0);
         assert_eq!(r.seed, 3);
         assert_eq!(r.session_id, None);
+        assert_eq!(r.priority, Priority::Interactive, "priority defaults to interactive");
         assert!(parse_request("not json", 1).is_err());
     }
 
@@ -378,6 +404,13 @@ mod tests {
         // stream: false is the explicit v1 form.
         let (_, s2) = parse_request(r#"{"prompt": "x", "stream": false}"#, 5).unwrap();
         assert!(!s2);
+        // Priority is parsed, and unknown values are protocol errors.
+        let (rb, _) = parse_request(r#"{"prompt": "x", "priority": "batch"}"#, 6).unwrap();
+        assert_eq!(rb.priority, Priority::Batch);
+        let (ri, _) = parse_request(r#"{"prompt": "x", "priority": "interactive"}"#, 7).unwrap();
+        assert_eq!(ri.priority, Priority::Interactive);
+        let err = parse_request(r#"{"prompt": "x", "priority": "urgent"}"#, 8).unwrap_err();
+        assert!(err.to_string().contains("priority"), "{err}");
     }
 
     #[test]

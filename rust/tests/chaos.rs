@@ -41,6 +41,8 @@ fn sim_cfg(plan: &Arc<FaultPlan>, cache_budget: Option<usize>) -> ServeConfig {
         worker_index: 0,
         session_cap: ServeConfig::default_session_cap(),
         session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
     }
 }
 
@@ -210,10 +212,11 @@ fn kill_mid_decode_at_step_fails_streams_retryably() {
     assert_eq!(pool.metrics.workers_dead.get(), 1);
     assert_eq!(pool.metrics.requests_redispatched.get(), 0, "mid-flight is never re-run");
     await_router_idle(&pool);
-    assert!(
-        pool.submit(Request::greedy(2, "x", 2)).is_err(),
-        "empty pool fails fast, never hangs"
-    );
+    // An emptied pool fails fast on the Ok-stream contract: a terminal
+    // retryable Failed drains to a zero-token failure response.
+    let r = pool.submit(Request::greedy(2, "x", 2)).expect("failed-fast, not Err");
+    assert_eq!(r.gen_tokens, 0);
+    assert!(r.text.contains("no live serve workers"), "{}", r.text);
     assert!(pool.shutdown().is_err());
 }
 
@@ -430,8 +433,162 @@ fn pool_size_sweep_recovers_from_one_worker_death() {
             let live: Vec<usize> = (0..workers - 1).collect();
             assert_cache_baseline(&pool, &live);
         } else {
-            assert!(pool.submit(Request::greedy(100, "x", 2)).is_err());
+            let r = pool.submit(Request::greedy(100, "x", 2)).expect("failed-fast, not Err");
+            assert_eq!(r.gen_tokens, 0);
+            assert!(r.text.contains("no live serve workers"), "{}", r.text);
         }
         assert!(pool.shutdown().is_err(), "panicked worker propagates at shutdown");
     }
+}
+
+/// Scenario 8 — worker killed **mid-prefill at a chunk boundary**: a run
+/// whose prefill is partially filled dies before its first token; because
+/// the sink is only begun at prefill completion, everything queued on the
+/// dead worker (mid-prefill run included) re-dispatches and completes
+/// identically, and the crash guard returns the partial reservation so the
+/// dead shard's accounting lands back on the idle baseline.
+#[test]
+fn kill_at_prefill_chunk_redispatches_and_restores_reservation() {
+    let plan = FaultPlan::new();
+    plan.hold_worker(0);
+    plan.hold_worker(1);
+    let mut cfg = sim_cfg(&plan, None);
+    cfg.prefill_chunk = 4;
+    let pool = ServePool::start(cfg, 2);
+    plan.await_paused(0);
+    plan.await_paused(1);
+
+    // 12-token prompt = 3 chunks at --prefill-chunk 4: the kill at lifetime
+    // chunk 1 provably lands mid-prefill.
+    let prompt = "k".repeat(12);
+    let handles: Vec<StreamHandle> = (0..6)
+        .map(|i| pool.submit_stream(Request::greedy(i, &prompt, 6)).expect("dispatch"))
+        .collect();
+    let on_dead = handles.iter().filter(|h| h.worker() == Some(0)).count() as u64;
+    assert!(on_dead > 0, "scenario needs traffic on the doomed worker");
+
+    plan.kill_worker_at_prefill_chunk(0, 1);
+    plan.release_worker(0);
+    await_live_workers(&pool, 1);
+    plan.release_worker(1);
+
+    let mut texts = Vec::new();
+    for h in &handles {
+        let evs = drain_events(h);
+        let resp = done_of(&evs);
+        assert_eq!(resp.gen_tokens, 6, "request {} served in full", h.id());
+        texts.push(resp.text.clone());
+    }
+    assert!(
+        texts.iter().all(|t| t == &texts[0]),
+        "a mid-prefill redispatch must decode identically to undisturbed requests"
+    );
+
+    // Ground truth: the victim completed exactly one chunk before the kill,
+    // and every request queued on it (mid-prefill run included) re-ran.
+    assert_eq!(pool.metrics.worker(0).prefill_chunks.get(), 1, "died at chunk boundary 1");
+    assert_eq!(pool.metrics.requests_redispatched.get(), on_dead);
+    assert_eq!(pool.metrics.workers_dead.get(), 1);
+    assert_eq!(pool.metrics.worker(1).requests_done.get(), 6, "survivor served everything");
+
+    await_router_idle(&pool);
+    // The dead shard too: its crash guards credited the partial
+    // reservations back on unwind.
+    assert_cache_baseline(&pool, &[0, 1]);
+    assert!(pool.shutdown().is_err(), "panicked worker surfaces at shutdown");
+}
+
+/// Scenario 9 — **cancel mid-prefill**: an inbound `Cancel` against a run
+/// that is still prefilling takes effect at the next chunk boundary — the
+/// stream ends `[cancelled]` with zero tokens, the partial sequence rolls
+/// back to baseline, and the worker keeps serving.
+#[test]
+fn cancel_mid_prefill_rolls_back_at_chunk_boundary() {
+    let plan = FaultPlan::new();
+    let mut cfg = sim_cfg(&plan, None);
+    cfg.prefill_chunk = 4;
+    let pool = ServePool::start(cfg, 1);
+
+    // 14-token prompt = 4 chunks; freeze at lifetime chunk 2 so the cancel
+    // provably lands while prefill is mid-flight.
+    plan.hold_worker_at_prefill_chunk(0, 2);
+    let prompt = "c".repeat(14);
+    let h = pool.submit_stream(Request::greedy(1, &prompt, 6)).expect("dispatch");
+    plan.await_paused(0);
+    h.cancel();
+    plan.release_worker(0);
+
+    // The held chunk (the third) still computes; the cancel drains at the
+    // next loop top — before the fourth chunk — and settles the run.
+    let evs = drain_events(&h);
+    assert!(matches!(evs.first(), Some(Event::Started { id: 1 })));
+    assert!(
+        !evs.iter().any(|e| matches!(e, Event::Token { .. })),
+        "no token may leak from a prefill-cancelled stream: {evs:?}"
+    );
+    let (reason, retryable) = failed_of(&evs);
+    assert!(reason.contains("[cancelled]"), "{reason}");
+    assert!(!retryable);
+    assert_eq!(pool.metrics.worker(0).prefill_chunks.get(), 3, "cancelled before chunk 3");
+    assert_eq!(pool.metrics.worker(0).requests_cancelled.get(), 1);
+
+    // The worker is unharmed: the identical prompt now serves end to end.
+    let r = pool.submit(Request::greedy(2, &prompt, 6)).expect("recovered");
+    assert_eq!(r.gen_tokens, 6);
+    await_router_idle(&pool);
+    assert_cache_baseline(&pool, &[0]);
+    pool.shutdown().expect("clean shutdown");
+}
+
+/// Scenario 10 — **interactive TTFT under a long batch prefill**: the
+/// acceptance proof for chunked scheduling.  A batch-priority prompt is
+/// mid-prefill when a short interactive request arrives; the interactive
+/// request prefills first (preempting pending batch chunks), completes its
+/// whole stream while the batch prefill is provably still unfinished, and
+/// both classes land in their own TTFT histograms.
+#[test]
+fn interactive_ttft_beats_in_flight_batch_prefill() {
+    let plan = FaultPlan::new();
+    let mut cfg = sim_cfg(&plan, None);
+    cfg.prefill_chunk = 4;
+    let pool = ServePool::start(cfg, 1);
+
+    // 32-token batch prompt = 8 chunks; park after its first chunk.
+    plan.hold_worker_at_prefill_chunk(0, 1);
+    let batch = pool
+        .submit_stream(Request::greedy(1, &"b".repeat(32), 4).batch_priority())
+        .expect("batch dispatch");
+    plan.await_paused(0);
+
+    // Arrives mid-batch-prefill: 6-token prompt = 2 chunks, 4 tokens out.
+    let interactive = pool
+        .submit_stream(Request::greedy(2, "hello!", 4))
+        .expect("interactive dispatch");
+    // Re-arm the park at lifetime chunk 8: by then the interactive stream
+    // has fully finished (2 prefill chunks + 3 decode steps) while the
+    // batch prompt has only 24 of 32 tokens prefilled.
+    plan.hold_worker_at_prefill_chunk(0, 8);
+    plan.release_worker(0);
+
+    let evs = drain_events(&interactive);
+    assert_eq!(done_of(&evs).gen_tokens, 4, "interactive served in full");
+    plan.await_paused(0);
+
+    // Frozen mid-batch-prefill: the interactive stream is already done,
+    // the batch TTFT histogram is still empty — first token strictly
+    // before the batch prefill completed.
+    let m = pool.metrics.worker(0);
+    assert_eq!(m.ttft_interactive.count(), 1);
+    assert_eq!(m.ttft_batch.count(), 0, "batch prefill must still be mid-flight");
+    assert_eq!(m.prefill_preemptions.get(), 2, "both interactive chunks deferred batch work");
+    plan.release_worker(0);
+
+    let bevs = drain_events(&batch);
+    assert_eq!(done_of(&bevs).gen_tokens, 4, "batch served in full after yielding");
+    assert_eq!(m.ttft_batch.count(), 1);
+    assert_eq!(m.prefill_chunks.get(), 10, "8 batch chunks + 2 interactive chunks");
+
+    await_router_idle(&pool);
+    assert_cache_baseline(&pool, &[0]);
+    pool.shutdown().expect("clean shutdown");
 }

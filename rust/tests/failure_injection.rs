@@ -98,6 +98,8 @@ fn serve_loop_fails_fast_on_missing_assets() {
         worker_index: 0,
         session_cap: ServeConfig::default_session_cap(),
         session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
     };
     let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
     let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
@@ -137,6 +139,8 @@ fn serve_config_validates_batch_and_codebook_tag() {
         worker_index: 0,
         session_cap: ServeConfig::default_session_cap(),
         session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
     };
     let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
     let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
@@ -162,6 +166,8 @@ fn sim_pool_cfg(plan: &std::sync::Arc<FaultPlan>) -> ServeConfig {
         worker_index: 0,
         session_cap: ServeConfig::default_session_cap(),
         session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
     }
 }
 
@@ -227,6 +233,11 @@ fn worker_panic_mid_decode_fails_all_streams_and_frees_lanes() {
     }
     assert_eq!(pool.metrics.workers_dead.get(), 1);
     assert_eq!(pool.metrics.worker(0).requests_done.get(), 0, "nothing completed");
-    assert!(pool.submit(Request::greedy(3, "x", 2)).is_err(), "pool is empty, fails fast");
+    // The emptied pool fails fast on the Ok-stream contract: first dispatch
+    // yields a stream holding its terminal retryable Failed, which drains to
+    // a zero-token failure response (never an Err, never a hang).
+    let r = pool.submit(Request::greedy(3, "x", 2)).expect("failed-fast, not Err");
+    assert_eq!(r.gen_tokens, 0);
+    assert!(r.text.contains("no live serve workers"), "{}", r.text);
     assert!(pool.shutdown().is_err(), "panic propagates at shutdown");
 }

@@ -44,6 +44,8 @@ fn cq_config(batch: usize) -> ServeConfig {
         worker_index: 0,
         session_cap: ServeConfig::default_session_cap(),
         session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
     }
 }
 

@@ -37,6 +37,8 @@ fn cq_config() -> ServeConfig {
         worker_index: 0,
         session_cap: ServeConfig::default_session_cap(),
         session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
     }
 }
 
@@ -58,6 +60,8 @@ fn sim_config(cache_budget: Option<usize>) -> ServeConfig {
         worker_index: 0,
         session_cap: ServeConfig::default_session_cap(),
         session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
     }
 }
 
@@ -313,6 +317,8 @@ fn pool_with_missing_assets_fails_fast_everywhere() {
         worker_index: 0,
         session_cap: ServeConfig::default_session_cap(),
         session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
     };
     let pool = ServePool::start(cfg, 3);
     assert_eq!(pool.n_workers(), 3);
