@@ -43,6 +43,7 @@ fn main() -> Result<()> {
         session_ttl: None,
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
     };
     let handle = ServeHandle::start(cfg);
     let req = Request::greedy(1, "The castle of Aldenport ", 64);

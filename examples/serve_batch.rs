@@ -38,6 +38,7 @@ fn run_mode(cq: Option<String>, workers: usize, n_requests: usize, max_new: usiz
         session_ttl: None,
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
     };
     let pool = ServePool::start(cfg, workers);
     let prompts = [
@@ -98,6 +99,7 @@ fn run_streaming_demo() -> Result<()> {
         session_ttl: None,
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
     };
     let pool = ServePool::start(cfg, 1);
 

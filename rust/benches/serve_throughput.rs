@@ -76,6 +76,7 @@ fn mode_cfg(cq: Option<&str>, batch: usize) -> ServeConfig {
         session_ttl: None,
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
     }
 }
 
@@ -98,8 +99,18 @@ fn run_mode(
     n_req: usize,
     max_new: usize,
 ) -> ModeResult {
+    run_with_cfg(mode_cfg(cq, batch), cq, workers, n_req, max_new)
+}
+
+fn run_with_cfg(
+    cfg: ServeConfig,
+    cq: Option<&str>,
+    workers: usize,
+    n_req: usize,
+    max_new: usize,
+) -> ModeResult {
     let label = cq.unwrap_or("fp16").to_string();
-    let pool = ServePool::start(mode_cfg(cq, batch), workers);
+    let pool = ServePool::start(cfg, workers);
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n_req)
         .map(|i| {
@@ -491,6 +502,59 @@ fn main() {
     }
     mixed_tbl.emit("serve_mixed_workload");
     pool.shutdown().unwrap();
+
+    // --- Table 6: observability overhead — flight recorder on vs off -----
+    // The trace ring, per-request span marks and loop-phase accounting must
+    // be effectively free on the serving hot path: tok/s with tracing at
+    // its default ring size must stay within 2% of tracing disabled.
+    let n_req = args.usize("requests", 16);
+    let mut off_cfg = mode_cfg(Some("8c8b"), 8);
+    off_cfg.trace_ring = 0; // disables begin()/mark() entirely
+    let off = run_with_cfg(off_cfg, Some("8c8b"), 1, n_req, max_new);
+    let on = run_with_cfg(mode_cfg(Some("8c8b"), 8), Some("8c8b"), 1, n_req, max_new);
+    let delta_pct = if off.tokens_per_s > 0.0 {
+        (off.tokens_per_s - on.tokens_per_s) / off.tokens_per_s * 100.0
+    } else {
+        0.0
+    };
+    let mut obs_tbl = Table::new(
+        "Observability overhead: flight recorder + phase tracing on vs off (CQ-8c8b, 1 worker)",
+        &["tracing", "tok/s", "decode p50 (ms)", "tok/s delta"],
+    );
+    obs_tbl.row(vec![
+        "off".into(),
+        format!("{:.1}", off.tokens_per_s),
+        format!("{:.2}", off.decode_p50_ms),
+        "-".into(),
+    ]);
+    obs_tbl.row(vec![
+        format!("ring={}", ServeConfig::default_trace_ring()),
+        format!("{:.1}", on.tokens_per_s),
+        format!("{:.2}", on.decode_p50_ms),
+        format!("{delta_pct:+.2}%"),
+    ]);
+    obs_tbl.emit("serve_observability_overhead");
+    if delta_pct >= 2.0 {
+        eprintln!("  WARNING: tracing overhead {delta_pct:.2}% exceeds the 2% budget");
+    } else {
+        eprintln!("  observability overhead: {delta_pct:+.2}% tok/s (budget < 2%)");
+    }
+    scenario_rows.push(Json::obj(vec![
+        ("name", Json::Str("observability_overhead,tracing=off".into())),
+        ("tok_per_s", Json::Num(off.tokens_per_s)),
+    ]));
+    scenario_rows.push(Json::obj(vec![
+        (
+            "name",
+            Json::Str(format!(
+                "observability_overhead,tracing=ring{}",
+                ServeConfig::default_trace_ring()
+            )),
+        ),
+        ("tok_per_s", Json::Num(on.tokens_per_s)),
+        ("overhead_pct", Json::Num(delta_pct)),
+        ("within_2pct", Json::Bool(delta_pct < 2.0)),
+    ]));
 
     emit_serve_json(true, scenario_rows);
 }

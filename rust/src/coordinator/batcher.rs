@@ -131,6 +131,10 @@ pub struct SeqRun {
     /// Restores the shard's reservation accounting if the worker unwinds
     /// with this run alive (see [`ReservationGuard`]).
     pub crash_guard: Option<ReservationGuard>,
+    /// Flight-recorder handle (None when tracing is disabled).  The
+    /// recorder keeps its own `Arc` in the live map, so a crash that
+    /// destroys this run still leaves the trace dumpable post-mortem.
+    pub trace: Option<Arc<crate::metrics::trace::RequestTrace>>,
 }
 
 impl SeqRun {
@@ -325,6 +329,7 @@ mod tests {
             decode_started: None,
             prefill: None,
             crash_guard: None,
+            trace: None,
         }
     }
 

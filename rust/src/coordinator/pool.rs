@@ -352,7 +352,19 @@ impl RouterState {
     fn retire(&self, w: usize, count: bool) {
         if self.workers[w].alive.swap(false, Ordering::Relaxed) && count {
             self.metrics.workers_dead.add(1);
-            log::warn!("serve worker {w} is gone; retired from rotation");
+            // Flight-recorder post-mortem: every request still live on the
+            // dead worker gets a terminal trace (failed if mid-flight,
+            // redispatched if still pre-first-token) in the crash-dump
+            // store, which outlives the worker for `{"op":"trace"}` reads.
+            let dumped = self
+                .metrics
+                .worker(w)
+                .trace
+                .dump_crashed(&format!("worker {w} crashed"));
+            log::warn!(
+                "serve worker {w} is gone; retired from rotation \
+                 ({dumped} in-flight traces dumped)"
+            );
         }
     }
 
@@ -816,6 +828,11 @@ impl ServePool {
             .collect()
     }
 
+    /// Whether worker `w` is still accepting traffic (`{"op":"health"}`).
+    pub fn worker_alive(&self, w: usize) -> bool {
+        self.state.alive(w)
+    }
+
     /// Workers still accepting traffic.
     pub fn live_workers(&self) -> usize {
         (0..self.state.workers.len())
@@ -1040,6 +1057,7 @@ mod tests {
             session_ttl: None,
             prefill_chunk: ServeConfig::default_prefill_chunk(),
             ttft_slo_chunks: None,
+            trace_ring: ServeConfig::default_trace_ring(),
         }
     }
 

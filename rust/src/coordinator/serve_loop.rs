@@ -86,6 +86,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::tokenizer::{ByteTokenizer, Tokenizer};
 use crate::kvcache::{BatchStage, CacheGeom, PagedShard, DEFAULT_BLOCK_TOKENS};
+use crate::metrics::trace::{sample_decode_step, TraceEventKind, TraceOutcome};
 use crate::metrics::ServeMetrics;
 use crate::quant::cq::CqCodebooks;
 use crate::quant::KvKind;
@@ -156,6 +157,10 @@ pub struct ServeConfig {
     /// every live worker is rejected retryably instead of queued behind a
     /// long batch prefill.  `None` disables the gate.
     pub ttft_slo_chunks: Option<u64>,
+    /// Flight-recorder ring capacity: terminal request traces retained per
+    /// worker for `{"op":"trace"}` scrapes and crash post-mortems
+    /// (`--trace-ring`; 0 disables per-request tracing entirely).
+    pub trace_ring: usize,
 }
 
 impl ServeConfig {
@@ -183,6 +188,11 @@ impl ServeConfig {
     pub fn default_prefill_chunk() -> usize {
         512
     }
+
+    /// Default flight-recorder ring capacity (terminal traces per worker).
+    pub fn default_trace_ring() -> usize {
+        crate::metrics::trace::DEFAULT_TRACE_RING
+    }
 }
 
 impl Default for ServeConfig {
@@ -207,6 +217,7 @@ impl Default for ServeConfig {
             session_ttl: None,
             prefill_chunk: ServeConfig::default_prefill_chunk(),
             ttft_slo_chunks: None,
+            trace_ring: ServeConfig::default_trace_ring(),
         }
     }
 }
@@ -457,6 +468,7 @@ fn prefill_chunk_fill(
         }
     }
     let t0 = Instant::now();
+    let start = state.filled;
     let end = (state.filled + chunk.max(1)).min(p);
     match &ctx.mode {
         CacheMode::Sim { .. } => {
@@ -497,6 +509,10 @@ fn prefill_chunk_fill(
     state.filled = end;
     state.chunks += 1;
     state.work_ms += t0.elapsed().as_secs_f64() * 1e3;
+    let chunk_index = state.chunks - 1;
+    if let Some(t) = &run.trace {
+        t.mark(TraceEventKind::PrefillChunk { index: chunk_index, tokens: end - start });
+    }
     Ok(end == p)
 }
 
@@ -528,6 +544,9 @@ fn finish_prefill(run: &mut SeqRun, metrics: &ServeMetrics) {
     match run.req.priority {
         Priority::Interactive => metrics.ttft_interactive.record(ttft),
         Priority::Batch => metrics.ttft_batch.record(ttft),
+    }
+    if let Some(t) = &run.trace {
+        t.mark(TraceEventKind::FirstToken);
     }
     if let Some(sink) = run.events.as_mut() {
         let _ = sink.begin();
@@ -594,6 +613,9 @@ fn advance_prefill(
             if let Some(g) = run.crash_guard.take() {
                 g.disarm();
             }
+            if let Some(t) = run.trace.take() {
+                metrics.trace.settle(&t, TraceOutcome::Failed, &format!("prefill failed: {e:#}"));
+            }
             // Explicit error reply (like the rejection path) so pipelined
             // TCP clients keep their connection instead of a dropped-channel
             // error tearing it down.
@@ -658,6 +680,16 @@ fn admit_request(
         },
     };
     let prompt = prompt_ids(ctx, history, &req);
+    // Flight recorder: the trace starts at enqueue and survives this run
+    // (the recorder holds its own Arc) so a crash still leaves a record.
+    let trace = metrics.trace.begin(
+        req.id,
+        match req.priority {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        },
+        prompt.len(),
+    );
     let admitted = match &ctx.mode {
         CacheMode::Fp { .. } => shard.admit_unstored(prompt.len(), req.max_new, metrics),
         CacheMode::Cq { .. } | CacheMode::Sim { .. } => {
@@ -668,6 +700,9 @@ fn admit_request(
         Ok(adm) => adm,
         Err(_) => {
             metrics.requests_rejected.add(1);
+            if let Some(t) = &trace {
+                metrics.trace.settle(t, TraceOutcome::Failed, "rejected: cache budget");
+            }
             sink.send_terminal(Event::Failed {
                 id: req.id,
                 reason: "[rejected: cache budget]".into(),
@@ -699,6 +734,7 @@ fn admit_request(
         decode_started: None,
         prefill: Some(PrefillState::new(adm.hit_tokens)),
         crash_guard: Some(guard),
+        trace,
     });
 }
 
@@ -948,6 +984,8 @@ pub fn serve_loop(
     metrics
         .max_prompt_tokens
         .observe_max(ctx.prefills.last().unwrap().0 as u64);
+    // Flight recorder sizing (0 disables tracing for this worker).
+    metrics.trace.set_capacity(cfg.trace_ring);
     let mut rngs: Vec<Pcg64> = (0..ctx.batch).map(|i| Pcg64::seed(i as u64)).collect();
     let mut shutting_down = false;
     // Decode-path code buffers, reused across every step and lane.
@@ -961,6 +999,7 @@ pub fn serve_loop(
     let chunk_tokens = cfg.prefill_chunk.max(1);
 
     loop {
+        metrics.phases.iterations.add(1);
         // --- Fault gate (chaos harness; no-op without a plan) ----------
         if let Some(plan) = &ctx.faults {
             plan.pause_point(ctx.worker);
@@ -999,7 +1038,8 @@ pub fn serve_loop(
         // Exactly one chunk between decode steps keeps both making
         // progress: a long batch prefill yields to inbound cancels, chaos
         // gates, interactive chunks and active lanes at every boundary.
-        advance_prefill(
+        let t_prefill = Instant::now();
+        let prefilled = advance_prefill(
             &ctx,
             &mut shard,
             &mut batcher,
@@ -1007,6 +1047,9 @@ pub fn serve_loop(
             chunk_tokens,
             &mut prefill_chunks,
         );
+        if prefilled {
+            metrics.phases.record_prefill(t_prefill.elapsed());
+        }
         // Published every iteration for the router's `--ttft-slo-chunks`
         // admission estimate (instantaneous level, not a high-watermark).
         metrics
@@ -1019,6 +1062,9 @@ pub fn serve_loop(
             metrics
                 .queue_wait
                 .record(run.enqueued_at.elapsed());
+            if let Some(t) = &run.trace {
+                t.mark(TraceEventKind::Admitted);
+            }
             rngs[slot] = Pcg64::seed(run.req.seed.wrapping_add(1));
             stage_admitted(&mut ctx, &shard, slot, &batcher);
             if let Some(r) = batcher.slot_mut(slot) {
@@ -1042,8 +1088,13 @@ pub fn serve_loop(
             decode_steps += 1;
             let t0 = Instant::now();
             let logits = decode_step(&mut ctx, &batcher, &mut scratch)?;
-            metrics.decode_step_latency.record(t0.elapsed());
+            let decode_dur = t0.elapsed();
+            metrics.decode_step_latency.record(decode_dur);
+            metrics.phases.record_decode(decode_dur);
 
+            // Everything below the fused step is quantize+store and stream
+            // bookkeeping: code append, sampling, token emission.
+            let t_store = Instant::now();
             for i in batcher.occupied() {
                 // Account the token written this step.
                 {
@@ -1067,6 +1118,12 @@ pub fn serve_loop(
                 let next = sample(&logits[i], cfg_s, &mut rngs[i]);
                 run.generated.push(next);
                 metrics.tokens_out.add(1);
+                let step = run.generated.len() - 1;
+                if sample_decode_step(step) {
+                    if let Some(t) = &run.trace {
+                        t.mark(TraceEventKind::DecodeStep { index: step });
+                    }
+                }
 
                 // Stream the token out.  A dead receiver (dropped
                 // StreamHandle, exited drain thread, disconnected TCP
@@ -1090,6 +1147,7 @@ pub fn serve_loop(
                     complete(&mut ctx, &mut batcher, &mut shard, &mut sessions, i, &metrics);
                 }
             }
+            metrics.phases.record_store(t_store.elapsed());
         } else if shutting_down && batcher.is_idle() {
             debug_assert!(shard.idle(), "shard accounting not at idle baseline on shutdown");
             return Ok(());
@@ -1097,7 +1155,10 @@ pub fn serve_loop(
             // Idle: block briefly for the next request.  (A queue holding
             // only mid-prefill runs is NOT idle — the loop falls through
             // and advances their chunks without sleeping.)
-            match rx.recv_timeout(Duration::from_millis(20)) {
+            let t_idle = Instant::now();
+            let msg = rx.recv_timeout(Duration::from_millis(20));
+            metrics.phases.record_idle(t_idle.elapsed());
+            match msg {
                 Ok(Inbound::Submit(sink, token)) => {
                     admit_request(
                         &ctx,
@@ -1232,6 +1293,9 @@ fn settle_cancelled(
     shard.cancel(&mut run.packed, &key, run.reserved_blocks, metrics);
     note_session(sessions, metrics, &run);
     metrics.requests_cancelled.add(1);
+    if let Some(t) = run.trace.take() {
+        metrics.trace.settle(&t, TraceOutcome::Cancelled, "");
+    }
     if let Some(mut sink) = run.events.take() {
         sink.send_terminal(Event::Failed {
             id: run.req.id,
@@ -1281,6 +1345,9 @@ fn complete(
         metrics
             .request_latency
             .record(run.enqueued_at.elapsed());
+        if let Some(t) = run.trace.take() {
+            metrics.trace.settle(&t, TraceOutcome::Done, "");
+        }
         if let Some(mut sink) = run.events.take() {
             sink.send_terminal(Event::Done(Response {
                 id: run.req.id,

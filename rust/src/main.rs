@@ -42,7 +42,8 @@ COMMANDS
   serve       --model small --port 7878 [--cq 8c8b] [--batch 8]
               [--workers 2] [--cache-budget-mb 64] [--block-tokens 16]
               [--no-prefix-sharing] [--session-cap 256] [--session-ttl-s 3600]
-              [--prefill-chunk 512] [--ttft-slo-chunks 8]
+              [--prefill-chunk 512] [--ttft-slo-chunks 8] [--trace-ring 256]
+              [--metrics-interval-s 10]
   client      --port 7878 --prompt \"...\" [--max-tokens 32] [--top-k 40]
               [--seed 7] [--session 12] [--stream] [--priority batch]
   gen-corpus  --corpus wiki2s --split train --bytes 200000 [--out file]
@@ -306,6 +307,7 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         ttft_slo_chunks: args
             .has("ttft-slo-chunks")
             .then(|| args.u64("ttft-slo-chunks", 8)),
+        trace_ring: args.usize("trace-ring", ServeConfig::default_trace_ring()),
     })
 }
 
@@ -351,7 +353,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let pool = ServePool::start(cfg, workers);
     let stop = cq::server::StopSignal::new();
-    cq::server::serve_tcp(&pool, &format!("127.0.0.1:{port}"), stop)?;
+    let addr = format!("127.0.0.1:{port}");
+    let interval_s = args
+        .has("metrics-interval-s")
+        .then(|| args.u64("metrics-interval-s", 10).max(1));
+    std::thread::scope(|scope| -> Result<()> {
+        if let Some(secs) = interval_s {
+            let stop = stop.clone();
+            let pool = &pool;
+            scope.spawn(move || {
+                let t0 = std::time::Instant::now();
+                let period = std::time::Duration::from_secs(secs);
+                let tick = std::time::Duration::from_millis(200);
+                let mut next = period;
+                // Poll the stop flag at a short tick so shutdown is prompt
+                // even with a long reporting interval.
+                while !stop.raised() {
+                    std::thread::sleep(tick);
+                    if t0.elapsed() < next {
+                        continue;
+                    }
+                    next += period;
+                    println!("{}", pool.metrics.summary(t0.elapsed().as_secs_f64()));
+                    let snap = cq::metrics::export::MetricsSnapshot::collect(
+                        &pool.metrics,
+                        pool.live_workers(),
+                    );
+                    if let Err(e) = std::fs::write("cq-serve-metrics.json", snap.to_json().dump()) {
+                        log::warn!("metrics snapshot write failed: {e}");
+                    }
+                }
+            });
+        }
+        let res = cq::server::serve_tcp(&pool, &addr, stop.clone());
+        // Whatever path serve_tcp took (bind failure included), the reporter
+        // thread must see the flag or the scope would never close.
+        stop.raise();
+        res
+    })?;
     pool.shutdown()
 }
 

@@ -1,0 +1,553 @@
+//! Wire-scrapable metrics snapshots (observability layer 2).
+//!
+//! [`MetricsSnapshot`] freezes every pool and per-worker counter, gauge,
+//! level and raw histogram bucket into plain data, serializable both ways
+//! through `util::json` (`{"op":"metrics"}` returns it; tooling can parse
+//! it back with [`MetricsSnapshot::from_json`]).  Two snapshots taken over
+//! a window derive [`Rates`] (tok/s, chunks/s, requests/s) without the
+//! pool having to track windows itself, and [`prometheus_text`] renders a
+//! snapshot in Prometheus exposition style for scrape-file pipelines.
+//!
+//! Snapshots are *names-to-numbers*, not struct mirrors: adding a metric
+//! means adding one line to the collectors here, and parsers never break
+//! on unknown names.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+use super::{Histogram, PoolMetrics, ServeMetrics};
+
+/// Frozen histogram state: total count, total time, and the non-empty
+/// buckets as `(index, count)` against the fixed [`super::NUM_BUCKETS`]
+/// log-linear layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum_ns: u64,
+    pub buckets: Vec<(usize, u64)>,
+}
+
+impl HistogramSnapshot {
+    pub fn of(h: &Histogram) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: h.count(),
+            sum_ns: h.sum_ns(),
+            buckets: h.nonzero_buckets(),
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.count as f64 / 1e6
+    }
+
+    /// Same midpoint estimate as [`Histogram::percentile_ms`], computed
+    /// from the frozen buckets.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (self.count as f64 * p).ceil() as u64;
+        let mut acc = 0;
+        for &(i, n) in &self.buckets {
+            acc += n;
+            if acc >= target {
+                return Histogram::bucket_midpoint_us(i) / 1e3;
+            }
+        }
+        f64::INFINITY
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum_ns", Json::Num(self.sum_ns as f64)),
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|&(i, n)| {
+                            Json::Arr(vec![Json::Num(i as f64), Json::Num(n as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<HistogramSnapshot> {
+        let buckets = j
+            .req("buckets")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("buckets must be an array"))?
+            .iter()
+            .map(|pair| {
+                let pair = pair.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+                    anyhow!("histogram bucket must be an [index, count] pair")
+                })?;
+                Ok((
+                    pair[0].as_usize().ok_or_else(|| anyhow!("bad bucket index"))?,
+                    pair[1].as_f64().ok_or_else(|| anyhow!("bad bucket count"))? as u64,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(HistogramSnapshot {
+            count: j.num_or("count", 0.0) as u64,
+            sum_ns: j.num_or("sum_ns", 0.0) as u64,
+            buckets,
+        })
+    }
+}
+
+/// One worker's frozen metrics: named scalars (counters, gauges, levels,
+/// derived values) plus named latency histograms.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerSnapshot {
+    pub worker: usize,
+    pub scalars: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl WorkerSnapshot {
+    pub fn of(worker: usize, m: &ServeMetrics) -> WorkerSnapshot {
+        let mut scalars = BTreeMap::new();
+        let mut put = |k: &str, v: u64| {
+            scalars.insert(k.to_string(), v);
+        };
+        put("prefill_chunks", m.prefill_chunks.get());
+        put("prefill_preemptions", m.prefill_preemptions.get());
+        put("prefill_backlog_tokens", m.prefill_backlog_tokens.get());
+        put("tokens_out", m.tokens_out.get());
+        put("requests_done", m.requests_done.get());
+        put("requests_rejected", m.requests_rejected.get());
+        put("requests_cancelled", m.requests_cancelled.get());
+        put("sessions_evicted", m.sessions_evicted.get());
+        put("live_sessions", m.session_tokens.live_sessions() as u64);
+        put("cache_reserved_bytes", m.cache_reserved_bytes.get());
+        put("cache_released_bytes", m.cache_released_bytes.get());
+        put("cache_in_use_bytes", m.cache_bytes_in_use());
+        put("cache_peak_bytes", m.cache_peak_bytes.get());
+        put("cache_cached_bytes", m.cache_cached_bytes());
+        put("cache_frag_bytes", m.cache_frag_bytes.get());
+        put("prefix_lookup_tokens", m.prefix_lookup_tokens.get());
+        put("prefix_hit_tokens", m.prefix_hit_tokens.get());
+        put("blocks_promoted", m.blocks_promoted.get());
+        put("blocks_evicted", m.blocks_evicted.get());
+        put("bytes_per_token", m.bytes_per_token.get());
+        put("block_bytes", m.block_bytes.get());
+        put("max_prompt_tokens", m.max_prompt_tokens.get());
+        put("loop_iterations", m.phases.iterations.get());
+        put("phase_idle_ns", m.phases.idle_ns.get());
+        put("phase_prefill_ns", m.phases.prefill_ns.get());
+        put("phase_decode_ns", m.phases.decode_ns.get());
+        put("phase_store_ns", m.phases.store_ns.get());
+        put("phase_last_idle_ns", m.phases.last_idle_ns.get());
+        put("phase_last_prefill_ns", m.phases.last_prefill_ns.get());
+        put("phase_last_decode_ns", m.phases.last_decode_ns.get());
+        put("phase_last_store_ns", m.phases.last_store_ns.get());
+        put("trace_live", m.trace.live_count() as u64);
+        put("trace_finished", m.trace.finished_count() as u64);
+        put("trace_crashed", m.trace.crashed_count() as u64);
+        put("trace_dropped", m.trace.dropped.get());
+
+        let mut histograms = BTreeMap::new();
+        for (name, h) in [
+            ("queue_wait", &m.queue_wait),
+            ("prefill_latency", &m.prefill_latency),
+            ("decode_step_latency", &m.decode_step_latency),
+            ("request_latency", &m.request_latency),
+            ("ttft", &m.ttft),
+            ("ttft_interactive", &m.ttft_interactive),
+            ("ttft_batch", &m.ttft_batch),
+        ] {
+            histograms.insert(name.to_string(), HistogramSnapshot::of(h));
+        }
+        WorkerSnapshot { worker, scalars, histograms }
+    }
+
+    pub fn scalar(&self, name: &str) -> u64 {
+        self.scalars.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let scalars = Json::Obj(
+            self.scalars.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
+        );
+        let histograms = Json::Obj(
+            self.histograms.iter().map(|(k, h)| (k.clone(), h.to_json())).collect(),
+        );
+        Json::obj(vec![
+            ("worker", Json::Num(self.worker as f64)),
+            ("scalars", scalars),
+            ("histograms", histograms),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkerSnapshot> {
+        let scalars = match j.req("scalars")? {
+            Json::Obj(m) => m
+                .iter()
+                .map(|(k, v)| {
+                    Ok((
+                        k.clone(),
+                        v.as_f64().ok_or_else(|| anyhow!("scalar '{k}' not a number"))? as u64,
+                    ))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?,
+            _ => return Err(anyhow!("scalars must be an object")),
+        };
+        let histograms = match j.req("histograms")? {
+            Json::Obj(m) => m
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), HistogramSnapshot::from_json(v)?)))
+                .collect::<Result<BTreeMap<_, _>>>()?,
+            _ => return Err(anyhow!("histograms must be an object")),
+        };
+        Ok(WorkerSnapshot {
+            worker: j.num_or("worker", 0.0) as usize,
+            scalars,
+            histograms,
+        })
+    }
+}
+
+/// Point-in-time freeze of a whole pool's metrics.  `ts_ms` is wall-clock
+/// (Unix epoch) so two snapshots — possibly from different processes —
+/// span a rate window.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub ts_ms: u64,
+    pub n_workers: usize,
+    /// Workers still in rotation (total minus supervisor-retired).
+    pub live_workers: usize,
+    pub pool: BTreeMap<String, u64>,
+    pub workers: Vec<WorkerSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Freeze `metrics` now.  `live_workers` comes from the pool's router
+    /// state (the metrics bundle itself only counts deaths).
+    pub fn collect(metrics: &PoolMetrics, live_workers: usize) -> MetricsSnapshot {
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let mut pool = BTreeMap::new();
+        let mut put = |k: &str, v: u64| {
+            pool.insert(k.to_string(), v);
+        };
+        put("router_rejected", metrics.router_rejected.get());
+        put("workers_dead", metrics.workers_dead.get());
+        put("requests_redispatched", metrics.requests_redispatched.get());
+        put("requests_done", metrics.requests_done());
+        put("requests_rejected", metrics.requests_rejected());
+        put("requests_cancelled", metrics.requests_cancelled());
+        put("sessions_evicted", metrics.sessions_evicted());
+        put("tokens_out", metrics.tokens_out());
+        put("prefill_chunks", metrics.prefill_chunks());
+        put("prefill_preemptions", metrics.prefill_preemptions());
+        put("cache_bytes_in_use", metrics.cache_bytes_in_use());
+        put("cache_peak_bytes", metrics.cache_peak_bytes());
+        put("cache_cached_bytes", metrics.cache_cached_bytes());
+        put("blocks_evicted", metrics.blocks_evicted());
+        put("prefix_lookup_tokens", metrics.prefix_lookup_tokens());
+        put("prefix_hit_tokens", metrics.prefix_hit_tokens());
+        let workers = metrics
+            .workers()
+            .iter()
+            .enumerate()
+            .map(|(i, m)| WorkerSnapshot::of(i, m))
+            .collect();
+        MetricsSnapshot {
+            ts_ms,
+            n_workers: metrics.n_workers(),
+            live_workers,
+            pool,
+            workers,
+        }
+    }
+
+    pub fn pool_scalar(&self, name: &str) -> u64 {
+        self.pool.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let pool = Json::Obj(
+            self.pool.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
+        );
+        Json::obj(vec![
+            ("ts_ms", Json::Num(self.ts_ms as f64)),
+            ("n_workers", Json::Num(self.n_workers as f64)),
+            ("live_workers", Json::Num(self.live_workers as f64)),
+            ("pool", pool),
+            (
+                "workers",
+                Json::Arr(self.workers.iter().map(WorkerSnapshot::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MetricsSnapshot> {
+        let pool = match j.req("pool")? {
+            Json::Obj(m) => m
+                .iter()
+                .map(|(k, v)| {
+                    Ok((
+                        k.clone(),
+                        v.as_f64().ok_or_else(|| anyhow!("pool '{k}' not a number"))? as u64,
+                    ))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?,
+            _ => return Err(anyhow!("pool must be an object")),
+        };
+        let workers = j
+            .req("workers")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("workers must be an array"))?
+            .iter()
+            .map(WorkerSnapshot::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MetricsSnapshot {
+            ts_ms: j.num_or("ts_ms", 0.0) as u64,
+            n_workers: j.num_or("n_workers", 0.0) as usize,
+            live_workers: j.num_or("live_workers", 0.0) as usize,
+            pool,
+            workers,
+        })
+    }
+}
+
+/// Throughput rates derived from two snapshots of the same pool.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rates {
+    pub window_s: f64,
+    pub tok_per_s: f64,
+    pub chunks_per_s: f64,
+    pub requests_per_s: f64,
+}
+
+impl Rates {
+    /// Rates over `prev → cur`; `None` when the window is empty or
+    /// non-increasing (same scrape twice, clock skew).
+    pub fn between(prev: &MetricsSnapshot, cur: &MetricsSnapshot) -> Option<Rates> {
+        let window_s = cur.ts_ms.saturating_sub(prev.ts_ms) as f64 / 1e3;
+        if window_s <= 0.0 {
+            return None;
+        }
+        let delta = |k: &str| {
+            cur.pool_scalar(k).saturating_sub(prev.pool_scalar(k)) as f64 / window_s
+        };
+        Some(Rates {
+            window_s,
+            tok_per_s: delta("tokens_out"),
+            chunks_per_s: delta("prefill_chunks"),
+            requests_per_s: delta("requests_done"),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("window_s", Json::Num(self.window_s)),
+            ("tok_per_s", Json::Num(self.tok_per_s)),
+            ("chunks_per_s", Json::Num(self.chunks_per_s)),
+            ("requests_per_s", Json::Num(self.requests_per_s)),
+        ])
+    }
+}
+
+/// Prometheus-exposition-style text rendering of a snapshot: pool scalars
+/// as `cq_pool_<name>`, worker scalars as `cq_worker_<name>{worker="i"}`,
+/// histograms as `<name>_ms` summaries with cumulative `_bucket` lines
+/// (`le` in milliseconds, capped by `+Inf`).
+pub fn prometheus_text(s: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "cq_pool_n_workers {}", s.n_workers);
+    let _ = writeln!(out, "cq_pool_live_workers {}", s.live_workers);
+    for (k, v) in &s.pool {
+        let _ = writeln!(out, "cq_pool_{k} {v}");
+    }
+    for w in &s.workers {
+        for (k, v) in &w.scalars {
+            let _ = writeln!(out, "cq_worker_{k}{{worker=\"{}\"}} {v}", w.worker);
+        }
+        for (name, h) in &w.histograms {
+            let _ = writeln!(
+                out,
+                "cq_{name}_ms_count{{worker=\"{}\"}} {}",
+                w.worker, h.count
+            );
+            let _ = writeln!(
+                out,
+                "cq_{name}_ms_sum{{worker=\"{}\"}} {}",
+                w.worker,
+                h.sum_ns as f64 / 1e6
+            );
+            let mut acc = 0u64;
+            for &(i, n) in &h.buckets {
+                acc += n;
+                let le = Histogram::bucket_upper_us(i) / 1e3;
+                let _ = writeln!(
+                    out,
+                    "cq_{name}_ms_bucket{{worker=\"{}\",le=\"{le}\"}} {acc}",
+                    w.worker
+                );
+            }
+            let _ = writeln!(
+                out,
+                "cq_{name}_ms_bucket{{worker=\"{}\",le=\"+Inf\"}} {}",
+                w.worker, h.count
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn loaded_pool() -> (PoolMetrics, Arc<ServeMetrics>, Arc<ServeMetrics>) {
+        let w0 = Arc::new(ServeMetrics::default());
+        let w1 = Arc::new(ServeMetrics::default());
+        w0.tokens_out.add(120);
+        w1.tokens_out.add(30);
+        w0.requests_done.add(7);
+        w1.requests_done.add(3);
+        w0.prefill_chunks.add(12);
+        w0.prefill_preemptions.add(2);
+        w0.prefill_backlog_tokens.set(96);
+        w1.requests_rejected.add(1);
+        w0.requests_cancelled.add(2);
+        w0.sessions_evicted.add(1);
+        w0.session_tokens.publish(9, 64);
+        w0.cache_reserved_bytes.add(4096);
+        w0.cache_released_bytes.add(1024);
+        w0.cache_peak_bytes.observe_max(4096);
+        w0.cache_frag_bytes.observe_max(100);
+        w0.prefix_lookup_tokens.add(200);
+        w0.prefix_hit_tokens.add(50);
+        w0.blocks_promoted.add(8);
+        w0.blocks_evicted.add(3);
+        w0.block_bytes.observe_max(64);
+        w0.bytes_per_token.observe_max(4);
+        w0.max_prompt_tokens.observe_max(48);
+        w0.phases.iterations.add(10);
+        w0.phases.record_idle(Duration::from_micros(500));
+        w0.phases.record_decode(Duration::from_micros(300));
+        for ms in [1u64, 2, 8] {
+            w0.ttft.record(Duration::from_millis(ms));
+            w0.decode_step_latency.record(Duration::from_millis(ms));
+        }
+        w1.queue_wait.record(Duration::from_micros(700));
+        w1.request_latency.record(Duration::from_millis(25));
+        let t = w0.trace.begin(1, "interactive", 4).unwrap();
+        w0.trace.settle(&t, crate::metrics::trace::TraceOutcome::Done, "");
+        let pool = PoolMetrics::new(vec![w0.clone(), w1.clone()]);
+        pool.router_rejected.add(2);
+        pool.workers_dead.add(1);
+        pool.requests_redispatched.add(3);
+        (pool, w0, w1)
+    }
+
+    #[test]
+    fn snapshot_roundtrips_every_counter_and_bucket() {
+        let (pool, w0, _w1) = loaded_pool();
+        let snap = MetricsSnapshot::collect(&pool, 1);
+        // Counters match the live bundles they froze.
+        assert_eq!(snap.n_workers, 2);
+        assert_eq!(snap.live_workers, 1);
+        assert_eq!(snap.pool_scalar("tokens_out"), 150);
+        assert_eq!(snap.pool_scalar("requests_done"), 10);
+        assert_eq!(snap.pool_scalar("requests_rejected"), 3, "worker + router");
+        assert_eq!(snap.pool_scalar("workers_dead"), 1);
+        assert_eq!(snap.workers[0].scalar("tokens_out"), 120);
+        assert_eq!(snap.workers[0].scalar("prefill_backlog_tokens"), 96);
+        assert_eq!(snap.workers[0].scalar("live_sessions"), 1);
+        assert_eq!(snap.workers[0].scalar("cache_in_use_bytes"), 3072);
+        assert_eq!(snap.workers[0].scalar("trace_finished"), 1);
+        assert_eq!(snap.workers[0].scalar("phase_idle_ns"), 500_000);
+        let ttft = &snap.workers[0].histograms["ttft"];
+        assert_eq!(ttft.count, 3);
+        assert_eq!(ttft.sum_ns, 11_000_000);
+        assert_eq!(
+            ttft.buckets.iter().map(|&(_, n)| n).sum::<u64>(),
+            3,
+            "every sample lands in a serialized bucket"
+        );
+        // Percentiles computed from the frozen buckets match the live ones.
+        assert_eq!(ttft.percentile_ms(0.5), w0.ttft.percentile_ms(0.5));
+        assert_eq!(ttft.percentile_ms(1.0), w0.ttft.percentile_ms(1.0));
+        assert!((ttft.mean_ms() - w0.ttft.mean_ms()).abs() < 1e-12);
+        // JSON → text → parse → struct preserves everything.
+        let line = snap.to_json().dump();
+        let back = MetricsSnapshot::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn rates_match_hand_built_counter_deltas() {
+        let (pool, w0, _w1) = loaded_pool();
+        let mut prev = MetricsSnapshot::collect(&pool, 2);
+        prev.ts_ms = 10_000;
+        // 4 s later: +200 tokens, +8 chunks, +4 requests.
+        w0.tokens_out.add(200);
+        w0.prefill_chunks.add(8);
+        w0.requests_done.add(4);
+        let mut cur = MetricsSnapshot::collect(&pool, 2);
+        cur.ts_ms = 14_000;
+        let rates = Rates::between(&prev, &cur).unwrap();
+        assert!((rates.window_s - 4.0).abs() < 1e-12);
+        assert!((rates.tok_per_s - 50.0).abs() < 1e-12);
+        assert!((rates.chunks_per_s - 2.0).abs() < 1e-12);
+        assert!((rates.requests_per_s - 1.0).abs() < 1e-12);
+        let j = rates.to_json();
+        assert_eq!(j.get("tok_per_s").unwrap().as_f64().unwrap(), 50.0);
+        // Degenerate windows refuse to divide.
+        assert!(Rates::between(&cur, &prev).is_none(), "negative window");
+        assert!(Rates::between(&cur, &cur).is_none(), "zero window");
+    }
+
+    #[test]
+    fn prometheus_text_renders_scalars_and_cumulative_buckets() {
+        let (pool, _w0, _w1) = loaded_pool();
+        let snap = MetricsSnapshot::collect(&pool, 2);
+        let text = prometheus_text(&snap);
+        assert!(text.contains("cq_pool_tokens_out 150"), "{text}");
+        assert!(text.contains("cq_pool_live_workers 2"), "{text}");
+        assert!(text.contains("cq_worker_tokens_out{worker=\"0\"} 120"), "{text}");
+        assert!(text.contains("cq_ttft_ms_count{worker=\"0\"} 3"), "{text}");
+        assert!(text.contains("cq_ttft_ms_bucket{worker=\"0\",le=\"+Inf\"} 3"), "{text}");
+        // Bucket lines are cumulative: the last finite `le` carries the
+        // full count.
+        let last_finite = text
+            .lines()
+            .rev()
+            .find(|l| {
+                l.starts_with("cq_ttft_ms_bucket{worker=\"0\",le=\"") && !l.contains("+Inf")
+            })
+            .unwrap();
+        assert!(last_finite.ends_with(" 3"), "{last_finite}");
+    }
+
+    #[test]
+    fn missing_scalar_names_read_as_zero() {
+        let snap = MetricsSnapshot {
+            ts_ms: 0,
+            n_workers: 0,
+            live_workers: 0,
+            pool: BTreeMap::new(),
+            workers: Vec::new(),
+        };
+        assert_eq!(snap.pool_scalar("tokens_out"), 0);
+    }
+}

@@ -1,14 +1,53 @@
-//! Telemetry: latency histograms, throughput counters, pool-level
-//! aggregation across serve-pool workers, and the von-Neumann memory-traffic
-//! model the paper's §2.2 argument rests on.
+//! Telemetry: the pool's three-layer observability stack, plus the
+//! von-Neumann memory-traffic model the paper's §2.2 argument rests on.
+//!
+//! Layer 1 — **primitives** (this module): lock-free [`Histogram`] /
+//! [`Counter`] / [`Gauge`] / [`Level`], the per-worker [`ServeMetrics`]
+//! bundle, serve-loop [`PhaseMetrics`] (where each scheduler iteration's
+//! wall-clock went: idle / prefill / decode / quantize+store), and the
+//! pool-level [`PoolMetrics`] aggregation (counters sum, histograms merge
+//! bucket-wise).
+//!
+//! Layer 2 — **export** ([`export`]): a point-in-time
+//! [`export::MetricsSnapshot`] of every counter / gauge / level / raw
+//! histogram bucket, serialized via `util::json`, with
+//! delta-vs-previous-snapshot [`export::Rates`] (tok/s, chunks/s over the
+//! window) and a Prometheus-style text rendering.  The TCP frontend serves
+//! these as the `{"op":"metrics"}` / `{"op":"health"}` admin ops (see the
+//! `server` wire doc).
+//!
+//! Layer 3 — **flight recorder** ([`trace`]): per-request
+//! [`trace::RequestTrace`] span events (enqueued → admitted → each prefill
+//! chunk → first token → sampled decode steps → terminal) kept in a
+//! bounded per-worker ring, queryable via `{"op":"trace"}` and dumped by
+//! the pool supervisor when it retires a crashed worker, so a chaos kill
+//! leaves a post-mortem instead of silence.
+
+pub mod export;
+pub mod trace;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Log-bucketed latency histogram (thread-safe, lock-free).
+/// Power-of-two µs octaves the log-linear histogram covers (1µs up to
+/// ~9 minutes); samples beyond the last octave clamp into its top bucket.
+const OCTAVES: usize = 40;
+/// Linear sub-buckets per octave.
+const SUBDIV: usize = 4;
+/// Total bucket count: the [0, 1µs) bucket plus `OCTAVES * SUBDIV`
+/// log-linear buckets.  Fixed layout — snapshots serialize indices against
+/// it and [`Histogram::merge_from`] adds index-wise.
+pub const NUM_BUCKETS: usize = 1 + OCTAVES * SUBDIV;
+
+/// Log-linear latency histogram (thread-safe, lock-free).
+///
+/// Bucket 0 is [0, 1µs).  Above that, each power-of-two octave of
+/// microseconds splits into 4 linear sub-buckets, and percentiles report
+/// the matching bucket's *midpoint* — the estimate is within ±12.5% of the
+/// true sample.  (The earlier pure-doubling layout returned the bucket
+/// upper bound, overstating a lone 1 ms sample as 2.048 ms.)
 pub struct Histogram {
-    /// Buckets: [0, 1µs), [1µs, 2µs), [2µs, 4µs) ... doubling.
     buckets: Vec<AtomicU64>,
     count: AtomicU64,
     sum_ns: AtomicU64,
@@ -23,18 +62,51 @@ impl Default for Histogram {
 impl Histogram {
     pub fn new() -> Histogram {
         Histogram {
-            buckets: (0..48).map(|_| AtomicU64::new(0)).collect(),
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
             sum_ns: AtomicU64::new(0),
         }
     }
 
     fn bucket_of(ns: u64) -> usize {
-        if ns < 1000 {
-            0
-        } else {
-            (64 - (ns / 1000).leading_zeros() as usize).min(47)
+        let us = ns / 1000;
+        if us == 0 {
+            return 0;
         }
+        let o = (63 - us.leading_zeros() as usize).min(OCTAVES - 1);
+        let sub = (((us - (1u64 << o)) * SUBDIV as u64) >> o).min(SUBDIV as u64 - 1);
+        1 + o * SUBDIV + sub as usize
+    }
+
+    /// Inclusive lower bound of bucket `i`, in µs (export bucket labels).
+    pub fn bucket_lower_us(i: usize) -> f64 {
+        if i == 0 {
+            return 0.0;
+        }
+        let o = (i - 1) / SUBDIV;
+        let s = (i - 1) % SUBDIV;
+        (1u64 << o) as f64 * (SUBDIV + s) as f64 / SUBDIV as f64
+    }
+
+    /// Exclusive upper bound of bucket `i`, in µs (Prometheus `le` labels).
+    pub fn bucket_upper_us(i: usize) -> f64 {
+        if i == 0 {
+            return 1.0;
+        }
+        let o = (i - 1) / SUBDIV;
+        let s = (i - 1) % SUBDIV;
+        (1u64 << o) as f64 * (SUBDIV + s + 1) as f64 / SUBDIV as f64
+    }
+
+    /// Midpoint of bucket `i`, in µs — the percentile estimate for samples
+    /// landing there.
+    pub fn bucket_midpoint_us(i: usize) -> f64 {
+        if i == 0 {
+            return 0.5;
+        }
+        let o = (i - 1) / SUBDIV;
+        let s = (i - 1) % SUBDIV;
+        (1u64 << o) as f64 * (2 * (SUBDIV + s) + 1) as f64 / (2 * SUBDIV) as f64
     }
 
     pub fn record(&self, dur: std::time::Duration) {
@@ -48,6 +120,11 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Total recorded time in ns (export; `mean_ms` is derived from it).
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
     pub fn mean_ms(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -56,7 +133,21 @@ impl Histogram {
         self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
     }
 
+    /// Non-empty buckets as `(index, count)` pairs (sparse export form).
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then_some((i, n))
+            })
+            .collect()
+    }
+
     /// Fold another histogram's samples into this one (pool aggregation).
+    /// Bucket layouts are identical by construction ([`NUM_BUCKETS`]), so
+    /// merging is exact index-wise addition.
     pub fn merge_from(&self, other: &Histogram) {
         for (a, b) in self.buckets.iter().zip(&other.buckets) {
             a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
@@ -67,7 +158,8 @@ impl Histogram {
             .fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
-    /// Approximate percentile from bucket upper bounds (µs resolution).
+    /// Approximate percentile: the midpoint of the bucket containing the
+    /// `p`-quantile sample (±12.5% of the true value).
     pub fn percentile_ms(&self, p: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -78,11 +170,15 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             acc += b.load(Ordering::Relaxed);
             if acc >= target {
-                let upper_us = if i == 0 { 1u64 } else { 1u64 << i };
-                return upper_us as f64 / 1e3;
+                return Self::bucket_midpoint_us(i) / 1e3;
             }
         }
         f64::INFINITY
+    }
+
+    /// p99 in ms — the tail figure the snapshot summaries lead with.
+    pub fn p99(&self) -> f64 {
+        self.percentile_ms(0.99)
     }
 }
 
@@ -137,21 +233,30 @@ impl Level {
 pub struct SessionTokens(Mutex<HashMap<u64, u64>>);
 
 impl SessionTokens {
+    /// Lock the directory, recovering from poisoning.  A worker panicking
+    /// while holding this lock (exactly what the chaos harness induces)
+    /// must not cascade panics into the supervisor's metrics reads — the
+    /// map holds plain `u64`s, so the data is valid even after an unwind
+    /// mid-update.
+    fn locked(&self) -> std::sync::MutexGuard<'_, HashMap<u64, u64>> {
+        self.0.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn publish(&self, sid: u64, tokens: u64) {
-        self.0.lock().unwrap().insert(sid, tokens);
+        self.locked().insert(sid, tokens);
     }
 
     pub fn forget(&self, sid: u64) {
-        self.0.lock().unwrap().remove(&sid);
+        self.locked().remove(&sid);
     }
 
     pub fn get(&self, sid: u64) -> Option<u64> {
-        self.0.lock().unwrap().get(&sid).copied()
+        self.locked().get(&sid).copied()
     }
 
     /// Sessions currently published (bounded by the worker's table cap).
     pub fn live_sessions(&self) -> usize {
-        self.0.lock().unwrap().len()
+        self.locked().len()
     }
 }
 
@@ -176,6 +281,68 @@ impl TrafficModel {
     /// Speedup ceiling vs an fp16 cache (ratio of traffic).
     pub fn speedup_vs_fp16(&self) -> f64 {
         16.0 / self.bits_per_fpn
+    }
+}
+
+/// Serve-loop phase accounting: where one worker's wall-clock goes, split
+/// across the four phases of a scheduler iteration — idle (blocking on the
+/// inbound channel), prefill (chunk compute), decode (the batched step),
+/// and store (per-lane quantize+append+stream after the step).  Cumulative
+/// counters give the lifetime split; the `last_*` levels give the most
+/// recent iteration's split (instantaneous, for live scrapes).
+#[derive(Default)]
+pub struct PhaseMetrics {
+    /// Scheduler iterations completed (including idle ones).
+    pub iterations: Counter,
+    pub idle_ns: Counter,
+    pub prefill_ns: Counter,
+    pub decode_ns: Counter,
+    pub store_ns: Counter,
+    pub last_idle_ns: Level,
+    pub last_prefill_ns: Level,
+    pub last_decode_ns: Level,
+    pub last_store_ns: Level,
+}
+
+impl PhaseMetrics {
+    pub fn record_idle(&self, dur: std::time::Duration) {
+        let ns = dur.as_nanos() as u64;
+        self.idle_ns.add(ns);
+        self.last_idle_ns.set(ns);
+    }
+
+    pub fn record_prefill(&self, dur: std::time::Duration) {
+        let ns = dur.as_nanos() as u64;
+        self.prefill_ns.add(ns);
+        self.last_prefill_ns.set(ns);
+    }
+
+    pub fn record_decode(&self, dur: std::time::Duration) {
+        let ns = dur.as_nanos() as u64;
+        self.decode_ns.add(ns);
+        self.last_decode_ns.set(ns);
+    }
+
+    pub fn record_store(&self, dur: std::time::Duration) {
+        let ns = dur.as_nanos() as u64;
+        self.store_ns.add(ns);
+        self.last_store_ns.set(ns);
+    }
+
+    /// Cumulative `(idle, prefill, decode, store)` fractions of all
+    /// phase-attributed time; all zeros before the first iteration.
+    pub fn split(&self) -> (f64, f64, f64, f64) {
+        let (i, p, d, s) = (
+            self.idle_ns.get() as f64,
+            self.prefill_ns.get() as f64,
+            self.decode_ns.get() as f64,
+            self.store_ns.get() as f64,
+        );
+        let total = i + p + d + s;
+        if total <= 0.0 {
+            return (0.0, 0.0, 0.0, 0.0);
+        }
+        (i / total, p / total, d / total, s / total)
     }
 }
 
@@ -242,6 +409,13 @@ pub struct ServeMetrics {
     /// Largest prompt the worker's prefill buckets accept (prompts are
     /// trimmed to this before reservation).
     pub max_prompt_tokens: Gauge,
+    /// Serve-loop wall-clock split across idle/prefill/decode/store (the
+    /// "where did the iteration go" breakdown; see [`PhaseMetrics`]).
+    pub phases: PhaseMetrics,
+    /// Per-request flight recorder: bounded ring of terminal
+    /// [`trace::RequestTrace`]s plus the live in-flight set (see
+    /// [`trace::TraceRecorder`]).
+    pub trace: trace::TraceRecorder,
 }
 
 impl ServeMetrics {
@@ -271,8 +445,9 @@ impl ServeMetrics {
     }
 
     pub fn summary(&self, wall_secs: f64) -> String {
+        let (idle, prefill, decode, store) = self.phases.split();
         format!(
-            "requests={} rejected={} cancelled={} sessions_evicted={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms (int p50={:.1}ms batch p50={:.1}ms)  prefill_chunks={} preempts={}  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms  cache peak={}B  prefix hit={:.0}% evicted={} frag={}B",
+            "requests={} rejected={} cancelled={} sessions_evicted={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms (int p50={:.1}ms batch p50={:.1}ms)  prefill_chunks={} preempts={}  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms p99={:.1}ms  cache peak={}B  prefix hit={:.0}% evicted={} frag={}B  loop[idle={:.0}% prefill={:.0}% decode={:.0}% store={:.0}%]",
             self.requests_done.get(),
             self.requests_rejected.get(),
             self.requests_cancelled.get(),
@@ -288,10 +463,15 @@ impl ServeMetrics {
             self.decode_step_latency.percentile_ms(0.95),
             self.request_latency.percentile_ms(0.5),
             self.request_latency.percentile_ms(0.95),
+            self.request_latency.p99(),
             self.cache_peak_bytes.get(),
             self.prefix_hit_rate() * 100.0,
             self.blocks_evicted.get(),
             self.cache_frag_bytes.get(),
+            idle * 100.0,
+            prefill * 100.0,
+            decode * 100.0,
+            store * 100.0,
         )
     }
 }
@@ -493,7 +673,7 @@ impl PoolMetrics {
         let decode = self.merged_decode_latency();
         let e2e = self.merged_request_latency();
         let mut s = format!(
-            "pool[{}w]: requests={} rejected={} cancelled={} dead_workers={} redispatched={} sessions_evicted={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms (int p95={:.1}ms)  prefill_chunks={} preempts={}  decode p50={:.2}ms  e2e p95={:.1}ms  cache in_use={}B peak<={}B  prefix hit={:.0}% cached={}B evicted={}",
+            "pool[{}w]: requests={} rejected={} cancelled={} dead_workers={} redispatched={} sessions_evicted={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms (int p95={:.1}ms)  prefill_chunks={} preempts={}  decode p50={:.2}ms  e2e p95={:.1}ms p99={:.1}ms  cache in_use={}B peak<={}B  prefix hit={:.0}% cached={}B evicted={}",
             self.n_workers(),
             self.requests_done(),
             self.requests_rejected(),
@@ -509,6 +689,7 @@ impl PoolMetrics {
             self.prefill_preemptions(),
             decode.percentile_ms(0.5),
             e2e.percentile_ms(0.95),
+            e2e.p99(),
             self.cache_bytes_in_use(),
             self.cache_peak_bytes(),
             self.prefix_hit_rate() * 100.0,
@@ -564,6 +745,119 @@ mod tests {
         assert_eq!(merged.count(), 5);
         assert!(merged.mean_ms() > 20.0 && merged.mean_ms() < 30.0);
         assert!(merged.percentile_ms(1.0) >= 100.0);
+    }
+
+    /// What the old pure-doubling layout reported for a sample of `us`
+    /// microseconds: the bucket upper bound `1 << (64 - us.leading_zeros())`.
+    fn old_upper_bound_ms(us: u64) -> f64 {
+        assert!(us >= 1);
+        (1u64 << (64 - us.leading_zeros())) as f64 / 1e3
+    }
+
+    #[test]
+    fn histogram_midpoints_tighter_than_old_upper_bounds() {
+        // The headline fix: a lone 1 ms sample must report ~1 ms, not the
+        // old 2.048 ms upper bound.
+        let lone = Histogram::new();
+        lone.record(Duration::from_millis(1));
+        let p50 = lone.percentile_ms(0.5);
+        assert!((p50 - 1.0).abs() <= 0.125, "lone 1ms reports {p50}ms");
+        // Midpoint reporting stays within ±12.5% of the true value and
+        // never exceeds the old estimate, across several octaves.
+        for us in [1u64, 3, 17, 500, 1000, 12_345, 100_000, 7_000_000] {
+            let h = Histogram::new();
+            h.record(Duration::from_micros(us));
+            let est = h.percentile_ms(0.5);
+            let truth = us as f64 / 1e3;
+            assert!(
+                (est - truth).abs() <= truth * 0.125 + 1e-9,
+                "us={us}: est={est} truth={truth}"
+            );
+            assert!(
+                est <= old_upper_bound_ms(us) + 1e-9,
+                "us={us}: new {est} > old {}",
+                old_upper_bound_ms(us)
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_monotone_in_p() {
+        let h = Histogram::new();
+        for us in [1u64, 5, 9, 40, 900, 1000, 2000, 15_000, 80_000, 1_000_000] {
+            h.record(Duration::from_micros(us));
+        }
+        let mut prev = 0.0;
+        for i in 1..=20 {
+            let p = i as f64 / 20.0;
+            let v = h.percentile_ms(p);
+            assert!(v >= prev, "p={p}: {v} < {prev}");
+            prev = v;
+        }
+        assert_eq!(h.p99(), h.percentile_ms(0.99));
+    }
+
+    #[test]
+    fn histogram_bucket_bounds_tile_the_axis() {
+        // Buckets must tile [0, ∞) without gaps or overlap: every bucket's
+        // upper bound is the next bucket's lower bound, the midpoint sits
+        // strictly inside, and bucket_of lands samples inside their bounds.
+        for i in 0..NUM_BUCKETS - 1 {
+            let (lo, hi) = (Histogram::bucket_lower_us(i), Histogram::bucket_upper_us(i));
+            assert_eq!(hi, Histogram::bucket_lower_us(i + 1), "bucket {i}");
+            let mid = Histogram::bucket_midpoint_us(i);
+            assert!(lo < mid && mid < hi, "bucket {i}: {lo} {mid} {hi}");
+        }
+        for us in [0u64, 1, 2, 3, 7, 1023, 1024, 65_535, 1 << 30] {
+            let i = Histogram::bucket_of(us * 1000);
+            assert!(
+                (us as f64) >= Histogram::bucket_lower_us(i)
+                    && (us as f64) < Histogram::bucket_upper_us(i),
+                "us={us} bucket {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn session_tokens_survive_mutex_poisoning() {
+        // A worker panicking while holding the directory lock (what the
+        // chaos harness induces) must not cascade panics into later
+        // supervisor reads.
+        let st = Arc::new(SessionTokens::default());
+        st.publish(1, 10);
+        let st2 = st.clone();
+        let joined = std::thread::spawn(move || {
+            let _guard = st2.0.lock().unwrap();
+            panic!("poison the session directory");
+        })
+        .join();
+        assert!(joined.is_err(), "the poisoning thread must panic");
+        assert_eq!(st.get(1), Some(10), "reads recover past the poison");
+        st.publish(2, 20);
+        assert_eq!(st.live_sessions(), 2);
+        st.forget(1);
+        assert_eq!(st.get(1), None);
+    }
+
+    #[test]
+    fn phase_metrics_split_and_levels() {
+        let ph = PhaseMetrics::default();
+        assert_eq!(ph.split(), (0.0, 0.0, 0.0, 0.0), "empty split is zeros");
+        ph.record_idle(Duration::from_micros(400));
+        ph.record_prefill(Duration::from_micros(300));
+        ph.record_decode(Duration::from_micros(200));
+        ph.record_store(Duration::from_micros(100));
+        ph.iterations.add(1);
+        let (i, p, d, s) = ph.split();
+        assert!((i - 0.4).abs() < 1e-9 && (p - 0.3).abs() < 1e-9);
+        assert!((d - 0.2).abs() < 1e-9 && (s - 0.1).abs() < 1e-9);
+        // Levels hold the last iteration's value, counters accumulate.
+        ph.record_decode(Duration::from_micros(600));
+        assert_eq!(ph.last_decode_ns.get(), 600_000);
+        assert_eq!(ph.decode_ns.get(), 800_000);
+        let m = ServeMetrics::default();
+        m.phases.record_idle(Duration::from_micros(10));
+        assert!(m.summary(1.0).contains("loop[idle=100%"));
     }
 
     #[test]
@@ -648,7 +942,7 @@ mod tests {
         w0.requests_cancelled.add(2);
         w1.requests_cancelled.add(1);
         w0.ttft.record(Duration::from_millis(4));
-        w1.ttft.record(Duration::from_millis(16));
+        w1.ttft.record(Duration::from_millis(20));
         let pool = PoolMetrics::new(vec![w0.clone(), w1]);
         assert_eq!(pool.requests_cancelled(), 3);
         assert_eq!(pool.merged_ttft().count(), 2);
@@ -701,7 +995,7 @@ mod tests {
         w0.prefill_preemptions.add(2);
         w0.ttft_interactive.record(Duration::from_millis(2));
         w1.ttft_interactive.record(Duration::from_millis(8));
-        w0.ttft_batch.record(Duration::from_millis(64));
+        w0.ttft_batch.record(Duration::from_millis(80));
         w0.prefill_backlog_tokens.set(1024);
 
         let pool = PoolMetrics::new(vec![w0.clone(), w1]);

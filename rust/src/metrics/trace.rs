@@ -1,0 +1,461 @@
+//! Per-request flight recorder (observability layer 3).
+//!
+//! A [`RequestTrace`] records monotonic-clock span events through a
+//! request's serve-loop lifecycle: enqueued → admitted → each prefill
+//! chunk (index + tokens) → first token → decode steps (sampled, see
+//! [`sample_decode_step`]) → one terminal event (done / failed /
+//! cancelled / redispatched, with reason).  The worker's
+//! [`TraceRecorder`] keeps the in-flight set plus a bounded ring of
+//! terminal traces (`--trace-ring`, default [`DEFAULT_TRACE_RING`];
+//! 0 disables tracing entirely).
+//!
+//! Two consumers read a recorder from outside its worker thread:
+//!
+//! * the `{"op":"trace"}` admin op serializes the whole recorder
+//!   (live + finished + crashed) for a wire scrape;
+//! * the pool supervisor calls [`TraceRecorder::dump_crashed`] when it
+//!   retires a crashed worker, converting every live trace into a
+//!   terminal post-mortem (`failed` if the request had already produced
+//!   its first token, `redispatched` otherwise — mirroring the
+//!   `EventSink` drop semantics) kept in a separate crash-dump store.
+//!
+//! All locks recover from poisoning (`unwrap_or_else(e.into_inner())`):
+//! the whole point of the crash dump is reading a recorder whose owning
+//! worker just panicked.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use super::Counter;
+
+/// Default `--trace-ring` capacity: terminal traces retained per worker.
+pub const DEFAULT_TRACE_RING: usize = 256;
+
+/// Decode-step sampling policy: every early step (the interesting ramp)
+/// plus every 16th thereafter, so long generations cost O(gen/16) trace
+/// events instead of O(gen).
+pub fn sample_decode_step(index: usize) -> bool {
+    index < 4 || index % 16 == 0
+}
+
+/// Terminal disposition of a traced request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceOutcome {
+    Done,
+    Failed,
+    Cancelled,
+    /// The request died *unprocessed* with its worker and was re-routed to
+    /// a live worker (its trace there starts over).
+    Redispatched,
+}
+
+impl TraceOutcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceOutcome::Done => "done",
+            TraceOutcome::Failed => "failed",
+            TraceOutcome::Cancelled => "cancelled",
+            TraceOutcome::Redispatched => "redispatched",
+        }
+    }
+}
+
+/// One span event in a request's lifecycle.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEventKind {
+    Enqueued,
+    Admitted,
+    PrefillChunk { index: usize, tokens: usize },
+    FirstToken,
+    DecodeStep { index: usize },
+    Terminal { outcome: TraceOutcome, reason: String },
+}
+
+impl TraceEventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEventKind::Enqueued => "enqueued",
+            TraceEventKind::Admitted => "admitted",
+            TraceEventKind::PrefillChunk { .. } => "prefill_chunk",
+            TraceEventKind::FirstToken => "first_token",
+            TraceEventKind::DecodeStep { .. } => "decode_step",
+            TraceEventKind::Terminal { .. } => "terminal",
+        }
+    }
+}
+
+/// A timestamped span event: `at_ms` is milliseconds since the trace
+/// began (monotonic clock, so spans are crash-safe and NTP-immune).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub at_ms: f64,
+    pub kind: TraceEventKind,
+}
+
+impl TraceEvent {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("t_ms", Json::Num((self.at_ms * 1000.0).round() / 1000.0)),
+            ("kind", Json::Str(self.kind.name().to_string())),
+        ];
+        match &self.kind {
+            TraceEventKind::PrefillChunk { index, tokens } => {
+                pairs.push(("chunk", Json::Num(*index as f64)));
+                pairs.push(("tokens", Json::Num(*tokens as f64)));
+            }
+            TraceEventKind::DecodeStep { index } => {
+                pairs.push(("step", Json::Num(*index as f64)));
+            }
+            TraceEventKind::Terminal { outcome, reason } => {
+                pairs.push(("outcome", Json::Str(outcome.as_str().to_string())));
+                if !reason.is_empty() {
+                    pairs.push(("reason", Json::Str(reason.clone())));
+                }
+            }
+            _ => {}
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// One request's flight record.  Shared (`Arc`) between the run state in
+/// the serve loop, the recorder's live map, and — after settlement — the
+/// terminal ring, so marking events never copies history.
+pub struct RequestTrace {
+    pub id: u64,
+    /// Scheduling class, as the wire string (`"interactive"`/`"batch"`).
+    pub priority: &'static str,
+    pub prompt_tokens: usize,
+    t0: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl RequestTrace {
+    fn new(id: u64, priority: &'static str, prompt_tokens: usize) -> RequestTrace {
+        let t = RequestTrace {
+            id,
+            priority,
+            prompt_tokens,
+            t0: Instant::now(),
+            events: Mutex::new(Vec::new()),
+        };
+        t.mark(TraceEventKind::Enqueued);
+        t
+    }
+
+    fn locked(&self) -> MutexGuard<'_, Vec<TraceEvent>> {
+        self.events.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Append a span event stamped with the elapsed monotonic time.
+    pub fn mark(&self, kind: TraceEventKind) {
+        let at_ms = self.t0.elapsed().as_secs_f64() * 1e3;
+        self.locked().push(TraceEvent { at_ms, kind });
+    }
+
+    /// Copy of the recorded events, in append order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.locked().clone()
+    }
+
+    /// The terminal disposition, once one was marked.
+    pub fn outcome(&self) -> Option<(TraceOutcome, String)> {
+        self.locked().iter().rev().find_map(|e| match &e.kind {
+            TraceEventKind::Terminal { outcome, reason } => {
+                Some((*outcome, reason.clone()))
+            }
+            _ => None,
+        })
+    }
+
+    /// True once the request produced its first token (prefill complete) —
+    /// the boundary between "redispatchable" and "mid-flight" on a crash.
+    pub fn reached_first_token(&self) -> bool {
+        self.locked().iter().any(|e| matches!(e.kind, TraceEventKind::FirstToken))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let events = self.events();
+        let mut pairs = vec![
+            ("id", Json::Num(self.id as f64)),
+            ("priority", Json::Str(self.priority.to_string())),
+            ("prompt_tokens", Json::Num(self.prompt_tokens as f64)),
+            ("events", Json::Arr(events.iter().map(TraceEvent::to_json).collect())),
+        ];
+        if let Some((outcome, reason)) = self.outcome() {
+            pairs.push(("outcome", Json::Str(outcome.as_str().to_string())));
+            if !reason.is_empty() {
+                pairs.push(("reason", Json::Str(reason)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Per-worker flight recorder: the live in-flight set, a bounded ring of
+/// terminal traces, and the crash-dump store the supervisor fills when it
+/// retires this worker.  Lives inside `ServeMetrics` so the worker, the
+/// supervisor, and the TCP admin ops all reach it through the existing
+/// metrics `Arc` — no extra plumbing.
+pub struct TraceRecorder {
+    /// Ring capacity; 0 disables tracing ([`Self::begin`] returns `None`).
+    cap: AtomicUsize,
+    live: Mutex<HashMap<u64, Arc<RequestTrace>>>,
+    ring: Mutex<VecDeque<Arc<RequestTrace>>>,
+    crashed: Mutex<Vec<Arc<RequestTrace>>>,
+    /// Terminal traces evicted from the ring (scrape staleness signal).
+    pub dropped: Counter,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> TraceRecorder {
+        TraceRecorder {
+            cap: AtomicUsize::new(DEFAULT_TRACE_RING),
+            live: Mutex::new(HashMap::new()),
+            ring: Mutex::new(VecDeque::new()),
+            crashed: Mutex::new(Vec::new()),
+            dropped: Counter::default(),
+        }
+    }
+}
+
+impl TraceRecorder {
+    /// Set the terminal-trace ring capacity (`--trace-ring`); 0 disables
+    /// tracing.  The serve loop applies its config value at startup.
+    pub fn set_capacity(&self, cap: usize) {
+        self.cap.store(cap, Ordering::Relaxed);
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        while ring.len() > cap {
+            ring.pop_front();
+            self.dropped.add(1);
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap.load(Ordering::Relaxed)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity() > 0
+    }
+
+    /// Start tracing a request at enqueue time.  `None` when disabled —
+    /// callers thread the `Option` through and marking becomes free.
+    pub fn begin(
+        &self,
+        id: u64,
+        priority: &'static str,
+        prompt_tokens: usize,
+    ) -> Option<Arc<RequestTrace>> {
+        if !self.enabled() {
+            return None;
+        }
+        let trace = Arc::new(RequestTrace::new(id, priority, prompt_tokens));
+        self.live
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(id, trace.clone());
+        Some(trace)
+    }
+
+    /// Terminal settlement: mark the outcome, move the trace from the live
+    /// set into the bounded ring (evicting the oldest beyond capacity).
+    pub fn settle(&self, trace: &Arc<RequestTrace>, outcome: TraceOutcome, reason: &str) {
+        trace.mark(TraceEventKind::Terminal { outcome, reason: reason.to_string() });
+        self.live.lock().unwrap_or_else(|e| e.into_inner()).remove(&trace.id);
+        let cap = self.capacity();
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        ring.push_back(trace.clone());
+        while ring.len() > cap {
+            ring.pop_front();
+            self.dropped.add(1);
+        }
+    }
+
+    /// Crash post-mortem (supervisor, on retiring this recorder's worker):
+    /// every live trace gets a terminal event — `redispatched` if the
+    /// request never reached its first token (the `EventSink` re-routes it
+    /// to a live worker), `failed` if it died mid-flight — and moves into
+    /// the crash-dump store, which survives past retirement for
+    /// `{"op":"trace"}` scrapes.  Returns the number of traces dumped.
+    pub fn dump_crashed(&self, reason: &str) -> usize {
+        let drained: Vec<Arc<RequestTrace>> = {
+            let mut live = self.live.lock().unwrap_or_else(|e| e.into_inner());
+            let mut v: Vec<_> = live.drain().map(|(_, t)| t).collect();
+            // Deterministic dump order for tests and log readers.
+            v.sort_by_key(|t| t.id);
+            v
+        };
+        let n = drained.len();
+        let mut crashed = self.crashed.lock().unwrap_or_else(|e| e.into_inner());
+        for trace in drained {
+            let outcome = if trace.reached_first_token() {
+                TraceOutcome::Failed
+            } else {
+                TraceOutcome::Redispatched
+            };
+            trace.mark(TraceEventKind::Terminal { outcome, reason: reason.to_string() });
+            crashed.push(trace);
+        }
+        n
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn finished_count(&self) -> usize {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn crashed_count(&self) -> usize {
+        self.crashed.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Terminal traces currently retained, oldest first.
+    pub fn finished(&self) -> Vec<Arc<RequestTrace>> {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).iter().cloned().collect()
+    }
+
+    /// Crash-dump traces (empty unless the supervisor retired this worker).
+    pub fn crash_dump(&self) -> Vec<Arc<RequestTrace>> {
+        self.crashed.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Whole-recorder serialization for the `{"op":"trace"}` admin op.
+    pub fn to_json(&self) -> Json {
+        let live: Vec<Arc<RequestTrace>> = {
+            let map = self.live.lock().unwrap_or_else(|e| e.into_inner());
+            let mut v: Vec<_> = map.values().cloned().collect();
+            v.sort_by_key(|t| t.id);
+            v
+        };
+        Json::obj(vec![
+            ("capacity", Json::Num(self.capacity() as f64)),
+            ("dropped", Json::Num(self.dropped.get() as f64)),
+            ("live", Json::Arr(live.iter().map(|t| t.to_json()).collect())),
+            (
+                "finished",
+                Json::Arr(self.finished().iter().map(|t| t.to_json()).collect()),
+            ),
+            (
+                "crashed",
+                Json::Arr(self.crash_dump().iter().map(|t| t.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_records_ordered_spans_and_outcome() {
+        let rec = TraceRecorder::default();
+        let t = rec.begin(7, "interactive", 12).expect("enabled by default");
+        t.mark(TraceEventKind::PrefillChunk { index: 0, tokens: 8 });
+        t.mark(TraceEventKind::PrefillChunk { index: 1, tokens: 4 });
+        t.mark(TraceEventKind::FirstToken);
+        t.mark(TraceEventKind::DecodeStep { index: 1 });
+        assert_eq!(rec.live_count(), 1);
+        assert!(t.outcome().is_none(), "no terminal yet");
+        rec.settle(&t, TraceOutcome::Done, "");
+        assert_eq!(rec.live_count(), 0);
+        assert_eq!(rec.finished_count(), 1);
+        let events = t.events();
+        assert_eq!(events.first().unwrap().kind, TraceEventKind::Enqueued);
+        assert!(
+            events.windows(2).all(|w| w[0].at_ms <= w[1].at_ms),
+            "span timestamps are monotone"
+        );
+        assert_eq!(t.outcome().unwrap().0, TraceOutcome::Done);
+        assert!(t.reached_first_token());
+        // Serialized shape: id + events with kinds in order.
+        let j = t.to_json();
+        assert_eq!(j.get("id").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(j.get("outcome").unwrap().as_str().unwrap(), "done");
+        let kinds: Vec<String> = j
+            .get("events")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.str_or("kind", "?"))
+            .collect();
+        assert_eq!(
+            kinds,
+            ["enqueued", "prefill_chunk", "prefill_chunk", "first_token", "decode_step", "terminal"]
+        );
+    }
+
+    #[test]
+    fn ring_evicts_oldest_terminal_traces() {
+        let rec = TraceRecorder::default();
+        rec.set_capacity(2);
+        for id in 0..3u64 {
+            let t = rec.begin(id, "batch", 1).unwrap();
+            rec.settle(&t, TraceOutcome::Done, "");
+        }
+        assert_eq!(rec.finished_count(), 2);
+        assert_eq!(rec.dropped.get(), 1);
+        let kept: Vec<u64> = rec.finished().iter().map(|t| t.id).collect();
+        assert_eq!(kept, [1, 2], "oldest trace evicted first");
+        // Shrinking the capacity trims the ring too.
+        rec.set_capacity(1);
+        assert_eq!(rec.finished_count(), 1);
+        assert_eq!(rec.dropped.get(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables_tracing() {
+        let rec = TraceRecorder::default();
+        rec.set_capacity(0);
+        assert!(!rec.enabled());
+        assert!(rec.begin(1, "interactive", 4).is_none());
+        assert_eq!(rec.live_count(), 0);
+        assert_eq!(rec.to_json().get("live").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn crash_dump_classifies_by_first_token() {
+        let rec = TraceRecorder::default();
+        // Request 1 was mid-decode (first token already out); request 2
+        // was still prefilling when the worker died.
+        let t1 = rec.begin(1, "interactive", 8).unwrap();
+        t1.mark(TraceEventKind::FirstToken);
+        let t2 = rec.begin(2, "batch", 8).unwrap();
+        t2.mark(TraceEventKind::PrefillChunk { index: 0, tokens: 4 });
+        assert_eq!(rec.dump_crashed("worker 0 crashed: boom"), 2);
+        assert_eq!(rec.live_count(), 0, "live set drained into the dump");
+        assert_eq!(rec.crashed_count(), 2);
+        let dump = rec.crash_dump();
+        assert_eq!(dump[0].id, 1);
+        assert_eq!(dump[0].outcome().unwrap().0, TraceOutcome::Failed);
+        let (outcome, reason) = dump[1].outcome().unwrap();
+        assert_eq!(outcome, TraceOutcome::Redispatched);
+        assert!(reason.contains("boom"));
+        // The dump serializes under "crashed" and survives a JSON roundtrip.
+        let j = Json::parse(&rec.to_json().dump()).unwrap();
+        assert_eq!(j.get("crashed").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            j.get("crashed").unwrap().as_arr().unwrap()[1]
+                .get("outcome")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            "redispatched"
+        );
+    }
+
+    #[test]
+    fn decode_step_sampling_keeps_early_and_periodic_steps() {
+        assert!(sample_decode_step(0) && sample_decode_step(3));
+        assert!(!sample_decode_step(5) && !sample_decode_step(15));
+        assert!(sample_decode_step(16) && sample_decode_step(32));
+    }
+}

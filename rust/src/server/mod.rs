@@ -75,6 +75,40 @@
 //! reserved blocks return to the budget.  Either way the stream terminates
 //! with `[cancelled]` (`retryable: false`).
 //!
+//! **Admin ops (v2.2, observability).**  A line whose JSON object carries
+//! an `"op"` key is an admin op, not an inference request: it is answered
+//! inline by the connection thread from the pool's shared metrics — admin
+//! ops never consume a lane, never allocate a request id, and never touch
+//! a worker queue, so they stay answerable while every lane is saturated.
+//! One response line per op; the connection lives on (ops pipeline freely
+//! between inference requests).  Catalog:
+//!
+//! ```text
+//! -> {"op": "metrics"}
+//! <- {"op": "metrics", "ok": true, "snapshot": {...}, "rates": {...}|null}
+//! -> {"op": "metrics", "format": "prometheus"}
+//! <- {"op": "metrics", "ok": true, "format": "prometheus", "text": "..."}
+//! -> {"op": "health"}
+//! <- {"op": "health", "ok": true, "n_workers": N, "live_workers": L,
+//!     "workers": [{"worker": 0, "alive": true, "queue_depth": q,
+//!                  "free_lanes": f, "prefill_backlog_tokens": t,
+//!                  "live_sessions": s}, ...]}
+//! -> {"op": "trace"}                      (optional "worker": N filter)
+//! <- {"op": "trace", "ok": true,
+//!     "workers": [{"worker": 0, "capacity": ..., "dropped": ...,
+//!                  "live": [...], "finished": [...], "crashed": [...]}]}
+//! ```
+//!
+//! `"snapshot"` is the full [`crate::metrics::export::MetricsSnapshot`]
+//! (every pool/worker counter, gauge and raw histogram bucket); `"rates"`
+//! is tok/s / chunks/s / req/s derived against the server's previous
+//! `metrics` scrape (`null` on the first scrape).  The `prometheus` text
+//! variant ships the same snapshot as an exposition-format payload inside
+//! one JSON line.  `trace` returns each worker's flight recorder
+//! ([`crate::metrics::trace::TraceRecorder`]) including the crash-dump
+//! traces a retired worker left behind.  An unknown `"op"` gets
+//! `{"ok": false, "error": ...}`.
+//!
 //! Connection threads are thin: they parse, forward to the serve pool's
 //! router, and stream events back.  All model work happens on the pool's
 //! engine worker threads (`coordinator::pool` + `serve_loop`).  The accept
@@ -90,6 +124,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{Event, Priority, Request, Response, ServePool};
+use crate::metrics::export::{prometheus_text, MetricsSnapshot, Rates};
 use crate::util::json::Json;
 
 /// Condvar-backed stop flag for [`serve_tcp`]: `raise()` wakes the waiter
@@ -224,6 +259,9 @@ pub fn serve_tcp(pool: &ServePool, addr: &str, stop: Arc<StopSignal>) -> Result<
     let local = listener.local_addr()?;
     println!("[server] listening on {addr}");
     let next_id = Arc::new(AtomicU64::new(1));
+    // Previous `{"op":"metrics"}` scrape, shared across connections so any
+    // scraper sees rates over the window since the last scrape server-wide.
+    let prev_snapshot: Arc<Mutex<Option<MetricsSnapshot>>> = Arc::new(Mutex::new(None));
     std::thread::scope(|scope| -> Result<()> {
         // Waker: parks on the stop condvar (no idle wakeups) and pokes the
         // blocking accept when the signal is raised.  Every return path
@@ -251,9 +289,10 @@ pub fn serve_tcp(pool: &ServePool, addr: &str, stop: Arc<StopSignal>) -> Result<
             }
             log::info!("connection from {peer}");
             let ids = next_id.clone();
+            let prev = prev_snapshot.clone();
             let p = pool;
             scope.spawn(move || {
-                if let Err(e) = handle_conn(p, stream, &ids) {
+                if let Err(e) = handle_conn(p, stream, &ids, &prev) {
                     log::warn!("connection error: {e:#}");
                 }
             });
@@ -261,12 +300,138 @@ pub fn serve_tcp(pool: &ServePool, addr: &str, stop: Arc<StopSignal>) -> Result<
     })
 }
 
-fn handle_conn(pool: &ServePool, stream: TcpStream, ids: &AtomicU64) -> Result<()> {
+/// Detect an admin-op line: a JSON object carrying an `"op"` key.  Returns
+/// the parsed object so the dispatcher never re-parses; inference requests
+/// (no `"op"`) and malformed lines fall through to [`parse_request`].
+fn parse_admin_op(line: &str) -> Option<Json> {
+    let j = Json::parse(line.trim()).ok()?;
+    j.get("op")?;
+    Some(j)
+}
+
+/// Answer one admin op from the pool's shared metrics.  Never blocks on a
+/// worker: everything read here lives behind the metrics `Arc`s, so these
+/// stay answerable while every lane is saturated or every worker is dead.
+fn admin_response(
+    pool: &ServePool,
+    op: &Json,
+    prev_snapshot: &Mutex<Option<MetricsSnapshot>>,
+) -> Json {
+    match op.str_or("op", "").as_str() {
+        "metrics" => {
+            let snap = MetricsSnapshot::collect(&pool.metrics, pool.live_workers());
+            // Swap this scrape in as the new rate baseline.
+            let prev = {
+                let mut guard = prev_snapshot.lock().unwrap_or_else(|e| e.into_inner());
+                guard.replace(snap.clone())
+            };
+            if op.str_or("format", "json") == "prometheus" {
+                return Json::obj(vec![
+                    ("op", Json::Str("metrics".into())),
+                    ("ok", Json::Bool(true)),
+                    ("format", Json::Str("prometheus".into())),
+                    ("text", Json::Str(prometheus_text(&snap))),
+                ]);
+            }
+            let rates = prev
+                .as_ref()
+                .and_then(|p| Rates::between(p, &snap))
+                .map(|r| r.to_json())
+                .unwrap_or(Json::Null);
+            Json::obj(vec![
+                ("op", Json::Str("metrics".into())),
+                ("ok", Json::Bool(true)),
+                ("snapshot", snap.to_json()),
+                ("rates", rates),
+            ])
+        }
+        "health" => {
+            let loads = pool.loads();
+            let workers: Vec<Json> = (0..pool.n_workers())
+                .map(|w| {
+                    let m = pool.metrics.worker(w);
+                    Json::obj(vec![
+                        ("worker", Json::Num(w as f64)),
+                        ("alive", Json::Bool(pool.worker_alive(w))),
+                        ("queue_depth", Json::Num(loads[w].0 as f64)),
+                        ("free_lanes", Json::Num(loads[w].1 as f64)),
+                        (
+                            "prefill_backlog_tokens",
+                            Json::Num(m.prefill_backlog_tokens.get() as f64),
+                        ),
+                        (
+                            "live_sessions",
+                            Json::Num(m.session_tokens.live_sessions() as f64),
+                        ),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![
+                ("op", Json::Str("health".into())),
+                ("ok", Json::Bool(true)),
+                ("n_workers", Json::Num(pool.n_workers() as f64)),
+                ("live_workers", Json::Num(pool.live_workers() as f64)),
+                ("workers_dead", Json::Num(pool.metrics.workers_dead.get() as f64)),
+                ("workers", Json::Arr(workers)),
+            ])
+        }
+        "trace" => {
+            let only = op.get("worker").and_then(Json::as_f64).map(|w| w as usize);
+            let workers: Vec<Json> = (0..pool.n_workers())
+                .filter(|&w| match only {
+                    Some(o) => o == w,
+                    None => true,
+                })
+                .map(|w| {
+                    let mut fields = vec![("worker", Json::Num(w as f64))];
+                    if let Json::Obj(rec) = pool.metrics.worker(w).trace.to_json() {
+                        for (k, v) in rec {
+                            match k.as_str() {
+                                "capacity" => fields.push(("capacity", v)),
+                                "dropped" => fields.push(("dropped", v)),
+                                "live" => fields.push(("live", v)),
+                                "finished" => fields.push(("finished", v)),
+                                "crashed" => fields.push(("crashed", v)),
+                                _ => {}
+                            }
+                        }
+                    }
+                    Json::obj(fields)
+                })
+                .collect();
+            Json::obj(vec![
+                ("op", Json::Str("trace".into())),
+                ("ok", Json::Bool(true)),
+                ("workers", Json::Arr(workers)),
+            ])
+        }
+        other => Json::obj(vec![
+            ("op", Json::Str(other.to_string())),
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str(format!("unknown admin op {other:?}"))),
+        ]),
+    }
+}
+
+fn handle_conn(
+    pool: &ServePool,
+    stream: TcpStream,
+    ids: &AtomicU64,
+    prev_snapshot: &Mutex<Option<MetricsSnapshot>>,
+) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
+            continue;
+        }
+        // Admin ops are intercepted BEFORE request parsing and id
+        // allocation: they read shared metrics on this connection thread
+        // and never occupy a lane (see the module doc's catalog).
+        if let Some(op) = parse_admin_op(&line) {
+            writeln!(writer, "{}", admin_response(pool, &op, prev_snapshot).dump())?;
+            writer.flush()?;
             continue;
         }
         let id = ids.fetch_add(1, Ordering::Relaxed);
@@ -498,6 +663,19 @@ mod tests {
         .unwrap();
         assert!(evicted.str_or("error", "").contains("session_evicted"));
         assert_eq!(evicted.get("retryable").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn admin_ops_are_detected_before_request_parsing() {
+        // An "op" key marks an admin line, whatever else rides along.
+        assert!(parse_admin_op(r#"{"op": "metrics"}"#).is_some());
+        assert!(parse_admin_op(r#"{"op": "metrics", "format": "prometheus"}"#).is_some());
+        assert!(parse_admin_op(r#"{"op": "trace", "worker": 1}"#).is_some());
+        // Inference requests and malformed lines fall through to the
+        // request parser (which owns the error reply).
+        assert!(parse_admin_op(r#"{"prompt": "hi"}"#).is_none());
+        assert!(parse_admin_op("not json").is_none());
+        assert!(parse_admin_op("").is_none());
     }
 
     #[test]

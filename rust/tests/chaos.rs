@@ -43,6 +43,7 @@ fn sim_cfg(plan: &Arc<FaultPlan>, cache_budget: Option<usize>) -> ServeConfig {
         session_ttl: None,
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
     }
 }
 
@@ -538,6 +539,71 @@ fn cancel_mid_prefill_rolls_back_at_chunk_boundary() {
     await_router_idle(&pool);
     assert_cache_baseline(&pool, &[0]);
     pool.shutdown().expect("clean shutdown");
+}
+
+/// Scenario 11 — **flight recorder under a crash**: a killed worker's
+/// supervisor retirement dumps a terminal trace for EVERY request still
+/// in flight on it — `failed` for a run killed mid-decode (first token
+/// already streamed), `redispatched` for a run still prefilling — and the
+/// bounded terminal ring evicts oldest-first under a small `--trace-ring`.
+#[test]
+fn worker_crash_leaves_flight_recorder_dump_for_every_in_flight_request() {
+    use cq::metrics::trace::TraceOutcome;
+
+    let plan = FaultPlan::new();
+    let mut cfg = sim_cfg(&plan, None);
+    cfg.prefill_chunk = 4;
+    cfg.trace_ring = 2; // small ring so eviction is observable
+    let pool = ServePool::start(cfg, 1);
+
+    // Three completed warmups against a 2-trace ring: the oldest terminal
+    // trace is evicted, the last two stay queryable.
+    for id in [10u64, 11, 12] {
+        let r = pool.submit(Request::greedy(id, "warm", 2)).expect("warmup");
+        assert_eq!(r.gen_tokens, 2);
+    }
+    let rec = &pool.metrics.worker(0).trace;
+    assert_eq!(rec.finished_count(), 2, "ring capped at --trace-ring");
+    assert_eq!(rec.dropped.get(), 1, "oldest terminal trace evicted");
+    let kept: Vec<u64> = rec.finished().iter().map(|t| t.id).collect();
+    assert_eq!(kept, [11, 12], "eviction is oldest-first");
+
+    // Park the worker, queue two victims: request 1 (16-token prompt,
+    // 4 chunks) will be decoding when the kill fires; request 2 (60-token
+    // prompt, 15 chunks) will still be prefilling.  Each warmup ran exactly
+    // one decode step (max_new 2 = first token + one step), so lifetime
+    // decode step 6 is request 1's fourth step — well past its prefill,
+    // well before request 2's completes.
+    plan.hold_worker(0);
+    plan.await_paused(0);
+    let h1 = pool.submit_stream(Request::greedy(1, "mid decode chaos", 64)).expect("victim 1");
+    let h2 = pool.submit_stream(Request::greedy(2, &"p".repeat(60), 8)).expect("victim 2");
+    plan.kill_worker_at_step(0, 6);
+    plan.release_worker(0);
+    await_live_workers(&pool, 0);
+
+    // Both streams still terminate (invariant 1).
+    let (r1, _) = failed_of(&drain_events(&h1));
+    assert!(r1.contains("serve worker died"), "{r1}");
+    let _ = failed_of(&drain_events(&h2));
+
+    // The supervisor's retirement dumped a terminal trace for every
+    // in-flight request, classified by first-token progress.
+    assert_eq!(rec.live_count(), 0, "live set drained into the dump");
+    let dump = rec.crash_dump();
+    assert_eq!(dump.len(), 2, "one post-mortem per in-flight request");
+    assert_eq!(dump[0].id, 1);
+    assert!(dump[0].reached_first_token());
+    let (o1, reason1) = dump[0].outcome().expect("terminal trace");
+    assert_eq!(o1, TraceOutcome::Failed, "mid-decode death is a stream failure");
+    assert!(reason1.contains("worker 0 crashed"), "{reason1}");
+    assert_eq!(dump[1].id, 2);
+    assert!(!dump[1].reached_first_token(), "victim 2 was still prefilling");
+    assert_eq!(dump[1].outcome().expect("terminal trace").0, TraceOutcome::Redispatched);
+    // The completed-trace ring survived the crash alongside the dump.
+    assert_eq!(rec.finished_count(), 2);
+    assert_eq!(pool.metrics.workers_dead.get(), 1);
+    assert!(pool.shutdown().is_err(), "panicked worker surfaces at shutdown");
 }
 
 /// Scenario 10 — **interactive TTFT under a long batch prefill**: the

@@ -100,6 +100,7 @@ fn serve_loop_fails_fast_on_missing_assets() {
         session_ttl: None,
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
     };
     let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
     let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
@@ -141,6 +142,7 @@ fn serve_config_validates_batch_and_codebook_tag() {
         session_ttl: None,
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
     };
     let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
     let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
@@ -168,6 +170,7 @@ fn sim_pool_cfg(plan: &std::sync::Arc<FaultPlan>) -> ServeConfig {
         session_ttl: None,
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
     }
 }
 

@@ -1,0 +1,235 @@
+//! Observability e2e: the three admin ops (`metrics` / `health` / `trace`)
+//! answered over real TCP against a sim-backend pool — **no XLA runtime
+//! required**.  Asserts the wire responses are parseable JSON whose
+//! counters match the live [`PoolMetrics`] they froze, that a second
+//! scrape derives rates over the window, and that admin ops stay
+//! answerable while a worker is held with work queued (they never consume
+//! a lane).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cq::coordinator::{FaultPlan, Request, ServeConfig, ServePool, SimSpec};
+use cq::metrics::export::MetricsSnapshot;
+use cq::server::{client_request_line, serve_tcp, StopSignal};
+use cq::util::json::Json;
+
+fn sim_cfg(plan: &Arc<FaultPlan>) -> ServeConfig {
+    ServeConfig {
+        model: "sim".into(),
+        cq: None,
+        batch: 4,
+        cache_budget: None,
+        codebook_path: None,
+        params_path: "/nonexistent/sim-has-no-params.bin".into(),
+        kernel: ServeConfig::default_kernel(),
+        block_tokens: 4,
+        prefix_sharing: true,
+        sim: Some(SimSpec::tiny()),
+        faults: Some(plan.clone()),
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
+    }
+}
+
+/// One admin round-trip; panics with the raw line on a non-`ok` reply.
+fn admin(addr: &str, line: &str) -> Json {
+    let resp = client_request_line(addr, line).expect("admin roundtrip");
+    assert_eq!(
+        resp.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "{}",
+        resp.dump()
+    );
+    resp
+}
+
+#[test]
+fn admin_ops_answer_over_tcp_and_match_pool_metrics() {
+    let plan = FaultPlan::new();
+    let pool = ServePool::start(sim_cfg(&plan), 2);
+    let stop = StopSignal::new();
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:17931";
+
+    std::thread::scope(|scope| {
+        let p = &pool;
+        let server = scope.spawn(move || serve_tcp(p, addr, stop2).unwrap());
+        std::thread::sleep(Duration::from_millis(300)); // wait for bind
+
+        // Drive load through the pool, then scrape.  Blocking submits mean
+        // every counter below is settled before the first scrape.
+        for id in 1..=6u64 {
+            let r = pool.submit(Request::greedy(id, "observe me", 4)).unwrap();
+            assert_eq!(r.gen_tokens, 4);
+        }
+
+        // --- {"op":"metrics"} : JSON snapshot + (first scrape) null rates.
+        let m1 = admin(addr, r#"{"op": "metrics"}"#);
+        assert_eq!(m1.str_or("op", ""), "metrics");
+        let snap = MetricsSnapshot::from_json(m1.get("snapshot").expect("snapshot"))
+            .expect("snapshot parses back into a MetricsSnapshot");
+        assert_eq!(snap.n_workers, 2);
+        assert_eq!(snap.live_workers, 2);
+        assert_eq!(snap.pool_scalar("requests_done"), pool.metrics.requests_done());
+        assert_eq!(snap.pool_scalar("requests_done"), 6);
+        assert_eq!(snap.pool_scalar("tokens_out"), pool.metrics.tokens_out());
+        assert_eq!(snap.pool_scalar("prefill_chunks"), pool.metrics.prefill_chunks());
+        assert_eq!(snap.pool_scalar("workers_dead"), 0);
+        // Per-worker snapshots sum to the pool aggregate.
+        let per_worker: u64 = snap.workers.iter().map(|w| w.scalar("tokens_out")).sum();
+        assert_eq!(per_worker, snap.pool_scalar("tokens_out"));
+        // The loop-phase accounting ticked on whichever workers served.
+        let iters: u64 = snap.workers.iter().map(|w| w.scalar("loop_iterations")).sum();
+        assert!(iters > 0, "phase accounting never ticked");
+        assert!(
+            matches!(m1.get("rates"), None | Some(Json::Null)),
+            "first scrape has no baseline: {}",
+            m1.dump()
+        );
+
+        // --- second scrape over a real window: rates are derived.
+        std::thread::sleep(Duration::from_millis(50));
+        for id in 7..=8u64 {
+            pool.submit(Request::greedy(id, "observe me again", 4)).unwrap();
+        }
+        let m2 = admin(addr, r#"{"op": "metrics"}"#);
+        let rates = m2.get("rates").expect("rates key");
+        assert!(
+            rates.num_or("window_s", -1.0) > 0.0,
+            "second scrape spans a window: {}",
+            m2.dump()
+        );
+        assert!(
+            rates.num_or("tok_per_s", -1.0) > 0.0,
+            "8 tokens moved inside the window: {}",
+            m2.dump()
+        );
+
+        // --- prometheus variant: text rendering of the same counters.
+        let prom = admin(addr, r#"{"op": "metrics", "format": "prometheus"}"#);
+        assert_eq!(prom.str_or("format", ""), "prometheus");
+        let text = prom.str_or("text", "");
+        assert!(
+            text.contains(&format!("cq_pool_tokens_out {}", pool.metrics.tokens_out())),
+            "{text}"
+        );
+        assert!(text.contains("cq_worker_tokens_out{worker=\"0\"}"), "{text}");
+        assert!(text.contains("cq_ttft_ms_bucket{"), "{text}");
+
+        // --- {"op":"health"} : router-level liveness and load.
+        let h = admin(addr, r#"{"op": "health"}"#);
+        assert_eq!(h.num_or("n_workers", 0.0) as usize, 2);
+        assert_eq!(h.num_or("live_workers", 0.0) as usize, 2);
+        assert_eq!(h.num_or("workers_dead", 0.0) as u64, 0);
+        let workers = h.get("workers").and_then(Json::as_arr).expect("workers array");
+        assert_eq!(workers.len(), 2);
+        for (w, entry) in workers.iter().enumerate() {
+            assert_eq!(entry.num_or("worker", -1.0) as usize, w);
+            assert_eq!(entry.get("alive").and_then(Json::as_bool), Some(true));
+            assert!(entry.get("queue_depth").is_some(), "{}", entry.dump());
+            assert!(entry.get("free_lanes").is_some(), "{}", entry.dump());
+            assert!(entry.get("prefill_backlog_tokens").is_some(), "{}", entry.dump());
+            assert!(entry.get("live_sessions").is_some(), "{}", entry.dump());
+        }
+
+        // --- {"op":"trace"} : every finished request left a ring entry
+        // with its full span history on the wire.
+        let t = admin(addr, r#"{"op": "trace"}"#);
+        let recs = t.get("workers").and_then(Json::as_arr).expect("workers array");
+        assert_eq!(recs.len(), 2);
+        let arr_len = |r: &Json, k: &str| r.get(k).and_then(Json::as_arr).map_or(0, |a| a.len());
+        let finished: usize = recs.iter().map(|r| arr_len(r, "finished")).sum();
+        assert_eq!(finished, 8, "{}", t.dump());
+        for r in recs {
+            assert_eq!(r.num_or("capacity", 0.0) as usize, ServeConfig::default_trace_ring());
+            assert_eq!(r.num_or("dropped", -1.0) as u64, 0);
+            assert_eq!(arr_len(r, "live"), 0);
+            assert_eq!(arr_len(r, "crashed"), 0);
+        }
+        // Spot-check one trace: span events in lifecycle order, done outcome.
+        let one = recs
+            .iter()
+            .flat_map(|r| r.get("finished").and_then(Json::as_arr).unwrap().iter())
+            .next()
+            .expect("at least one finished trace");
+        assert_eq!(one.str_or("outcome", ""), "done", "{}", one.dump());
+        let kinds: Vec<String> = one
+            .get("events")
+            .and_then(Json::as_arr)
+            .expect("events array")
+            .iter()
+            .map(|e| e.str_or("kind", ""))
+            .collect();
+        assert_eq!(kinds.first().map(String::as_str), Some("enqueued"), "{kinds:?}");
+        assert!(kinds.iter().any(|k| k == "first_token"), "{kinds:?}");
+        assert_eq!(kinds.last().map(String::as_str), Some("terminal"), "{kinds:?}");
+        // Worker filter narrows the reply to one recorder.
+        let t1 = admin(addr, r#"{"op": "trace", "worker": 1}"#);
+        let only = t1.get("workers").and_then(Json::as_arr).unwrap();
+        assert_eq!(only.len(), 1);
+        assert_eq!(only[0].num_or("worker", -1.0) as usize, 1);
+
+        // --- unknown ops answer with an error, not a hang or a lane.
+        let bad = client_request_line(addr, r#"{"op": "bogus"}"#).unwrap();
+        assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(bad.str_or("error", "").contains("unknown"), "{}", bad.dump());
+
+        stop.raise();
+        server.join().unwrap();
+    });
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn admin_ops_answer_while_a_worker_is_held_with_work_queued() {
+    let plan = FaultPlan::new();
+    let pool = ServePool::start(sim_cfg(&plan), 1);
+    let stop = StopSignal::new();
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:17932";
+
+    std::thread::scope(|scope| {
+        let p = &pool;
+        let server = scope.spawn(move || serve_tcp(p, addr, stop2).unwrap());
+        std::thread::sleep(Duration::from_millis(300));
+
+        // Freeze the only worker, then queue a request behind the pause.
+        plan.hold_worker(0);
+        plan.await_paused(0);
+        let stream = pool.submit_stream(Request::greedy(1, "stuck behind the hold", 4)).unwrap();
+
+        // Admin ops ride connection threads + shared metrics Arcs, so they
+        // must answer even though the worker loop is not moving.
+        let h = admin(addr, r#"{"op": "health"}"#);
+        let workers = h.get("workers").and_then(Json::as_arr).unwrap();
+        assert_eq!(h.num_or("live_workers", 0.0) as usize, 1);
+        assert_eq!(workers[0].get("alive").and_then(Json::as_bool), Some(true));
+        assert!(
+            workers[0].num_or("queue_depth", 0.0) as usize >= 1,
+            "held worker shows its backlog: {}",
+            h.dump()
+        );
+        let m = admin(addr, r#"{"op": "metrics"}"#);
+        assert!(m.get("snapshot").is_some());
+
+        // Release; the queued request completes and shows up in the ring.
+        plan.release_worker(0);
+        let resp = stream.drain().unwrap();
+        assert_eq!(resp.gen_tokens, 4);
+        let t = admin(addr, r#"{"op": "trace"}"#);
+        let recs = t.get("workers").and_then(Json::as_arr).unwrap();
+        let finished = recs[0].get("finished").and_then(Json::as_arr).unwrap();
+        assert_eq!(finished.len(), 1, "{}", t.dump());
+        assert_eq!(finished[0].num_or("id", 0.0) as u64, 1);
+        assert_eq!(finished[0].str_or("outcome", ""), "done");
+
+        stop.raise();
+        server.join().unwrap();
+    });
+    pool.shutdown().unwrap();
+}

@@ -46,6 +46,7 @@ fn cq_config(batch: usize) -> ServeConfig {
         session_ttl: None,
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
     }
 }
 

@@ -39,6 +39,7 @@ fn cq_config() -> ServeConfig {
         session_ttl: None,
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
     }
 }
 
@@ -62,6 +63,7 @@ fn sim_config(cache_budget: Option<usize>) -> ServeConfig {
         session_ttl: None,
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
     }
 }
 
@@ -319,6 +321,7 @@ fn pool_with_missing_assets_fails_fast_everywhere() {
         session_ttl: None,
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
     };
     let pool = ServePool::start(cfg, 3);
     assert_eq!(pool.n_workers(), 3);
