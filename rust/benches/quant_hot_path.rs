@@ -6,8 +6,9 @@
 //! reproduced here) against the batched kernels that replaced it:
 //!
 //! * `prefill_encode` — per-token brute-force centroid scan vs
-//!   `CqCodebooks::encode_span_parallel` (book-major dot-product expansion,
-//!   per-layer threads).
+//!   `CqCodebooks::encode_span_pooled` (book-major dot-product expansion
+//!   with the 8-lane assignment kernel, fanned across a persistent
+//!   [`WorkPool`] exactly like the serve loop's chunked prefill).
 //! * `seq_reload`    — per-token `PagedSeqCache::token` + `write_token`
 //!   staging vs `BatchStage::load_sequence` (whole-block bulk unpack,
 //!   precomputed strides, zero-alloc scratch).
@@ -18,17 +19,26 @@
 //! Emits the human table plus machine-readable `BENCH_quant.json` at the
 //! workspace root (ROADMAP perf trajectory).
 //!
-//!     cargo bench --bench quant_hot_path [-- --tokens 192 --iters 30 --quick --strict]
+//! `--check` enforces the committed `BENCH_quant.json` as a perf floor: any
+//! scenario whose fresh `us_per_token_new` regresses more than 15% past the
+//! committed measurement exits nonzero (CI's bench-floors job).  A missing
+//! or `measured: false` floor file establishes instead of enforcing — the
+//! freshly measured results are written for CI to commit, so the floor
+//! ratchets on the first run on real hardware and is enforced thereafter.
+//!
+//!     cargo bench --bench quant_hot_path \
+//!         [-- --tokens 192 --iters 30 --quick --strict --check]
 
 use cq::kvcache::{BatchStage, BlockConfig, BlockPool, CacheGeom, PagedSeqCache};
 use cq::quant::cq::{CqCodebooks, CqSpec};
 use cq::quant::pack::{pack_codes_ref, pack_into, packed_len, unpack_codes_ref, unpack_into};
 use cq::quant::{KvDims, KvKind};
 use cq::tensor::TensorF;
-use cq::util::bench::{emit_json, time_fn, Table};
+use cq::util::bench::{emit_json, time_fn, workspace_file, Table};
 use cq::util::cli::Args;
 use cq::util::json::Json;
 use cq::util::rng::Pcg64;
+use cq::util::workpool::WorkPool;
 
 /// The paper's headline serving config: CQ-8c8b on 4L/4H/hd64 (1 bit/FPN).
 const L: usize = 4;
@@ -89,10 +99,15 @@ fn bench_prefill_encode(tokens: usize, warmup: usize, iters: usize) -> Scenario 
     let books = CqCodebooks::synthetic(spec, L, H, HD, 1);
     let k = random_kv(L, H, HD, tokens, 2);
     let v = random_kv(L, H, HD, tokens, 3);
+    // The serving hot path: one persistent pool per worker, borrowed per
+    // chunk — sized like `build_encode_pool` so the bench times exactly
+    // what `prefill_chunk_fill` runs.
+    let avail = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let pool = WorkPool::new(L.min(avail));
 
     // Sanity: both paths must produce identical codes before timing them.
     let (kr, vr) = encode_reference(&books, &k, &v);
-    let (kn, vn) = books.encode_span_parallel(&k, &v, 0, tokens);
+    let (kn, vn) = books.encode_span_pooled(&k, &v, 0, tokens, &pool);
     // assign_reference and the expansion can only disagree on near-exact
     // float ties; on random normal data that has measure ~0, and any drift
     // would invalidate the comparison.
@@ -109,7 +124,7 @@ fn bench_prefill_encode(tokens: usize, warmup: usize, iters: usize) -> Scenario 
         std::hint::black_box(encode_reference(&books, &k, &v));
     });
     let t_new = time_fn(warmup, iters, || {
-        std::hint::black_box(books.encode_span_parallel(&k, &v, 0, tokens));
+        std::hint::black_box(books.encode_span_pooled(&k, &v, 0, tokens, &pool));
     });
     Scenario {
         name: "prefill_encode",
@@ -189,6 +204,52 @@ fn bench_pack_roundtrip(tokens: usize, warmup: usize, iters: usize, bits: u32) -
     }
 }
 
+/// Allowed `--check` slack over a committed floor before the run fails:
+/// wide enough to absorb shared-runner noise at `--quick` iteration counts,
+/// tight enough that an accidental O(k) regression in the assignment kernel
+/// (the smallest real regression class, ~2x) can never slip through.
+const CHECK_TOLERANCE: f64 = 0.15;
+
+/// Enforce the committed floors against this run's scenarios.  Returns the
+/// number of regressions; 0 when establishing (no committed measurement).
+fn check_floors(committed: Option<&Json>, scenarios: &[Scenario]) -> usize {
+    let Some(c) = committed else {
+        eprintln!("check: no parseable committed BENCH_quant.json; establishing floors");
+        return 0;
+    };
+    if c.get("measured").and_then(Json::as_bool) != Some(true) {
+        eprintln!("check: committed floors are unmeasured; establishing floors");
+        return 0;
+    }
+    let floors = c.get("scenarios").and_then(Json::as_arr).unwrap_or(&[]);
+    let mut regressions = 0;
+    for s in scenarios {
+        let floor = floors
+            .iter()
+            .find(|f| f.get("name").and_then(Json::as_str) == Some(s.name))
+            .map(|f| f.num_or("us_per_token_new", f64::INFINITY));
+        match floor {
+            None => eprintln!("check: {}: no committed floor (new scenario)", s.name),
+            Some(floor) => {
+                let limit = floor * (1.0 + CHECK_TOLERANCE);
+                let ok = s.us_per_token_new <= limit;
+                if !ok {
+                    regressions += 1;
+                }
+                eprintln!(
+                    "check: {}: {:.2} µs/token vs floor {:.2} (limit {:.2}) {}",
+                    s.name,
+                    s.us_per_token_new,
+                    floor,
+                    limit,
+                    if ok { "ok" } else { "REGRESSION" }
+                );
+            }
+        }
+    }
+    regressions
+}
+
 fn main() {
     // Args::parse treats argv[0] as the subcommand; give it one so the
     // first real `--flag` is not swallowed (cargo's own --bench is dropped).
@@ -196,6 +257,12 @@ fn main() {
     argv.extend(std::env::args().skip(1).filter(|a| a != "--bench"));
     let args = Args::parse(&argv).unwrap();
     let quick = args.flag("quick");
+    // Committed floors load BEFORE the run overwrites BENCH_quant.json.
+    let committed = args
+        .flag("check")
+        .then(|| std::fs::read_to_string(workspace_file("BENCH_quant.json")).ok())
+        .flatten()
+        .and_then(|s| Json::parse(&s).ok());
     let tokens = args.usize("tokens", if quick { 32 } else { 192 });
     let iters = args.usize("iters", if quick { 3 } else { 25 });
     let warmup = if quick { 1 } else { 3 };
@@ -263,5 +330,16 @@ fn main() {
     if args.flag("strict") && below > 0 {
         eprintln!("quant_hot_path: {below} scenario(s) below the 3x target (--strict)");
         std::process::exit(1);
+    }
+    if args.flag("check") {
+        let regressions = check_floors(committed.as_ref(), &scenarios);
+        if regressions > 0 {
+            eprintln!(
+                "quant_hot_path: {regressions} scenario(s) regressed >{:.0}% past the \
+                 committed floor (--check)",
+                CHECK_TOLERANCE * 100.0
+            );
+            std::process::exit(1);
+        }
     }
 }

@@ -10,7 +10,11 @@
 //! governs real accelerators: bytes-touched-per-token ratios are exact.
 //!
 //!     cargo bench --bench serve_throughput \
-//!         [-- --requests 16 --max-tokens 16 --workers 1,2,4 --clients 8]
+//!         [-- --requests 16 --max-tokens 16 --workers 1,2,4 --clients 8 --check]
+//!
+//! `--check` enforces the committed `BENCH_serve.json` throughput floors
+//! (>15% regression exits nonzero); without a runtime, or against an
+//! unmeasured floor file, it establishes instead of enforcing.
 
 use std::time::Instant;
 
@@ -18,7 +22,7 @@ use cq::bench_support::Pipeline;
 use cq::coordinator::{Event, Request, ServeConfig, ServePool, StreamHandle};
 use cq::metrics::TrafficModel;
 use cq::quant::cq::CqSpec;
-use cq::util::bench::{emit_json, Table, Timing};
+use cq::util::bench::{emit_json, workspace_file, Table, Timing};
 use cq::util::cli::Args;
 use cq::util::json::Json;
 
@@ -46,6 +50,49 @@ fn emit_serve_json(runtime: bool, scenarios: Vec<Json>) {
             ("scenarios", Json::Arr(scenarios)),
         ]),
     );
+}
+
+/// Allowed `--check` slack below a committed throughput floor before the
+/// run fails (serving numbers are noisier than the quant microbench, but
+/// 15% still catches any structural regression on the decode/prefill path).
+const CHECK_TOLERANCE: f64 = 0.15;
+
+/// `--check` floor enforcement against the committed `BENCH_serve.json`:
+/// every scenario with a fresh `tok_per_s` and a committed counterpart must
+/// stay above `floor * (1 - CHECK_TOLERANCE)`.  Missing or `measured:
+/// false` floors establish instead of enforcing, so the first measured run
+/// on real hardware sets the bar and later runs are held to it.
+fn check_floors(committed: Option<&Json>, fresh: &[Json]) -> usize {
+    let Some(c) = committed else {
+        eprintln!("check: no parseable committed BENCH_serve.json; establishing floors");
+        return 0;
+    };
+    if c.get("measured").and_then(Json::as_bool) != Some(true) {
+        eprintln!("check: committed floors are unmeasured; establishing floors");
+        return 0;
+    }
+    let floors = c.get("scenarios").and_then(Json::as_arr).unwrap_or(&[]);
+    let mut regressions = 0;
+    for s in fresh {
+        let name = s.get("name").and_then(Json::as_str);
+        let tps = s.get("tok_per_s").and_then(Json::as_f64);
+        let (Some(name), Some(tps)) = (name, tps) else { continue };
+        let floor = floors
+            .iter()
+            .find(|f| f.get("name").and_then(Json::as_str) == Some(name))
+            .and_then(|f| f.get("tok_per_s").and_then(Json::as_f64));
+        let Some(floor) = floor else { continue };
+        let limit = floor * (1.0 - CHECK_TOLERANCE);
+        let ok = tps >= limit;
+        if !ok {
+            regressions += 1;
+        }
+        eprintln!(
+            "check: {name}: {tps:.1} tok/s vs floor {floor:.1} (limit {limit:.1}) {}",
+            if ok { "ok" } else { "REGRESSION" }
+        );
+    }
+    regressions
 }
 
 struct ModeResult {
@@ -77,6 +124,7 @@ fn mode_cfg(cq: Option<&str>, batch: usize) -> ServeConfig {
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
+        encode_threads: ServeConfig::default_encode_threads(),
     }
 }
 
@@ -150,9 +198,16 @@ fn main() {
     let mut argv = vec!["serve_throughput".to_string()];
     argv.extend(std::env::args().skip(1).filter(|a| a != "--bench"));
     let args = Args::parse(&argv).unwrap();
+    // Committed floors load BEFORE the run overwrites BENCH_serve.json.
+    let committed = args
+        .flag("check")
+        .then(|| std::fs::read_to_string(workspace_file("BENCH_serve.json")).ok())
+        .flatten()
+        .and_then(|s| Json::parse(&s).ok());
     // Serving needs the AOT artifacts + a real PJRT engine; on build-only
     // hosts emit an explicitly-empty BENCH_serve.json instead of panicking
-    // so CI can exercise the bench binary everywhere.
+    // so CI can exercise the bench binary everywhere.  `--check` cannot
+    // enforce without measurements, so it degrades to establishing.
     if !cq::runtime_available() {
         eprintln!("serve_throughput: PJRT runtime/artifacts unavailable; skipping measurements");
         emit_serve_json(false, Vec::new());
@@ -556,5 +611,18 @@ fn main() {
         ("within_2pct", Json::Bool(delta_pct < 2.0)),
     ]));
 
+    let regressions = if args.flag("check") {
+        check_floors(committed.as_ref(), &scenario_rows)
+    } else {
+        0
+    };
     emit_serve_json(true, scenario_rows);
+    if regressions > 0 {
+        eprintln!(
+            "serve_throughput: {regressions} scenario(s) regressed >{:.0}% below the \
+             committed floor (--check)",
+            CHECK_TOLERANCE * 100.0
+        );
+        std::process::exit(1);
+    }
 }

@@ -1058,6 +1058,7 @@ mod tests {
             prefill_chunk: ServeConfig::default_prefill_chunk(),
             ttft_slo_chunks: None,
             trace_ring: ServeConfig::default_trace_ring(),
+            encode_threads: ServeConfig::default_encode_threads(),
         }
     }
 

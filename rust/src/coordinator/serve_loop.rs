@@ -93,6 +93,7 @@ use crate::quant::KvKind;
 use crate::runtime::{engine::{Arg, DevBuf}, Engine, Value};
 use crate::tensor::{TensorF, TensorI};
 use crate::util::rng::Pcg64;
+use crate::util::workpool::WorkPool;
 
 use super::batcher::{Batcher, PrefillSeed, PrefillState, ReservationGuard, SeqRun};
 use super::fault::{FaultPlan, SimSpec};
@@ -161,6 +162,12 @@ pub struct ServeConfig {
     /// worker for `{"op":"trace"}` scrapes and crash post-mortems
     /// (`--trace-ring`; 0 disables per-request tracing entirely).
     pub trace_ring: usize,
+    /// Persistent encode-pool width for chunked CQ prefill: threads per
+    /// worker, spawned once at startup and reused for every chunk (no
+    /// per-chunk thread churn).  `0` auto-sizes to
+    /// `min(n_layers, available parallelism)`; `1` encodes inline on the
+    /// serve thread (`--encode-threads`).
+    pub encode_threads: usize,
 }
 
 impl ServeConfig {
@@ -193,6 +200,12 @@ impl ServeConfig {
     pub fn default_trace_ring() -> usize {
         crate::metrics::trace::DEFAULT_TRACE_RING
     }
+
+    /// Default encode-pool sizing: `0` = auto (one thread per layer, capped
+    /// by the machine's available parallelism, resolved at worker startup).
+    pub fn default_encode_threads() -> usize {
+        0
+    }
 }
 
 impl Default for ServeConfig {
@@ -218,6 +231,7 @@ impl Default for ServeConfig {
             prefill_chunk: ServeConfig::default_prefill_chunk(),
             ttft_slo_chunks: None,
             trace_ring: ServeConfig::default_trace_ring(),
+            encode_threads: ServeConfig::default_encode_threads(),
         }
     }
 }
@@ -259,6 +273,9 @@ struct Ctx {
     /// Pool worker index (fault hooks + logs).
     worker: usize,
     faults: Option<Arc<FaultPlan>>,
+    /// Persistent encode pool: spawned once here, borrowed by every CQ
+    /// prefill chunk, joined when the worker retires (Ctx drop).
+    encode_pool: WorkPool,
 }
 
 /// Deterministic sim "quantization": per-token codes derived from the token
@@ -282,7 +299,29 @@ fn sim_next(tok: i32) -> i32 {
     (tok.wrapping_mul(31).wrapping_add(17)).rem_euclid(SIM_VOCAB as i32)
 }
 
-fn build_ctx(cfg: &ServeConfig) -> Result<Ctx> {
+/// Build the worker's persistent encode pool.  Threads spawn once here and
+/// are reused across every prefill chunk; `encode_threads == 0` auto-sizes
+/// to the layer count capped by the machine's parallelism, `1` disables
+/// threading (inline encode on the serve thread).  The live thread count is
+/// published as `encode_pool_threads` at construction and zeroed by the
+/// pool's exit hook after drop joins the workers — chaos tests read 0 as
+/// proof a retired worker's encode threads are gone.
+fn build_encode_pool(cfg: &ServeConfig, n_layers: usize, metrics: &Arc<ServeMetrics>) -> WorkPool {
+    let threads = match cfg.encode_threads {
+        0 => {
+            let avail = std::thread::available_parallelism().map_or(1, |n| n.get());
+            n_layers.min(avail)
+        }
+        n => n,
+    };
+    let mut pool = WorkPool::new(threads);
+    metrics.encode_pool_threads.set(pool.threads() as u64);
+    let m = metrics.clone();
+    pool.on_exit(move || m.encode_pool_threads.set(0));
+    pool
+}
+
+fn build_ctx(cfg: &ServeConfig, metrics: &Arc<ServeMetrics>) -> Result<Ctx> {
     if let Some(sim) = &cfg.sim {
         anyhow::ensure!(
             sim.max_prompt < sim.tmax,
@@ -308,6 +347,7 @@ fn build_ctx(cfg: &ServeConfig) -> Result<Ctx> {
             vocab: SIM_VOCAB,
             worker: cfg.worker_index,
             faults: cfg.faults.clone(),
+            encode_pool: build_encode_pool(cfg, geom.n_layers, metrics),
         });
     }
     let engine = Engine::load_default()?;
@@ -394,6 +434,7 @@ fn build_ctx(cfg: &ServeConfig) -> Result<Ctx> {
         vocab: mm.vocab,
         worker: cfg.worker_index,
         faults: cfg.faults.clone(),
+        encode_pool: build_encode_pool(cfg, geom.n_layers, metrics),
     })
 }
 
@@ -453,6 +494,7 @@ fn prefill_chunk_fill(
     ctx: &Ctx,
     shard: &mut PagedShard,
     run: &mut SeqRun,
+    metrics: &ServeMetrics,
     chunk: usize,
 ) -> Result<bool> {
     let p = run.prompt_ids.len();
@@ -474,11 +516,13 @@ fn prefill_chunk_fill(
         CacheMode::Sim { .. } => {
             // Synthetic quantize+store over this chunk's span only — the
             // radix hit skipped exactly the same tokens as in CQ serving.
+            let t_enc = Instant::now();
             let (mut k, mut v) = (Vec::new(), Vec::new());
             for &t in &run.prompt_ids[state.filled..end] {
                 sim_codes(&ctx.geom, t, &mut k, &mut v);
                 run.packed.append(&mut shard.pool, &k, &v)?;
             }
+            metrics.phases.record_encode(t_enc.elapsed());
         }
         CacheMode::Cq { books, .. } => {
             if state.seed.is_none() {
@@ -488,10 +532,14 @@ fn prefill_chunk_fill(
             let Some(PrefillSeed::Cq { k, v, .. }) = &state.seed else {
                 bail!("cq prefill seed missing");
             };
-            // Batched encode for this chunk: per-layer work fans across
-            // scoped threads, each book's centroid table is walked once for
-            // the span, and the codes bulk-append as packed records.
-            let (kc, vc) = books.encode_span_parallel(k, v, state.filled, end);
+            // Batched encode for this chunk: (layer, token-piece) work fans
+            // across the worker's persistent pool threads, each book's
+            // centroid table is walked once for the span, and the codes
+            // bulk-append as packed records.
+            let t_enc = Instant::now();
+            let (kc, vc) = books.encode_span_pooled(k, v, state.filled, end, &ctx.encode_pool);
+            metrics.phases.record_encode(t_enc.elapsed());
+            metrics.encode_pool_busy.set(ctx.encode_pool.last_scope_tasks());
             run.packed.append_span(&mut shard.pool, &kc, &vc, end - state.filled)?;
         }
         CacheMode::Fp { .. } => {
@@ -594,7 +642,7 @@ fn advance_prefill(
         run.req.priority == Priority::Interactive && batcher.has_pending_prefill(Priority::Batch)
     };
     let run = batcher.queued_mut(qi).expect("prefill index in queue");
-    match prefill_chunk_fill(ctx, shard, run, chunk_tokens) {
+    match prefill_chunk_fill(ctx, shard, run, metrics, chunk_tokens) {
         Ok(done) => {
             if done {
                 finish_prefill(run, metrics);
@@ -711,6 +759,11 @@ fn admit_request(
             return; // token drops here -> router sees the slot free again
         }
     };
+    // Radix compute-skip: the matched prefix is admitted already encoded —
+    // `PrefillState::new(hit_tokens)` below starts `filled` past it, so
+    // prefill performs zero centroid assignments for the span.  (Fp-mode
+    // admissions don't share and always report a zero hit.)
+    metrics.prefill_tokens_skipped.add(adm.hit_tokens as u64);
     // The crash guard mirrors the shard's reservation: if this worker dies
     // before the run settles through finish/cancel/abort, the guard's
     // unwind-time credit returns the partial reservation so the dead
@@ -937,7 +990,7 @@ pub fn serve_loop(
     rx: Receiver<Inbound>,
     metrics: Arc<ServeMetrics>,
 ) -> Result<()> {
-    let mut ctx = build_ctx(&cfg)?;
+    let mut ctx = build_ctx(&cfg, &metrics)?;
     // Warmup: compile the hot artifacts before the first request arrives so
     // first-token latency reflects steady state, not XLA compilation.
     // (Sim mode has no engine and nothing to warm.)

@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! `cq` — Coupled Quantization KV-cache serving stack.
 //!
 //! Reproduction of *"KV Cache is 1 Bit Per Channel: Efficient Large Language

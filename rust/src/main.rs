@@ -43,7 +43,7 @@ COMMANDS
               [--workers 2] [--cache-budget-mb 64] [--block-tokens 16]
               [--no-prefix-sharing] [--session-cap 256] [--session-ttl-s 3600]
               [--prefill-chunk 512] [--ttft-slo-chunks 8] [--trace-ring 256]
-              [--metrics-interval-s 10]
+              [--encode-threads 0] [--metrics-interval-s 10]
   client      --port 7878 --prompt \"...\" [--max-tokens 32] [--top-k 40]
               [--seed 7] [--session 12] [--stream] [--priority batch]
   gen-corpus  --corpus wiki2s --split train --bytes 200000 [--out file]
@@ -308,6 +308,7 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
             .has("ttft-slo-chunks")
             .then(|| args.u64("ttft-slo-chunks", 8)),
         trace_ring: args.usize("trace-ring", ServeConfig::default_trace_ring()),
+        encode_threads: args.usize("encode-threads", ServeConfig::default_encode_threads()),
     })
 }
 

@@ -139,6 +139,9 @@ impl WorkerSnapshot {
         put("cache_frag_bytes", m.cache_frag_bytes.get());
         put("prefix_lookup_tokens", m.prefix_lookup_tokens.get());
         put("prefix_hit_tokens", m.prefix_hit_tokens.get());
+        put("prefill_tokens_skipped", m.prefill_tokens_skipped.get());
+        put("encode_pool_busy", m.encode_pool_busy.get());
+        put("encode_pool_threads", m.encode_pool_threads.get());
         put("blocks_promoted", m.blocks_promoted.get());
         put("blocks_evicted", m.blocks_evicted.get());
         put("bytes_per_token", m.bytes_per_token.get());
@@ -147,10 +150,12 @@ impl WorkerSnapshot {
         put("loop_iterations", m.phases.iterations.get());
         put("phase_idle_ns", m.phases.idle_ns.get());
         put("phase_prefill_ns", m.phases.prefill_ns.get());
+        put("phase_encode_ns", m.phases.encode_ns.get());
         put("phase_decode_ns", m.phases.decode_ns.get());
         put("phase_store_ns", m.phases.store_ns.get());
         put("phase_last_idle_ns", m.phases.last_idle_ns.get());
         put("phase_last_prefill_ns", m.phases.last_prefill_ns.get());
+        put("phase_last_encode_ns", m.phases.last_encode_ns.get());
         put("phase_last_decode_ns", m.phases.last_decode_ns.get());
         put("phase_last_store_ns", m.phases.last_store_ns.get());
         put("trace_live", m.trace.live_count() as u64);
@@ -260,6 +265,7 @@ impl MetricsSnapshot {
         put("blocks_evicted", metrics.blocks_evicted());
         put("prefix_lookup_tokens", metrics.prefix_lookup_tokens());
         put("prefix_hit_tokens", metrics.prefix_hit_tokens());
+        put("prefill_tokens_skipped", metrics.prefill_tokens_skipped());
         let workers = metrics
             .workers()
             .iter()
@@ -436,6 +442,10 @@ mod tests {
         w0.cache_frag_bytes.observe_max(100);
         w0.prefix_lookup_tokens.add(200);
         w0.prefix_hit_tokens.add(50);
+        w0.prefill_tokens_skipped.add(50);
+        w1.prefill_tokens_skipped.add(6);
+        w0.encode_pool_busy.set(5);
+        w0.encode_pool_threads.set(4);
         w0.blocks_promoted.add(8);
         w0.blocks_evicted.add(3);
         w0.block_bytes.observe_max(64);
@@ -443,6 +453,7 @@ mod tests {
         w0.max_prompt_tokens.observe_max(48);
         w0.phases.iterations.add(10);
         w0.phases.record_idle(Duration::from_micros(500));
+        w0.phases.record_encode(Duration::from_micros(150));
         w0.phases.record_decode(Duration::from_micros(300));
         for ms in [1u64, 2, 8] {
             w0.ttft.record(Duration::from_millis(ms));
@@ -476,6 +487,14 @@ mod tests {
         assert_eq!(snap.workers[0].scalar("cache_in_use_bytes"), 3072);
         assert_eq!(snap.workers[0].scalar("trace_finished"), 1);
         assert_eq!(snap.workers[0].scalar("phase_idle_ns"), 500_000);
+        // Encode-pool + radix-skip observables survive the freeze: the
+        // per-worker scalars and the pool-level aggregate.
+        assert_eq!(snap.workers[0].scalar("prefill_tokens_skipped"), 50);
+        assert_eq!(snap.workers[0].scalar("encode_pool_busy"), 5);
+        assert_eq!(snap.workers[0].scalar("encode_pool_threads"), 4);
+        assert_eq!(snap.workers[0].scalar("phase_encode_ns"), 150_000);
+        assert_eq!(snap.workers[0].scalar("phase_last_encode_ns"), 150_000);
+        assert_eq!(snap.pool_scalar("prefill_tokens_skipped"), 56, "w0 + w1");
         let ttft = &snap.workers[0].histograms["ttft"];
         assert_eq!(ttft.count, 3);
         assert_eq!(ttft.sum_ns, 11_000_000);
@@ -525,6 +544,9 @@ mod tests {
         assert!(text.contains("cq_pool_tokens_out 150"), "{text}");
         assert!(text.contains("cq_pool_live_workers 2"), "{text}");
         assert!(text.contains("cq_worker_tokens_out{worker=\"0\"} 120"), "{text}");
+        assert!(text.contains("cq_pool_prefill_tokens_skipped 56"), "{text}");
+        assert!(text.contains("cq_worker_encode_pool_busy{worker=\"0\"} 5"), "{text}");
+        assert!(text.contains("cq_worker_phase_encode_ns{worker=\"0\"} 150000"), "{text}");
         assert!(text.contains("cq_ttft_ms_count{worker=\"0\"} 3"), "{text}");
         assert!(text.contains("cq_ttft_ms_bucket{worker=\"0\",le=\"+Inf\"} 3"), "{text}");
         // Bucket lines are cumulative: the last finite `le` carries the

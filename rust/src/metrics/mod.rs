@@ -290,16 +290,28 @@ impl TrafficModel {
 /// and store (per-lane quantize+append+stream after the step).  Cumulative
 /// counters give the lifetime split; the `last_*` levels give the most
 /// recent iteration's split (instantaneous, for live scrapes).
+///
+/// `encode` is a **sub-phase of prefill**: the slice of each prefill chunk
+/// spent in the centroid-assignment kernel (pooled `encode_span_pooled` in
+/// CQ mode, the synthetic code derivation in sim mode).  It is reported as
+/// a fraction of the same total as the four top-level phases, so
+/// `encode <= prefill` always — the gap is artifact forwards, packing and
+/// store bookkeeping.  This is the number the SIMD kernel + persistent
+/// encode pool are meant to shrink, visible live via `{"op":"metrics"}`.
 #[derive(Default)]
 pub struct PhaseMetrics {
     /// Scheduler iterations completed (including idle ones).
     pub iterations: Counter,
     pub idle_ns: Counter,
     pub prefill_ns: Counter,
+    /// Encode-kernel slice of `prefill_ns` (sub-phase, not additive with
+    /// the top-level four).
+    pub encode_ns: Counter,
     pub decode_ns: Counter,
     pub store_ns: Counter,
     pub last_idle_ns: Level,
     pub last_prefill_ns: Level,
+    pub last_encode_ns: Level,
     pub last_decode_ns: Level,
     pub last_store_ns: Level,
 }
@@ -317,6 +329,12 @@ impl PhaseMetrics {
         self.last_prefill_ns.set(ns);
     }
 
+    pub fn record_encode(&self, dur: std::time::Duration) {
+        let ns = dur.as_nanos() as u64;
+        self.encode_ns.add(ns);
+        self.last_encode_ns.set(ns);
+    }
+
     pub fn record_decode(&self, dur: std::time::Duration) {
         let ns = dur.as_nanos() as u64;
         self.decode_ns.add(ns);
@@ -329,20 +347,24 @@ impl PhaseMetrics {
         self.last_store_ns.set(ns);
     }
 
-    /// Cumulative `(idle, prefill, decode, store)` fractions of all
-    /// phase-attributed time; all zeros before the first iteration.
-    pub fn split(&self) -> (f64, f64, f64, f64) {
-        let (i, p, d, s) = (
+    /// Cumulative `(idle, prefill, encode, decode, store)` fractions; all
+    /// zeros before the first iteration.  The denominator is the four
+    /// top-level phases — `encode` is prefill's kernel sub-slice, so the
+    /// first, second, fourth and fifth components sum to 1 and
+    /// `encode <= prefill`.
+    pub fn split(&self) -> (f64, f64, f64, f64, f64) {
+        let (i, p, e, d, s) = (
             self.idle_ns.get() as f64,
             self.prefill_ns.get() as f64,
+            self.encode_ns.get() as f64,
             self.decode_ns.get() as f64,
             self.store_ns.get() as f64,
         );
         let total = i + p + d + s;
         if total <= 0.0 {
-            return (0.0, 0.0, 0.0, 0.0);
+            return (0.0, 0.0, 0.0, 0.0, 0.0);
         }
-        (i / total, p / total, d / total, s / total)
+        (i / total, p / total, e / total, d / total, s / total)
     }
 }
 
@@ -395,6 +417,19 @@ pub struct ServeMetrics {
     /// blocks (quantize+store skipped for exactly the hit span).
     pub prefix_lookup_tokens: Counter,
     pub prefix_hit_tokens: Counter,
+    /// Prompt tokens whose prefill **compute** was skipped entirely
+    /// (radix-hit prefix: chunked prefill starts past them, so zero
+    /// centroid assignments run).  A fully-hit prompt contributes its
+    /// whole length here — the radix compute-skip acceptance probe.
+    pub prefill_tokens_skipped: Counter,
+    /// Encode tasks dispatched by the most recent pooled prefill encode
+    /// (instantaneous fan-out width; 0 until the first CQ chunk).
+    pub encode_pool_busy: Level,
+    /// Worker threads owned by this worker's persistent encode pool; set
+    /// at pool construction, zeroed by the pool's exit hook once every
+    /// thread is joined — chaos tests read 0 here as proof that pool
+    /// threads never outlive a retired worker.
+    pub encode_pool_threads: Level,
     /// Block-pool lifecycle: blocks promoted into the radix index at
     /// completion and blocks reclaimed by LRU eviction.
     pub blocks_promoted: Counter,
@@ -445,9 +480,9 @@ impl ServeMetrics {
     }
 
     pub fn summary(&self, wall_secs: f64) -> String {
-        let (idle, prefill, decode, store) = self.phases.split();
+        let (idle, prefill, encode, decode, store) = self.phases.split();
         format!(
-            "requests={} rejected={} cancelled={} sessions_evicted={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms (int p50={:.1}ms batch p50={:.1}ms)  prefill_chunks={} preempts={}  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms p99={:.1}ms  cache peak={}B  prefix hit={:.0}% evicted={} frag={}B  loop[idle={:.0}% prefill={:.0}% decode={:.0}% store={:.0}%]",
+            "requests={} rejected={} cancelled={} sessions_evicted={} tokens={} tput={:.1} tok/s  ttft p50={:.1}ms (int p50={:.1}ms batch p50={:.1}ms)  prefill_chunks={} preempts={}  decode p50={:.2}ms p95={:.2}ms  e2e p50={:.1}ms p95={:.1}ms p99={:.1}ms  cache peak={}B  prefix hit={:.0}% skipped={} evicted={} frag={}B  loop[idle={:.0}% prefill={:.0}% (encode={:.0}%) decode={:.0}% store={:.0}%]",
             self.requests_done.get(),
             self.requests_rejected.get(),
             self.requests_cancelled.get(),
@@ -466,10 +501,12 @@ impl ServeMetrics {
             self.request_latency.p99(),
             self.cache_peak_bytes.get(),
             self.prefix_hit_rate() * 100.0,
+            self.prefill_tokens_skipped.get(),
             self.blocks_evicted.get(),
             self.cache_frag_bytes.get(),
             idle * 100.0,
             prefill * 100.0,
+            encode * 100.0,
             decode * 100.0,
             store * 100.0,
         )
@@ -544,6 +581,12 @@ impl PoolMetrics {
     /// Sessions evicted (LRU/TTL) across all workers.
     pub fn sessions_evicted(&self) -> u64 {
         self.sum(|m| m.sessions_evicted.get())
+    }
+
+    /// Prompt tokens whose prefill compute was skipped via radix hits,
+    /// across all workers.
+    pub fn prefill_tokens_skipped(&self) -> u64 {
+        self.sum(|m| m.prefill_tokens_skipped.get())
     }
 
     pub fn cache_bytes_reserved(&self) -> u64 {
@@ -842,22 +885,32 @@ mod tests {
     #[test]
     fn phase_metrics_split_and_levels() {
         let ph = PhaseMetrics::default();
-        assert_eq!(ph.split(), (0.0, 0.0, 0.0, 0.0), "empty split is zeros");
+        assert_eq!(ph.split(), (0.0, 0.0, 0.0, 0.0, 0.0), "empty split is zeros");
         ph.record_idle(Duration::from_micros(400));
         ph.record_prefill(Duration::from_micros(300));
+        ph.record_encode(Duration::from_micros(150));
         ph.record_decode(Duration::from_micros(200));
         ph.record_store(Duration::from_micros(100));
         ph.iterations.add(1);
-        let (i, p, d, s) = ph.split();
+        let (i, p, e, d, s) = ph.split();
         assert!((i - 0.4).abs() < 1e-9 && (p - 0.3).abs() < 1e-9);
         assert!((d - 0.2).abs() < 1e-9 && (s - 0.1).abs() < 1e-9);
+        // Encode is prefill's sub-slice over the same denominator: it does
+        // not inflate the top-level total and never exceeds prefill.
+        assert!((e - 0.15).abs() < 1e-9);
+        assert!((i + p + d + s - 1.0).abs() < 1e-9, "encode excluded from the total");
+        assert!(e <= p);
         // Levels hold the last iteration's value, counters accumulate.
         ph.record_decode(Duration::from_micros(600));
         assert_eq!(ph.last_decode_ns.get(), 600_000);
         assert_eq!(ph.decode_ns.get(), 800_000);
+        ph.record_encode(Duration::from_micros(50));
+        assert_eq!(ph.last_encode_ns.get(), 50_000);
+        assert_eq!(ph.encode_ns.get(), 200_000);
         let m = ServeMetrics::default();
         m.phases.record_idle(Duration::from_micros(10));
         assert!(m.summary(1.0).contains("loop[idle=100%"));
+        assert!(m.summary(1.0).contains("(encode=0%)"));
     }
 
     #[test]

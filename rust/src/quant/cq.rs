@@ -16,6 +16,7 @@ use super::{Codec, KvDims, KvKind};
 use crate::tensor::TensorF;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
+use crate::util::workpool::WorkPool;
 
 /// A CQ-<c>c<b>b configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -179,17 +180,27 @@ impl CqCodebooks {
         }
     }
 
-    /// Batched prefill encode: K and V codes for tokens `t0..t1` of batch
-    /// row 0, with per-layer work fanned across `std::thread::scope`
-    /// threads.  Returns token-major per-side buffers (`[t1-t0, L*H*G]`
-    /// each, layout `[t][l][h][g]`) — the record shape
+    /// Batched prefill encode through a caller-owned persistent
+    /// [`WorkPool`]: K and V codes for tokens `t0..t1` of batch row 0,
+    /// returned as token-major per-side buffers (`[t1-t0, L*H*G]` each,
+    /// layout `[t][l][h][g]`) — the record shape
     /// `PagedSeqCache::append_span` consumes.
-    pub fn encode_span_parallel(
+    ///
+    /// Fan-out granularity: each layer's span is cut into
+    /// `ceil(width / L)` token pieces, so the task count reaches the pool
+    /// width even when `layers < threads` (a 1-layer config still
+    /// parallelizes) while a wide model degenerates to one task per layer.
+    /// Every decomposition writes disjoint slices of the same per-layer
+    /// buffers, so the output is byte-identical regardless of pool size —
+    /// including the inline fallback (`width == 1`) and the small-span
+    /// path, which skip task dispatch entirely.
+    pub fn encode_span_pooled(
         &self,
         k: &TensorF,
         v: &TensorF,
         t0: usize,
         t1: usize,
+        pool: &WorkPool,
     ) -> (Vec<u32>, Vec<u32>) {
         let d = KvDims::of(k);
         assert_eq!(k.shape, v.shape);
@@ -200,34 +211,36 @@ impl CqCodebooks {
         if span == 0 {
             return (Vec::new(), Vec::new());
         }
-        // Thread spawn costs tens of µs; a mostly-radix-hit prompt encodes
-        // only a few private tokens, where the batched kernel alone already
-        // wins — run those (and single-layer models) inline.
+        // A mostly-radix-hit prompt encodes only a few private tokens,
+        // where the batched kernel alone already wins — run those inline
+        // even when a real pool is available.
         const PARALLEL_MIN_SPAN: usize = 4;
-        let mut layer_codes: Vec<(Vec<u32>, Vec<u32>)> = Vec::with_capacity(d.l);
-        if d.l == 1 || span < PARALLEL_MIN_SPAN {
-            for l in 0..d.l {
-                let mut kc = vec![0u32; span * hg];
-                let mut vc = vec![0u32; span * hg];
-                self.encode_layer_span_into(l, KvKind::Key, k, 0, t0, t1, &mut kc);
-                self.encode_layer_span_into(l, KvKind::Value, v, 0, t0, t1, &mut vc);
-                layer_codes.push((kc, vc));
+        let width = pool.width();
+        let mut layer_codes: Vec<(Vec<u32>, Vec<u32>)> = (0..d.l)
+            .map(|_| (vec![0u32; span * hg], vec![0u32; span * hg]))
+            .collect();
+        if width == 1 || span < PARALLEL_MIN_SPAN {
+            for (l, (kc, vc)) in layer_codes.iter_mut().enumerate() {
+                self.encode_layer_span_into(l, KvKind::Key, k, 0, t0, t1, kc);
+                self.encode_layer_span_into(l, KvKind::Value, v, 0, t0, t1, vc);
             }
         } else {
-            std::thread::scope(|s| {
-                let handles: Vec<_> = (0..d.l)
-                    .map(|l| {
+            let pieces = width.div_ceil(d.l).min(span);
+            let piece_tokens = span.div_ceil(pieces);
+            pool.scope(|s| {
+                for (l, (kc, vc)) in layer_codes.iter_mut().enumerate() {
+                    let piece_iter = kc
+                        .chunks_mut(piece_tokens * hg)
+                        .zip(vc.chunks_mut(piece_tokens * hg))
+                        .enumerate();
+                    for (p, (kcp, vcp)) in piece_iter {
+                        let a = t0 + p * piece_tokens;
+                        let b = a + kcp.len() / hg;
                         s.spawn(move || {
-                            let mut kc = vec![0u32; span * hg];
-                            let mut vc = vec![0u32; span * hg];
-                            self.encode_layer_span_into(l, KvKind::Key, k, 0, t0, t1, &mut kc);
-                            self.encode_layer_span_into(l, KvKind::Value, v, 0, t0, t1, &mut vc);
-                            (kc, vc)
-                        })
-                    })
-                    .collect();
-                for h in handles {
-                    layer_codes.push(h.join().expect("encode worker panicked"));
+                            self.encode_layer_span_into(l, KvKind::Key, k, 0, a, b, kcp);
+                            self.encode_layer_span_into(l, KvKind::Value, v, 0, a, b, vcp);
+                        });
+                    }
                 }
             });
         }
@@ -243,6 +256,21 @@ impl CqCodebooks {
             }
         }
         (k_all, v_all)
+    }
+
+    /// [`Self::encode_span_pooled`] behind a one-shot inline pool — for
+    /// callers without a persistent pool (offline eval, one-off tests).
+    /// Serving keeps a per-worker [`WorkPool`] alive across prefill chunks
+    /// instead: spawning threads here cost tens of µs per chunk, which is
+    /// exactly what the persistent pool exists to amortize.
+    pub fn encode_span_parallel(
+        &self,
+        k: &TensorF,
+        v: &TensorF,
+        t0: usize,
+        t1: usize,
+    ) -> (Vec<u32>, Vec<u32>) {
+        self.encode_span_pooled(k, v, t0, t1, &WorkPool::new(0))
     }
 
     /// Random unit-normal codebooks — no calibration pass needed.  Used by
@@ -647,6 +675,49 @@ mod tests {
                     &want_v[..],
                     "v token {t} (span {t0}..{t1})"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_encode_is_byte_identical_for_every_pool_width() {
+        use crate::util::workpool::WorkPool;
+        // The (layer × token-piece) decomposition must not be observable:
+        // any pool width — inline fallback included — yields byte-for-byte
+        // the single-thread encode_layer_span_into output.  The 1-layer
+        // geometry exercises the layers < threads token-split fan-out.
+        let mut rng = Pcg64::seed(31);
+        for &(l_n, h_n, hd, t_n) in &[(3usize, 2usize, 8usize, 17usize), (1, 2, 8, 13)] {
+            let spec = CqSpec::new(2, 4);
+            let books = CqCodebooks::synthetic(spec, l_n, h_n, hd, 7);
+            let mk = |rng: &mut Pcg64| {
+                let mut t = TensorF::zeros(&[l_n, 1, h_n, t_n, hd]);
+                for x in t.data.iter_mut() {
+                    *x = rng.normal() as f32;
+                }
+                t
+            };
+            let k = mk(&mut rng);
+            let v = mk(&mut rng);
+            let baseline = books.encode_span_parallel(&k, &v, 0, t_n);
+            for threads in [0usize, 2, 3, 5] {
+                let pool = WorkPool::new(threads);
+                for (t0, t1) in [(0usize, t_n), (3, 11), (9, 11), (5, 5)] {
+                    let got = books.encode_span_pooled(&k, &v, t0, t1, &pool);
+                    let want = books.encode_span_parallel(&k, &v, t0, t1);
+                    assert_eq!(got, want, "L={l_n} threads={threads} span {t0}..{t1}");
+                }
+                let full = books.encode_span_pooled(&k, &v, 0, t_n, &pool);
+                assert_eq!(full, baseline);
+                if pool.threads() > 1 {
+                    // Fan-out granularity: even a 1-layer model must cut
+                    // enough token pieces to cover the pool width.
+                    assert!(
+                        pool.last_scope_tasks() >= pool.threads() as u64,
+                        "L={l_n} threads={threads}: only {} tasks",
+                        pool.last_scope_tasks()
+                    );
+                }
             }
         }
     }

@@ -7,37 +7,133 @@
 //! ||c||²` with the `||x||²` term dropped for argmin: [`KMeans::assign`]
 //! derives `||c||²` inline, the batched hot path
 //! ([`KMeans::assign_batch_into`] / [`KMeans::assign_with_norms`])
-//! precomputes it once per codebook via [`KMeans::centroid_sq_norms_into`]
-//! and then runs one plain dot product per (point, centroid) that the
-//! compiler auto-vectorizes.  Both paths execute identical float operation
-//! sequences, so batch and scalar assignments agree bit-for-bit (ties
-//! resolve to the lowest centroid index in either).  The pre-expansion
-//! brute-force scan survives as [`KMeans::assign_reference`] for property
-//! tests and the `quant_hot_path` bench baseline.
+//! precomputes it once per codebook via [`KMeans::centroid_sq_norms_into`].
+//!
+//! # SIMD lane layout and tie-break contract
+//!
+//! The shared expansion kernel ([`nearest_by_expansion`]) walks the
+//! centroid table **8 centroids per iteration**: lane `l` of a block
+//! starting at centroid `j0` owns centroid `j0 + l` and accumulates its
+//! dot product over channels in ascending `i` order — the *same* float
+//! operation sequence (`dot[l] += x[i] * c[i]`, then `‖c‖² - 2·dot`) as
+//! the scalar `assign`, so every path agrees bit-for-bit.  The in-block
+//! horizontal min keeps the **lowest lane** on equal scores and blocks
+//! compare with strict `<` in ascending order, which together reproduce
+//! the scalar rule exactly: ties always resolve to the lowest centroid
+//! index.  (The tie rule assumes NaN-free scores; centroids are learned
+//! from finite activations, and the property tests pin the contract.)
+//! Centroid counts that are not a multiple of 8 fall through to a scalar
+//! tail over the remainder.  The stable build uses a manually unrolled
+//! 8-accumulator block; `--features simd` swaps in the `core::simd`
+//! (nightly `portable_simd`) implementation of the same block — both are
+//! bit-identical by construction.  The pre-expansion brute-force scan
+//! survives as [`KMeans::assign_reference`] for property tests and the
+//! `quant_hot_path` bench baseline.
 
 use crate::util::rng::Pcg64;
 
+/// Centroids processed per kernel iteration (one SIMD block).
+const LANES: usize = 8;
+
 /// Argmin over `‖c_j‖² - 2·x·c_j` for one point against a centroid table.
-/// Shared by the scalar and batched entry points so both produce identical
-/// results (same accumulation order, same strict-`<` tie rule).
+/// Shared by the batched entry points and the Lloyd loop; walks the table
+/// in 8-centroid blocks ([`block8_scores`]) with a scalar tail, keeping
+/// the scalar `assign`'s accumulation order and strict-`<` lowest-index
+/// tie rule bit-for-bit (see the module doc for the lane contract).
 #[inline]
 fn nearest_by_expansion(centroids: &[f32], cnorms: &[f32], dim: usize, x: &[f32]) -> usize {
     debug_assert_eq!(x.len(), dim);
+    let k = cnorms.len();
     let mut best = 0usize;
     let mut best_s = f32::INFINITY;
-    for (j, &cn) in cnorms.iter().enumerate() {
+    let blocks = k / LANES;
+    for blk in 0..blocks {
+        let j0 = blk * LANES;
+        let (s, lane) = block8_scores(centroids, cnorms, dim, x, j0);
+        // Strict `<` across blocks: an earlier block wins equal scores,
+        // and within a block `block8_scores` already kept the lowest lane
+        // — so ties resolve to the lowest centroid index overall.
+        if s < best_s {
+            best_s = s;
+            best = j0 + lane;
+        }
+    }
+    for j in blocks * LANES..k {
         let c = &centroids[j * dim..(j + 1) * dim];
         let mut dot = 0.0f32;
         for i in 0..dim {
             dot += x[i] * c[i];
         }
-        let s = cn - 2.0 * dot;
+        let s = cnorms[j] - 2.0 * dot;
         if s < best_s {
             best_s = s;
             best = j;
         }
     }
     best
+}
+
+/// Score one 8-centroid block against `x`: returns the block's minimum
+/// score and the lowest lane achieving it.  Manual unroll (stable Rust):
+/// eight independent accumulators break the single serial add chain of the
+/// old per-centroid loop, so the compiler can keep 8 FMA pipes busy.  Each
+/// lane still adds channel terms in ascending `i` order — bit-identical to
+/// the scalar kernel.
+#[cfg(not(feature = "simd"))]
+#[inline]
+fn block8_scores(
+    centroids: &[f32],
+    cnorms: &[f32],
+    dim: usize,
+    x: &[f32],
+    j0: usize,
+) -> (f32, usize) {
+    let block = &centroids[j0 * dim..(j0 + LANES) * dim];
+    let mut dot = [0.0f32; LANES];
+    for (i, &xi) in x.iter().enumerate() {
+        for (l, d) in dot.iter_mut().enumerate() {
+            *d += xi * block[l * dim + i];
+        }
+    }
+    let mut best_s = f32::INFINITY;
+    let mut lane = 0usize;
+    for (l, &d) in dot.iter().enumerate() {
+        let s = cnorms[j0 + l] - 2.0 * d;
+        if s < best_s {
+            best_s = s;
+            lane = l;
+        }
+    }
+    (best_s, lane)
+}
+
+/// `core::simd` variant of the 8-centroid block (nightly `portable_simd`,
+/// `--features simd`).  Lane `l` holds centroid `j0 + l`; each step does
+/// an element-wise multiply-then-add in ascending channel order, so the
+/// per-lane rounding matches the scalar kernel exactly.  The horizontal
+/// reduction takes `reduce_min` and then the lowest set lane of the
+/// equality mask — the lowest-index tie rule (NaN-free by contract).
+#[cfg(feature = "simd")]
+#[inline]
+fn block8_scores(
+    centroids: &[f32],
+    cnorms: &[f32],
+    dim: usize,
+    x: &[f32],
+    j0: usize,
+) -> (f32, usize) {
+    use core::simd::prelude::*;
+    let base = j0 * dim;
+    let mut dot = Simd::<f32, LANES>::splat(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        let lanes: [f32; LANES] = std::array::from_fn(|l| centroids[base + l * dim + i]);
+        let c = Simd::from_array(lanes);
+        dot = Simd::splat(xi) * c + dot;
+    }
+    let s = Simd::<f32, LANES>::from_slice(&cnorms[j0..j0 + LANES]) - Simd::splat(2.0) * dot;
+    let m = s.reduce_min();
+    let lane = s.simd_eq(Simd::splat(m)).to_bitmask().trailing_zeros() as usize;
+    (m, lane)
 }
 
 /// `‖c_j‖²` for every centroid row of `centroids`, reusing `out`.
@@ -519,6 +615,118 @@ mod tests {
             let x: Vec<f32> = (0..dim).map(|_| (rng.below(9) as f32) - 4.0).collect();
             assert_eq!(km.assign(&x), km.assign_reference(&x), "x={x:?}");
         }
+    }
+
+    /// The pre-block scalar kernel, kept verbatim as the bit-identity
+    /// oracle for the 8-lane rewrite: one serial accumulator per centroid,
+    /// strict-`<` lowest-index ties.
+    fn scalar_expansion(centroids: &[f32], cnorms: &[f32], dim: usize, x: &[f32]) -> usize {
+        let mut best = 0usize;
+        let mut best_s = f32::INFINITY;
+        for (j, &cn) in cnorms.iter().enumerate() {
+            let c = &centroids[j * dim..(j + 1) * dim];
+            let mut dot = 0.0f32;
+            for i in 0..dim {
+                dot += x[i] * c[i];
+            }
+            let s = cn - 2.0 * dot;
+            if s < best_s {
+                best_s = s;
+                best = j;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn prop_block_kernel_bit_identical_to_scalar_for_any_k_mod_8() {
+        // The 8-lane kernel must agree bit-for-bit with the serial scalar
+        // expansion on random data for every block/tail decomposition:
+        // k = 1 (degenerate, pure tail), k < 8, k % 8 ∈ {0, ±1}, and
+        // multi-block tables.  Dims exercise 1, odd, and wider-than-lane.
+        for &k in &[1usize, 2, 7, 8, 9, 15, 16, 17, 24, 31, 33] {
+            for &dim in &[1usize, 3, 8, 17] {
+                run_prop(6, (k * 131 + dim) as u64, |rng| {
+                    let km = KMeans {
+                        k,
+                        dim,
+                        centroids: (0..k * dim).map(|_| rng.normal() as f32).collect(),
+                        inertia: 0.0,
+                        iters_run: 0,
+                    };
+                    let mut cnorms = Vec::new();
+                    km.centroid_sq_norms_into(&mut cnorms);
+                    for _ in 0..20 {
+                        let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                        let blocked = km.assign_with_norms(&x, &cnorms);
+                        let scalar = scalar_expansion(&km.centroids, &cnorms, dim, &x);
+                        if blocked != scalar {
+                            return Err(format!(
+                                "k={k} dim={dim}: blocked={blocked} scalar={scalar} x={x:?}"
+                            ));
+                        }
+                    }
+                    Ok(())
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn block_kernel_ties_resolve_to_lowest_index_across_lane_and_block_edges() {
+        // Exact duplicate centroids placed to tie (a) within one block,
+        // (b) across the block/tail boundary, and (c) across two blocks:
+        // the kernel must always report the first copy, like the scalar
+        // rule.  k=19 gives two full blocks + a 3-wide tail.
+        let (k, dim) = (19usize, 2usize);
+        let mut centroids: Vec<f32> = (0..k * dim).map(|i| (i % 11) as f32 - 5.0).collect();
+        let dup = |c: &mut Vec<f32>, from: usize, to: usize| {
+            let src: Vec<f32> = c[from * dim..(from + 1) * dim].to_vec();
+            c[to * dim..(to + 1) * dim].copy_from_slice(&src);
+        };
+        dup(&mut centroids, 2, 5); // within block 0
+        dup(&mut centroids, 9, 14); // block 1 → block 1 (lanes 1 and 6)
+        dup(&mut centroids, 3, 17); // block 0 → tail
+        let km = KMeans { k, dim, centroids, inertia: 0.0, iters_run: 0 };
+        let mut cnorms = Vec::new();
+        km.centroid_sq_norms_into(&mut cnorms);
+        for probe in [2usize, 9, 3] {
+            let x: Vec<f32> = km.centroid(probe).to_vec();
+            assert_eq!(
+                km.assign_with_norms(&x, &cnorms),
+                probe,
+                "tie on duplicate of centroid {probe} must keep the first copy"
+            );
+            assert_eq!(km.assign_with_norms(&x, &cnorms), km.assign(&x));
+        }
+        // All-identical table: everything ties, index 0 wins.
+        let km1 = KMeans {
+            k: 17,
+            dim: 3,
+            centroids: vec![0.5; 17 * 3],
+            inertia: 0.0,
+            iters_run: 0,
+        };
+        let mut n1 = Vec::new();
+        km1.centroid_sq_norms_into(&mut n1);
+        assert_eq!(km1.assign_with_norms(&[9.0, -9.0, 1.0], &n1), 0);
+    }
+
+    #[test]
+    fn block_kernel_k1_degenerate_case() {
+        let km = KMeans {
+            k: 1,
+            dim: 4,
+            centroids: vec![1.0, -2.0, 0.5, 3.0],
+            inertia: 0.0,
+            iters_run: 0,
+        };
+        let mut cnorms = Vec::new();
+        km.centroid_sq_norms_into(&mut cnorms);
+        assert_eq!(km.assign_with_norms(&[0.0, 0.0, 0.0, 0.0], &cnorms), 0);
+        let mut out = vec![7u32; 3];
+        km.assign_batch_into(&[0.25f32; 12], &cnorms, &mut out);
+        assert_eq!(out, vec![0, 0, 0]);
     }
 
     #[test]

@@ -13,6 +13,26 @@
 //! * scalar baselines quantize keys per-channel and values per-token;
 //! * CQ quantizes both keys and values channel-coupled (groups of `c`
 //!   contiguous channels within a head share one `b`-bit code).
+//!
+//! # Hot path
+//!
+//! Serving cost concentrates in centroid assignment: every prefill token
+//! crosses `2·L·H·G` codebooks.  The measured pipeline is
+//!
+//! * [`kmeans`]'s dot-product-expansion assignment, vectorized 8 centroids
+//!   at a time (stable-Rust unroll by default, `core::simd` behind the
+//!   cargo `simd` feature; both bit-identical to the scalar kernel — see
+//!   the lane-layout contract in [`kmeans`]'s module doc);
+//! * [`cq::CqCodebooks::encode_span_pooled`], which fans (layer,
+//!   token-piece) encode tasks across a persistent
+//!   [`crate::util::workpool::WorkPool`] so chunked prefill reuses one set
+//!   of threads for the worker's whole lifetime;
+//! * radix compute-skip upstream of both: prompt tokens matched by the
+//!   paged store's prefix index are never encoded at all
+//!   (`prefill_tokens_skipped` in the serve metrics).
+//!
+//! Floors are enforced by `benches/quant_hot_path.rs --check` against the
+//! committed `BENCH_quant.json`.
 
 pub mod corr;
 pub mod cq;

@@ -11,6 +11,7 @@ pub mod cli;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod workpool;
 
 /// Format a byte count as a human-readable string.
 pub fn human_bytes(n: usize) -> String {

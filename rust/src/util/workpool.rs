@@ -1,0 +1,407 @@
+//! Persistent scoped worker pool for the prefill-encode hot path.
+//!
+//! `encode_span_parallel` used to pay `std::thread::scope` + one OS thread
+//! spawn per layer on *every* prefill chunk — tens of µs of kernel time per
+//! chunk before any centroid math ran.  A [`WorkPool`] amortizes that: each
+//! serve worker creates one pool at startup (sized `--encode-threads`),
+//! parks the threads on a condvar between chunks, and re-uses them for the
+//! whole worker lifetime.  [`WorkPool::spawned_total`] is the probe that
+//! proves the "no per-chunk spawns" claim in unit tests.
+//!
+//! # Lifecycle
+//!
+//! * **Create once** — [`WorkPool::new`] spawns `threads` workers
+//!   (`threads <= 1` spawns none: the inline fallback runs every task on
+//!   the caller, so tests and build-only hosts need no pool).
+//! * **Borrow per chunk** — [`WorkPool::scope`] hands out a [`Scope`]
+//!   whose [`Scope::spawn`] accepts non-`'static` closures (the encode
+//!   tasks borrow the activation tensors and output buffers of the current
+//!   chunk).  `scope` does not return until every spawned task has
+//!   finished — enforced by a drop guard, so it holds even if the scope
+//!   body unwinds.
+//! * **Panics propagate** — each task runs under `catch_unwind`; a
+//!   panicked task never takes down a pool thread.  Instead `scope`
+//!   re-raises on the *caller* after the drain, so an encode bug surfaces
+//!   on the serve loop (where the crash guards and the supervisor's
+//!   retire/re-dispatch machinery expect it), not on an anonymous pool
+//!   thread.
+//! * **Join on drop** — dropping the pool (worker retirement, normal or
+//!   panic unwind) sets the shutdown flag, wakes every worker, and joins
+//!   them; the optional exit hook then fires, which serving uses to zero
+//!   the `encode_pool_threads` gauge so "pool threads never outlive the
+//!   retired worker" is observable from chaos tests.
+//!
+//! # Safety
+//!
+//! Tasks are transmuted to `'static` to cross the queue. This is sound for
+//! the same reason `std::thread::scope` is: the scope's drop guard blocks
+//! until `pending == 0` before control can leave `scope`, so no task can
+//! outlive the borrows it captures.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A queued unit of work (type-erased, lifetime-erased encode task).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct State {
+    queue: VecDeque<Task>,
+    /// Tasks spawned into the current scope and not yet finished
+    /// (queued + running).  `scope` returns only once this is zero.
+    pending: usize,
+    /// Tasks that panicked since the last scope drain.
+    panicked: usize,
+    shutdown: bool,
+    /// Per-worker executed-task counters (observability + tests).
+    executed: Vec<u64>,
+    /// Tasks spawned into the most recently drained scope.
+    last_scope_tasks: u64,
+    /// Tasks spawned into the scope currently open (if any).
+    open_scope_tasks: u64,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signals workers: work available (or shutdown).
+    work_cv: Condvar,
+    /// Signals the scope owner: `pending` reached zero.
+    done_cv: Condvar,
+}
+
+/// Long-lived encode worker pool.  See the module doc for the lifecycle.
+pub struct WorkPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// OS threads ever spawned by this pool — constant after `new`, which
+    /// is exactly the "no per-chunk thread spawns" claim.
+    spawned_total: usize,
+    /// Runs after every worker has been joined on drop.
+    exit_hook: Option<Box<dyn FnOnce() + Send>>,
+}
+
+impl WorkPool {
+    /// Create a pool with `threads` workers.  `threads <= 1` creates the
+    /// inline fallback: no OS threads, every task runs on the caller.
+    pub fn new(threads: usize) -> WorkPool {
+        let workers = if threads <= 1 { 0 } else { threads };
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                pending: 0,
+                panicked: 0,
+                shutdown: false,
+                executed: vec![0; workers],
+                last_scope_tasks: 0,
+                open_scope_tasks: 0,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("cq-encode-{i}"))
+                    .spawn(move || worker_loop(&sh, i))
+                    .expect("spawn encode worker")
+            })
+            .collect::<Vec<_>>();
+        let spawned_total = handles.len();
+        WorkPool { shared, handles, spawned_total, exit_hook: None }
+    }
+
+    /// Register a hook that runs once every worker thread has been joined
+    /// (i.e. after the threads are provably dead).  Serving points this at
+    /// the worker's `encode_pool_threads` gauge.
+    pub fn on_exit(&mut self, hook: impl FnOnce() + Send + 'static) {
+        self.exit_hook = Some(Box::new(hook));
+    }
+
+    /// Number of pool worker threads (0 for the inline fallback).
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Parallel width for fan-out sizing: worker threads, or 1 inline.
+    pub fn width(&self) -> usize {
+        self.handles.len().max(1)
+    }
+
+    /// OS threads ever spawned by this pool (constant after construction).
+    pub fn spawned_total(&self) -> usize {
+        self.spawned_total
+    }
+
+    /// Per-worker executed-task counters (empty for the inline fallback).
+    pub fn per_thread_tasks(&self) -> Vec<u64> {
+        self.shared.state.lock().unwrap().executed.clone()
+    }
+
+    /// Tasks spawned into the most recently completed scope (inline scopes
+    /// included) — the instantaneous `encode_pool_busy` observable.
+    pub fn last_scope_tasks(&self) -> u64 {
+        self.shared.state.lock().unwrap().last_scope_tasks
+    }
+
+    /// Run `f` with a [`Scope`] that can spawn borrowing tasks onto the
+    /// pool.  Returns only after every spawned task finished; re-raises on
+    /// this thread if any task panicked.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'_, 'env>) -> R,
+    {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.open_scope_tasks = 0;
+        }
+        let scope = Scope { pool: self, _env: PhantomData };
+        // The guard drains on unwind too: no task may outlive `'env`.
+        let guard = DrainGuard(self);
+        let r = f(&scope);
+        drop(guard);
+        r
+    }
+
+    fn wait_idle(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.pending > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.last_scope_tasks = st.open_scope_tasks;
+    }
+}
+
+/// Blocks until the pool drains, then propagates task panics — runs even
+/// when the scope body itself unwinds (in which case task panics are
+/// swallowed: the caller is already panicking).
+struct DrainGuard<'a>(&'a WorkPool);
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait_idle();
+        let n = {
+            let mut st = self.0.shared.state.lock().unwrap();
+            std::mem::take(&mut st.panicked)
+        };
+        if n > 0 && !std::thread::panicking() {
+            panic!("workpool: {n} encode task(s) panicked");
+        }
+    }
+}
+
+impl Drop for WorkPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            // Workers catch task panics, so join only fails on a harness
+            // bug; never double-panic during an unwind.
+            if h.join().is_err() && !std::thread::panicking() {
+                panic!("workpool: encode worker thread panicked");
+            }
+        }
+        if let Some(hook) = self.exit_hook.take() {
+            hook();
+        }
+    }
+}
+
+/// Handle for spawning borrowing tasks; only obtainable inside
+/// [`WorkPool::scope`], which guarantees the drain before `'env` ends.
+pub struct Scope<'pool, 'env> {
+    pool: &'pool WorkPool,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> Scope<'_, 'env> {
+    /// Queue `f` onto the pool (inline fallback: run it immediately on the
+    /// caller, where a panic propagates natively).
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        if self.pool.handles.is_empty() {
+            let mut st = self.pool.shared.state.lock().unwrap();
+            st.open_scope_tasks += 1;
+            drop(st);
+            f();
+            return;
+        }
+        let task: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
+        // SAFETY: `scope` blocks until `pending == 0` before returning
+        // (via DrainGuard, unwind included), so the task cannot outlive
+        // the `'env` borrows it captures.  Same argument as
+        // `std::thread::scope`.
+        let task: Task = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(task)
+        };
+        let mut st = self.pool.shared.state.lock().unwrap();
+        st.pending += 1;
+        st.open_scope_tasks += 1;
+        st.queue.push_back(task);
+        drop(st);
+        self.pool.shared.work_cv.notify_one();
+    }
+}
+
+fn worker_loop(sh: &Shared, index: usize) {
+    let mut st = sh.state.lock().unwrap();
+    loop {
+        if let Some(task) = st.queue.pop_front() {
+            drop(st);
+            let panicked = catch_unwind(AssertUnwindSafe(task)).is_err();
+            st = sh.state.lock().unwrap();
+            st.executed[index] += 1;
+            if panicked {
+                st.panicked += 1;
+            }
+            st.pending -= 1;
+            if st.pending == 0 {
+                sh.done_cv.notify_all();
+            }
+        } else if st.shutdown {
+            return;
+        } else {
+            st = sh.work_cv.wait(st).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn inline_fallback_runs_tasks_on_the_caller() {
+        let pool = WorkPool::new(1);
+        assert_eq!(pool.threads(), 0, "<=1 threads means no pool threads");
+        assert_eq!(pool.width(), 1);
+        let caller = std::thread::current().id();
+        let mut out = vec![0u32; 4];
+        pool.scope(|s| {
+            for (i, slot) in out.iter_mut().enumerate() {
+                s.spawn(move || {
+                    assert_eq!(std::thread::current().id(), caller);
+                    *slot = i as u32 + 1;
+                });
+            }
+        });
+        assert_eq!(out, [1, 2, 3, 4]);
+        assert_eq!(pool.last_scope_tasks(), 4);
+        assert_eq!(pool.spawned_total(), 0);
+    }
+
+    #[test]
+    fn threads_spawn_once_per_pool_lifetime_not_per_scope() {
+        let pool = WorkPool::new(3);
+        assert_eq!(pool.threads(), 3);
+        let hits = AtomicUsize::new(0);
+        // Many scopes — the per-chunk pattern.  The spawn counter must not
+        // move: that is the "no per-chunk thread spawns" acceptance probe.
+        for _ in 0..50 {
+            pool.scope(|s| {
+                for _ in 0..4 {
+                    s.spawn(|| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 200);
+        assert_eq!(pool.spawned_total(), 3, "threads created once, reused across scopes");
+        assert_eq!(pool.per_thread_tasks().iter().sum::<u64>(), 200);
+        assert_eq!(pool.last_scope_tasks(), 4);
+    }
+
+    #[test]
+    fn all_pool_threads_receive_work() {
+        const THREADS: usize = 4;
+        let pool = WorkPool::new(THREADS);
+        // Each task parks until all THREADS tasks have started: a thread
+        // cannot run a second task while its first is parked, so every
+        // pool thread must pick up exactly one.
+        let arrived = Arc::new((Mutex::new(0usize), Condvar::new()));
+        pool.scope(|s| {
+            for _ in 0..THREADS {
+                let arrived = arrived.clone();
+                s.spawn(move || {
+                    let (lock, cv) = &*arrived;
+                    let mut n = lock.lock().unwrap();
+                    *n += 1;
+                    cv.notify_all();
+                    while *n < THREADS {
+                        n = cv.wait(n).unwrap();
+                    }
+                });
+            }
+        });
+        let per = pool.per_thread_tasks();
+        assert_eq!(per.len(), THREADS);
+        assert!(
+            per.iter().all(|&c| c == 1),
+            "every pool thread must have taken exactly one task: {per:?}"
+        );
+    }
+
+    #[test]
+    fn task_panic_propagates_to_the_scope_caller_and_pool_survives() {
+        let pool = WorkPool::new(2);
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|| panic!("boom"));
+                s.spawn(|| {});
+            });
+        }));
+        assert!(err.is_err(), "task panic must re-raise on the scope caller");
+        // The pool is still serviceable: no thread died with the task.
+        let ran = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 4);
+        assert_eq!(pool.spawned_total(), 2);
+    }
+
+    #[test]
+    fn drop_joins_workers_then_fires_exit_hook() {
+        let fired = Arc::new(AtomicUsize::new(0));
+        let mut pool = WorkPool::new(2);
+        let f = fired.clone();
+        pool.on_exit(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.scope(|s| s.spawn(|| {}));
+        assert_eq!(fired.load(Ordering::SeqCst), 0, "hook only fires at drop");
+        drop(pool);
+        assert_eq!(fired.load(Ordering::SeqCst), 1, "hook fired after join");
+    }
+
+    #[test]
+    fn scope_blocks_until_borrowed_work_finishes() {
+        let pool = WorkPool::new(2);
+        let mut data = vec![0u64; 64];
+        pool.scope(|s| {
+            for chunk in data.chunks_mut(16) {
+                s.spawn(move || {
+                    for v in chunk.iter_mut() {
+                        *v += 7;
+                    }
+                });
+            }
+        });
+        // If scope returned early this read would race the tasks (and
+        // miri/tsan would flag it); the sum proves every task ran.
+        assert_eq!(data.iter().sum::<u64>(), 64 * 7);
+    }
+}

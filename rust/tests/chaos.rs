@@ -44,6 +44,7 @@ fn sim_cfg(plan: &Arc<FaultPlan>, cache_budget: Option<usize>) -> ServeConfig {
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
+        encode_threads: ServeConfig::default_encode_threads(),
     }
 }
 
@@ -657,4 +658,76 @@ fn interactive_ttft_beats_in_flight_batch_prefill() {
     await_router_idle(&pool);
     assert_cache_baseline(&pool, &[0]);
     pool.shutdown().expect("clean shutdown");
+}
+
+/// Scenario 12 — **encode-pool lifecycle across a worker kill**: every
+/// worker owns ONE persistent encode pool for its whole lifetime (spawned
+/// at startup, reused by every prefill chunk).  When a worker is killed
+/// mid-prefill, the unwind drops its `Ctx`, which joins the pool's threads
+/// before the death notice lands — observable as the worker's
+/// `encode_pool_threads` level dropping to 0 — while the survivor's pool
+/// stays live and serves every re-dispatched request to the same bytes.
+/// The dead shard's partial reservation is credited back by the crash
+/// guard, exactly as in the pool-less kill scenarios.
+#[test]
+fn killed_worker_joins_encode_pool_and_survivor_pool_serves_redispatches() {
+    let plan = FaultPlan::new();
+    plan.hold_worker(0);
+    plan.hold_worker(1);
+    let mut cfg = sim_cfg(&plan, None);
+    cfg.prefill_chunk = 4;
+    // Explicit width: auto-sizing may resolve to 1 thread (inline, no pool
+    // threads to observe) on a small sim geometry.
+    cfg.encode_threads = 2;
+    let pool = ServePool::start(cfg, 2);
+    plan.await_paused(0);
+    plan.await_paused(1);
+    // Both workers published their pool width at startup.
+    assert_eq!(pool.metrics.worker(0).encode_pool_threads.get(), 2);
+    assert_eq!(pool.metrics.worker(1).encode_pool_threads.get(), 2);
+
+    // 12-token prompt = 3 chunks at --prefill-chunk 4: the kill at lifetime
+    // chunk 1 provably lands mid-prefill, with the pool already used.
+    let prompt = "e".repeat(12);
+    let handles: Vec<StreamHandle> = (0..6)
+        .map(|i| pool.submit_stream(Request::greedy(i, &prompt, 6)).expect("dispatch"))
+        .collect();
+    let on_dead = handles.iter().filter(|h| h.worker() == Some(0)).count() as u64;
+    assert!(on_dead > 0, "scenario needs traffic on the doomed worker");
+
+    plan.kill_worker_at_prefill_chunk(0, 1);
+    plan.release_worker(0);
+    await_live_workers(&pool, 1);
+    // The unwind joined the dead worker's encode threads and fired the
+    // pool's exit hook (zeroing the level).  Bounded poll: the hook races
+    // the supervisor's death notice by a hair.
+    let t0 = Instant::now();
+    while pool.metrics.worker(0).encode_pool_threads.get() != 0 {
+        assert!(t0.elapsed() < DEADLINE, "dead worker's encode pool never joined");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // The survivor's pool is untouched by its peer's death.
+    assert_eq!(pool.metrics.worker(1).encode_pool_threads.get(), 2);
+    plan.release_worker(1);
+
+    let mut texts = Vec::new();
+    for h in &handles {
+        let evs = drain_events(h);
+        let resp = done_of(&evs);
+        assert_eq!(resp.gen_tokens, 6, "request {} served in full", h.id());
+        texts.push(resp.text.clone());
+    }
+    assert!(
+        texts.iter().all(|t| t == &texts[0]),
+        "survivor-pool encodes must decode identically to undisturbed requests"
+    );
+
+    assert_eq!(pool.metrics.requests_redispatched.get(), on_dead);
+    assert_eq!(pool.metrics.workers_dead.get(), 1);
+    assert_eq!(pool.metrics.worker(1).requests_done.get(), 6, "survivor served everything");
+
+    await_router_idle(&pool);
+    // Crash guards credited the dead shard's partial reservations on unwind.
+    assert_cache_baseline(&pool, &[0, 1]);
+    assert!(pool.shutdown().is_err(), "panicked worker surfaces at shutdown");
 }

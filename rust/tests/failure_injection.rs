@@ -101,6 +101,7 @@ fn serve_loop_fails_fast_on_missing_assets() {
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
+        encode_threads: ServeConfig::default_encode_threads(),
     };
     let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
     let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
@@ -143,6 +144,7 @@ fn serve_config_validates_batch_and_codebook_tag() {
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
+        encode_threads: ServeConfig::default_encode_threads(),
     };
     let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
     let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
@@ -171,6 +173,7 @@ fn sim_pool_cfg(plan: &std::sync::Arc<FaultPlan>) -> ServeConfig {
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
+        encode_threads: ServeConfig::default_encode_threads(),
     }
 }
 

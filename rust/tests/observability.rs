@@ -33,6 +33,7 @@ fn sim_cfg(plan: &Arc<FaultPlan>) -> ServeConfig {
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
+        encode_threads: ServeConfig::default_encode_threads(),
     }
 }
 

@@ -47,6 +47,7 @@ fn cq_config(batch: usize) -> ServeConfig {
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
+        encode_threads: ServeConfig::default_encode_threads(),
     }
 }
 

@@ -40,6 +40,7 @@ fn cq_config() -> ServeConfig {
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
+        encode_threads: ServeConfig::default_encode_threads(),
     }
 }
 
@@ -64,6 +65,7 @@ fn sim_config(cache_budget: Option<usize>) -> ServeConfig {
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
+        encode_threads: ServeConfig::default_encode_threads(),
     }
 }
 
@@ -322,6 +324,7 @@ fn pool_with_missing_assets_fails_fast_everywhere() {
         prefill_chunk: ServeConfig::default_prefill_chunk(),
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
+        encode_threads: ServeConfig::default_encode_threads(),
     };
     let pool = ServePool::start(cfg, 3);
     assert_eq!(pool.n_workers(), 3);
@@ -405,5 +408,35 @@ fn router_estimates_session_turns_against_full_history() {
         .expect("turn 3");
     assert_eq!(r3.gen_tokens, 8);
     assert_eq!(pool.metrics.router_rejected.get(), 1, "fitting turn admitted");
+    pool.shutdown().expect("clean shutdown");
+}
+
+/// Radix compute-skip acceptance: a prompt fully covered by frozen cached
+/// prefix blocks is admitted with `hit_tokens == prompt_tokens`, so chunked
+/// prefill starts past the whole prompt and performs ZERO quantize
+/// (centroid-assignment) work — observable as `prefill_tokens_skipped`
+/// advancing by exactly the prompt length.  Runtime-free (sim backend).
+#[test]
+fn fully_radix_hit_prompt_skips_all_prefill_compute() {
+    // sim_config: 4-token blocks, prefix sharing on.  A 12-token prompt is
+    // exactly 3 blocks; the first request freezes them (15 cached tokens =
+    // 3 full + 1 partial block), so the identical second request hits the
+    // whole prompt.
+    let pool = ServePool::start(sim_config(None), 1);
+    let prompt = "p".repeat(12);
+    let r1 = pool.submit(Request::greedy(1, &prompt, 4)).expect("first request");
+    assert_eq!(r1.gen_tokens, 4);
+    let w = pool.metrics.worker(0);
+    assert_eq!(w.prefill_tokens_skipped.get(), 0, "cold store skips nothing");
+
+    let r2 = pool.submit(Request::greedy(2, &prompt, 4)).expect("second request");
+    assert_eq!(r2.text, r1.text, "shared prefix serves the same stream");
+    assert_eq!(
+        w.prefill_tokens_skipped.get(),
+        prompt.len() as u64,
+        "full-prefix hit must skip the entire prompt's encode"
+    );
+    assert_eq!(w.prefix_hit_tokens.get(), prompt.len() as u64);
+    assert_eq!(pool.metrics.prefill_tokens_skipped(), prompt.len() as u64);
     pool.shutdown().expect("clean shutdown");
 }
