@@ -125,6 +125,8 @@ fn mode_cfg(cq: Option<&str>, batch: usize) -> ServeConfig {
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
         encode_threads: ServeConfig::default_encode_threads(),
+        codec: None,
+        policies: Vec::new(),
     }
 }
 

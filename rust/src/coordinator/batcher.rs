@@ -74,11 +74,20 @@ pub enum PrefillSeed {
 pub struct ReservationGuard {
     metrics: Arc<ServeMetrics>,
     bytes: u64,
+    /// Named policy whose resident-byte ledger this reservation was charged
+    /// to; a crash settles that ledger too, not just the shard counter.
+    policy: Option<String>,
 }
 
 impl ReservationGuard {
     pub fn new(metrics: Arc<ServeMetrics>, bytes: u64) -> ReservationGuard {
-        ReservationGuard { metrics, bytes }
+        ReservationGuard { metrics, bytes, policy: None }
+    }
+
+    /// Also settle `policy`'s per-tenant byte ledger on a crash unwind.
+    pub fn for_policy(mut self, policy: Option<&str>) -> ReservationGuard {
+        self.policy = policy.map(str::to_string);
+        self
     }
 
     /// Orderly settlement: the shard accounts the release itself.
@@ -91,6 +100,9 @@ impl Drop for ReservationGuard {
     fn drop(&mut self) {
         if self.bytes > 0 {
             self.metrics.cache_released_bytes.add(self.bytes);
+            if let Some(p) = &self.policy {
+                self.metrics.policy_bytes.sub(p, self.bytes);
+            }
         }
     }
 }
@@ -240,6 +252,13 @@ impl Batcher {
                 r.prefill.as_ref().map(|p| r.prompt_tokens.saturating_sub(p.filled) as u64)
             })
             .sum()
+    }
+
+    /// Every live run — queued (any prefill stage) and slotted — in no
+    /// particular order.  The serve loop republishes per-iteration occupancy
+    /// levels (window-pen tokens) from this instead of tracking deltas.
+    pub fn runs(&self) -> impl Iterator<Item = &SeqRun> {
+        self.queue.iter().chain(self.slots.iter().filter_map(Option::as_ref))
     }
 
     pub fn queued(&self, i: usize) -> Option<&SeqRun> {

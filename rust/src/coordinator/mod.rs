@@ -104,6 +104,10 @@ pub struct Request {
     pub session_id: Option<u64>,
     /// Scheduling class (wire field `priority`); defaults to interactive.
     pub priority: Priority,
+    /// Named quantization policy (wire field `policy`, v2.3).  `None` uses
+    /// the worker's default codec; a name must match one of the pool's
+    /// configured `--policies` or the request is rejected at admission.
+    pub policy: Option<String>,
 }
 
 impl Request {
@@ -117,12 +121,19 @@ impl Request {
             seed: id,
             session_id: None,
             priority: Priority::Interactive,
+            policy: None,
         }
     }
 
     /// Attach this request to a multi-turn session.
     pub fn in_session(mut self, session_id: u64) -> Request {
         self.session_id = Some(session_id);
+        self
+    }
+
+    /// Serve this request under a named quantization policy.
+    pub fn with_policy(mut self, policy: &str) -> Request {
+        self.policy = Some(policy.to_string());
         self
     }
 

@@ -62,8 +62,9 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::{PoolMetrics, ServeMetrics};
+use crate::quant::policy::{PolicyDescriptor, PolicyTable};
 
-use super::serve_loop::{serve_loop, ServeConfig};
+use super::serve_loop::{build_policy_table, serve_loop, ServeConfig};
 use super::{Event, EventSink, Inbound, Priority, Request, Response, SupervisorMsg};
 
 /// Shared load snapshot for one worker: how many requests have been
@@ -273,6 +274,30 @@ pub(crate) fn pool_admission_rejects(
     est > (budget as u64).saturating_sub(bytes_in_use)
 }
 
+/// Policy-aware variant of the pool admission gate: the request's byte
+/// estimate comes from ITS policy descriptor
+/// ([`PolicyDescriptor::reserve_bytes`] over the pool's published quantized
+/// and fp16 rates), so an fp16 tenant is gated on fp16 math and a windowed
+/// tenant on its mixed rate — not the pool-wide quantized constant.  A zero
+/// estimate means no worker has published the relevant rate yet: admit and
+/// let the shard decide, matching the legacy gate's semantics.
+pub(crate) fn pool_admission_rejects_policy(
+    total_budget: Option<usize>,
+    policy: &PolicyDescriptor,
+    q_bpt: u64,
+    fp_bpt: u64,
+    bytes_in_use: u64,
+    prompt_tokens: usize,
+    max_new: usize,
+) -> bool {
+    let Some(budget) = total_budget else { return false };
+    let est = policy.reserve_bytes(prompt_tokens + max_new, q_bpt, fp_bpt);
+    if est == 0 {
+        return false;
+    }
+    est > (budget as u64).saturating_sub(bytes_in_use)
+}
+
 /// Estimated time-to-first-token for a new request on a worker that already
 /// has `backlog_tokens` of prefill pending, in prefill chunks: the worker
 /// advances one chunk per loop iteration, and the new prompt queues behind
@@ -328,6 +353,10 @@ struct RouterState {
     /// interactive request whose best-case estimate across live workers
     /// exceeds this is rejected retryably at the router.
     ttft_slo_chunks: Option<u64>,
+    /// The pool's per-tenant policy table (same specs every worker
+    /// validated): the router prices policy-carrying requests with it and
+    /// fast-fails unknown names without a worker round-trip.
+    policies: PolicyTable,
     metrics: Arc<PoolMetrics>,
 }
 
@@ -509,6 +538,27 @@ impl RouterState {
                 },
             }
         }
+        // --- Per-tenant policy resolution --------------------------------
+        // An unknown policy name is a client error: fail it here,
+        // non-retryably, without burning a worker round-trip.
+        let policy = match req.policy.as_deref() {
+            None => None,
+            Some(name) => match self.policies.get(name) {
+                Some(d) => Some(d),
+                None => {
+                    self.metrics.router_rejected.add(1);
+                    let _ = tx.send(Event::Failed {
+                        id,
+                        reason: format!(
+                            "[rejected: unknown policy '{name}' (serving: {:?})]",
+                            self.policies.names()
+                        ),
+                        retryable: false,
+                    });
+                    return Dispatched::Terminal;
+                }
+            },
+        };
         // --- Pool-wide admission estimate -------------------------------
         let hard_in_use = self
             .metrics
@@ -519,13 +569,25 @@ impl RouterState {
             req.prompt.len(),
             self.metrics.max_prompt_tokens() as usize,
         );
-        if pool_admission_rejects(
-            self.total_budget,
-            self.metrics.bytes_per_token(),
-            hard_in_use,
-            prompt_tokens,
-            req.max_new,
-        ) {
+        let over_budget = match policy {
+            None => pool_admission_rejects(
+                self.total_budget,
+                self.metrics.bytes_per_token(),
+                hard_in_use,
+                prompt_tokens,
+                req.max_new,
+            ),
+            Some(d) => pool_admission_rejects_policy(
+                self.total_budget,
+                d,
+                self.metrics.bytes_per_token(),
+                self.metrics.fp16_bytes_per_token(),
+                hard_in_use,
+                prompt_tokens,
+                req.max_new,
+            ),
+        };
+        if over_budget {
             self.metrics.router_rejected.add(1);
             let _ = tx.send(Event::Failed {
                 id,
@@ -785,12 +847,18 @@ impl ServePool {
             worker_metrics.push(metrics);
         }
         let metrics = Arc::new(PoolMetrics::new(worker_metrics));
+        // The router shares the workers' validated policy table.  Invalid
+        // specs leave it empty here — the workers themselves fail startup
+        // with the descriptive error, and policy-carrying requests then
+        // fast-fail at the router as unknown names.
+        let policies = build_policy_table(&cfg).unwrap_or_default();
         let state = Arc::new(RouterState {
             workers,
             rr: AtomicUsize::new(0),
             total_budget: cfg.cache_budget,
             prefill_chunk: cfg.prefill_chunk,
             ttft_slo_chunks: cfg.ttft_slo_chunks,
+            policies,
             metrics: metrics.clone(),
         });
         let sup_state = state.clone();
@@ -1059,6 +1127,8 @@ mod tests {
             ttft_slo_chunks: None,
             trace_ring: ServeConfig::default_trace_ring(),
             encode_threads: ServeConfig::default_encode_threads(),
+            codec: None,
+            policies: Vec::new(),
         }
     }
 
@@ -1305,6 +1375,54 @@ mod tests {
             other => panic!("expected Failed, got {other:?}"),
         }
         assert!(pool.shutdown().is_err());
+    }
+
+    #[test]
+    fn policy_requests_price_admission_at_their_own_rate() {
+        let mut cfg = dead_worker_cfg(Some(1024));
+        cfg.policies = vec!["fp16".into()];
+        let pool = ServePool::start(cfg, 1);
+        pool.metrics.worker(0).bytes_per_token.observe_max(2);
+        pool.metrics.worker(0).fp16_bytes_per_token.observe_max(64);
+        // 20 tokens total: 40 B under the pool-wide quantized rate — passes
+        // the gate (then dies on the dead worker).
+        assert!(failed_fast(pool.submit(Request::greedy(1, &"x".repeat(16), 4))));
+        assert_eq!(pool.metrics.router_rejected.get(), 0);
+        // The SAME shape as an fp16 tenant prices at 20 * 64 = 1280 B and
+        // is rejected by the router before any worker sees it.
+        let resp = pool
+            .submit(Request::greedy(2, &"x".repeat(16), 4).with_policy("fp16"))
+            .expect("router replies directly");
+        assert!(resp.text.contains("pool budget"), "{}", resp.text);
+        assert_eq!(pool.metrics.router_rejected.get(), 1);
+        // Unknown policy names fast-fail non-retryably at the router.
+        let h = pool
+            .submit_stream(Request::greedy(3, "x", 2).with_policy("nope"))
+            .expect("router replies directly");
+        match h.recv().expect("terminal event") {
+            Event::Failed { reason, retryable, .. } => {
+                assert!(reason.contains("unknown policy 'nope'"), "{reason}");
+                assert!(!retryable, "client must fix the name, not retry");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert_eq!(pool.metrics.router_rejected.get(), 2);
+        assert!(pool.shutdown().is_err());
+    }
+
+    #[test]
+    fn policy_gate_admits_until_rates_are_published() {
+        let fp = PolicyDescriptor::parse("fp16").unwrap();
+        // No published fp16 rate: estimate is zero, admit (shard decides).
+        assert!(!pool_admission_rejects_policy(Some(100), &fp, 4, 0, 0, 50, 0));
+        assert!(pool_admission_rejects_policy(Some(100), &fp, 4, 64, 0, 50, 0));
+        // Windowed policy mixes both rates: 8 fp-resident + 42 quantized.
+        let w = PolicyDescriptor::parse("cq-8c8b-w6-s2").unwrap();
+        assert_eq!(w.reserve_bytes(50, 4, 64), 42 * 4 + 8 * 64);
+        assert!(pool_admission_rejects_policy(Some(500), &w, 4, 64, 0, 50, 0));
+        assert!(!pool_admission_rejects_policy(Some(1000), &w, 4, 64, 0, 50, 0));
+        // No budget: never rejects.
+        assert!(!pool_admission_rejects_policy(None, &fp, 4, 64, 0, 1 << 20, 0));
     }
 
     #[test]

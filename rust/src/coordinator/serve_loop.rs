@@ -77,6 +77,22 @@
 //! `ServeConfig::{session_cap, session_ttl}`).  A turn referencing an
 //! evicted session fails with a `session_evicted` reason instead of being
 //! silently served from partial context.
+//!
+//! **Per-tenant policies** (`ServeConfig::policies`, wire field `policy`,
+//! protocol v2.3): a request naming a policy from the worker's table is
+//! admitted under *that policy's* byte math instead of the pool-wide
+//! defaults — an `fp16` tenant runs unstored at the fp16 rate
+//! ([`PagedShard::admit_unstored_bytes`]), a windowed tenant (e.g.
+//! `cq-8c8b-w64-s4`) keeps its sink + trailing-window tokens in an fp pen
+//! and quantizes them on retire ([`PagedShard::admit_retained`]; the retire
+//! itself happens inside the store-phase `append`, and the loop counts it
+//! via `window_retired_tokens`).  Policies are validated against the
+//! backend at startup: sim serves any base (codes are fabricated), a CQ
+//! worker serves only its own `cq-<tag>` base, an fp worker only `fp16`.
+//! Per-policy reserved bytes are mirrored in the
+//! [`crate::metrics::PolicyBytes`] ledger at admission and settled on every
+//! terminal path, crash unwinding included (the run's `ReservationGuard`
+//! carries the policy name).
 
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
@@ -89,7 +105,8 @@ use crate::kvcache::{BatchStage, CacheGeom, PagedShard, DEFAULT_BLOCK_TOKENS};
 use crate::metrics::trace::{sample_decode_step, TraceEventKind, TraceOutcome};
 use crate::metrics::ServeMetrics;
 use crate::quant::cq::CqCodebooks;
-use crate::quant::KvKind;
+use crate::quant::policy::PolicyTable;
+use crate::quant::{factory, Codec, KvKind};
 use crate::runtime::{engine::{Arg, DevBuf}, Engine, Value};
 use crate::tensor::{TensorF, TensorI};
 use crate::util::rng::Pcg64;
@@ -168,6 +185,18 @@ pub struct ServeConfig {
     /// `min(n_layers, available parallelism)`; `1` encodes inline on the
     /// serve thread (`--encode-threads`).
     pub encode_threads: usize,
+    /// Scalar fake-quant codec for the fp baseline (`--codec <table row>`):
+    /// the prefill seed K/V is quantized through this codec before staging,
+    /// so the decode artifact attends over quantized prompt state while
+    /// decode-written rows stay exact ("prefill-quantized, decode-fresh").
+    /// Calibration-needing rows (cq-*, kvquant-*) are rejected — CQ serving
+    /// selects its codec via `cq` + codebooks.  `None` = exact fp16.
+    pub codec: Option<String>,
+    /// Named per-tenant policy specs this pool serves (`--policies a,b,c`,
+    /// syntax [`crate::quant::policy::PolicyDescriptor::parse`]).  Requests
+    /// carrying a `policy` field must name one of these; an empty table
+    /// rejects every policy-carrying request.
+    pub policies: Vec<String>,
 }
 
 impl ServeConfig {
@@ -232,6 +261,8 @@ impl Default for ServeConfig {
             ttft_slo_chunks: None,
             trace_ring: ServeConfig::default_trace_ring(),
             encode_threads: ServeConfig::default_encode_threads(),
+            codec: None,
+            policies: Vec::new(),
         }
     }
 }
@@ -251,6 +282,9 @@ enum CacheMode {
         pos: Vec<i32>,
         art: String,
         tmax: usize,
+        /// `--codec` fake-quant: applied to the prefill seed K/V before
+        /// staging (decode-written rows stay exact).
+        seed_codec: Option<Box<dyn Codec>>,
     },
     /// Engine-free deterministic backend: same staging tensors and paged
     /// store as CQ, synthetic codes/logits instead of PJRT artifacts.
@@ -321,7 +355,31 @@ fn build_encode_pool(cfg: &ServeConfig, n_layers: usize, metrics: &Arc<ServeMetr
     pool
 }
 
+/// Build the `--codec` fake-quant codec for the fp baseline, validating the
+/// name against the factory table.  Calibration-needing rows have no serve
+/// path here: CQ serves through `cq` + codebooks, KVQuant is eval-only.
+fn build_seed_codec(cfg: &ServeConfig) -> Result<Option<Box<dyn Codec>>> {
+    let Some(name) = &cfg.codec else { return Ok(None) };
+    let n = name.trim().to_ascii_lowercase();
+    anyhow::ensure!(
+        cfg.cq.is_none() && cfg.sim.is_none(),
+        "--codec is the fp-baseline fake-quant path; CQ serving selects its \
+         codec via --cq, and the sim backend fabricates codes"
+    );
+    anyhow::ensure!(
+        factory::table_rows().contains(&n.as_str()),
+        "--codec '{name}' is not a table row (rows: {:?})",
+        factory::table_rows()
+    );
+    anyhow::ensure!(
+        !factory::needs_calibration(&n),
+        "--codec '{name}' needs calibration; serve CQ rows via --cq and codebooks"
+    );
+    Ok(Some(factory::build_codec(&n, None, factory::FactoryCfg::default())?))
+}
+
 fn build_ctx(cfg: &ServeConfig, metrics: &Arc<ServeMetrics>) -> Result<Ctx> {
+    let seed_codec = build_seed_codec(cfg)?;
     if let Some(sim) = &cfg.sim {
         anyhow::ensure!(
             sim.max_prompt < sim.tmax,
@@ -407,6 +465,7 @@ fn build_ctx(cfg: &ServeConfig, metrics: &Arc<ServeMetrics>) -> Result<Ctx> {
                     pos: vec![0; batch],
                     art,
                     tmax: mm.serve_ctx,
+                    seed_codec,
                 },
                 geom,
             )
@@ -513,15 +572,24 @@ fn prefill_chunk_fill(
     let start = state.filled;
     let end = (state.filled + chunk.max(1)).min(p);
     match &ctx.mode {
+        CacheMode::Sim { .. } if !run.packed.is_stored() => {
+            // fp16-policy tenant on sim: occupancy accounting only, nothing
+            // to encode or store (sim logits depend only on the last token).
+            for _ in state.filled..end {
+                run.packed.append_unstored()?;
+            }
+        }
         CacheMode::Sim { .. } => {
             // Synthetic quantize+store over this chunk's span only — the
             // radix hit skipped exactly the same tokens as in CQ serving.
             let t_enc = Instant::now();
             let (mut k, mut v) = (Vec::new(), Vec::new());
+            let retired0 = run.packed.retired_tokens;
             for &t in &run.prompt_ids[state.filled..end] {
                 sim_codes(&ctx.geom, t, &mut k, &mut v);
                 run.packed.append(&mut shard.pool, &k, &v)?;
             }
+            metrics.window_retired_tokens.add(run.packed.retired_tokens - retired0);
             metrics.phases.record_encode(t_enc.elapsed());
         }
         CacheMode::Cq { books, .. } => {
@@ -540,11 +608,19 @@ fn prefill_chunk_fill(
             let (kc, vc) = books.encode_span_pooled(k, v, state.filled, end, &ctx.encode_pool);
             metrics.phases.record_encode(t_enc.elapsed());
             metrics.encode_pool_busy.set(ctx.encode_pool.last_scope_tasks());
+            let retired0 = run.packed.retired_tokens;
             run.packed.append_span(&mut shard.pool, &kc, &vc, end - state.filled)?;
+            metrics.window_retired_tokens.add(run.packed.retired_tokens - retired0);
         }
-        CacheMode::Fp { .. } => {
+        CacheMode::Fp { seed_codec, .. } => {
             if state.seed.is_none() {
-                let (row, k, v) = run_prefill_artifact(ctx, &run.prompt_ids)?;
+                let (row, mut k, mut v) = run_prefill_artifact(ctx, &run.prompt_ids)?;
+                // `--codec` fake-quant ("prefill-quantized, decode-fresh"):
+                // the seed is quantized once here, before staging.
+                if let Some(c) = seed_codec {
+                    c.apply(KvKind::Key, &mut k);
+                    c.apply(KvKind::Value, &mut v);
+                }
                 // Stash prefill K/V for staging at admission time.
                 run.packed.fp_seed = Some((k, v));
                 state.seed = Some(PrefillSeed::Fp { row });
@@ -661,6 +737,7 @@ fn advance_prefill(
             if let Some(g) = run.crash_guard.take() {
                 g.disarm();
             }
+            settle_policy_bytes(metrics, &run);
             if let Some(t) = run.trace.take() {
                 metrics.trace.settle(&t, TraceOutcome::Failed, &format!("prefill failed: {e:#}"));
             }
@@ -693,6 +770,7 @@ fn admit_request(
     shard: &mut PagedShard,
     batcher: &mut Batcher,
     sessions: &mut SessionTable,
+    policies: &PolicyTable,
     metrics: &Arc<ServeMetrics>,
     mut sink: EventSink,
     token: Option<LoadToken>,
@@ -727,6 +805,26 @@ fn admit_request(
             }
         },
     };
+    // Resolve the request's named policy before touching the shard: an
+    // unknown name is a client error (non-retryable), not cache pressure.
+    let policy = match req.policy.as_deref() {
+        None => None,
+        Some(name) => match policies.get(name) {
+            Some(d) => Some(d),
+            None => {
+                metrics.requests_rejected.add(1);
+                sink.send_terminal(Event::Failed {
+                    id: req.id,
+                    reason: format!(
+                        "[rejected: unknown policy '{name}' (serving: {:?})]",
+                        policies.names()
+                    ),
+                    retryable: false,
+                });
+                return;
+            }
+        },
+    };
     let prompt = prompt_ids(ctx, history, &req);
     // Flight recorder: the trace starts at enqueue and survives this run
     // (the recorder holds its own Arc) so a crash still leaves a record.
@@ -738,9 +836,24 @@ fn admit_request(
         },
         prompt.len(),
     );
-    let admitted = match &ctx.mode {
-        CacheMode::Fp { .. } => shard.admit_unstored(prompt.len(), req.max_new, metrics),
-        CacheMode::Cq { .. } | CacheMode::Sim { .. } => {
+    // Per-request admission math: a policy-carrying request reserves at ITS
+    // byte rates, not the pool-wide default (ISSUE: `bytes_per_token` is
+    // per-request now).  Startup validation guarantees the backend can
+    // execute whatever policy reaches this match.
+    let fp_bpt = ctx.geom.fp16_bytes_per_token(ctx.head_dim);
+    let admitted = match (&ctx.mode, policy) {
+        // fp16 tenant: unstored accounting at the fp16 rate.
+        (_, Some(d)) if d.is_fp() => {
+            shard.admit_unstored_bytes(prompt.len(), req.max_new, fp_bpt, metrics)
+        }
+        // Windowed tenant: fp pen for sinks + trailing window, mixed-rate
+        // reservation; tokens quantize-on-retire inside `append`.
+        (CacheMode::Cq { .. } | CacheMode::Sim { .. }, Some(d)) if d.retention().is_some() => {
+            let r = d.retention().expect("guard checked retention");
+            shard.admit_retained(prompt.len(), req.max_new, r, fp_bpt, metrics)
+        }
+        (CacheMode::Fp { .. }, _) => shard.admit_unstored(prompt.len(), req.max_new, metrics),
+        (CacheMode::Cq { .. } | CacheMode::Sim { .. }, _) => {
             shard.admit_stored(&prompt, req.max_new, metrics)
         }
     };
@@ -770,7 +883,13 @@ fn admit_request(
     // shard's accounting reads idle again.  (`block_bytes` was published
     // as a gauge before the loop started serving.)
     let reserved_bytes = adm.reserved_blocks as u64 * metrics.block_bytes.get();
-    let guard = ReservationGuard::new(metrics.clone(), reserved_bytes);
+    // Mirror the reservation in the per-policy ledger; every terminal path
+    // (finish/cancel/abort/crash-unwind) settles it back out.
+    if let Some(p) = &req.policy {
+        metrics.policy_bytes.add(p, reserved_bytes);
+    }
+    let guard = ReservationGuard::new(metrics.clone(), reserved_bytes)
+        .for_policy(req.policy.as_deref());
     batcher.enqueue(SeqRun {
         req,
         events: Some(sink),
@@ -797,8 +916,14 @@ fn stage_admitted(ctx: &mut Ctx, shard: &PagedShard, slot: usize, batcher: &Batc
     let run = batcher.slot(slot).expect("admitted slot");
     match &mut ctx.mode {
         CacheMode::Cq { stage, .. } | CacheMode::Sim { stage } => {
-            // load_sequence leaves pos at the next write position.
-            stage.load_sequence(slot, &run.packed, &shard.pool);
+            if run.packed.is_stored() {
+                // load_sequence leaves pos at the next write position.
+                // (Retention pens unpack through the same read path.)
+                stage.load_sequence(slot, &run.packed, &shard.pool);
+            } else {
+                // fp16-policy tenant (sim): no pool-backed codes to load.
+                stage.mark_occupied(slot, run.packed.len);
+            }
         }
         CacheMode::Fp { k_cache, v_cache, pos, tmax, .. } => {
             let (k, v) = run.packed.fp_seed.as_ref().expect("fp prefill seed");
@@ -984,6 +1109,51 @@ fn apply_updates(
     }
 }
 
+/// Build and validate the worker's policy table against its backend.  The
+/// sim backend fabricates codes, so any base serves; an engine worker can
+/// only serve policies its compiled decode artifact can actually execute —
+/// a CQ worker its own `cq-<tag>` base (retention suffixes ride along: the
+/// retire path packs the same wire codes), an fp worker only `fp16`.
+pub fn build_policy_table(cfg: &ServeConfig) -> Result<PolicyTable> {
+    let table = PolicyTable::build(&cfg.policies)?;
+    if cfg.sim.is_some() {
+        return Ok(table);
+    }
+    for name in table.names() {
+        let d = table.get(name).expect("name came from the table");
+        match (&cfg.cq, d.is_fp()) {
+            (Some(_), true) => bail!(
+                "policy '{name}': this worker decodes the CQ artifact and cannot \
+                 serve fp16 tenants (route them to an fp worker)"
+            ),
+            (Some(tag), false) => anyhow::ensure!(
+                d.base == format!("cq-{tag}"),
+                "policy '{name}': base '{}' does not match this worker's wire \
+                 codec 'cq-{tag}'",
+                d.base
+            ),
+            (None, true) => {}
+            (None, false) => bail!(
+                "policy '{name}': an fp worker serves only the 'fp16' policy \
+                 (quantized bases need a CQ or sim worker)"
+            ),
+        }
+    }
+    Ok(table)
+}
+
+/// Return a settled run's reserved bytes to its policy ledger.  The shard
+/// settles the block accounting itself; this mirrors it per tenant on the
+/// deliberate paths (finish / cancel / prefill abort) — the crash path goes
+/// through the run's [`ReservationGuard`] instead.
+fn settle_policy_bytes(metrics: &ServeMetrics, run: &SeqRun) {
+    if let Some(p) = &run.req.policy {
+        metrics
+            .policy_bytes
+            .sub(p, run.reserved_blocks as u64 * metrics.block_bytes.get());
+    }
+}
+
 /// Run the serve loop until `Shutdown` arrives and all work drains.
 pub fn serve_loop(
     cfg: ServeConfig,
@@ -991,6 +1161,9 @@ pub fn serve_loop(
     metrics: Arc<ServeMetrics>,
 ) -> Result<()> {
     let mut ctx = build_ctx(&cfg, &metrics)?;
+    // Per-tenant policy table, validated against this worker's backend
+    // before the first request can name a policy it cannot execute.
+    let policies = build_policy_table(&cfg)?;
     // Warmup: compile the hot artifacts before the first request arrives so
     // first-token latency reflects steady state, not XLA compilation.
     // (Sim mode has no engine and nothing to warm.)
@@ -1032,7 +1205,12 @@ pub fn serve_loop(
     // Multi-turn continuation state, bounded by LRU cap + idle TTL.
     let mut sessions = SessionTable::new(cfg.session_cap, cfg.session_ttl);
     // Publish shard geometry for the router's pool-wide admission estimate.
+    // The fp16 rate rides along so per-policy router math (fp16 tenants,
+    // retention windows) prices pen-resident tokens correctly.
     metrics.bytes_per_token.observe_max(ctx.geom.bytes_per_token() as u64);
+    metrics
+        .fp16_bytes_per_token
+        .observe_max(ctx.geom.fp16_bytes_per_token(ctx.head_dim) as u64);
     metrics.block_bytes.observe_max(block_bytes as u64);
     metrics
         .max_prompt_tokens
@@ -1070,6 +1248,7 @@ pub fn serve_loop(
                         &mut shard,
                         &mut batcher,
                         &mut sessions,
+                        &policies,
                         &metrics,
                         sink,
                         token,
@@ -1108,6 +1287,11 @@ pub fn serve_loop(
         metrics
             .prefill_backlog_tokens
             .set(batcher.pending_prefill_tokens());
+        // Pen occupancy across every live run: fp-resident window + sink
+        // tokens, for the policy observables scrape (instantaneous level).
+        metrics
+            .window_tokens
+            .set(batcher.runs().map(|r| r.packed.window_tokens() as u64).sum());
 
         // --- Admission --------------------------------------------------
         for slot in batcher.admit() {
@@ -1153,14 +1337,24 @@ pub fn serve_loop(
                 {
                     let run = batcher.slot_mut(i).unwrap();
                     match &ctx.mode {
-                        CacheMode::Cq { .. } | CacheMode::Sim { .. } => {
+                        CacheMode::Cq { .. } | CacheMode::Sim { .. }
+                            if run.packed.is_stored() =>
+                        {
                             // Codes were staged; append to the paged store
-                            // from the staging lane for durability.
+                            // from the staging lane for durability.  Under a
+                            // retention policy this is the retire step: the
+                            // new token enters the fp pen and the oldest
+                            // window token packs into pool blocks.
                             let t = run.packed.len;
                             read_stage_token_into(&ctx, i, t, &mut scratch);
+                            let retired0 = run.packed.retired_tokens;
                             run.packed.append(&mut shard.pool, &scratch.kc, &scratch.vc)?;
+                            metrics
+                                .window_retired_tokens
+                                .add(run.packed.retired_tokens - retired0);
                         }
-                        CacheMode::Fp { .. } => run.packed.append_unstored()?,
+                        // fp baseline, or an fp16-policy tenant on sim.
+                        _ => run.packed.append_unstored()?,
                     }
                 }
                 let run = batcher.slot_mut(i).unwrap();
@@ -1218,6 +1412,7 @@ pub fn serve_loop(
                         &mut shard,
                         &mut batcher,
                         &mut sessions,
+                        &policies,
                         &metrics,
                         sink,
                         token,
@@ -1342,6 +1537,7 @@ fn settle_cancelled(
     if let Some(g) = run.crash_guard.take() {
         g.disarm();
     }
+    settle_policy_bytes(metrics, &run);
     let key = promote_key(&run);
     shard.cancel(&mut run.packed, &key, run.reserved_blocks, metrics);
     note_session(sessions, metrics, &run);
@@ -1377,6 +1573,7 @@ fn complete(
         if let Some(g) = run.crash_guard.take() {
             g.disarm();
         }
+        settle_policy_bytes(metrics, &run);
         let cache_bytes = run.packed.logical_bytes();
         // Promote the sequence's full blocks into the radix index under its
         // (prompt ++ generated) token key, then settle blocks + reservation.

@@ -4,5 +4,5 @@
 pub mod ppl;
 pub mod tasks;
 
-pub use ppl::{perplexity, PplMode, PplResult};
+pub use ppl::{layer_sensitivity, perplexity, PplMode, PplResult};
 pub use tasks::{task_accuracy, TaskKind, TaskSet};

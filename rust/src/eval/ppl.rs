@@ -151,6 +151,53 @@ pub fn perplexity(
     Ok(res)
 }
 
+/// Per-layer quantization sensitivity for the policy allocator
+/// (`quant/policy`): the mean per-token nll increase when *only* layer
+/// `l`'s cache is quantized by `codec` and every other layer stays clean.
+///
+/// One clean pass per batch plus one single-layer quantized pass per
+/// (layer, batch) — L+1 executions per batch, each reusing the clean
+/// pass's K/V so the probe isolates layer `l` exactly.  Negative deltas
+/// (sampling noise on insensitive layers) clamp to 0 so
+/// [`crate::quant::policy::greedy_allocate`] never rewards quantization.
+pub fn layer_sensitivity(
+    engine: &Engine,
+    model: &str,
+    params: &TensorF,
+    codec: &dyn Codec,
+    batches: &[TensorI],
+) -> Result<Vec<f64>> {
+    let art = eval_art(engine, model)?;
+    let params = engine.upload(&Value::F(params.clone()))?;
+    let params = &params;
+    let zeros = TensorF::zeros(&art.kv_shape);
+    let mut deltas = vec![0.0f64; art.n_layers];
+    let mut tokens = 0usize;
+    for toks in batches {
+        let use0 = vec![0.0f32; art.n_layers];
+        let (nll_clean, k_clean, v_clean) =
+            run_eval(engine, &art, params, toks, &zeros, &zeros, &use0)?;
+        let clean: f64 = nll_clean.data.iter().map(|&x| x as f64).sum();
+        tokens += nll_clean.numel();
+        for (l, delta) in deltas.iter_mut().enumerate() {
+            let mut kl = slice_layer(&k_clean, l);
+            let mut vl = slice_layer(&v_clean, l);
+            codec.apply(KvKind::Key, &mut kl);
+            codec.apply(KvKind::Value, &mut vl);
+            let mut khat = TensorF::zeros(&art.kv_shape);
+            let mut vhat = TensorF::zeros(&art.kv_shape);
+            paste_layer(&mut khat, &kl, l);
+            paste_layer(&mut vhat, &vl, l);
+            let mut use_q = vec![0.0f32; art.n_layers];
+            use_q[l] = 1.0;
+            let (nll, _, _) = run_eval(engine, &art, params, toks, &khat, &vhat, &use_q)?;
+            *delta += nll.data.iter().map(|&x| x as f64).sum::<f64>() - clean;
+        }
+    }
+    let per_token = tokens.max(1) as f64;
+    Ok(deltas.iter().map(|d| (d / per_token).max(0.0)).collect())
+}
+
 /// Extract layer `l` of `[L,B,H,T,hd]` as a `[1,B,H,T,hd]` tensor.
 fn slice_layer(src: &TensorF, l: usize) -> TensorF {
     let per = src.numel() / src.shape[0];

@@ -164,6 +164,15 @@ impl BatchStage {
         self.occupied[slot] = true;
     }
 
+    /// Occupy `slot` for a sequence whose codes are not pool-backed (an
+    /// fp16-policy tenant on the sim backend): position and occupancy only,
+    /// no staged codes.
+    pub fn mark_occupied(&mut self, slot: usize, len: usize) {
+        assert!(len <= self.geom.tmax);
+        self.pos[slot] = len as i32;
+        self.occupied[slot] = true;
+    }
+
     /// Release a slot (sequence finished).
     pub fn release(&mut self, slot: usize) {
         self.occupied[slot] = false;

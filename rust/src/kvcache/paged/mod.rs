@@ -23,15 +23,28 @@
 //! finish: promote full blocks into the radix (skip spans already cached),
 //!         release the sequence's references + reservation
 //! ```
+//!
+//! **Full-precision retention (DESIGN.md §5).**  A sequence built with
+//! [`PagedSeqCache::with_retention`] holds its first `sinks` tokens and
+//! trailing `window` tokens in an unpacked **pen** — accounted at the
+//! policy's fp16 byte rate — and packs a token into pool blocks only when
+//! it ages past the window (*quantize-on-retire*).  The retire path is the
+//! exact pack path a plain sequence uses, so retired records are
+//! byte-identical to direct quantization; sink tokens never retire.
+//! Retention sequences opt out of radix prefix sharing (their pool chain
+//! starts after the sink pen, so block chains are not prefix-aligned).
 
 pub mod block;
 pub mod pool;
 pub mod radix;
 
+use std::collections::VecDeque;
+
 use anyhow::{bail, Result};
 
 use crate::metrics::ServeMetrics;
 use crate::quant::pack::{pack_into, unpack_codes_ref, unpack_into};
+use crate::quant::policy::Retention;
 use crate::tensor::TensorF;
 
 use super::{CacheGeom, CacheManager};
@@ -64,6 +77,18 @@ pub struct PagedSeqCache {
     /// fp-mode only: prefill K/V (`[L,1,H,T,hd]`) held until the sequence is
     /// admitted into a staging lane, then dropped.
     pub fp_seed: Option<(TensorF, TensorF)>,
+    /// Sliding-window policy, if any (see module doc: quantize-on-retire).
+    retention: Option<Retention>,
+    /// Attention-sink pen: the first `sinks` tokens, held unpacked forever.
+    sink_pen: Vec<(Vec<u32>, Vec<u32>)>,
+    /// Window pen: the trailing `window` tokens, held unpacked; the front
+    /// retires into pool blocks as new tokens push past the window.
+    tail_pen: VecDeque<(Vec<u32>, Vec<u32>)>,
+    /// Tokens that have aged past the window and been packed into blocks.
+    pub retired_tokens: u64,
+    /// Byte rate charged for pen-resident (or unstored) tokens; 0 falls
+    /// back to the quantized `geom.bytes_per_token()` rate.
+    fp_bytes_per_token: usize,
 }
 
 impl PagedSeqCache {
@@ -78,6 +103,11 @@ impl PagedSeqCache {
             rec_scratch: Vec::new(),
             stored: true,
             fp_seed: None,
+            retention: None,
+            sink_pen: Vec::new(),
+            tail_pen: VecDeque::new(),
+            retired_tokens: 0,
+            fp_bytes_per_token: 0,
         }
     }
 
@@ -87,11 +117,40 @@ impl PagedSeqCache {
         PagedSeqCache { stored: false, ..PagedSeqCache::new(geom) }
     }
 
+    /// Stored sequence under a retention policy: the first `r.sinks` and
+    /// trailing `r.window` tokens stay in unpacked pens charged at
+    /// `fp_bytes_per_token`; everything else quantizes-on-retire into pool
+    /// blocks through the exact pack path [`Self::append`] uses.
+    pub fn with_retention(
+        geom: CacheGeom,
+        r: Retention,
+        fp_bytes_per_token: usize,
+    ) -> PagedSeqCache {
+        PagedSeqCache { retention: Some(r), fp_bytes_per_token, ..PagedSeqCache::new(geom) }
+    }
+
+    /// Override the byte rate charged for unstored tokens (an fp16 tenant
+    /// pays fp16 bytes, not the pool's quantized rate).
+    pub fn set_fp_cost(&mut self, bytes_per_token: usize) {
+        self.fp_bytes_per_token = bytes_per_token;
+    }
+
+    /// The retention policy this sequence was admitted under.
+    pub fn retention(&self) -> Option<Retention> {
+        self.retention
+    }
+
+    /// Whether codes are pool-backed (`false` for unstored fp16 accounting).
+    pub fn is_stored(&self) -> bool {
+        self.stored
+    }
+
     /// Attach an already-retained shared prefix (radix hit).  Must happen
     /// before any append.
     pub fn attach_prefix(&mut self, blocks: Vec<BlockId>, tokens: usize) {
         assert_eq!(self.len, 0, "prefix attaches to an empty sequence");
         assert!(self.stored, "fp sequences share nothing");
+        assert!(self.retention.is_none(), "retention sequences do not share prefixes");
         self.shared = blocks;
         self.shared_tokens = tokens;
         self.len = tokens;
@@ -111,10 +170,11 @@ impl PagedSeqCache {
         Ok(())
     }
 
-    /// Append one token's codes (`k`/`v` laid out `[L, H, G]`) into the
-    /// private tail, allocating a fresh block when the tail is full.
-    /// Packing reuses the sequence's scratch buffers — steady-state appends
-    /// touch the allocator only when a new block is needed.
+    /// Append one token's codes (`k`/`v` laid out `[L, H, G]`).  Without a
+    /// retention policy the codes pack straight into the private tail; under
+    /// one, the token lands in the sink or window pen and the *oldest*
+    /// window token retires into the pool instead (same pack path, so
+    /// retired records are byte-identical to direct appends).
     pub fn append(&mut self, pool: &mut BlockPool, k_codes: &[u32], v_codes: &[u32]) -> Result<()> {
         let per_side = self.geom.n_layers * self.geom.n_heads * self.geom.groups;
         if k_codes.len() != per_side || v_codes.len() != per_side {
@@ -127,6 +187,36 @@ impl PagedSeqCache {
         if self.len >= self.geom.tmax {
             bail!("cache full ({} tokens)", self.geom.tmax);
         }
+        match self.retention {
+            None => {
+                self.pack_token(pool, k_codes, v_codes)?;
+                self.len += 1;
+                Ok(())
+            }
+            Some(r) => {
+                if self.sink_pen.len() < r.sinks {
+                    self.sink_pen.push((k_codes.to_vec(), v_codes.to_vec()));
+                    self.len += 1;
+                    return Ok(());
+                }
+                self.tail_pen.push_back((k_codes.to_vec(), v_codes.to_vec()));
+                self.len += 1;
+                while self.tail_pen.len() > r.window {
+                    let (rk, rv) = self.tail_pen.pop_front().unwrap();
+                    self.pack_token(pool, &rk, &rv)?;
+                    self.retired_tokens += 1;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Pack one token's codes into the private tail, allocating a fresh
+    /// block when the tail is full.  Packing reuses the sequence's scratch
+    /// buffers — steady-state appends touch the allocator only when a new
+    /// block is needed.  Does NOT bump `len`: this is the shared storage
+    /// step under both the direct append and retire paths.
+    fn pack_token(&mut self, pool: &mut BlockPool, k_codes: &[u32], v_codes: &[u32]) -> Result<()> {
         let tail_full = self
             .private
             .last()
@@ -146,8 +236,49 @@ impl PagedSeqCache {
         // re-zeroing between tokens.
         pack_into(&self.scratch, self.geom.bits, &mut self.rec_scratch);
         pool.push_token(*self.private.last().unwrap(), &self.rec_scratch)?;
-        self.len += 1;
         Ok(())
+    }
+
+    /// Retire every window-pen token into pool blocks (oldest first, the
+    /// same order natural aging would use).  Sink tokens stay penned — once
+    /// pooled tokens exist behind them, packing sinks would reorder the
+    /// chain.  Returns the number of tokens retired.  Tests use this to
+    /// prove retire/direct byte-identity; the serve loop never drains (a
+    /// finished sequence releases its blocks without a final pack pass).
+    pub fn drain_window(&mut self, pool: &mut BlockPool) -> Result<usize> {
+        let mut n = 0;
+        while let Some((k, v)) = self.tail_pen.pop_front() {
+            self.pack_token(pool, &k, &v)?;
+            self.retired_tokens += 1;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Tokens currently pen-resident at full precision (sinks + window).
+    pub fn window_tokens(&self) -> usize {
+        self.sink_pen.len() + self.tail_pen.len()
+    }
+
+    /// Tokens packed into pool blocks (shared + private).
+    pub fn pooled_tokens(&self) -> usize {
+        self.len - self.window_tokens()
+    }
+
+    /// Pen lookup for logical token `t`: `Some(codes)` when the token is
+    /// fp-resident, `None` when it lives in the pool chain.
+    fn pen_codes(&self, t: usize) -> Option<(&[u32], &[u32])> {
+        let s = self.sink_pen.len();
+        if t < s {
+            let (k, v) = &self.sink_pen[t];
+            return Some((k, v));
+        }
+        let pooled = self.len - s - self.tail_pen.len();
+        if t < s + pooled {
+            return None;
+        }
+        let (k, v) = &self.tail_pen[t - s - pooled];
+        Some((k, v))
     }
 
     /// Bulk append: `n` tokens' codes, token-major `[n, per_side]` per side
@@ -205,6 +336,31 @@ impl PagedSeqCache {
         let bt = pool.cfg.block_tokens;
         let bpt = pool.cfg.bytes_per_token;
         let bits = self.geom.bits;
+        if self.retention.is_some() {
+            // Mixed pen/pool readout, token at a time: pen tokens copy
+            // straight from the unpacked codes, pooled tokens (whose chain
+            // index is offset by the sink pen) unpack per record.
+            let per_side = cpt / 2;
+            let s = self.sink_pen.len();
+            for i in 0..n {
+                let t = t0 + i;
+                let dst = &mut out[i * cpt..(i + 1) * cpt];
+                match self.pen_codes(t) {
+                    Some((k, v)) => {
+                        dst[..per_side].copy_from_slice(k);
+                        dst[per_side..].copy_from_slice(v);
+                    }
+                    None => {
+                        let u = t - s;
+                        let blk = self.private[u / bt];
+                        let bytes = pool.records_bytes(blk);
+                        let rec = u % bt;
+                        unpack_into(&bytes[rec * bpt..(rec + 1) * bpt], bits, dst);
+                    }
+                }
+            }
+            return;
+        }
         let dense = (cpt * bits as usize) % 8 == 0;
         let mut done = 0usize;
         while done < n {
@@ -248,6 +404,7 @@ impl PagedSeqCache {
     /// oracle for property tests and the `quant_hot_path` bench baseline.
     pub fn token_reference(&self, pool: &BlockPool, t: usize) -> (Vec<u32>, Vec<u32>) {
         assert!(self.stored, "unstored (fp) cache holds no codes");
+        assert!(self.retention.is_none(), "oracle path predates retention pens");
         assert!(t < self.len);
         let (blk, rec) = self.locate(pool, t);
         let per_side = self.geom.n_layers * self.geom.n_heads * self.geom.groups;
@@ -255,10 +412,21 @@ impl PagedSeqCache {
         (all[..per_side].to_vec(), all[per_side..].to_vec())
     }
 
-    /// Logical footprint: what this sequence occupies at the configured bit
-    /// width, independent of storage mode (fp16 geometry uses bits=16).
+    /// Logical footprint at the sequence's policy rates: pooled tokens at
+    /// the quantized `geom.bytes_per_token()`, pen-resident (and unstored)
+    /// tokens at the policy's fp rate — which defaults to the quantized
+    /// rate when no explicit fp cost was set, preserving the pre-policy
+    /// accounting for legacy fp-mode sequences.
     pub fn logical_bytes(&self) -> usize {
-        self.len * self.geom.bytes_per_token()
+        let fp_bpt = if self.fp_bytes_per_token > 0 {
+            self.fp_bytes_per_token
+        } else {
+            self.geom.bytes_per_token()
+        };
+        if !self.stored {
+            return self.len * fp_bpt;
+        }
+        self.pooled_tokens() * self.geom.bytes_per_token() + self.window_tokens() * fp_bpt
     }
 
     /// Pool pages held (shared + private), in bytes.
@@ -281,7 +449,8 @@ impl PagedSeqCache {
         (tokens, chain)
     }
 
-    /// Drop every pool reference this sequence holds (shared + private).
+    /// Drop every pool reference this sequence holds (shared + private) and
+    /// empty the retention pens.
     pub fn release(&mut self, pool: &mut BlockPool) {
         for &b in self.shared.iter().chain(&self.private) {
             pool.release(b);
@@ -289,6 +458,8 @@ impl PagedSeqCache {
         self.shared.clear();
         self.private.clear();
         self.shared_tokens = 0;
+        self.sink_pen.clear();
+        self.tail_pen.clear();
         self.len = 0;
     }
 }
@@ -436,6 +607,54 @@ impl PagedShard {
         })
     }
 
+    /// Admit an accounting-only sequence charged at an explicit byte rate:
+    /// the per-tenant fix for fp16 tenants being admitted against quantized
+    /// block math.  The reservation converts the tenant's byte demand into
+    /// budget-equivalent blocks.
+    pub fn admit_unstored_bytes(
+        &mut self,
+        prompt_tokens: usize,
+        max_new: usize,
+        bytes_per_token: usize,
+        metrics: &ServeMetrics,
+    ) -> Result<Admission> {
+        let bytes = (prompt_tokens + max_new) * bytes_per_token;
+        let need = bytes.div_ceil(self.block_bytes().max(1));
+        self.reserve_with_eviction(need, metrics)?;
+        let mut seq = PagedSeqCache::new_unstored(self.geom);
+        seq.set_fp_cost(bytes_per_token);
+        Ok(Admission { seq, hit_tokens: 0, reserved_blocks: need })
+    }
+
+    /// Admit a stored sequence under a retention policy.  No radix matching
+    /// (the pool chain starts after the sink pen, so block chains are not
+    /// prefix-aligned with plain sequences); the budget charge is the
+    /// policy's mixed rate — quantized blocks for the tokens that will
+    /// retire plus fp-equivalent blocks for the resident window + sinks
+    /// (penned tokens hold no pool pages, but their bytes still count
+    /// against the shard budget).
+    pub fn admit_retained(
+        &mut self,
+        prompt_tokens: usize,
+        max_new: usize,
+        retention: Retention,
+        fp_bytes_per_token: usize,
+        metrics: &ServeMetrics,
+    ) -> Result<Admission> {
+        let total = prompt_tokens + max_new;
+        let fp_tokens = total.min(retention.window + retention.sinks);
+        let q_tokens = total - fp_tokens;
+        let q_blocks = self.pool.cfg.blocks_for_tokens(q_tokens);
+        let fp_blocks = (fp_tokens * fp_bytes_per_token).div_ceil(self.block_bytes().max(1));
+        let need = q_blocks + fp_blocks;
+        self.reserve_with_eviction(need, metrics)?;
+        Ok(Admission {
+            seq: PagedSeqCache::with_retention(self.geom, retention, fp_bytes_per_token),
+            hit_tokens: 0,
+            reserved_blocks: need,
+        })
+    }
+
     /// Complete a sequence: promote its full-block prefix into the radix
     /// index (`token_ids` must cover `seq.len` cached tokens — prompt plus
     /// generated), then release the sequence's references and reservation.
@@ -448,7 +667,7 @@ impl PagedShard {
         metrics: &ServeMetrics,
     ) -> usize {
         let mut promoted = 0;
-        if self.prefix_sharing && seq.stored {
+        if self.prefix_sharing && seq.stored && seq.retention.is_none() {
             let (full_tokens, chain) = seq.full_block_chain(&self.pool);
             if full_tokens > 0 && token_ids.len() >= full_tokens {
                 promoted = self
@@ -826,6 +1045,139 @@ mod tests {
         // Budget fully recovered: the same admission succeeds again.
         let adm2 = sh.admit_stored(&prompt, 4, &m).unwrap();
         assert_eq!(adm2.reserved_blocks, 3);
+    }
+
+    #[test]
+    fn quantize_on_retire_is_byte_identical_to_direct_packing() {
+        // The acceptance invariant: a token that ages past the window packs
+        // into exactly the bytes a plain sequence would have stored for it.
+        let mut sh_plain = shard(None);
+        let mut sh_ret = shard(None);
+        let mut plain = PagedSeqCache::new(geom());
+        let r = Retention { window: 3, sinks: 0 };
+        let mut ret = PagedSeqCache::with_retention(geom(), r, 4);
+        for id in 0..11 {
+            let (k, v) = codes(id);
+            plain.append(&mut sh_plain.pool, &k, &v).unwrap();
+            ret.append(&mut sh_ret.pool, &k, &v).unwrap();
+        }
+        assert_eq!(ret.pooled_tokens(), 8, "11 appended, 3 still in the window");
+        assert_eq!(ret.retired_tokens, 8);
+        // Retired records already match the plain chain byte for byte.
+        for (i, (&pb, &rb)) in plain.private.iter().zip(&ret.private).enumerate() {
+            let n = sh_ret.pool.records_bytes(rb).len();
+            assert_eq!(
+                sh_plain.pool.records_bytes(pb)[..n],
+                sh_ret.pool.records_bytes(rb)[..],
+                "block {i}"
+            );
+        }
+        // Drain the rest and the chains are fully identical.
+        assert_eq!(ret.drain_window(&mut sh_ret.pool).unwrap(), 3);
+        assert_eq!(ret.retired_tokens, 11);
+        assert_eq!(ret.window_tokens(), 0);
+        assert_eq!(plain.private.len(), ret.private.len());
+        for (&pb, &rb) in plain.private.iter().zip(&ret.private) {
+            assert_eq!(sh_plain.pool.records_bytes(pb), sh_ret.pool.records_bytes(rb));
+        }
+        for t in 0..11 {
+            assert_eq!(ret.token(&sh_ret.pool, t), codes(t as i32), "token {t}");
+        }
+        plain.release(&mut sh_plain.pool);
+        ret.release(&mut sh_ret.pool);
+    }
+
+    #[test]
+    fn window_and_sinks_stay_fp_until_retire() {
+        let mut sh = shard(None);
+        let r = Retention { window: 4, sinks: 2 };
+        let fp_bpt = 3 * geom().bytes_per_token();
+        let mut seq = PagedSeqCache::with_retention(geom(), r, fp_bpt);
+        for id in 0..10 {
+            let (k, v) = codes(id);
+            seq.append(&mut sh.pool, &k, &v).unwrap();
+        }
+        // 2 sinks + 4 window fp-resident; tokens 2..=5 retired to the pool.
+        assert_eq!(seq.window_tokens(), 6);
+        assert_eq!(seq.pooled_tokens(), 4);
+        assert_eq!(seq.retired_tokens, 4);
+        assert_eq!(sh.pool.live_blocks(), 1, "4 retired tokens fit one block");
+        // All three regions read back through the same API.
+        for t in 0..10 {
+            assert_eq!(seq.token(&sh.pool, t), codes(t as i32), "token {t}");
+        }
+        let mut out = vec![0u32; 10 * 4];
+        seq.read_span_into(&sh.pool, 0, 10, &mut out);
+        for t in 0..10usize {
+            let (k, v) = codes(t as i32);
+            assert_eq!(&out[t * 4..t * 4 + 2], &k[..], "span token {t}");
+            assert_eq!(&out[t * 4 + 2..t * 4 + 4], &v[..], "span token {t}");
+        }
+        // Mixed-rate accounting: pooled at the quantized rate, pens at fp.
+        assert_eq!(
+            seq.logical_bytes(),
+            4 * geom().bytes_per_token() + 6 * fp_bpt
+        );
+        // Two more appends retire two more; the sinks never move.
+        for id in 10..12 {
+            let (k, v) = codes(id);
+            seq.append(&mut sh.pool, &k, &v).unwrap();
+        }
+        assert_eq!(seq.retired_tokens, 6);
+        assert_eq!(seq.window_tokens(), 6);
+        assert_eq!(seq.token(&sh.pool, 0), codes(0), "sink 0 still fp");
+        // Draining packs only the window — sinks cannot reorder the chain.
+        assert_eq!(seq.drain_window(&mut sh.pool).unwrap(), 4);
+        assert_eq!(seq.window_tokens(), 2, "sinks remain penned");
+        seq.release(&mut sh.pool);
+        assert_eq!(sh.pool.live_blocks(), 0);
+    }
+
+    #[test]
+    fn admit_retained_charges_mixed_rate_and_never_promotes() {
+        let mut sh = shard(Some(8));
+        let m = ServeMetrics::default();
+        let r = Retention { window: 4, sinks: 2 };
+        // total 12 tokens: 6 fp-resident at 4 B (= 3 blocks of 8 B) plus
+        // 6 retiring tokens (= 2 quantized blocks of 4 tokens).
+        let adm = sh.admit_retained(8, 4, r, 4, &m).expect("admit");
+        assert_eq!(adm.reserved_blocks, 5);
+        assert_eq!(adm.hit_tokens, 0, "retention skips the radix");
+        let mut seq = adm.seq;
+        let mut ids = Vec::new();
+        for id in 0..12 {
+            let (k, v) = codes(id);
+            seq.append(&mut sh.pool, &k, &v).unwrap();
+            ids.push(id);
+        }
+        assert_eq!(seq.pooled_tokens(), 6);
+        let promoted = sh.finish(&mut seq, &ids, adm.reserved_blocks, &m);
+        assert_eq!(promoted, 0, "retention chains never enter the radix");
+        assert_eq!(m.blocks_promoted.get(), 0);
+        assert!(sh.idle(), "reservation and blocks fully returned");
+        assert_eq!(sh.pool.live_blocks(), 0);
+    }
+
+    #[test]
+    fn admit_unstored_bytes_charges_the_policy_rate() {
+        // 3 B/token tenant on an 8 B/block shard: 8 tokens → 24 B → 3 blocks,
+        // not the quantized-rate 2 blocks admit_unstored would charge.
+        let mut sh = PagedShard::new(geom(), BT, Some(4), false);
+        let m = ServeMetrics::default();
+        let adm = sh.admit_unstored_bytes(4, 4, 3, &m).unwrap();
+        assert_eq!(adm.reserved_blocks, 3);
+        let mut seq = adm.seq;
+        for _ in 0..8 {
+            seq.append_unstored().unwrap();
+        }
+        assert_eq!(seq.logical_bytes(), 24, "unstored bytes follow the fp rate");
+        assert_eq!(sh.pool.live_blocks(), 0, "accounting only, no pages");
+        assert!(
+            sh.admit_unstored_bytes(4, 4, 3, &m).is_err(),
+            "second tenant exceeds the budget at its own rate"
+        );
+        sh.finish(&mut seq, &[], adm.reserved_blocks, &m);
+        assert!(sh.admit_unstored_bytes(4, 4, 3, &m).is_ok(), "budget recovered");
     }
 
     #[test]

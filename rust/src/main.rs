@@ -18,6 +18,8 @@ use cq::eval::tasks::{task_accuracy, TaskKind, TaskSet};
 use cq::eval::{perplexity, PplMode};
 use cq::quant::cq::{CqCodebooks, LearnCfg};
 use cq::quant::factory::{build_codec, needs_calibration, parse_cq, FactoryCfg};
+use cq::quant::policy::codec::{build_policy_codec, menu_from_rows};
+use cq::quant::policy::{greedy_allocate, PolicyDescriptor, DEFAULT_MENU_ROWS};
 use cq::runtime::Engine;
 use cq::train::{ckpt_dir, load_checkpoint, save_checkpoint, train, TrainCfg};
 use cq::util::cli::Args;
@@ -37,15 +39,22 @@ COMMANDS
   learn-cq    --model small --spec 8c8b [--no-fisher] [--iters 40]
   eval-ppl    --model small --codec cq-8c8b [--corpus wiki2s|c4s]
               [--batches 8] [--exact] [--no-fisher]
+              (--codec also accepts policy specs like cq-8c8b-w64-s4;
+               [--policy-file desc.json] evals an alloc-policy descriptor)
   eval-tasks  --model small --codec cq-8c8b [--items 120]
+  alloc-policy --model small [--budget-bits 6] [--spec int2] [--probe int2]
+              [--batches 4] [--corpus wiki2s] [--out policy.json]
   generate    --model small --prompt \"...\" [--max-tokens 48] [--cq 8c8b]
+              [--policy name]
   serve       --model small --port 7878 [--cq 8c8b] [--batch 8]
+              [--codec int4] [--policies cq-8c8b-w64-s4,fp16]
               [--workers 2] [--cache-budget-mb 64] [--block-tokens 16]
               [--no-prefix-sharing] [--session-cap 256] [--session-ttl-s 3600]
               [--prefill-chunk 512] [--ttft-slo-chunks 8] [--trace-ring 256]
               [--encode-threads 0] [--metrics-interval-s 10]
   client      --port 7878 --prompt \"...\" [--max-tokens 32] [--top-k 40]
               [--seed 7] [--session 12] [--stream] [--priority batch]
+              [--policy name]
   gen-corpus  --corpus wiki2s --split train --bytes 200000 [--out file]
 ";
 
@@ -90,6 +99,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "learn-cq" => cmd_learn_cq(args),
         "eval-ppl" => cmd_eval_ppl(args),
         "eval-tasks" => cmd_eval_tasks(args),
+        "alloc-policy" => cmd_alloc_policy(args),
         "generate" => cmd_generate(args),
         "serve" => cmd_serve(args),
         "client" => cmd_client(args),
@@ -219,7 +229,20 @@ fn cmd_eval_ppl(args: &Args) -> Result<()> {
     let codec_name = args.str("codec", "fp16");
     let engine = Engine::load_default()?;
     let params = load_checkpoint(&engine, &model, &ckpt_dir(&model))?;
-    let calib = if needs_calibration(&codec_name) {
+    // `--codec` accepts full policy specs (`cq-8c8b-w64-s4`); a plain table
+    // row builds the factory codec unwrapped.  `--policy-file` evals an
+    // allocator-produced descriptor JSON (per-layer assignments included).
+    let desc = if args.has("policy-file") {
+        let path = args.str("policy-file", "");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read policy file {path}"))?;
+        PolicyDescriptor::from_json(&Json::parse(text.trim())?)?
+    } else {
+        PolicyDescriptor::parse(&codec_name)?
+    };
+    let wants_calib = needs_calibration(&desc.base)
+        || desc.layers.iter().any(|a| needs_calibration(&a.codec));
+    let calib = if wants_calib {
         Some(CalibData::load(&ckpt_dir(&model))?)
     } else {
         None
@@ -229,9 +252,11 @@ fn cmd_eval_ppl(args: &Args) -> Result<()> {
         max_iters: args.usize("iters", 40),
         seed: args.u64("seed", 0),
     };
-    let codec = build_codec(&codec_name, calib.as_ref(), fcfg)?;
     let kind = corpus_of(args, "wiki2s")?;
     let mm = engine.manifest.model(&model)?;
+    // Amortize any fp window over the eval context so the printed bits/FPN
+    // matches what this run actually held resident.
+    let codec = build_policy_codec(&desc, calib.as_ref(), fcfg, mm.eval_ctx)?;
     let n_batches = args.usize("batches", 8);
     let ds = Dataset::from_corpus(
         CorpusSpec::new(kind, Split::Test),
@@ -277,6 +302,66 @@ fn cmd_eval_tasks(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Calibration-time per-layer bit allocation: score each layer's ppl
+/// sensitivity (nll delta when only that layer's cache is quantized by the
+/// probe codec), then greedily spend a mean bits-per-layer budget across
+/// the scalar precision ladder.  Prints the sensitivity table and emits the
+/// resulting descriptor JSON (stdout or `--out`) for `eval-ppl
+/// --policy-file`.
+fn cmd_alloc_policy(args: &Args) -> Result<()> {
+    let model = args.str("model", "small");
+    let engine = Engine::load_default()?;
+    let params = load_checkpoint(&engine, &model, &ckpt_dir(&model))?;
+    let probe_name = args.str("probe", "int2");
+    let calib = if needs_calibration(&probe_name) {
+        Some(CalibData::load(&ckpt_dir(&model))?)
+    } else {
+        None
+    };
+    let fcfg = FactoryCfg {
+        fisher: !args.flag("no-fisher"),
+        max_iters: args.usize("iters", 40),
+        seed: args.u64("seed", 0),
+    };
+    let probe = build_codec(&probe_name, calib.as_ref(), fcfg)?;
+    let kind = corpus_of(args, "wiki2s")?;
+    let mm = engine.manifest.model(&model)?;
+    let n_batches = args.usize("batches", 4);
+    let ds = Dataset::from_corpus(
+        CorpusSpec::new(kind, Split::Test),
+        n_batches * 4 * mm.eval_ctx + 4096,
+    );
+    let batches = eval_batches(&ds, 4, mm.eval_ctx, n_batches);
+    println!(
+        "scoring {}-layer sensitivity with probe '{}' over {n_batches} batches",
+        mm.n_layers,
+        probe.name()
+    );
+    let sens = cq::eval::layer_sensitivity(&engine, &model, &params, probe.as_ref(), &batches)?;
+    for (l, s) in sens.iter().enumerate() {
+        println!("  layer {l:>2}: nll delta {s:+.5}");
+    }
+    let menu = menu_from_rows(DEFAULT_MENU_ROWS, None, &fcfg)?;
+    let budget = args.f64("budget-bits", 6.0);
+    let mut desc = PolicyDescriptor::parse(&args.str("spec", "int2"))?;
+    desc.layers = greedy_allocate(&sens, &menu, budget);
+    let mean: f64 =
+        desc.layers.iter().map(|a| a.bits).sum::<f64>() / desc.layers.len().max(1) as f64;
+    println!("allocated {:.2} mean bits/layer under budget {budget:.2}:", mean);
+    for a in &desc.layers {
+        println!("  layer {:>2}: {} ({} bits)", a.layer, a.codec, a.bits);
+    }
+    let json = desc.to_json().dump();
+    match args.has("out").then(|| args.str("out", "")) {
+        Some(path) => {
+            std::fs::write(&path, &json)?;
+            println!("descriptor written to {path}");
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
+}
+
 fn serve_config(args: &Args) -> Result<ServeConfig> {
     let model = args.str("model", "small");
     let cq_tag = if args.has("cq") { Some(args.str("cq", "8c8b")) } else { None };
@@ -309,6 +394,17 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
             .then(|| args.u64("ttft-slo-chunks", 8)),
         trace_ring: args.usize("trace-ring", ServeConfig::default_trace_ring()),
         encode_threads: args.usize("encode-threads", ServeConfig::default_encode_threads()),
+        codec: args.has("codec").then(|| args.str("codec", "fp16")),
+        policies: args
+            .has("policies")
+            .then(|| args.str("policies", ""))
+            .map(|s| {
+                s.split(',')
+                    .map(|p| p.trim().to_string())
+                    .filter(|p| !p.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default(),
     })
 }
 
@@ -329,6 +425,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         seed: args.u64("seed", 1),
         session_id: None,
         priority: cq::coordinator::Priority::Interactive,
+        policy: args.has("policy").then(|| args.str("policy", "")),
     };
     let resp = handle.submit(req)?;
     println!("--- completion ({} tokens, cache {}) ---", resp.gen_tokens, human_bytes(resp.cache_bytes));
@@ -352,6 +449,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.cq.clone().unwrap_or_else(|| "fp16".into()),
         cfg.batch
     );
+    if !cfg.policies.is_empty() {
+        println!("policies: {}", cfg.policies.join(", "));
+    }
     let pool = ServePool::start(cfg, workers);
     let stop = cq::server::StopSignal::new();
     let addr = format!("127.0.0.1:{port}");
@@ -412,6 +512,9 @@ fn cmd_client(args: &Args) -> Result<()> {
     }
     if args.has("priority") {
         pairs.push(("priority", Json::Str(args.str("priority", "interactive"))));
+    }
+    if args.has("policy") {
+        pairs.push(("policy", Json::Str(args.str("policy", ""))));
     }
     if args.flag("stream") {
         // Protocol v2: print token text as frames arrive, then the terminal

@@ -145,6 +145,9 @@ impl WorkerSnapshot {
         put("blocks_promoted", m.blocks_promoted.get());
         put("blocks_evicted", m.blocks_evicted.get());
         put("bytes_per_token", m.bytes_per_token.get());
+        put("fp16_bytes_per_token", m.fp16_bytes_per_token.get());
+        put("window_tokens", m.window_tokens.get());
+        put("window_retired_tokens", m.window_retired_tokens.get());
         put("block_bytes", m.block_bytes.get());
         put("max_prompt_tokens", m.max_prompt_tokens.get());
         put("loop_iterations", m.phases.iterations.get());
@@ -162,6 +165,11 @@ impl WorkerSnapshot {
         put("trace_finished", m.trace.finished_count() as u64);
         put("trace_crashed", m.trace.crashed_count() as u64);
         put("trace_dropped", m.trace.dropped.get());
+        // Per-policy resident bytes export as dynamic `policy_bytes_<name>`
+        // scalars — names-to-numbers, so parsers need no schema change.
+        for (name, bytes) in m.policy_bytes.snapshot() {
+            put(&format!("policy_bytes_{name}"), bytes);
+        }
 
         let mut histograms = BTreeMap::new();
         for (name, h) in [
@@ -266,6 +274,12 @@ impl MetricsSnapshot {
         put("prefix_lookup_tokens", metrics.prefix_lookup_tokens());
         put("prefix_hit_tokens", metrics.prefix_hit_tokens());
         put("prefill_tokens_skipped", metrics.prefill_tokens_skipped());
+        put("fp16_bytes_per_token", metrics.fp16_bytes_per_token());
+        put("window_tokens", metrics.window_tokens());
+        put("window_retired_tokens", metrics.window_retired_tokens());
+        for (name, bytes) in metrics.policy_bytes() {
+            put(&format!("policy_bytes_{name}"), bytes);
+        }
         let workers = metrics
             .workers()
             .iter()
@@ -450,6 +464,12 @@ mod tests {
         w0.blocks_evicted.add(3);
         w0.block_bytes.observe_max(64);
         w0.bytes_per_token.observe_max(4);
+        w0.fp16_bytes_per_token.observe_max(64);
+        w0.window_tokens.set(24);
+        w0.window_retired_tokens.add(17);
+        w0.policy_bytes.add("cq-8c8b-w4", 512);
+        w0.policy_bytes.add("fp16", 2048);
+        w1.policy_bytes.add("fp16", 1024);
         w0.max_prompt_tokens.observe_max(48);
         w0.phases.iterations.add(10);
         w0.phases.record_idle(Duration::from_micros(500));
@@ -495,6 +515,18 @@ mod tests {
         assert_eq!(snap.workers[0].scalar("phase_encode_ns"), 150_000);
         assert_eq!(snap.workers[0].scalar("phase_last_encode_ns"), 150_000);
         assert_eq!(snap.pool_scalar("prefill_tokens_skipped"), 56, "w0 + w1");
+        // Policy observables: window occupancy/retire counters and dynamic
+        // per-policy byte scalars (merged name-wise at pool level).
+        assert_eq!(snap.workers[0].scalar("fp16_bytes_per_token"), 64);
+        assert_eq!(snap.workers[0].scalar("window_tokens"), 24);
+        assert_eq!(snap.workers[0].scalar("window_retired_tokens"), 17);
+        assert_eq!(snap.workers[0].scalar("policy_bytes_cq-8c8b-w4"), 512);
+        assert_eq!(snap.workers[0].scalar("policy_bytes_fp16"), 2048);
+        assert_eq!(snap.pool_scalar("window_tokens"), 24);
+        assert_eq!(snap.pool_scalar("window_retired_tokens"), 17);
+        assert_eq!(snap.pool_scalar("fp16_bytes_per_token"), 64);
+        assert_eq!(snap.pool_scalar("policy_bytes_cq-8c8b-w4"), 512);
+        assert_eq!(snap.pool_scalar("policy_bytes_fp16"), 3072, "w0 + w1");
         let ttft = &snap.workers[0].histograms["ttft"];
         assert_eq!(ttft.count, 3);
         assert_eq!(ttft.sum_ns, 11_000_000);
@@ -547,6 +579,10 @@ mod tests {
         assert!(text.contains("cq_pool_prefill_tokens_skipped 56"), "{text}");
         assert!(text.contains("cq_worker_encode_pool_busy{worker=\"0\"} 5"), "{text}");
         assert!(text.contains("cq_worker_phase_encode_ns{worker=\"0\"} 150000"), "{text}");
+        // Dynamic per-policy scalars render like any other name.
+        assert!(text.contains("cq_pool_policy_bytes_fp16 3072"), "{text}");
+        assert!(text.contains("cq_worker_policy_bytes_cq-8c8b-w4{worker=\"0\"} 512"), "{text}");
+        assert!(text.contains("cq_pool_window_retired_tokens 17"), "{text}");
         assert!(text.contains("cq_ttft_ms_count{worker=\"0\"} 3"), "{text}");
         assert!(text.contains("cq_ttft_ms_bucket{worker=\"0\",le=\"+Inf\"} 3"), "{text}");
         // Bucket lines are cumulative: the last finite `le` carries the

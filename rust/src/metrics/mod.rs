@@ -26,7 +26,7 @@
 pub mod export;
 pub mod trace;
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -260,6 +260,48 @@ impl SessionTokens {
     }
 }
 
+/// Per-policy resident-byte ledger: policy name → cache bytes currently
+/// reserved for requests served under that policy on this worker.  Settled
+/// at admission (+) and every teardown path (−, including the crash guard),
+/// so per-tenant accounting stays truthful through worker death.  Same
+/// poison-recovery stance as [`SessionTokens`]: plain `u64` values are
+/// valid even after an unwind mid-update.
+#[derive(Default)]
+pub struct PolicyBytes(Mutex<BTreeMap<String, u64>>);
+
+impl PolicyBytes {
+    fn locked(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, u64>> {
+        self.0.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn add(&self, policy: &str, bytes: u64) {
+        *self.locked().entry(policy.to_string()).or_insert(0) += bytes;
+    }
+
+    pub fn sub(&self, policy: &str, bytes: u64) {
+        let mut m = self.locked();
+        if let Some(v) = m.get_mut(policy) {
+            *v = v.saturating_sub(bytes);
+        }
+    }
+
+    pub fn get(&self, policy: &str) -> u64 {
+        self.locked().get(policy).copied().unwrap_or(0)
+    }
+
+    /// All policies with their resident bytes (sorted by name; policies
+    /// that fell back to 0 stay listed so dashboards keep the series).
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.locked().iter().map(|(k, &v)| (k.clone(), v)).collect()
+    }
+
+    /// Sum across policies (compared against the shard's own reserved
+    /// bytes in the mixed-tenant accounting test).
+    pub fn total(&self) -> u64 {
+        self.locked().values().sum()
+    }
+}
+
 /// Memory-traffic model for one decode step (paper §2.2): every generated
 /// token must read the entire cache of its sequence once.  Comparing fp16
 /// and packed-code traffic gives the bandwidth-bound speedup ceiling.
@@ -444,6 +486,18 @@ pub struct ServeMetrics {
     /// Largest prompt the worker's prefill buckets accept (prompts are
     /// trimmed to this before reservation).
     pub max_prompt_tokens: Gauge,
+    /// fp16 bytes per token for this worker's geometry, published with the
+    /// context; the router prices fp16-policy reservations from it.
+    pub fp16_bytes_per_token: Gauge,
+    /// Tokens currently fp-resident in retention pens (sinks + windows)
+    /// across this worker's active sequences — window occupancy,
+    /// republished every scheduler iteration.
+    pub window_tokens: Level,
+    /// Tokens quantized-on-retire into pool blocks as they aged past their
+    /// policy's window (cumulative).
+    pub window_retired_tokens: Counter,
+    /// Per-policy resident cache bytes (see [`PolicyBytes`]).
+    pub policy_bytes: PolicyBytes,
     /// Serve-loop wall-clock split across idle/prefill/decode/store (the
     /// "where did the iteration go" breakdown; see [`PhaseMetrics`]).
     pub phases: PhaseMetrics,
@@ -654,6 +708,38 @@ impl PoolMetrics {
             .map(|m| m.max_prompt_tokens.get())
             .max()
             .unwrap_or(0)
+    }
+
+    /// fp16 bytes per token as published by the workers (0 until built).
+    /// All shards share one geometry, like [`Self::bytes_per_token`].
+    pub fn fp16_bytes_per_token(&self) -> u64 {
+        self.workers
+            .iter()
+            .map(|m| m.fp16_bytes_per_token.get())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Pool-wide window occupancy: fp-resident retention-pen tokens summed
+    /// across workers (each shard's level is independent).
+    pub fn window_tokens(&self) -> u64 {
+        self.sum(|m| m.window_tokens.get())
+    }
+
+    /// Tokens quantized-on-retire across all workers.
+    pub fn window_retired_tokens(&self) -> u64 {
+        self.sum(|m| m.window_retired_tokens.get())
+    }
+
+    /// Per-policy resident bytes merged across workers (name-wise sums).
+    pub fn policy_bytes(&self) -> Vec<(String, u64)> {
+        let mut merged: BTreeMap<String, u64> = BTreeMap::new();
+        for m in &self.workers {
+            for (name, bytes) in m.policy_bytes.snapshot() {
+                *merged.entry(name).or_insert(0) += bytes;
+            }
+        }
+        merged.into_iter().collect()
     }
 
     /// All workers' decode-step latencies merged into one histogram.
@@ -1027,6 +1113,49 @@ mod tests {
         assert!(s.contains("redispatched=4"), "{s}");
         assert!(s.contains("sessions_evicted=3"), "{s}");
         assert!(w0.summary(1.0).contains("sessions_evicted=2"));
+    }
+
+    #[test]
+    fn policy_bytes_ledger_settles_and_aggregates() {
+        let w0 = Arc::new(ServeMetrics::default());
+        let w1 = Arc::new(ServeMetrics::default());
+        w0.policy_bytes.add("cq-8c10b", 100);
+        w0.policy_bytes.add("fp16", 400);
+        w0.policy_bytes.add("cq-8c10b", 50);
+        w1.policy_bytes.add("fp16", 600);
+        assert_eq!(w0.policy_bytes.get("cq-8c10b"), 150);
+        assert_eq!(w0.policy_bytes.total(), 550);
+        // Teardown settles; underflow clamps; unknown names are no-ops.
+        w0.policy_bytes.sub("cq-8c10b", 150);
+        w0.policy_bytes.sub("cq-8c10b", 7);
+        w0.policy_bytes.sub("never-admitted", 3);
+        assert_eq!(w0.policy_bytes.get("cq-8c10b"), 0);
+        assert_eq!(
+            w0.policy_bytes.snapshot(),
+            vec![("cq-8c10b".to_string(), 0), ("fp16".to_string(), 400)],
+            "settled policies stay listed at 0"
+        );
+        let pool = PoolMetrics::new(vec![w0, w1]);
+        assert_eq!(
+            pool.policy_bytes(),
+            vec![("cq-8c10b".to_string(), 0), ("fp16".to_string(), 1000)],
+            "pool merge sums name-wise across workers"
+        );
+    }
+
+    #[test]
+    fn window_observables_aggregate_across_workers() {
+        let w0 = Arc::new(ServeMetrics::default());
+        let w1 = Arc::new(ServeMetrics::default());
+        w0.window_tokens.set(6);
+        w1.window_tokens.set(10);
+        w0.window_retired_tokens.add(40);
+        w1.window_retired_tokens.add(2);
+        w0.fp16_bytes_per_token.observe_max(4096);
+        let pool = PoolMetrics::new(vec![w0, w1]);
+        assert_eq!(pool.window_tokens(), 16);
+        assert_eq!(pool.window_retired_tokens(), 42);
+        assert_eq!(pool.fp16_bytes_per_token(), 4096);
     }
 
     #[test]

@@ -14,6 +14,14 @@
 //! * CQ quantizes both keys and values channel-coupled (groups of `c`
 //!   contiguous channels within a head share one `b`-bit code).
 //!
+//! Above the codec zoo sits the **policy layer** ([`policy`]): named
+//! [`policy::PolicyDescriptor`]s choose which codec at which precision
+//! applies to each (layer, position) cell — per-layer bit allocation from
+//! measured sensitivity ([`policy::greedy_allocate`]), full-precision
+//! sliding window + attention-sink retention realized by the paged cache's
+//! quantize-on-retire protocol, and per-tenant policies on the serve wire
+//! (one pool, 1-bit CQ and fp16 tenants side by side).
+//!
 //! # Hot path
 //!
 //! Serving cost concentrates in centroid assignment: every prefill token
@@ -43,6 +51,7 @@ pub mod kvquant;
 pub mod nf;
 pub mod factory;
 pub mod pack;
+pub mod policy;
 
 use crate::tensor::TensorF;
 

@@ -1,0 +1,275 @@
+//! Eval-path realization of a [`PolicyDescriptor`]: a [`Codec`] that
+//! applies per-layer sub-codecs and then restores the policy's
+//! full-precision spans (sink prefix + trailing window), so `eval/ppl.rs`
+//! measures exactly what a windowed policy serves — quantized history,
+//! pristine recent tokens.
+//!
+//! Quantization runs over the *full* token series first (scalar key codecs
+//! scale per channel across all tokens, matching how a serving cache's
+//! quantizer sees the whole retired history) and the fp spans are restored
+//! afterwards from a snapshot; this makes quantize-then-restore
+//! byte-identical to plain quantization outside the window, the same
+//! invariant the paged pool's retire path holds by construction.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::calib::CalibData;
+use crate::quant::factory::{self, FactoryCfg};
+use crate::quant::{Codec, KvDims, KvKind};
+use crate::tensor::TensorF;
+
+use super::{BitOption, PolicyDescriptor};
+
+fn refresh(fcfg: &FactoryCfg) -> FactoryCfg {
+    FactoryCfg { fisher: fcfg.fisher, max_iters: fcfg.max_iters, seed: fcfg.seed }
+}
+
+/// Build allocator menu rungs from factory rows, reading each rung's
+/// bits/FPN off the built codec so accounting can never drift from the
+/// codec's own overhead math.
+pub fn menu_from_rows(
+    rows: &[&str],
+    calib: Option<&CalibData>,
+    fcfg: &FactoryCfg,
+) -> Result<Vec<BitOption>> {
+    rows.iter()
+        .map(|r| {
+            let c = factory::build_codec(r, calib, refresh(fcfg))?;
+            Ok(BitOption { codec: r.to_string(), bits: c.bits_per_fpn() })
+        })
+        .collect()
+}
+
+/// A policy rendered into runnable codecs: the base codec plus per-layer
+/// overrides, with fp retention applied post-hoc.
+pub struct PolicyCodec {
+    desc: PolicyDescriptor,
+    default_codec: Box<dyn Codec>,
+    overrides: BTreeMap<usize, Box<dyn Codec>>,
+    /// Context length the bits/FPN report amortizes the fp window over;
+    /// 0 reports the asymptotic (long-context) rate.
+    amortize_tokens: usize,
+}
+
+/// Build the codec for `desc`.  A plain table row (no retention, no layer
+/// overrides) returns the factory codec directly — the policy layer adds
+/// zero overhead when it has nothing to say.
+pub fn build_policy_codec(
+    desc: &PolicyDescriptor,
+    calib: Option<&CalibData>,
+    fcfg: FactoryCfg,
+    amortize_tokens: usize,
+) -> Result<Box<dyn Codec>> {
+    if desc.base == "sim" {
+        bail!(
+            "policy '{}': base 'sim' is the serve-only pseudo-codec; eval needs a real \
+             factory row",
+            desc.name
+        );
+    }
+    let default_codec = factory::build_codec(&desc.base, calib, refresh(&fcfg))?;
+    let mut overrides = BTreeMap::new();
+    for a in &desc.layers {
+        overrides.insert(a.layer, factory::build_codec(&a.codec, calib, refresh(&fcfg))?);
+    }
+    if overrides.is_empty() && desc.retention().is_none() {
+        return Ok(default_codec);
+    }
+    Ok(Box::new(PolicyCodec { desc: desc.clone(), default_codec, overrides, amortize_tokens }))
+}
+
+impl Codec for PolicyCodec {
+    fn name(&self) -> String {
+        self.desc.name.clone()
+    }
+
+    /// Mean quantized bits/FPN across layers, blended with 16-bit fp spans
+    /// when `amortize_tokens` gives a context length to amortize over.
+    /// With per-layer overrides the mean runs over the assignments (the
+    /// allocator emits one per layer).
+    fn bits_per_fpn(&self) -> f64 {
+        let q = if self.overrides.is_empty() {
+            self.default_codec.bits_per_fpn()
+        } else {
+            let sum: f64 = self.overrides.values().map(|c| c.bits_per_fpn()).sum();
+            sum / self.overrides.len() as f64
+        };
+        if self.amortize_tokens == 0 {
+            return q;
+        }
+        let t = self.amortize_tokens as f64;
+        let f = self.desc.fp_resident_tokens(self.amortize_tokens) as f64;
+        (q * (t - f) + 16.0 * f) / t
+    }
+
+    fn apply(&self, kind: KvKind, a: &mut TensorF) {
+        let d = KvDims::of(a);
+        let s = self.desc.sinks.min(d.t);
+        let w = self.desc.window.min(d.t - s);
+        let orig = (w + s > 0).then(|| a.clone());
+        if self.overrides.is_empty() {
+            self.default_codec.apply(kind, a);
+        } else {
+            for l in 0..d.l {
+                let mut lay = slice_layer(a, l);
+                self.overrides
+                    .get(&l)
+                    .unwrap_or(&self.default_codec)
+                    .apply(kind, &mut lay);
+                paste_layer(a, &lay, l);
+            }
+        }
+        // Restore the fp spans: first `s` sink tokens + trailing `w`.
+        if let Some(orig) = orig {
+            for l in 0..d.l {
+                for b in 0..d.b {
+                    for h in 0..d.h {
+                        for t in (0..s).chain(d.t - w..d.t) {
+                            let off = d.vec_off(l, b, h, t);
+                            a.data[off..off + d.hd]
+                                .copy_from_slice(&orig.data[off..off + d.hd]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Extract layer `l` of `[L,B,H,T,hd]` as a `[1,B,H,T,hd]` tensor.
+fn slice_layer(src: &TensorF, l: usize) -> TensorF {
+    let per = src.numel() / src.shape[0];
+    let mut shape = src.shape.clone();
+    shape[0] = 1;
+    TensorF::from_vec(&shape, src.data[l * per..(l + 1) * per].to_vec()).unwrap()
+}
+
+/// Write a `[1,B,H,T,hd]` layer slice into layer `l` of `dst`.
+fn paste_layer(dst: &mut TensorF, src: &TensorF, l: usize) {
+    let per = dst.numel() / dst.shape[0];
+    assert_eq!(src.numel(), per);
+    dst.data[l * per..(l + 1) * per].copy_from_slice(&src.data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::policy::LayerAssignment;
+
+    fn wavy(shape: &[usize]) -> TensorF {
+        let n = crate::tensor::numel(shape);
+        TensorF::from_vec(
+            shape,
+            (0..n).map(|i| ((i * 37) % 101) as f32 / 7.0 - 5.0).collect(),
+        )
+        .unwrap()
+    }
+
+    fn plain(row: &str) -> Box<dyn Codec> {
+        factory::build_codec(row, None, FactoryCfg::default()).unwrap()
+    }
+
+    fn token_span(a: &TensorF, t: usize) -> Vec<f32> {
+        let d = KvDims::of(a);
+        let mut out = Vec::new();
+        for l in 0..d.l {
+            for b in 0..d.b {
+                for h in 0..d.h {
+                    let off = d.vec_off(l, b, h, t);
+                    out.extend_from_slice(&a.data[off..off + d.hd]);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn window_and_sink_tokens_survive_apply_bit_exact() {
+        let desc = PolicyDescriptor::parse("int2-w2-s1").unwrap();
+        let codec = build_policy_codec(&desc, None, FactoryCfg::default(), 0).unwrap();
+        let orig = wavy(&[2, 1, 2, 6, 4]);
+        let mut a = orig.clone();
+        codec.apply(KvKind::Key, &mut a);
+        // fp spans: sink token 0 and trailing tokens 4, 5.
+        for t in [0usize, 4, 5] {
+            assert_eq!(token_span(&a, t), token_span(&orig, t), "token {t} must stay fp");
+        }
+        // The retired middle is byte-identical to plain quantization: the
+        // policy quantizes the full series then restores, so scales match.
+        let mut direct = orig.clone();
+        plain("int2").apply(KvKind::Key, &mut direct);
+        for t in 1..4 {
+            assert_eq!(token_span(&a, t), token_span(&direct, t), "retired token {t}");
+        }
+        assert_ne!(a.data, orig.data, "something must actually quantize");
+    }
+
+    #[test]
+    fn short_sequences_stay_entirely_fp() {
+        let desc = PolicyDescriptor::parse("int2-w4-s2").unwrap();
+        let codec = build_policy_codec(&desc, None, FactoryCfg::default(), 0).unwrap();
+        let orig = wavy(&[1, 1, 1, 3, 4]); // 3 tokens < window + sinks
+        let mut a = orig.clone();
+        codec.apply(KvKind::Value, &mut a);
+        assert_eq!(a.data, orig.data);
+    }
+
+    #[test]
+    fn per_layer_overrides_route_each_layer_to_its_codec() {
+        let mut desc = PolicyDescriptor::parse("int2").unwrap();
+        desc.layers = vec![
+            LayerAssignment { layer: 1, codec: "fp16".into(), bits: 16.0 },
+        ];
+        let codec = build_policy_codec(&desc, None, FactoryCfg::default(), 0).unwrap();
+        let orig = wavy(&[2, 1, 2, 5, 4]);
+        let mut a = orig.clone();
+        codec.apply(KvKind::Value, &mut a);
+        let per = orig.numel() / 2;
+        assert_eq!(a.data[per..], orig.data[per..], "fp16 override leaves layer 1 alone");
+        // Layer 0 falls through to the base codec.
+        let mut direct = slice_layer(&orig, 0);
+        plain("int2").apply(KvKind::Value, &mut direct);
+        assert_eq!(a.data[..per], direct.data[..], "layer 0 quantized by the base");
+    }
+
+    #[test]
+    fn bits_per_fpn_amortizes_the_fp_window() {
+        let q = plain("int2").bits_per_fpn();
+        let desc = PolicyDescriptor::parse("int2-w8").unwrap();
+        let asym = build_policy_codec(&desc, None, FactoryCfg::default(), 0).unwrap();
+        assert!((asym.bits_per_fpn() - q).abs() < 1e-12, "asymptotic = base rate");
+        let amort = build_policy_codec(&desc, None, FactoryCfg::default(), 16).unwrap();
+        let want = (q * 8.0 + 16.0 * 8.0) / 16.0;
+        assert!((amort.bits_per_fpn() - want).abs() < 1e-12);
+        assert_eq!(amort.name(), "int2-w8");
+    }
+
+    #[test]
+    fn plain_rows_pass_through_unwrapped() {
+        let desc = PolicyDescriptor::parse("int4").unwrap();
+        let codec = build_policy_codec(&desc, None, FactoryCfg::default(), 0).unwrap();
+        let reference = plain("int4");
+        assert_eq!(codec.bits_per_fpn(), reference.bits_per_fpn());
+        let mut a = wavy(&[1, 1, 2, 4, 4]);
+        let mut b = a.clone();
+        codec.apply(KvKind::Key, &mut a);
+        reference.apply(KvKind::Key, &mut b);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn menu_from_rows_reads_bits_off_the_built_codecs() {
+        let menu =
+            menu_from_rows(crate::quant::policy::DEFAULT_MENU_ROWS, None, &FactoryCfg::default())
+                .unwrap();
+        assert_eq!(menu.len(), 4);
+        assert_eq!(menu.last().unwrap().bits, 16.0, "fp16 rung is exact");
+        assert!(menu[0].bits < menu.last().unwrap().bits, "ladder actually climbs");
+        assert!(menu_from_rows(&["not-a-row"], None, &FactoryCfg::default()).is_err());
+        // sim never builds an eval codec.
+        let sim = PolicyDescriptor::parse("sim").unwrap();
+        assert!(build_policy_codec(&sim, None, FactoryCfg::default(), 0).is_err());
+    }
+}

@@ -1,0 +1,460 @@
+//! Adaptive quantization policies: *which codec at which precision* applies
+//! to each (layer, position) cell of the KV cache.
+//!
+//! The codec zoo (`quant/{cq,intq,nf,kvquant}.rs`, rows named by
+//! [`crate::quant::factory::table_rows`]) answers "how do I quantize a
+//! tensor"; this module answers the serving-side questions layered on top:
+//!
+//! * **Per-layer bit allocation** — "Cache Me If You Must"-style: score each
+//!   layer's sensitivity from `eval/ppl.rs` nll deltas
+//!   ([`crate::eval::layer_sensitivity`]) and let [`greedy_allocate`] spend
+//!   a bits-per-layer budget where it buys the most quality.
+//! * **Full-precision retention** — SKVQ-style: the trailing `window`
+//!   tokens plus the first `sinks` attention-sink tokens stay fp16 and are
+//!   quantized-on-retire into the paged block pool as they age out
+//!   (`kvcache/paged/` holds the retire protocol; DESIGN.md §5 documents
+//!   it).
+//! * **Per-tenant policies on the wire** — a [`PolicyDescriptor`] names a
+//!   complete configuration; requests carry `"policy": "<name>"` (protocol
+//!   v2.3) so one pool serves 1-bit CQ and fp16 tenants side by side, each
+//!   admitted against *its own* bytes-per-token
+//!   ([`PolicyDescriptor::reserve_bytes`]), not a pool-wide constant.
+//!
+//! Descriptor syntax: `<base>[-w<window>][-s<sinks>]` where `<base>` is any
+//! factory table row (or the serve-only pseudo-codec `sim`), e.g.
+//! `cq-8c8b-w64-s4` = 1-bit CQ with a 64-token fp window and 4 sink tokens.
+//! `fp16` never takes a retention suffix (it is already full precision).
+//! Descriptors serialize to JSON both ways ([`PolicyDescriptor::to_json`] /
+//! [`PolicyDescriptor::from_json`]) so allocator output is a storable,
+//! wire-shippable artifact.
+
+pub mod codec;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::factory;
+use crate::util::json::Json;
+
+/// Full-precision retention geometry of a policy: the trailing `window`
+/// tokens and the first `sinks` tokens stay unquantized in the cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Retention {
+    /// Trailing tokens held at full precision; quantized-on-retire as they
+    /// age past the window.
+    pub window: usize,
+    /// Leading attention-sink tokens held at full precision forever.
+    pub sinks: usize,
+}
+
+/// One layer's codec assignment from the calibration-time allocator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerAssignment {
+    pub layer: usize,
+    /// Factory table row applied to this layer.
+    pub codec: String,
+    /// That codec's bits/FPN (cached so accounting needs no rebuild).
+    pub bits: f64,
+}
+
+/// A named, complete quantization policy: base codec, retention window,
+/// and optional per-layer overrides.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyDescriptor {
+    /// Policy name as requested on the wire / CLI (the parsed spec string).
+    pub name: String,
+    /// Base codec: a factory table row, `fp16`, or the serve-only `sim`.
+    pub base: String,
+    pub window: usize,
+    pub sinks: usize,
+    /// Per-layer overrides (allocator output); empty = uniform `base`.
+    pub layers: Vec<LayerAssignment>,
+}
+
+/// Base names valid in a policy spec beyond the factory table: `sim` is the
+/// deterministic engine-free serve backend (codes are fabricated, so any
+/// quantized-side policy is servable on it).
+const EXTRA_BASES: &[&str] = &["sim"];
+
+fn known_base(name: &str) -> bool {
+    EXTRA_BASES.contains(&name) || factory::table_rows().iter().any(|r| *r == name)
+}
+
+impl PolicyDescriptor {
+    /// Parse `<base>[-w<N>][-s<M>]` (suffixes in either order, each at most
+    /// once); `<base>` must be a factory table row or `sim`.
+    pub fn parse(spec: &str) -> Result<PolicyDescriptor> {
+        let full = spec.trim().to_ascii_lowercase();
+        if full.is_empty() {
+            bail!("empty policy spec");
+        }
+        let mut base = full.as_str();
+        let (mut window, mut sinks) = (None::<usize>, None::<usize>);
+        // Peel retention suffixes off the right; table rows themselves never
+        // end in `-w<digits>` / `-s<digits>` so this cannot eat a base name.
+        loop {
+            let Some((head, tail)) = base.rsplit_once('-') else { break };
+            let parsed = match tail.strip_prefix('w') {
+                Some(d) if !d.is_empty() && d.bytes().all(|b| b.is_ascii_digit()) => {
+                    if window.is_some() {
+                        bail!("policy '{full}': duplicate -w suffix");
+                    }
+                    window = Some(d.parse()?);
+                    true
+                }
+                _ => false,
+            };
+            let parsed = parsed
+                || match tail.strip_prefix('s') {
+                    Some(d) if !d.is_empty() && d.bytes().all(|b| b.is_ascii_digit()) => {
+                        if sinks.is_some() {
+                            bail!("policy '{full}': duplicate -s suffix");
+                        }
+                        sinks = Some(d.parse()?);
+                        true
+                    }
+                    _ => false,
+                };
+            if !parsed {
+                break;
+            }
+            base = head;
+        }
+        if !known_base(base) {
+            bail!(
+                "policy '{full}': unknown base codec '{base}' (expected a \
+                 factory table row or 'sim')"
+            );
+        }
+        let (window, sinks) = (window.unwrap_or(0), sinks.unwrap_or(0));
+        if base == "fp16" && (window > 0 || sinks > 0) {
+            bail!("policy '{full}': fp16 is already full precision; drop the -w/-s suffix");
+        }
+        Ok(PolicyDescriptor {
+            name: full.clone(),
+            base: base.to_string(),
+            window,
+            sinks,
+            layers: Vec::new(),
+        })
+    }
+
+    /// A full-precision tenant (served unstored, fp16 bytes end to end).
+    pub fn is_fp(&self) -> bool {
+        self.base == "fp16"
+    }
+
+    pub fn retention(&self) -> Option<Retention> {
+        (self.window > 0 || self.sinks > 0)
+            .then_some(Retention { window: self.window, sinks: self.sinks })
+    }
+
+    /// Tokens of a `len`-token cache resident at full precision: the sink
+    /// prefix plus the trailing window (the whole sequence while it is
+    /// shorter than both combined).
+    pub fn fp_resident_tokens(&self, len: usize) -> usize {
+        if self.is_fp() {
+            return len;
+        }
+        len.min(self.window + self.sinks)
+    }
+
+    /// Peak cache bytes a `tokens`-token sequence costs under this policy,
+    /// given the pool's quantized and fp16 per-token byte rates.  This is
+    /// the per-request replacement for the old pool-wide
+    /// `bytes_per_token` admission constant: an fp16 tenant is charged fp16
+    /// math, a windowed tenant is charged fp16 for its resident window +
+    /// sinks and quantized bytes for the retired remainder.
+    ///
+    /// Per-layer overrides deliberately do **not** change this estimate:
+    /// the serve pool packs at its one wire geometry; overrides shape the
+    /// eval-side quality curve ([`codec::PolicyCodec`]), not the pool's
+    /// block math.
+    pub fn reserve_bytes(&self, tokens: usize, q_bpt: u64, fp_bpt: u64) -> u64 {
+        let fp = self.fp_resident_tokens(tokens) as u64;
+        let q = tokens as u64 - fp;
+        q * q_bpt + fp * fp_bpt
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers = self
+            .layers
+            .iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("layer", Json::Num(a.layer as f64)),
+                    ("codec", Json::Str(a.codec.clone())),
+                    ("bits", Json::Num(a.bits)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("base", Json::Str(self.base.clone())),
+            ("window", Json::Num(self.window as f64)),
+            ("sinks", Json::Num(self.sinks as f64)),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PolicyDescriptor> {
+        let base = j.req("name")?; // presence check first for a clear error
+        let _ = base;
+        let layers = match j.get("layers") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(arr) => arr
+                .as_arr()
+                .context("'layers' must be an array")?
+                .iter()
+                .map(|a| {
+                    Ok(LayerAssignment {
+                        layer: a
+                            .get("layer")
+                            .and_then(Json::as_usize)
+                            .context("layer assignment needs a 'layer' index")?,
+                        codec: a.str_or("codec", ""),
+                        bits: a.num_or("bits", 0.0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        let d = PolicyDescriptor {
+            name: j.str_or("name", ""),
+            base: j.str_or("base", ""),
+            window: j.num_or("window", 0.0) as usize,
+            sinks: j.num_or("sinks", 0.0) as usize,
+            layers,
+        };
+        if !known_base(&d.base) {
+            bail!("policy descriptor '{}': unknown base codec '{}'", d.name, d.base);
+        }
+        Ok(d)
+    }
+}
+
+/// One rung of the allocator's codec menu.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitOption {
+    pub codec: String,
+    pub bits: f64,
+}
+
+impl BitOption {
+    pub fn new(codec: &str, bits: f64) -> BitOption {
+        BitOption { codec: codec.into(), bits }
+    }
+}
+
+/// The default allocator menu rows: the calibration-free precision ladder
+/// (CQ rows need learned codebooks per spec, so the scalar ladder is what a
+/// menu can always climb).  Bits/FPN come from the built codecs at
+/// allocation time ([`codec::menu_from_rows`]), never hand-typed.
+pub const DEFAULT_MENU_ROWS: &[&str] = &["int2", "nf4", "int4", "fp16"];
+
+/// Greedily assign per-layer codecs under a mean bits-per-layer budget.
+///
+/// Every layer starts at the cheapest menu rung; while budget remains, the
+/// most sensitive layer that can still climb one rung does so (ties break
+/// toward the layer currently holding fewer bits, then the lower index, so
+/// uniform sensitivity spreads bits evenly instead of maxing layer 0).
+/// Deterministic: same inputs, same assignment.
+pub fn greedy_allocate(
+    sensitivity: &[f64],
+    menu: &[BitOption],
+    budget_bits_per_layer: f64,
+) -> Vec<LayerAssignment> {
+    assert!(!menu.is_empty(), "allocator needs a non-empty codec menu");
+    let mut menu = menu.to_vec();
+    menu.sort_by(|a, b| a.bits.total_cmp(&b.bits));
+    let l_n = sensitivity.len();
+    let budget = budget_bits_per_layer * l_n as f64;
+    let mut rung = vec![0usize; l_n];
+    let mut spent = l_n as f64 * menu[0].bits;
+    loop {
+        let mut best: Option<usize> = None;
+        for l in 0..l_n {
+            if rung[l] + 1 >= menu.len() {
+                continue;
+            }
+            let delta = menu[rung[l] + 1].bits - menu[rung[l]].bits;
+            if spent + delta > budget + 1e-9 {
+                continue;
+            }
+            best = match best {
+                None => Some(l),
+                Some(b) => {
+                    let better = sensitivity[l] > sensitivity[b]
+                        || (sensitivity[l] == sensitivity[b] && rung[l] < rung[b]);
+                    Some(if better { l } else { b })
+                }
+            };
+        }
+        match best {
+            Some(l) => {
+                spent += menu[rung[l] + 1].bits - menu[rung[l]].bits;
+                rung[l] += 1;
+            }
+            None => break,
+        }
+    }
+    (0..l_n)
+        .map(|l| LayerAssignment {
+            layer: l,
+            codec: menu[rung[l]].codec.clone(),
+            bits: menu[rung[l]].bits,
+        })
+        .collect()
+}
+
+/// The set of policies one pool serves, keyed by spec name.  Built once
+/// from `--policies a,b,c`; the router and every worker share it.
+#[derive(Clone, Debug, Default)]
+pub struct PolicyTable {
+    map: BTreeMap<String, PolicyDescriptor>,
+}
+
+impl PolicyTable {
+    pub fn build(specs: &[String]) -> Result<PolicyTable> {
+        let mut map = BTreeMap::new();
+        for spec in specs {
+            let d = PolicyDescriptor::parse(spec)?;
+            if map.insert(d.name.clone(), d).is_some() {
+                bail!("duplicate policy '{}' in --policies", spec.trim().to_ascii_lowercase());
+            }
+        }
+        Ok(PolicyTable { map })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&PolicyDescriptor> {
+        self.map.get(&name.trim().to_ascii_lowercase())
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.map.keys().map(String::as_str).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_table_rows_and_retention_suffixes() {
+        let p = PolicyDescriptor::parse("cq-8c8b").unwrap();
+        assert_eq!((p.base.as_str(), p.window, p.sinks), ("cq-8c8b", 0, 0));
+        assert!(p.retention().is_none());
+
+        let p = PolicyDescriptor::parse("CQ-8c8b-w64-s4").unwrap();
+        assert_eq!(p.name, "cq-8c8b-w64-s4", "name keeps the full lowercased spec");
+        assert_eq!((p.base.as_str(), p.window, p.sinks), ("cq-8c8b", 64, 4));
+        assert_eq!(p.retention(), Some(Retention { window: 64, sinks: 4 }));
+
+        // Suffix order is free; grouped-scalar rows keep their -gs tail.
+        let p = PolicyDescriptor::parse("int4-gs128-s2-w8").unwrap();
+        assert_eq!((p.base.as_str(), p.window, p.sinks), ("int4-gs128", 8, 2));
+
+        // kvquant rows with the -1% tail parse too.
+        let p = PolicyDescriptor::parse("kvquant-2b-1%-w16").unwrap();
+        assert_eq!((p.base.as_str(), p.window), ("kvquant-2b-1%", 16));
+
+        let p = PolicyDescriptor::parse("sim-w4").unwrap();
+        assert_eq!(p.base, "sim");
+
+        assert!(PolicyDescriptor::parse("fp16").unwrap().is_fp());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in ["", "notacodec", "cq-9c9b", "fp16-w4", "fp16-s1", "int4-w2-w3"] {
+            assert!(PolicyDescriptor::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn descriptor_json_roundtrip() {
+        let mut d = PolicyDescriptor::parse("cq-8c8b-w32-s2").unwrap();
+        d.layers = vec![
+            LayerAssignment { layer: 0, codec: "int8".into(), bits: 8.5 },
+            LayerAssignment { layer: 1, codec: "int2".into(), bits: 2.5 },
+        ];
+        let line = d.to_json().dump();
+        let back = PolicyDescriptor::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, d, "JSON roundtrip must be lossless");
+        // A layer-free descriptor roundtrips too (layers may be absent).
+        let plain = PolicyDescriptor::parse("fp16").unwrap();
+        let back =
+            PolicyDescriptor::from_json(&Json::parse(&plain.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, plain);
+        // Unknown bases are rejected on the way back in.
+        let mut j = d.to_json();
+        if let Json::Obj(ref mut m) = j {
+            m.insert("base".into(), Json::Str("mystery".into()));
+        }
+        assert!(PolicyDescriptor::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn reserve_bytes_is_per_policy_math() {
+        let (q, fp) = (4u64, 64u64);
+        let cq = PolicyDescriptor::parse("cq-8c8b").unwrap();
+        assert_eq!(cq.reserve_bytes(100, q, fp), 400, "plain policy: all quantized");
+        let f = PolicyDescriptor::parse("fp16").unwrap();
+        assert_eq!(f.reserve_bytes(100, q, fp), 6400, "fp tenant: fp16 math");
+        let w = PolicyDescriptor::parse("cq-8c8b-w10-s2").unwrap();
+        // 12 resident fp tokens + 88 retired quantized tokens.
+        assert_eq!(w.reserve_bytes(100, q, fp), 88 * 4 + 12 * 64);
+        // Shorter than window+sinks: everything is still fp-resident.
+        assert_eq!(w.fp_resident_tokens(7), 7);
+        assert_eq!(w.reserve_bytes(7, q, fp), 7 * 64);
+    }
+
+    #[test]
+    fn greedy_allocator_spends_budget_on_sensitive_layers() {
+        let menu = vec![
+            BitOption::new("int2", 2.0),
+            BitOption::new("int4", 4.0),
+            BitOption::new("int8", 8.0),
+        ];
+        // Layer 2 is by far the most sensitive; budget of 4 bits/layer over
+        // 3 layers = 12 bits total.
+        let out = greedy_allocate(&[0.1, 0.2, 5.0], &menu, 4.0);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[2].codec, "int8", "most sensitive layer gets the most bits");
+        let total: f64 = out.iter().map(|a| a.bits).sum();
+        assert!(total <= 12.0 + 1e-9, "budget respected, got {total}");
+        // Sensitivity order is respected in the assignment.
+        assert!(out[2].bits >= out[1].bits && out[1].bits >= out[0].bits);
+
+        // Budget at the floor: everyone gets the cheapest rung.
+        let floor = greedy_allocate(&[1.0, 2.0], &menu, 2.0);
+        assert!(floor.iter().all(|a| a.codec == "int2"));
+
+        // Budget above the ceiling: everyone maxes out.
+        let ceil = greedy_allocate(&[1.0, 2.0], &menu, 100.0);
+        assert!(ceil.iter().all(|a| a.codec == "int8"));
+
+        // Uniform sensitivity spreads evenly instead of maxing layer 0.
+        let even = greedy_allocate(&[1.0, 1.0, 1.0, 1.0], &menu, 4.0);
+        assert!(even.iter().all(|a| a.codec == "int4"), "{even:?}");
+
+        // Determinism.
+        assert_eq!(greedy_allocate(&[0.3, 0.7], &menu, 5.0), greedy_allocate(&[0.3, 0.7], &menu, 5.0));
+    }
+
+    #[test]
+    fn policy_table_builds_and_rejects_duplicates() {
+        let t = PolicyTable::build(&["cq-8c8b".into(), "fp16".into(), "cq-8c8b-w16".into()])
+            .unwrap();
+        assert_eq!(t.names(), vec!["cq-8c8b", "cq-8c8b-w16", "fp16"]);
+        assert!(t.get("FP16").is_some(), "lookup is case-insensitive");
+        assert!(t.get("nope").is_none());
+        assert!(PolicyTable::build(&["fp16".into(), "FP16".into()]).is_err(), "dup");
+        assert!(PolicyTable::build(&["wat".into()]).is_err(), "unknown base");
+        assert!(PolicyTable::default().is_empty());
+    }
+}

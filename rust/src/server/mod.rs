@@ -1,4 +1,4 @@
-//! TCP inference server + client (line-delimited JSON, protocol v2).
+//! TCP inference server + client (line-delimited JSON, protocol v2.3).
 //!
 //! **v1 (non-streaming)** — one request line, one response line:
 //!
@@ -109,6 +109,23 @@
 //! traces a retired worker left behind.  An unknown `"op"` gets
 //! `{"ok": false, "error": ...}`.
 //!
+//! **Per-tenant policies (v2.3).**  A request may carry
+//! `"policy": "<name>"` naming one of the quantization policies the pool
+//! was started with (`--policies`, see
+//! [`crate::quant::policy::PolicyDescriptor`]):
+//!
+//! ```text
+//! -> {"prompt": "...", "max_tokens": 32, "policy": "cq-8c10b-w64-s4"}
+//! ```
+//!
+//! The name selects the codec/precision tier and the fp retention window
+//! the request's cache entries live under, and — because different
+//! policies cost different bytes per token — prices the request's pool and
+//! shard admission at its own rate.  A policy the pool does not serve is a
+//! non-retryable `[rejected: unknown policy ...]` failure; a request
+//! without the field uses the worker's native cache mode, exactly as in
+//! v2.2.  The field is omitted (not defaulted) on the wire when unset.
+//!
 //! Connection threads are thin: they parse, forward to the serve pool's
 //! router, and stream events back.  All model work happens on the pool's
 //! engine worker threads (`coordinator::pool` + `serve_loop`).  The accept
@@ -189,6 +206,11 @@ pub fn parse_request(line: &str, id: u64) -> Result<(Request, bool)> {
         seed: j.num_or("seed", id as f64) as u64,
         session_id: j.get("session").and_then(Json::as_f64).map(|s| s as u64),
         priority,
+        policy: j
+            .get("policy")
+            .and_then(Json::as_str)
+            .filter(|p| !p.is_empty())
+            .map(str::to_string),
     };
     let stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
     Ok((req, stream))
@@ -552,7 +574,21 @@ mod tests {
         assert_eq!(r.seed, 3);
         assert_eq!(r.session_id, None);
         assert_eq!(r.priority, Priority::Interactive, "priority defaults to interactive");
+        assert_eq!(r.policy, None, "policy is opt-in, absent by default");
         assert!(parse_request("not json", 1).is_err());
+    }
+
+    #[test]
+    fn parse_request_policy_field() {
+        let (r, _) =
+            parse_request(r#"{"prompt": "hi", "policy": "cq-8c10b-w64-s4"}"#, 9).unwrap();
+        assert_eq!(r.policy.as_deref(), Some("cq-8c10b-w64-s4"));
+        // An empty policy string is treated as unset, not as a policy name.
+        let (r2, _) = parse_request(r#"{"prompt": "hi", "policy": ""}"#, 10).unwrap();
+        assert_eq!(r2.policy, None);
+        // Non-string values are ignored (type-lenient, like "session").
+        let (r3, _) = parse_request(r#"{"prompt": "hi", "policy": 7}"#, 11).unwrap();
+        assert_eq!(r3.policy, None);
     }
 
     #[test]

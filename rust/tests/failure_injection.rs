@@ -102,6 +102,8 @@ fn serve_loop_fails_fast_on_missing_assets() {
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
         encode_threads: ServeConfig::default_encode_threads(),
+        codec: None,
+        policies: Vec::new(),
     };
     let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
     let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
@@ -145,6 +147,8 @@ fn serve_config_validates_batch_and_codebook_tag() {
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
         encode_threads: ServeConfig::default_encode_threads(),
+        codec: None,
+        policies: Vec::new(),
     };
     let (_tx, rx) = std::sync::mpsc::channel::<Inbound>();
     let metrics = std::sync::Arc::new(cq::metrics::ServeMetrics::default());
@@ -174,6 +178,8 @@ fn sim_pool_cfg(plan: &std::sync::Arc<FaultPlan>) -> ServeConfig {
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
         encode_threads: ServeConfig::default_encode_threads(),
+        codec: None,
+        policies: Vec::new(),
     }
 }
 

@@ -34,6 +34,8 @@ fn sim_cfg(plan: &Arc<FaultPlan>) -> ServeConfig {
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
         encode_threads: ServeConfig::default_encode_threads(),
+        codec: None,
+        policies: Vec::new(),
     }
 }
 

@@ -48,6 +48,8 @@ fn cq_config(batch: usize) -> ServeConfig {
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
         encode_threads: ServeConfig::default_encode_threads(),
+        codec: None,
+        policies: Vec::new(),
     }
 }
 

@@ -41,6 +41,8 @@ fn cq_config() -> ServeConfig {
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
         encode_threads: ServeConfig::default_encode_threads(),
+        codec: None,
+        policies: Vec::new(),
     }
 }
 
@@ -66,6 +68,8 @@ fn sim_config(cache_budget: Option<usize>) -> ServeConfig {
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
         encode_threads: ServeConfig::default_encode_threads(),
+        codec: None,
+        policies: Vec::new(),
     }
 }
 
@@ -325,6 +329,8 @@ fn pool_with_missing_assets_fails_fast_everywhere() {
         ttft_slo_chunks: None,
         trace_ring: ServeConfig::default_trace_ring(),
         encode_threads: ServeConfig::default_encode_threads(),
+        codec: None,
+        policies: Vec::new(),
     };
     let pool = ServePool::start(cfg, 3);
     assert_eq!(pool.n_workers(), 3);
