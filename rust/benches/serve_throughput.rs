@@ -10,18 +10,23 @@
 //! governs real accelerators: bytes-touched-per-token ratios are exact.
 //!
 //!     cargo bench --bench serve_throughput \
-//!         [-- --requests 16 --max-tokens 16 --workers 1,2,4 --clients 8 --check]
+//!         [-- --requests 16 --max-tokens 16 --workers 1,2,4 --clients 8 \
+//!          --idle-clients 256 --check]
 //!
 //! `--check` enforces the committed `BENCH_serve.json` throughput floors
 //! (>15% regression exits nonzero); without a runtime, or against an
-//! unmeasured floor file, it establishes instead of enforcing.
+//! unmeasured floor file, it establishes instead of enforcing.  The
+//! idle-connection frontend scenario runs on the sim backend, so it
+//! measures (and asserts) on every host, runtime or not.
 
-use std::time::Instant;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 use cq::bench_support::Pipeline;
-use cq::coordinator::{Event, Request, ServeConfig, ServePool, StreamHandle};
+use cq::coordinator::{Event, FaultPlan, Request, ServeConfig, ServePool, SimSpec, StreamHandle};
 use cq::metrics::TrafficModel;
 use cq::quant::cq::CqSpec;
+use cq::server::{client_request_line, serve_tcp, StopSignal};
 use cq::util::bench::{emit_json, workspace_file, Table, Timing};
 use cq::util::cli::Args;
 use cq::util::json::Json;
@@ -194,6 +199,123 @@ fn run_with_cfg(
     res
 }
 
+#[cfg(target_os = "linux")]
+fn thread_count() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").expect("/proc/self/status");
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("Threads: line")
+}
+
+#[cfg(not(target_os = "linux"))]
+fn thread_count() -> usize {
+    0 // no /proc; the flat-thread assertion degrades to a no-op
+}
+
+/// Frontend scenario: the reactor holds `--idle-clients` idle connections
+/// on a **flat thread count** — threads stay O(reactor + workers), never
+/// O(connections) — and the live request path threading through the idle
+/// pile shows no tail-latency cliff.  Both ends live in this process (one
+/// fd per side per conn), so the default stays under a 1024 soft fd limit;
+/// pass `--idle-clients 10000` after `ulimit -n 25000` for the full-scale
+/// run.  Sim backend: it measures on every host; both contracts are hard
+/// asserts.
+fn frontend_idle_scenario(args: &Args) -> Json {
+    let idle_n = args.usize("idle-clients", 256);
+    let plan = FaultPlan::new();
+    let cfg = ServeConfig {
+        model: "sim".into(),
+        cq: None,
+        batch: 8,
+        cache_budget: None,
+        codebook_path: None,
+        params_path: "/nonexistent/sim-has-no-params.bin".into(),
+        kernel: ServeConfig::default_kernel(),
+        block_tokens: 4,
+        prefix_sharing: true,
+        sim: Some(SimSpec::tiny()),
+        faults: Some(plan),
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
+        encode_threads: ServeConfig::default_encode_threads(),
+        codec: None,
+        policies: Vec::new(),
+    };
+    let pool = ServePool::start(cfg, 2);
+    let stop = StopSignal::new();
+    let addr = "127.0.0.1:17999";
+    let row = std::thread::scope(|scope| {
+        let p = &pool;
+        let stop2 = stop.clone();
+        let server = scope.spawn(move || serve_tcp(p, addr, stop2).unwrap());
+        std::thread::sleep(Duration::from_millis(300)); // wait for bind
+
+        // Sequential v1 probes: each is a fresh connect -> request ->
+        // response -> close round trip through the reactor.
+        let probe = |n: usize| -> (f64, f64) {
+            let mut ms: Vec<f64> = (0..n)
+                .map(|_| {
+                    let t0 = Instant::now();
+                    let r = client_request_line(addr, r#"{"prompt": "probe", "max_tokens": 4}"#)
+                        .expect("probe");
+                    assert_eq!(r.num_or("gen_tokens", -1.0) as i64, 4, "{}", r.dump());
+                    t0.elapsed().as_secs_f64() * 1e3
+                })
+                .collect();
+            ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (ms[ms.len() / 2], ms[ms.len() * 99 / 100])
+        };
+        let (p50_alone, p99_alone) = probe(40);
+        let threads_before = thread_count();
+
+        let idle: Vec<TcpStream> = (0..idle_n)
+            .map(|_| TcpStream::connect(addr).expect("idle connect"))
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while (pool.metrics.conns_open.get() as usize) < idle_n {
+            assert!(Instant::now() < deadline, "reactor never admitted the idle pile");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let grown = thread_count().saturating_sub(threads_before);
+        assert!(
+            grown <= 4,
+            "thread count grew by {grown} for {idle_n} idle connections; \
+             the frontend must multiplex, not spawn"
+        );
+
+        let (p50_idle, p99_idle) = probe(40);
+        assert!(
+            p99_idle <= p99_alone * 5.0 + 25.0,
+            "tail-latency cliff under idle pile: p99 {p99_idle:.2} ms vs {p99_alone:.2} ms alone"
+        );
+        eprintln!(
+            "  frontend: {idle_n} idle conns, +{grown} threads, \
+             p50 {p50_alone:.2}->{p50_idle:.2} ms, p99 {p99_alone:.2}->{p99_idle:.2} ms"
+        );
+
+        drop(idle);
+        stop.raise();
+        server.join().unwrap();
+        Json::obj(vec![
+            ("name", Json::Str(format!("frontend_idle,conns={idle_n}"))),
+            ("idle_conns", Json::Num(idle_n as f64)),
+            ("threads_grown", Json::Num(grown as f64)),
+            ("req_p50_ms_alone", Json::Num(p50_alone)),
+            ("req_p50_ms_idle", Json::Num(p50_idle)),
+            ("req_p99_ms_alone", Json::Num(p99_alone)),
+            ("req_p99_ms_idle", Json::Num(p99_idle)),
+        ])
+    });
+    pool.shutdown().unwrap();
+    row
+}
+
 fn main() {
     // Args::parse treats argv[0] as the subcommand; give it one so the
     // first real `--flag` is not swallowed (cargo's own --bench is dropped).
@@ -206,16 +328,18 @@ fn main() {
         .then(|| std::fs::read_to_string(workspace_file("BENCH_serve.json")).ok())
         .flatten()
         .and_then(|s| Json::parse(&s).ok());
+    // --- Frontend: idle-connection pile (sim backend, runs everywhere) ---
+    let mut scenario_rows: Vec<Json> = vec![frontend_idle_scenario(&args)];
     // Serving needs the AOT artifacts + a real PJRT engine; on build-only
-    // hosts emit an explicitly-empty BENCH_serve.json instead of panicking
-    // so CI can exercise the bench binary everywhere.  `--check` cannot
-    // enforce without measurements, so it degrades to establishing.
+    // hosts emit BENCH_serve.json with only the runtime-free scenarios
+    // instead of panicking so CI can exercise the bench binary everywhere.
+    // `--check` cannot enforce without measurements, so it degrades to
+    // establishing.
     if !cq::runtime_available() {
         eprintln!("serve_throughput: PJRT runtime/artifacts unavailable; skipping measurements");
-        emit_serve_json(false, Vec::new());
+        emit_serve_json(false, scenario_rows);
         return;
     }
-    let mut scenario_rows: Vec<Json> = Vec::new();
     let max_new = args.usize("max-tokens", 12);
     let mut worker_counts: Vec<usize> = args
         .str("workers", "1,2,4")

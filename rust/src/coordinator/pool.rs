@@ -947,6 +947,36 @@ impl ServePool {
         }
     }
 
+    /// Dispatch a request onto a caller-owned event channel instead of a
+    /// fresh per-request one.  Events are id-tagged, so one sender can
+    /// multiplex every in-flight request — this is the event-driven
+    /// frontend's queue-push path: the reactor hands its single shared
+    /// sender here and one pump thread drains all streams, instead of one
+    /// blocked drain thread per connection.  Same dispatch contract as
+    /// [`Self::submit_stream`]: every router-terminal outcome has pushed a
+    /// terminal `Failed` event onto `events` before this returns, so a
+    /// stream can never hang.  The returned [`CancelHandle`] is inert
+    /// (`cancel` is a no-op) when the request terminated at the router.
+    pub fn submit_stream_with(&self, mut req: Request, events: &Sender<Event>) -> CancelHandle {
+        // Clamp once, up front, for the same reason submit_stream does.
+        req.max_new = req.max_new.max(1);
+        let id = req.id;
+        match self.state.dispatch(req, events, &self.sup_tx, 0) {
+            Dispatched::Sent(w) => {
+                CancelHandle { id, tx: Some(self.state.workers[w].tx.clone()) }
+            }
+            Dispatched::Terminal => CancelHandle { id, tx: None },
+            Dispatched::NoWorkers => {
+                let _ = events.send(Event::Failed {
+                    id,
+                    reason: String::from("[error: no live serve workers]"),
+                    retryable: true,
+                });
+                CancelHandle { id, tx: None }
+            }
+        }
+    }
+
     /// Dispatch without waiting; returns the legacy response receiver.  The
     /// shared drain thread folds the event stream into its terminal
     /// [`Response`]; worker death without a terminal event surfaces as a

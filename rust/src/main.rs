@@ -52,6 +52,8 @@ COMMANDS
               [--no-prefix-sharing] [--session-cap 256] [--session-ttl-s 3600]
               [--prefill-chunk 512] [--ttft-slo-chunks 8] [--trace-ring 256]
               [--encode-threads 0] [--metrics-interval-s 10]
+              [--max-conns 10000] [--max-line-bytes 262144]
+              [--client-buffer 1048576] [--client-buffer-policy disconnect]
   client      --port 7878 --prompt \"...\" [--max-tokens 32] [--top-k 40]
               [--seed 7] [--session 12] [--stream] [--priority batch]
               [--policy name]
@@ -452,6 +454,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if !cfg.policies.is_empty() {
         println!("policies: {}", cfg.policies.join(", "));
     }
+    let dflt = cq::server::ServerConfig::default();
+    let srv_cfg = cq::server::ServerConfig {
+        max_conns: args.usize("max-conns", dflt.max_conns),
+        max_line_bytes: args.usize("max-line-bytes", dflt.max_line_bytes),
+        buffer: cq::server::BufferPolicy {
+            max_bytes: args.usize("client-buffer", dflt.buffer.max_bytes),
+            on_full: match args.str("client-buffer-policy", "disconnect").as_str() {
+                "disconnect" => cq::server::OverflowPolicy::Disconnect,
+                "drop-oldest" => cq::server::OverflowPolicy::DropOldest,
+                other => {
+                    bail!("unknown --client-buffer-policy {other:?} (use disconnect|drop-oldest)")
+                }
+            },
+        },
+    };
     let pool = ServePool::start(cfg, workers);
     let stop = cq::server::StopSignal::new();
     let addr = format!("127.0.0.1:{port}");
@@ -486,7 +503,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 }
             });
         }
-        let res = cq::server::serve_tcp(&pool, &addr, stop.clone());
+        let res = cq::server::serve_tcp_cfg(&pool, &addr, stop.clone(), srv_cfg);
         // Whatever path serve_tcp took (bind failure included), the reporter
         // thread must see the flag or the scope would never close.
         stop.raise();

@@ -277,6 +277,12 @@ impl MetricsSnapshot {
         put("fp16_bytes_per_token", metrics.fp16_bytes_per_token());
         put("window_tokens", metrics.window_tokens());
         put("window_retired_tokens", metrics.window_retired_tokens());
+        put("conns_open", metrics.conns_open.get());
+        put("conns_read_paused", metrics.conns_read_paused.get());
+        put("fanout_subscribers", metrics.fanout_subscribers.get());
+        put("frames_dropped", metrics.frames_dropped.get());
+        put("conns_dropped_slow", metrics.conns_dropped_slow.get());
+        put("accept_transient_errors", metrics.accept_transient_errors.get());
         for (name, bytes) in metrics.policy_bytes() {
             put(&format!("policy_bytes_{name}"), bytes);
         }
@@ -487,6 +493,12 @@ mod tests {
         pool.router_rejected.add(2);
         pool.workers_dead.add(1);
         pool.requests_redispatched.add(3);
+        pool.conns_open.set(11);
+        pool.conns_read_paused.set(2);
+        pool.fanout_subscribers.set(5);
+        pool.frames_dropped.add(9);
+        pool.conns_dropped_slow.add(1);
+        pool.accept_transient_errors.add(4);
         (pool, w0, w1)
     }
 
@@ -527,6 +539,13 @@ mod tests {
         assert_eq!(snap.pool_scalar("fp16_bytes_per_token"), 64);
         assert_eq!(snap.pool_scalar("policy_bytes_cq-8c8b-w4"), 512);
         assert_eq!(snap.pool_scalar("policy_bytes_fp16"), 3072, "w0 + w1");
+        // Frontend (reactor) gauges and counters ride the same snapshot.
+        assert_eq!(snap.pool_scalar("conns_open"), 11);
+        assert_eq!(snap.pool_scalar("conns_read_paused"), 2);
+        assert_eq!(snap.pool_scalar("fanout_subscribers"), 5);
+        assert_eq!(snap.pool_scalar("frames_dropped"), 9);
+        assert_eq!(snap.pool_scalar("conns_dropped_slow"), 1);
+        assert_eq!(snap.pool_scalar("accept_transient_errors"), 4);
         let ttft = &snap.workers[0].histograms["ttft"];
         assert_eq!(ttft.count, 3);
         assert_eq!(ttft.sum_ns, 11_000_000);

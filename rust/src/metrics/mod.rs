@@ -584,6 +584,24 @@ pub struct PoolMetrics {
     /// Queued (not-yet-admitted) requests the supervisor speculatively
     /// re-dispatched to a live worker after their worker died.
     pub requests_redispatched: Counter,
+    /// Open frontend connections (reactor gauge).
+    pub conns_open: Level,
+    /// Connections whose read interest is currently withdrawn by the
+    /// reactor's backpressure (outbound queue above half its cap, or too
+    /// many in-flight subscriptions).
+    pub conns_read_paused: Level,
+    /// Live broadcast subscriptions across all in-flight generations
+    /// (primary streams + watchers).
+    pub fanout_subscribers: Level,
+    /// Outbound frames discarded by the `drop-oldest` client buffer
+    /// policy (slow readers).
+    pub frames_dropped: Counter,
+    /// Connections closed by the `disconnect` client buffer policy (slow
+    /// readers).
+    pub conns_dropped_slow: Counter,
+    /// Transient `accept()` errors (EINTR/ECONNABORTED/fd pressure) the
+    /// reactor survived instead of tearing down the frontend.
+    pub accept_transient_errors: Counter,
 }
 
 impl PoolMetrics {
@@ -594,6 +612,12 @@ impl PoolMetrics {
             router_rejected: Counter::default(),
             workers_dead: Counter::default(),
             requests_redispatched: Counter::default(),
+            conns_open: Level::default(),
+            conns_read_paused: Level::default(),
+            fanout_subscribers: Level::default(),
+            frames_dropped: Counter::default(),
+            conns_dropped_slow: Counter::default(),
+            accept_transient_errors: Counter::default(),
         }
     }
 

@@ -1,0 +1,364 @@
+//! Splaycast-style broadcast fan-out: one upstream event stream per
+//! generation, N subscribed connections, bounded per-client buffers.
+//!
+//! Every in-flight request owns one [`Hub`] entry, registered *before* the
+//! request is submitted so no event can slip past the subscription.  The
+//! pump thread publishes each pool [`Event`] exactly once; the hub formats
+//! it per subscriber mode and pushes the frame into each subscriber's
+//! [`ConnQueue`].  Slow readers are the queue's problem (its
+//! [`BufferPolicy`](super::conn::BufferPolicy) clamps them) — publishing
+//! never blocks, so a lagging client can never stall the pump, the
+//! reactor, or any decode lane.
+//!
+//! Subscriber modes:
+//!
+//! * [`SubMode::Stream`] — the requester asked for `"stream": true`: every
+//!   frame (started/token/done/failed) is delivered; token frames are
+//!   droppable under buffer pressure, terminal frames never are.
+//! * [`SubMode::V1`] — a non-streaming request: only the terminal event is
+//!   delivered, formatted as the v1 response line.
+//! * [`SubMode::Watch`] — a `{"op":"watch","id":N}` subscriber: same
+//!   frames as `Stream`, attached to a generation some other connection
+//!   started.
+//!
+//! When the last subscriber of a generation disconnects, the hub cancels
+//! the request upstream — nobody is listening, so the lane and its
+//! reserved cache blocks go back to the pool.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{CancelHandle, Event, Response};
+use crate::metrics::PoolMetrics;
+use crate::util::json::Json;
+
+use super::conn::{ConnQueue, Notifier, PushOutcome};
+use super::{format_event, format_response};
+
+/// How a subscriber wants a generation's events rendered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubMode {
+    /// Full v2 NDJSON frame stream.
+    Stream,
+    /// Terminal line only, in the v1 response format.
+    V1,
+    /// Full frame stream for a generation another connection started.
+    Watch,
+}
+
+struct Sub {
+    conn: Arc<ConnQueue>,
+    mode: SubMode,
+}
+
+struct Entry {
+    subs: Vec<Sub>,
+    cancel: Option<CancelHandle>,
+}
+
+/// Fan-out registry: request id → live subscribers.
+pub struct Hub {
+    inner: Mutex<HashMap<u64, Entry>>,
+    metrics: Arc<PoolMetrics>,
+    notifier: Arc<Notifier>,
+}
+
+impl Hub {
+    pub fn new(metrics: Arc<PoolMetrics>, notifier: Arc<Notifier>) -> Hub {
+        Hub { inner: Mutex::new(HashMap::new()), metrics, notifier }
+    }
+
+    /// Register the primary subscriber of a new request.  Must happen
+    /// before the request is submitted: router-terminal failures publish
+    /// synchronously, and an unregistered id would drop them.
+    pub fn register(&self, id: u64, conn: &Arc<ConnQueue>, mode: SubMode) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        conn.add_sub();
+        g.insert(id, Entry { subs: vec![Sub { conn: conn.clone(), mode }], cancel: None });
+        self.update_gauge(&g);
+    }
+
+    /// Attach the upstream cancel handle once submission returns.  The
+    /// entry may already be gone (router-terminal events publish during
+    /// submit); that is fine — a terminal request needs no cancel.
+    pub fn set_cancel(&self, id: u64, cancel: CancelHandle) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(e) = g.get_mut(&id) {
+            e.cancel = Some(cancel);
+        }
+    }
+
+    /// Attach a watcher to a live generation.  `false` when the id is
+    /// unknown or already terminal.
+    pub fn watch(&self, id: u64, conn: &Arc<ConnQueue>) -> bool {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(e) = g.get_mut(&id) else { return false };
+        conn.add_sub();
+        e.subs.push(Sub { conn: conn.clone(), mode: SubMode::Watch });
+        self.update_gauge(&g);
+        true
+    }
+
+    /// Publish one upstream event to every subscriber of its generation.
+    /// Terminal events retire the entry.  Never blocks: buffer pressure is
+    /// resolved frame-by-frame by each subscriber's queue policy.
+    pub fn publish(&self, ev: &Event) {
+        let id = match ev {
+            Event::Started { id } | Event::Failed { id, .. } => *id,
+            Event::Token { id, .. } => *id,
+            Event::Done(r) => r.id,
+        };
+        let terminal = ev.is_terminal();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(entry) = g.get_mut(&id) else {
+            // All subscribers left (the request was cancelled) or the id
+            // was never registered; nothing is listening.
+            return;
+        };
+        let stream_line = format_event(ev);
+        for sub in &entry.subs {
+            let line: Option<(String, bool)> = match sub.mode {
+                SubMode::Stream | SubMode::Watch => Some((stream_line.clone(), !terminal)),
+                SubMode::V1 => match ev {
+                    Event::Done(r) => Some((format_response(r), false)),
+                    Event::Failed { id, reason, .. } => {
+                        Some((format_response(&Response::failure(*id, reason.clone())), false))
+                    }
+                    _ => None,
+                },
+            };
+            let Some((line, droppable)) = line else { continue };
+            match sub.conn.push(&line, droppable) {
+                PushOutcome::Queued => {}
+                PushOutcome::Dropped(n) => {
+                    self.metrics.frames_dropped.add(n);
+                    let lag = Json::obj(vec![
+                        ("event", Json::Str("lagged".into())),
+                        ("id", Json::Num(id as f64)),
+                        ("dropped", Json::Num(n as f64)),
+                        ("total_dropped", Json::Num(sub.conn.dropped_total() as f64)),
+                    ])
+                    .dump();
+                    if let PushOutcome::Dropped(m) = sub.conn.push(&lag, true) {
+                        self.metrics.frames_dropped.add(m);
+                    }
+                }
+                PushOutcome::Killed => {
+                    // Disconnect policy fired: the queue holds only the
+                    // goodbye frame now; the reactor closes the socket on
+                    // its next flush and `drop_conn` cancels upstream.
+                    self.metrics.conns_dropped_slow.add(1);
+                }
+            }
+            self.notifier.mark(&sub.conn);
+        }
+        if terminal {
+            if let Some(e) = g.remove(&id) {
+                for s in &e.subs {
+                    s.conn.remove_sub();
+                }
+            }
+            self.update_gauge(&g);
+        }
+    }
+
+    /// A connection closed: detach it from every generation.  Generations
+    /// left with zero subscribers are cancelled upstream — nobody is
+    /// listening, so decoding to `max_new` would burn a lane for nothing.
+    pub fn drop_conn(&self, conn: &Arc<ConnQueue>) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.retain(|_, e| {
+            let before = e.subs.len();
+            e.subs.retain(|s| !Arc::ptr_eq(&s.conn, conn));
+            for _ in e.subs.len()..before {
+                conn.remove_sub();
+            }
+            if e.subs.is_empty() {
+                if let Some(c) = &e.cancel {
+                    c.cancel();
+                }
+                false
+            } else {
+                true
+            }
+        });
+        self.update_gauge(&g);
+    }
+
+    /// Live subscriptions across all generations (the gauge's source).
+    pub fn subscriber_count(&self) -> usize {
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.values().map(|e| e.subs.len()).sum()
+    }
+
+    /// Whether a generation still has a live hub entry (test hook).
+    pub fn is_live(&self, id: u64) -> bool {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).contains_key(&id)
+    }
+
+    fn update_gauge(&self, g: &HashMap<u64, Entry>) {
+        let total: usize = g.values().map(|e| e.subs.len()).sum();
+        self.metrics.fanout_subscribers.set(total as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::conn::{BufferPolicy, OverflowPolicy};
+    use super::*;
+    use crate::metrics::ServeMetrics;
+
+    fn hub() -> (Hub, Arc<PoolMetrics>) {
+        let metrics = Arc::new(PoolMetrics::new(vec![Arc::new(ServeMetrics::default())]));
+        (Hub::new(metrics.clone(), Notifier::new(None)), metrics)
+    }
+
+    fn queue(token: u64) -> Arc<ConnQueue> {
+        let policy = BufferPolicy { max_bytes: 1 << 16, on_full: OverflowPolicy::Disconnect };
+        ConnQueue::new(token, policy)
+    }
+
+    fn drain(q: &ConnQueue) -> Vec<Json> {
+        let mut sink = Vec::new();
+        q.write_to(&mut sink).unwrap();
+        String::from_utf8(sink)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect()
+    }
+
+    fn token_event(id: u64, index: usize) -> Event {
+        Event::Token { id, index, text: "x".into() }
+    }
+
+    fn done_event(id: u64) -> Event {
+        Event::Done(Response::failure(id, String::new()))
+    }
+
+    #[test]
+    fn stream_subscribers_get_every_frame_and_terminal_retires() {
+        let (hub, m) = hub();
+        let a = queue(1);
+        hub.register(7, &a, SubMode::Stream);
+        assert_eq!(m.fanout_subscribers.get(), 1);
+        assert!(hub.is_live(7));
+        hub.publish(&Event::Started { id: 7 });
+        hub.publish(&token_event(7, 0));
+        hub.publish(&done_event(7));
+        let frames = drain(&a);
+        assert_eq!(frames.len(), 3);
+        assert_eq!(frames[0].str_or("event", ""), "started");
+        assert_eq!(frames[1].str_or("event", ""), "token");
+        assert_eq!(frames[2].str_or("event", ""), "done");
+        assert!(!hub.is_live(7), "terminal event retires the entry");
+        assert_eq!(m.fanout_subscribers.get(), 0);
+        assert_eq!(a.subs(), 0);
+        // Late events for a retired id are dropped silently.
+        hub.publish(&token_event(7, 1));
+        assert!(drain(&a).is_empty());
+    }
+
+    #[test]
+    fn v1_subscribers_see_only_the_terminal_line() {
+        let (hub, _) = hub();
+        let a = queue(1);
+        hub.register(3, &a, SubMode::V1);
+        hub.publish(&Event::Started { id: 3 });
+        hub.publish(&token_event(3, 0));
+        assert!(drain(&a).is_empty(), "no frames before terminal");
+        hub.publish(&done_event(3));
+        let frames = drain(&a);
+        assert_eq!(frames.len(), 1);
+        assert!(frames[0].get("event").is_none(), "v1 line, not a v2 frame");
+        assert_eq!(frames[0].num_or("id", 0.0), 3.0);
+        // A failed v1 request gets the v1 failure-shaped response line.
+        let b = queue(2);
+        hub.register(4, &b, SubMode::V1);
+        hub.publish(&Event::Failed { id: 4, reason: "[cancelled]".into(), retryable: false });
+        let frames = drain(&b);
+        assert_eq!(frames.len(), 1);
+        assert!(frames[0].str_or("text", "").contains("[cancelled]"));
+    }
+
+    #[test]
+    fn watchers_share_one_upstream_stream() {
+        let (hub, m) = hub();
+        let a = queue(1);
+        let b = queue(2);
+        let c = queue(3);
+        hub.register(9, &a, SubMode::Stream);
+        assert!(hub.watch(9, &b));
+        assert!(hub.watch(9, &c));
+        assert_eq!(m.fanout_subscribers.get(), 3);
+        hub.publish(&token_event(9, 0));
+        for q in [&a, &b, &c] {
+            let frames = drain(q);
+            assert_eq!(frames.len(), 1, "every subscriber sees the frame");
+            assert_eq!(frames[0].str_or("event", ""), "token");
+        }
+        // Watching an unknown or finished id is refused.
+        assert!(!hub.watch(42, &b));
+        hub.publish(&done_event(9));
+        assert!(!hub.watch(9, &b), "terminal id cannot be watched");
+    }
+
+    #[test]
+    fn slow_watcher_is_clamped_without_touching_others() {
+        let (hub, m) = hub();
+        let fast = queue(1);
+        // Slow reader with a tiny buffer under the Disconnect policy.
+        let slow_policy = BufferPolicy { max_bytes: 64, on_full: OverflowPolicy::Disconnect };
+        let slow = ConnQueue::new(2, slow_policy);
+        hub.register(5, &fast, SubMode::Stream);
+        assert!(hub.watch(5, &slow));
+        for i in 0..16 {
+            hub.publish(&token_event(5, i));
+        }
+        assert!(slow.killed(), "slow watcher hit the disconnect policy");
+        assert_eq!(m.conns_dropped_slow.get(), 1);
+        // The fast subscriber got every frame regardless.
+        assert_eq!(drain(&fast).len(), 16);
+        // Terminal frames still deliver everywhere they can.
+        hub.publish(&done_event(5));
+        assert_eq!(drain(&fast).len(), 1);
+    }
+
+    #[test]
+    fn drop_oldest_watcher_gets_lagged_frames() {
+        let (hub, m) = hub();
+        let lossy_policy = BufferPolicy { max_bytes: 96, on_full: OverflowPolicy::DropOldest };
+        let lossy = ConnQueue::new(1, lossy_policy);
+        hub.register(6, &lossy, SubMode::Stream);
+        for i in 0..24 {
+            hub.publish(&token_event(6, i));
+        }
+        hub.publish(&done_event(6));
+        assert!(m.frames_dropped.get() > 0, "buffer pressure dropped frames");
+        let frames = drain(&lossy);
+        let lagged: Vec<&Json> =
+            frames.iter().filter(|f| f.str_or("event", "") == "lagged").collect();
+        assert!(!lagged.is_empty(), "client was told about the gap");
+        assert!(lagged.iter().all(|f| f.num_or("dropped", 0.0) >= 1.0));
+        assert_eq!(
+            frames.last().unwrap().str_or("event", ""),
+            "done",
+            "terminal frame survives any amount of pressure"
+        );
+    }
+
+    #[test]
+    fn last_subscriber_leaving_drops_the_entry() {
+        let (hub, m) = hub();
+        let a = queue(1);
+        let b = queue(2);
+        hub.register(8, &a, SubMode::Stream);
+        assert!(hub.watch(8, &b));
+        hub.drop_conn(&a);
+        assert!(hub.is_live(8), "watcher still listening");
+        assert_eq!(m.fanout_subscribers.get(), 1);
+        hub.drop_conn(&b);
+        assert!(!hub.is_live(8), "no subscribers left; entry cancelled away");
+        assert_eq!(m.fanout_subscribers.get(), 0);
+    }
+}

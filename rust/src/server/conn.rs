@@ -1,0 +1,610 @@
+//! Per-connection state for the event-driven frontend: incremental NDJSON
+//! line assembly on the read side, a policy-bounded outbound frame queue on
+//! the write side, and the dirty-list notifier that carries "this
+//! connection has frames to flush" from the pump thread to the reactor.
+//!
+//! The pieces compose into the connection state machine DESIGN.md §9
+//! documents:
+//!
+//! * [`LineReader`] — reads are readiness-driven and arrive in arbitrary
+//!   chunks, so request lines are assembled incrementally.  A line that
+//!   exceeds the configured cap yields exactly one [`LineEvent::Oversize`]
+//!   and the reader discards bytes until the next newline; the connection
+//!   survives (the reactor answers with a typed `line_too_long` error).
+//! * [`ConnQueue`] — every frame destined for a client (token events,
+//!   admin replies, v1 responses) is queued here and written out on
+//!   write-readiness.  The queue is shared between the reactor thread
+//!   (writer/drainer) and the pump thread (producer), and it is *bounded*:
+//!   a slow reader hits its [`BufferPolicy`] instead of growing the queue
+//!   or blocking any worker thread.
+//! * [`Notifier`] — the pump marks connections dirty and pokes the
+//!   reactor's waker socket; the reactor swaps the dirty list and flushes
+//!   only those connections (never an O(connections) scan per event).
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// What happens to a client whose outbound buffer is full (it is reading
+/// slower than its subscribed generations produce frames).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// Drop the oldest droppable frames to make room and tell the client
+    /// with a `{"event":"lagged","dropped":N}` frame.  Terminal frames are
+    /// never dropped, so every stream still ends with `done`/`failed`.
+    DropOldest,
+    /// Clamp hard: clear the queue, send one typed
+    /// `{"event":"disconnected"}` frame best-effort, and close the
+    /// connection.  Its in-flight requests are cancelled so no decode lane
+    /// keeps producing for a reader that cannot keep up.
+    Disconnect,
+}
+
+/// Per-client outbound buffer bound (`--client-buffer` /
+/// `--client-buffer-policy` on the serve command).
+#[derive(Clone, Copy, Debug)]
+pub struct BufferPolicy {
+    /// Queued (unflushed) frame bytes allowed per connection.
+    pub max_bytes: usize,
+    pub on_full: OverflowPolicy,
+}
+
+impl Default for BufferPolicy {
+    fn default() -> BufferPolicy {
+        BufferPolicy { max_bytes: 1 << 20, on_full: OverflowPolicy::Disconnect }
+    }
+}
+
+/// One incremental-read event out of [`LineReader::ingest`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum LineEvent {
+    /// A complete request line (newline stripped, one trailing `\r`
+    /// tolerated for telnet-style clients).
+    Line(String),
+    /// The line under assembly exceeded the cap; its remaining bytes are
+    /// being discarded until the next newline.  Emitted once per oversized
+    /// line.
+    Oversize,
+}
+
+/// Incremental NDJSON line assembler with a hard per-line byte cap — the
+/// fix for the unbounded `read_line` the thread-per-connection frontend
+/// used (one client streaming an endless line could OOM the server).
+pub struct LineReader {
+    buf: Vec<u8>,
+    cap: usize,
+    discarding: bool,
+}
+
+impl LineReader {
+    pub fn new(cap: usize) -> LineReader {
+        LineReader { buf: Vec::new(), cap, discarding: false }
+    }
+
+    /// Feed one chunk of bytes; completed lines (and oversize events) are
+    /// appended to `out` in arrival order.
+    pub fn ingest(&mut self, data: &[u8], out: &mut Vec<LineEvent>) {
+        let mut rest = data;
+        while let Some(pos) = rest.iter().position(|&b| b == b'\n') {
+            let (head, tail) = rest.split_at(pos);
+            rest = &tail[1..];
+            if self.discarding {
+                // Tail of an already-reported oversized line.
+                self.discarding = false;
+                self.buf.clear();
+                continue;
+            }
+            self.buf.extend_from_slice(head);
+            if self.buf.len() > self.cap {
+                // The line completed within this chunk but still over cap.
+                self.buf.clear();
+                out.push(LineEvent::Oversize);
+                continue;
+            }
+            if self.buf.last() == Some(&b'\r') {
+                self.buf.pop();
+            }
+            out.push(LineEvent::Line(String::from_utf8_lossy(&self.buf).into_owned()));
+            self.buf.clear();
+        }
+        if self.discarding {
+            return;
+        }
+        self.buf.extend_from_slice(rest);
+        if self.buf.len() > self.cap {
+            self.buf.clear();
+            self.discarding = true;
+            out.push(LineEvent::Oversize);
+        }
+    }
+}
+
+/// One queued outbound frame (a full NDJSON line, newline included).
+struct Frame {
+    bytes: Vec<u8>,
+    /// Whether the buffer policy may discard this frame under pressure.
+    /// Terminal frames and reactor-origin replies are not droppable.
+    droppable: bool,
+}
+
+/// Outcome of one [`ConnQueue::push`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    Queued,
+    /// Queued after the `DropOldest` policy discarded this many older
+    /// frames to make room (or discarded the new frame itself when nothing
+    /// older could go).
+    Dropped(u64),
+    /// The `Disconnect` policy fired: the queue was clamped to one typed
+    /// goodbye frame and the connection must be closed by the reactor.
+    Killed,
+}
+
+#[derive(Default)]
+struct OutInner {
+    frames: VecDeque<Frame>,
+    bytes: usize,
+    /// Bytes of the head frame already on the wire (a frame can straddle
+    /// several write-readiness rounds; a partially-written head is never
+    /// dropped, or the client would see corrupt framing).
+    head_written: usize,
+    killed: Option<String>,
+    dropped_total: u64,
+}
+
+/// Progress report from one [`ConnQueue::write_to`] round.
+#[derive(Debug, Clone, Copy)]
+pub struct WriteStatus {
+    /// Queued bytes still waiting for write-readiness.
+    pub remaining: usize,
+    /// The buffer policy condemned this connection; close it once the
+    /// goodbye frame had its write attempt.
+    pub killed: bool,
+}
+
+/// Shared outbound frame queue of one connection.  The reactor thread
+/// drains it into the socket; the pump thread (via the broadcast hub)
+/// pushes into it.  All bounds are enforced here, at push time, so no
+/// producer ever blocks on a slow consumer.
+pub struct ConnQueue {
+    token: u64,
+    policy: BufferPolicy,
+    inner: Mutex<OutInner>,
+    /// Live stream subscriptions (primary requests + watches) delivering
+    /// into this queue; the reactor reads it for read-pause backpressure.
+    subs: AtomicUsize,
+    /// Set while the token sits on the notifier's dirty list (dedup).
+    dirty: AtomicBool,
+}
+
+impl ConnQueue {
+    pub fn new(token: u64, policy: BufferPolicy) -> Arc<ConnQueue> {
+        Arc::new(ConnQueue {
+            token,
+            policy,
+            inner: Mutex::new(OutInner::default()),
+            subs: AtomicUsize::new(0),
+            dirty: AtomicBool::new(false),
+        })
+    }
+
+    pub fn token(&self) -> u64 {
+        self.token
+    }
+
+    pub fn add_sub(&self) {
+        self.subs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn remove_sub(&self) {
+        self.subs.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn subs(&self) -> usize {
+        self.subs.load(Ordering::Relaxed)
+    }
+
+    /// Mark dirty; `true` exactly when the caller must enqueue the token on
+    /// the notifier (it was clean before).
+    pub fn mark_dirty(&self) -> bool {
+        !self.dirty.swap(true, Ordering::AcqRel)
+    }
+
+    pub fn clear_dirty(&self) {
+        self.dirty.store(false, Ordering::Release);
+    }
+
+    /// Frames dropped by the `DropOldest` policy over this connection's
+    /// lifetime.
+    pub fn dropped_total(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).dropped_total
+    }
+
+    pub fn queued_bytes(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).bytes
+    }
+
+    pub fn killed(&self) -> bool {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).killed.is_some()
+    }
+
+    /// Queue one NDJSON line (newline appended).  Non-droppable frames
+    /// always queue — a terminal frame per stream is small and bounded —
+    /// while droppable frames are what the [`BufferPolicy`] arbitrates.
+    pub fn push(&self, line: &str, droppable: bool) -> PushOutcome {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if g.killed.is_some() {
+            // Condemned connection: the reactor will close it; swallow.
+            return PushOutcome::Queued;
+        }
+        let flen = line.len() + 1;
+        let mut dropped = 0u64;
+        if droppable && g.bytes + flen > self.policy.max_bytes {
+            match self.policy.on_full {
+                OverflowPolicy::Disconnect => {
+                    Self::kill_locked(&mut g, "client buffer overflow (policy=disconnect)");
+                    return PushOutcome::Killed;
+                }
+                OverflowPolicy::DropOldest => {
+                    // Drop from the oldest end, skipping the partially
+                    // written head and anything non-droppable.
+                    while g.bytes + flen > self.policy.max_bytes {
+                        let start = usize::from(g.head_written > 0);
+                        let victim = (start..g.frames.len()).find(|&i| g.frames[i].droppable);
+                        match victim {
+                            Some(i) => {
+                                let f = g.frames.remove(i).expect("victim index in range");
+                                g.bytes -= f.bytes.len();
+                                dropped += 1;
+                            }
+                            None => {
+                                // Nothing droppable left: discard the new
+                                // frame instead of growing past the cap.
+                                g.dropped_total += dropped + 1;
+                                return PushOutcome::Dropped(dropped + 1);
+                            }
+                        }
+                    }
+                    g.dropped_total += dropped;
+                }
+            }
+        }
+        let mut bytes = Vec::with_capacity(flen);
+        bytes.extend_from_slice(line.as_bytes());
+        bytes.push(b'\n');
+        g.bytes += bytes.len();
+        g.frames.push_back(Frame { bytes, droppable });
+        if dropped > 0 {
+            PushOutcome::Dropped(dropped)
+        } else {
+            PushOutcome::Queued
+        }
+    }
+
+    /// Condemn the connection: clamp the queue to one typed goodbye frame.
+    /// The reactor closes the socket after that frame's write attempt.
+    pub fn kill(&self, reason: &str) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if g.killed.is_none() {
+            Self::kill_locked(&mut g, reason);
+        }
+    }
+
+    fn kill_locked(g: &mut OutInner, reason: &str) {
+        g.frames.clear();
+        g.bytes = 0;
+        g.head_written = 0;
+        g.killed = Some(reason.to_string());
+        let line = Json::obj(vec![
+            ("event", Json::Str("disconnected".into())),
+            ("error", Json::Str(reason.to_string())),
+        ])
+        .dump();
+        let mut bytes = line.into_bytes();
+        bytes.push(b'\n');
+        g.bytes = bytes.len();
+        g.frames.push_back(Frame { bytes, droppable: false });
+    }
+
+    /// Drain queued frames into `w` until empty or `WouldBlock`.  Frames go
+    /// out whole and in order; a partial write is resumed on the next
+    /// write-readiness round.
+    pub fn write_to(&self, w: &mut impl Write) -> io::Result<WriteStatus> {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            let Some(front) = g.frames.front() else { break };
+            let len = front.bytes.len();
+            let chunk = &front.bytes[g.head_written..];
+            match w.write(chunk) {
+                Ok(0) => {
+                    return Err(io::Error::new(io::ErrorKind::WriteZero, "socket wrote zero"));
+                }
+                Ok(n) => {
+                    g.head_written += n;
+                    if g.head_written == len {
+                        g.frames.pop_front();
+                        g.bytes -= len;
+                        g.head_written = 0;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(WriteStatus { remaining: g.bytes, killed: g.killed.is_some() })
+    }
+}
+
+/// Dirty-connection hand-off from the pump thread to the reactor: marked
+/// tokens accumulate here and one coalesced byte on the waker socket gets
+/// the reactor out of `epoll_wait`.
+pub struct Notifier {
+    dirty: Mutex<Vec<u64>>,
+    wake_tx: Option<TcpStream>,
+    /// Coalesces waker-socket writes: armed until the reactor disarms at
+    /// the top of its dispatch, so an event burst costs one wake byte.
+    armed: AtomicBool,
+}
+
+impl Notifier {
+    /// `wake_tx` is the write end of the reactor's loopback waker pair
+    /// (`None` in unit tests, where nothing sleeps in a poller).
+    pub fn new(wake_tx: Option<TcpStream>) -> Arc<Notifier> {
+        Arc::new(Notifier { dirty: Mutex::new(Vec::new()), wake_tx, armed: AtomicBool::new(false) })
+    }
+
+    /// Record that `q`'s connection has frames to flush and wake the
+    /// reactor (deduplicated per flush round).
+    pub fn mark(&self, q: &ConnQueue) {
+        if q.mark_dirty() {
+            self.dirty.lock().unwrap_or_else(|e| e.into_inner()).push(q.token());
+        }
+        self.wake();
+    }
+
+    /// Poke the reactor's waker socket (coalesced; send-buffer-full means a
+    /// wake is already pending, so errors are ignored).
+    pub fn wake(&self) {
+        if !self.armed.swap(true, Ordering::AcqRel) {
+            if let Some(tx) = &self.wake_tx {
+                let mut tx = tx;
+                let _ = tx.write(&[1u8]);
+            }
+        }
+    }
+
+    /// Reactor side: re-arm the waker before draining, so marks landing
+    /// mid-drain still produce a wake.
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Release);
+    }
+
+    /// Reactor side: swap out the dirty token list.
+    pub fn take_dirty(&self) -> Vec<u64> {
+        std::mem::take(&mut *self.dirty.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+/// One live connection, owned by the reactor thread.
+pub struct Conn {
+    pub stream: TcpStream,
+    pub peer: String,
+    pub lines: LineReader,
+    pub out: Arc<ConnQueue>,
+    /// Read interest withdrawn (backpressure); restored when the outbound
+    /// queue drains and the in-flight count falls.
+    pub read_paused: bool,
+    /// Write interest currently registered with the poller.
+    pub want_write: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, peer: String, line_cap: usize, out: Arc<ConnQueue>) -> Conn {
+        Conn {
+            stream,
+            peer,
+            lines: LineReader::new(line_cap),
+            out,
+            read_paused: false,
+            want_write: false,
+        }
+    }
+
+    /// Drain readable bytes into the line assembler.  Returns `true` when
+    /// the connection is gone (EOF or a hard read error).
+    pub fn read_ready(&mut self, out_events: &mut Vec<LineEvent>) -> bool {
+        let mut buf = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => return true,
+                Ok(n) => self.lines.ingest(&buf[..n], out_events),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return false,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return true,
+            }
+        }
+    }
+
+    /// One write round: drain the outbound queue into the socket.
+    pub fn flush(&mut self) -> io::Result<WriteStatus> {
+        self.out.write_to(&mut self.stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines_of(events: &[LineEvent]) -> Vec<String> {
+        events
+            .iter()
+            .filter_map(|e| match e {
+                LineEvent::Line(l) => Some(l.clone()),
+                LineEvent::Oversize => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn line_reader_assembles_across_chunks() {
+        let mut r = LineReader::new(64);
+        let mut out = Vec::new();
+        r.ingest(b"{\"a\":", &mut out);
+        assert!(out.is_empty(), "no newline yet");
+        r.ingest(b"1}\n{\"b\":2}\n{\"c\"", &mut out);
+        assert_eq!(lines_of(&out), vec!["{\"a\":1}", "{\"b\":2}"]);
+        out.clear();
+        r.ingest(b":3}\r\n", &mut out);
+        assert_eq!(lines_of(&out), vec!["{\"c\":3}"], "trailing \\r stripped");
+    }
+
+    #[test]
+    fn oversized_line_reports_once_and_resyncs() {
+        let mut r = LineReader::new(8);
+        let mut out = Vec::new();
+        // 20 bytes with no newline: one Oversize, then silence while the
+        // rest of the poisoned line streams in.
+        r.ingest(b"aaaaaaaaaaaaaaaaaaaa", &mut out);
+        assert_eq!(out, vec![LineEvent::Oversize]);
+        out.clear();
+        r.ingest(b"aaaa", &mut out);
+        assert!(out.is_empty(), "still discarding, no duplicate report");
+        // The newline ends the poisoned line; the next one parses normally.
+        r.ingest(b"aaa\n{\"x\":1}\n", &mut out);
+        assert_eq!(out, vec![LineEvent::Line("{\"x\":1}".into())]);
+    }
+
+    #[test]
+    fn oversized_line_completed_in_one_chunk_is_rejected() {
+        let mut r = LineReader::new(4);
+        let mut out = Vec::new();
+        r.ingest(b"toolongline\nok\n", &mut out);
+        assert_eq!(out, vec![LineEvent::Oversize, LineEvent::Line("ok".into())]);
+    }
+
+    fn q(max_bytes: usize, on_full: OverflowPolicy) -> Arc<ConnQueue> {
+        ConnQueue::new(7, BufferPolicy { max_bytes, on_full })
+    }
+
+    #[test]
+    fn push_and_write_preserve_frame_order() {
+        let q = q(1024, OverflowPolicy::Disconnect);
+        assert_eq!(q.push("one", true), PushOutcome::Queued);
+        assert_eq!(q.push("two", false), PushOutcome::Queued);
+        let mut sink = Vec::new();
+        let st = q.write_to(&mut sink).unwrap();
+        assert_eq!(st.remaining, 0);
+        assert!(!st.killed);
+        assert_eq!(String::from_utf8(sink).unwrap(), "one\ntwo\n");
+    }
+
+    /// Writer that accepts `cap` bytes total, then `WouldBlock`s.
+    struct Throttled {
+        cap: usize,
+        data: Vec<u8>,
+    }
+
+    impl Write for Throttled {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.data.len() >= self.cap {
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "full"));
+            }
+            let n = buf.len().min(self.cap - self.data.len());
+            self.data.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn drop_oldest_never_drops_partially_written_head_or_terminals() {
+        // Cap fits ~2 frames of "xxxxxxxx\n" (9 bytes each).
+        let q = q(20, OverflowPolicy::DropOldest);
+        assert_eq!(q.push("aaaaaaaa", true), PushOutcome::Queued);
+        assert_eq!(q.push("bbbbbbbb", true), PushOutcome::Queued);
+        // Partially flush the head frame (3 bytes of "aaaaaaaa\n").
+        let mut w = Throttled { cap: 3, data: Vec::new() };
+        let st = q.write_to(&mut w).unwrap();
+        assert!(st.remaining > 0);
+        // A third frame must evict "bbbbbbbb" (the head is pinned).
+        assert_eq!(q.push("cccccccc", true), PushOutcome::Dropped(1));
+        assert_eq!(q.dropped_total(), 1);
+        let mut sink = Vec::new();
+        let st = q.write_to(&mut sink).unwrap();
+        assert_eq!(st.remaining, 0);
+        assert_eq!(String::from_utf8(sink).unwrap(), "aaaaa\ncccccccc\n".to_string());
+    }
+
+    #[test]
+    fn drop_oldest_spares_non_droppable_frames() {
+        let q = q(20, OverflowPolicy::DropOldest);
+        assert_eq!(q.push("terminal", false), PushOutcome::Queued);
+        assert_eq!(q.push("droppable1", true), PushOutcome::Queued);
+        // Over cap: only the droppable frame can go.
+        assert_eq!(q.push("droppable2", true), PushOutcome::Dropped(1));
+        let mut sink = Vec::new();
+        q.write_to(&mut sink).unwrap();
+        let text = String::from_utf8(sink).unwrap();
+        assert!(text.contains("terminal\n"), "{text}");
+        assert!(!text.contains("droppable1"), "{text}");
+        assert!(text.contains("droppable2\n"), "{text}");
+        // A frame that cannot fit even after evicting everything droppable
+        // is itself discarded rather than growing the queue.
+        let q2 = q_all_pinned();
+        assert_eq!(q2.push(&"y".repeat(30), true), PushOutcome::Dropped(1));
+    }
+
+    fn q_all_pinned() -> Arc<ConnQueue> {
+        let q = q(20, OverflowPolicy::DropOldest);
+        assert_eq!(q.push("pinned-frame-here", false), PushOutcome::Queued);
+        q
+    }
+
+    #[test]
+    fn non_droppable_frames_always_queue() {
+        let q = q(10, OverflowPolicy::Disconnect);
+        assert_eq!(q.push(&"t".repeat(40), false), PushOutcome::Queued);
+        assert!(!q.killed(), "terminal frames never trip the policy");
+    }
+
+    #[test]
+    fn disconnect_policy_clamps_to_typed_goodbye() {
+        let q = q(16, OverflowPolicy::Disconnect);
+        assert_eq!(q.push("first-frame", true), PushOutcome::Queued);
+        assert_eq!(q.push("second-frame-over", true), PushOutcome::Killed);
+        assert!(q.killed());
+        // Pushes after the kill are swallowed, not queued.
+        assert_eq!(q.push("late", true), PushOutcome::Queued);
+        let mut sink = Vec::new();
+        let st = q.write_to(&mut sink).unwrap();
+        assert!(st.killed);
+        assert_eq!(st.remaining, 0);
+        let text = String::from_utf8(sink).unwrap();
+        let j = Json::parse(text.trim()).unwrap();
+        assert_eq!(j.str_or("event", ""), "disconnected");
+        assert!(j.str_or("error", "").contains("buffer overflow"), "{text}");
+        assert!(!text.contains("first-frame"), "queue was clamped: {text}");
+    }
+
+    #[test]
+    fn notifier_dedups_marks_until_taken() {
+        let n = Notifier::new(None);
+        let q = q(64, OverflowPolicy::Disconnect);
+        n.mark(&q);
+        n.mark(&q);
+        assert_eq!(n.take_dirty(), vec![7], "second mark coalesced");
+        // Until the reactor clears the flag, further marks stay coalesced.
+        n.mark(&q);
+        assert!(n.take_dirty().is_empty());
+        q.clear_dirty();
+        n.mark(&q);
+        assert_eq!(n.take_dirty(), vec![7]);
+    }
+}

@@ -1,4 +1,4 @@
-//! TCP inference server + client (line-delimited JSON, protocol v2.3).
+//! TCP inference server + client (line-delimited JSON, protocol v2.4).
 //!
 //! **v1 (non-streaming)** — one request line, one response line:
 //!
@@ -126,16 +126,55 @@
 //! without the field uses the worker's native cache mode, exactly as in
 //! v2.2.  The field is omitted (not defaulted) on the wire when unset.
 //!
-//! Connection threads are thin: they parse, forward to the serve pool's
-//! router, and stream events back.  All model work happens on the pool's
-//! engine worker threads (`coordinator::pool` + `serve_loop`).  The accept
-//! loop blocks in `accept()` — zero idle wakeups — and shutdown is a
-//! condvar [`StopSignal`] whose waker pokes the listener with a loopback
-//! connection, so `stop` latency is a connect round-trip, not a poll tick.
+//! **Event-driven frontend + broadcast fan-out (v2.4).**  The frontend is
+//! a readiness-driven reactor ([`reactor`]): one event-loop thread owns
+//! every socket (nonblocking accept + epoll on Linux), connection state
+//! machines ([`conn`]) parse request lines incrementally, and frames go
+//! out from bounded per-connection queues on write-readiness — thread
+//! count is O(1) in connections, and backpressure pauses a connection's
+//! *read interest* instead of parking a thread.  New wire surface:
+//!
+//! ```text
+//! -> {"op": "watch", "id": 3}
+//! <- {"op": "watch", "ok": true, "id": 3}      (then that stream's frames)
+//! <- {"op": "watch", "ok": false, "id": 3, "error": "no live generation 3"}
+//! -> {"op": "metrics", "scraper": "prober-a"}
+//! ```
+//!
+//! `watch` attaches the connection to a live generation's event stream
+//! ([`broadcast`]): N watchers share one upstream stream, each behind its
+//! own bounded buffer (`--client-buffer`).  A slow reader hits its buffer
+//! policy (`--client-buffer-policy`) instead of stalling anything:
+//! `drop-oldest` discards its oldest droppable frames and tells it with
+//! `{"event":"lagged","id":N,"dropped":K,"total_dropped":T}` (terminal
+//! frames are never dropped); `disconnect` clamps the queue to one
+//! `{"event":"disconnected","error":...}` frame and closes.  When a
+//! generation's last subscriber disconnects, the request is cancelled
+//! upstream.  The `"scraper"` tag keys the `metrics` op's rate baseline so
+//! concurrent scrapers see independent `Rates` windows (untagged scrapers
+//! share the `""` baseline, preserving the v2.2 behavior).  Two more typed
+//! error lines: an over-long request line (`--max-line-bytes`) gets
+//! `{"error": ..., "code": "line_too_long"}` with the connection intact,
+//! and a connect past `--max-conns` gets `{"error": ...,
+//! "code": "max_conns"}` before the socket drops.  Because responses are
+//! queued asynchronously, a client must keep its connection open until its
+//! terminal frame arrives (half-close after the request line is treated as
+//! a disconnect and cancels the request).
+//!
+//! All model work happens on the pool's engine worker threads
+//! (`coordinator::pool` + `serve_loop`); the reactor only parses, routes,
+//! and flushes.  Shutdown is a condvar [`StopSignal`] whose waker pokes
+//! the reactor's loopback waker socket, so `stop` latency is one poller
+//! wakeup, not a poll tick.
 
+pub mod broadcast;
+pub mod conn;
+pub mod reactor;
+
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{bail, Context, Result};
@@ -143,6 +182,9 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::{Event, Priority, Request, Response, ServePool};
 use crate::metrics::export::{prometheus_text, MetricsSnapshot, Rates};
 use crate::util::json::Json;
+
+pub use conn::{BufferPolicy, OverflowPolicy};
+pub use reactor::ServerConfig;
 
 /// Condvar-backed stop flag for [`serve_tcp`]: `raise()` wakes the waiter
 /// immediately (no sleep-poll anywhere on the shutdown path).
@@ -272,54 +314,22 @@ pub fn format_event(ev: &Event) -> String {
     }
 }
 
-/// Serve on `addr` until `stop` is raised.  Each connection may pipeline
-/// multiple newline-delimited requests; concurrent connections are routed
-/// across the pool's workers.  The listener blocks in `accept()`; raising
-/// `stop` wakes it via a loopback connection from the waker thread.
+/// Serve on `addr` until `stop` is raised, with default [`ServerConfig`]
+/// limits.  Connections may pipeline newline-delimited requests; all
+/// socket I/O runs on the reactor's event loop ([`reactor::serve`]).
 pub fn serve_tcp(pool: &ServePool, addr: &str, stop: Arc<StopSignal>) -> Result<()> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    let local = listener.local_addr()?;
-    println!("[server] listening on {addr}");
-    let next_id = Arc::new(AtomicU64::new(1));
-    // Previous `{"op":"metrics"}` scrape, shared across connections so any
-    // scraper sees rates over the window since the last scrape server-wide.
-    let prev_snapshot: Arc<Mutex<Option<MetricsSnapshot>>> = Arc::new(Mutex::new(None));
-    std::thread::scope(|scope| -> Result<()> {
-        // Waker: parks on the stop condvar (no idle wakeups) and pokes the
-        // blocking accept when the signal is raised.  Every return path
-        // below raises the signal, so this thread always exits and the
-        // scope can close.
-        {
-            let stop = stop.clone();
-            scope.spawn(move || {
-                stop.wait();
-                let _ = TcpStream::connect(local);
-            });
-        }
-        loop {
-            let (stream, peer) = match listener.accept() {
-                Ok(conn) => conn,
-                Err(e) => {
-                    stop.raise();
-                    return Err(e).with_context(|| format!("accept on {addr}"));
-                }
-            };
-            if stop.raised() {
-                // Either the waker's poke or a client racing the shutdown;
-                // drop it and exit.
-                return Ok(());
-            }
-            log::info!("connection from {peer}");
-            let ids = next_id.clone();
-            let prev = prev_snapshot.clone();
-            let p = pool;
-            scope.spawn(move || {
-                if let Err(e) = handle_conn(p, stream, &ids, &prev) {
-                    log::warn!("connection error: {e:#}");
-                }
-            });
-        }
-    })
+    reactor::serve(pool, addr, stop, ServerConfig::default())
+}
+
+/// [`serve_tcp`] with explicit frontend limits (`--max-conns`,
+/// `--max-line-bytes`, `--client-buffer`, `--client-buffer-policy`).
+pub fn serve_tcp_cfg(
+    pool: &ServePool,
+    addr: &str,
+    stop: Arc<StopSignal>,
+    cfg: ServerConfig,
+) -> Result<()> {
+    reactor::serve(pool, addr, stop, cfg)
 }
 
 /// Detect an admin-op line: a JSON object carrying an `"op"` key.  Returns
@@ -334,19 +344,19 @@ fn parse_admin_op(line: &str) -> Option<Json> {
 /// Answer one admin op from the pool's shared metrics.  Never blocks on a
 /// worker: everything read here lives behind the metrics `Arc`s, so these
 /// stay answerable while every lane is saturated or every worker is dead.
+/// `baselines` holds the previous `metrics` scrape per `"scraper"` tag
+/// (`""` when untagged), so concurrent scrapers that tag themselves get
+/// independent rate windows instead of corrupting one shared slot.
 fn admin_response(
     pool: &ServePool,
     op: &Json,
-    prev_snapshot: &Mutex<Option<MetricsSnapshot>>,
+    baselines: &mut HashMap<String, MetricsSnapshot>,
 ) -> Json {
     match op.str_or("op", "").as_str() {
         "metrics" => {
             let snap = MetricsSnapshot::collect(&pool.metrics, pool.live_workers());
-            // Swap this scrape in as the new rate baseline.
-            let prev = {
-                let mut guard = prev_snapshot.lock().unwrap_or_else(|e| e.into_inner());
-                guard.replace(snap.clone())
-            };
+            // Swap this scrape in as this scraper's new rate baseline.
+            let prev = baselines.insert(op.str_or("scraper", ""), snap.clone());
             if op.str_or("format", "json") == "prometheus" {
                 return Json::obj(vec![
                     ("op", Json::Str("metrics".into())),
@@ -433,71 +443,6 @@ fn admin_response(
             ("error", Json::Str(format!("unknown admin op {other:?}"))),
         ]),
     }
-}
-
-fn handle_conn(
-    pool: &ServePool,
-    stream: TcpStream,
-    ids: &AtomicU64,
-    prev_snapshot: &Mutex<Option<MetricsSnapshot>>,
-) -> Result<()> {
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        // Admin ops are intercepted BEFORE request parsing and id
-        // allocation: they read shared metrics on this connection thread
-        // and never occupy a lane (see the module doc's catalog).
-        if let Some(op) = parse_admin_op(&line) {
-            writeln!(writer, "{}", admin_response(pool, &op, prev_snapshot).dump())?;
-            writer.flush()?;
-            continue;
-        }
-        let id = ids.fetch_add(1, Ordering::Relaxed);
-        let (req, streaming) = match parse_request(&line, id) {
-            Ok(parsed) => parsed,
-            Err(e) => {
-                writeln!(writer, "{}", Json::obj(vec![
-                    ("error", Json::Str(format!("{e:#}"))),
-                ]).dump())?;
-                continue;
-            }
-        };
-        if streaming {
-            stream_response(pool, &mut writer, req)?;
-        } else {
-            let resp = pool.submit(req)?;
-            writeln!(writer, "{}", format_response(&resp))?;
-        }
-    }
-    Ok(())
-}
-
-/// Drive one v2 streaming request: forward every event as an NDJSON frame.
-/// A failed write means the client disconnected — cancel the request so its
-/// lane and reserved cache blocks are reclaimed mid-decode instead of
-/// decoding to `max_new` for nobody.
-fn stream_response(pool: &ServePool, writer: &mut TcpStream, req: Request) -> Result<()> {
-    let handle = pool.submit_stream(req)?;
-    let canceller = handle.canceller();
-    for ev in handle {
-        let terminal = ev.is_terminal();
-        let wrote = writeln!(writer, "{}", format_event(&ev)).and_then(|()| writer.flush());
-        if wrote.is_err() {
-            canceller.cancel();
-            // Dropping the handle (loop exit) also disconnects the event
-            // channel, so the worker's next token send observes the dead
-            // receiver even if the Cancel message races a completion.
-            bail!("client disconnected mid-stream; request cancelled");
-        }
-        if terminal {
-            break;
-        }
-    }
-    Ok(())
 }
 
 /// Blocking v1 client: send one raw request line, return the parsed

@@ -1,0 +1,823 @@
+//! The frontend event loop: nonblocking accept + readiness-driven I/O on
+//! one thread, whatever the connection count.
+//!
+//! One reactor thread owns the listener, a loopback waker socket, and
+//! every client connection.  On Linux the poller is raw `epoll` (declared
+//! directly against libc, which std already links); elsewhere a portable
+//! scan poller reports registered interests on a short tick and relies on
+//! nonblocking sockets tolerating spurious readiness.  Two more threads
+//! complete the frontend: a *pump* that drains the pool's single shared
+//! event channel into the broadcast [`Hub`], and a parked stop-waker that
+//! pokes the reactor when [`StopSignal`] is raised.  Total frontend
+//! threads: 3 — O(1) in connections, where the old frontend spawned one
+//! blocking thread per accepted socket.
+//!
+//! Data flow per request: the reactor parses a line, registers the
+//! connection with the hub, and submits via
+//! [`ServePool::submit_stream_with`] with the shared event sender.  Worker
+//! events arrive id-tagged on that one channel; the pump publishes them to
+//! the hub, which pushes formatted frames into each subscriber's
+//! [`ConnQueue`] and marks the connection dirty via the [`Notifier`].  The
+//! reactor flushes dirty connections on its next wakeup — only dirty ones,
+//! never an O(connections) scan.
+//!
+//! Backpressure never parks a thread: a connection whose outbound queue
+//! grows past half its buffer (or with too many in-flight subscriptions)
+//! simply loses read interest until the queue drains — the kernel's TCP
+//! window then pushes back on the client.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Event, ServePool};
+use crate::metrics::export::MetricsSnapshot;
+use crate::util::json::Json;
+
+use self::poller::Poller;
+use super::broadcast::{Hub, SubMode};
+use super::conn::{BufferPolicy, Conn, ConnQueue, LineEvent, Notifier};
+use super::{admin_response, parse_admin_op, parse_request, StopSignal};
+
+/// Poller token of the accept listener.
+const TOK_LISTENER: u64 = 0;
+/// Poller token of the loopback waker's read end.
+const TOK_WAKER: u64 = 1;
+/// First token handed to an accepted connection (tokens are never reused).
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// A connection subscribed to this many generations at once stops being
+/// read until some of them finish (per-connection in-flight bound).
+const MAX_CONN_SUBS: usize = 64;
+
+/// Frontend tunables (`--max-conns`, `--max-line-bytes`,
+/// `--client-buffer`, `--client-buffer-policy` on the serve command).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Accepted-connection cap; excess connects get a typed `max_conns`
+    /// error line and are dropped.
+    pub max_conns: usize,
+    /// Request-line byte cap (the unbounded-`read_line` OOM fix); an
+    /// oversized line gets a typed `line_too_long` error and the rest of
+    /// the line is discarded.
+    pub max_line_bytes: usize,
+    /// Per-client outbound buffer bound + slow-reader policy.
+    pub buffer: BufferPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_conns: 10_000,
+            max_line_bytes: 256 * 1024,
+            buffer: BufferPolicy::default(),
+        }
+    }
+}
+
+/// What one `accept()` error means for the accept loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AcceptDisposition {
+    /// `WouldBlock`: the backlog is drained; return to the poller.
+    Drained,
+    /// The *accepted* socket died (reset/aborted mid-handshake) or the
+    /// call was interrupted: log and keep accepting.
+    Transient,
+    /// fd exhaustion (`EMFILE`/`ENFILE`): pause briefly so in-flight
+    /// closes can release descriptors, then resume.
+    Backoff,
+    /// The listener itself is broken: tear the frontend down.
+    Fatal,
+}
+
+/// Classify an `accept()` error.  The old frontend treated every error as
+/// fatal, so one aborted handshake or fd-pressure blip killed the server.
+pub fn classify_accept_error(e: &io::Error) -> AcceptDisposition {
+    match e.kind() {
+        io::ErrorKind::WouldBlock => AcceptDisposition::Drained,
+        io::ErrorKind::Interrupted
+        | io::ErrorKind::ConnectionAborted
+        | io::ErrorKind::ConnectionReset => AcceptDisposition::Transient,
+        // ENFILE (23) / EMFILE (24) carry no dedicated ErrorKind on stable.
+        _ => match e.raw_os_error() {
+            Some(23) | Some(24) => AcceptDisposition::Backoff,
+            _ => AcceptDisposition::Fatal,
+        },
+    }
+}
+
+/// Build the reactor's self-wake channel: a connected loopback TCP pair
+/// (std offers no portable pipe).  The returned `(rx, tx)` ends are both
+/// nonblocking; the transient listener is dropped before returning.
+fn waker_pair() -> Result<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind waker listener")?;
+    let addr = listener.local_addr()?;
+    let tx = TcpStream::connect(addr).context("connect waker pair")?;
+    let local = tx.local_addr()?;
+    // Accept until we see our own connect; a stranger racing the ephemeral
+    // port is dropped on the floor.
+    for _ in 0..16 {
+        let (rx, peer) = listener.accept().context("accept waker pair")?;
+        if peer == local {
+            rx.set_nonblocking(true)?;
+            tx.set_nonblocking(true)?;
+            return Ok((rx, tx));
+        }
+    }
+    bail!("waker pair: loopback accept never returned our own connection")
+}
+
+/// Serve until `stop` is raised.  Spawns the pump and stop-waker threads
+/// in a scope and runs the reactor loop on the calling thread.
+pub fn serve(pool: &ServePool, addr: &str, stop: Arc<StopSignal>, cfg: ServerConfig) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    println!("[server] listening on {addr}");
+    let (wake_rx, wake_tx) = waker_pair().context("frontend waker pair")?;
+    let notifier = Notifier::new(Some(wake_tx));
+    let hub = Arc::new(Hub::new(pool.metrics.clone(), notifier.clone()));
+    let (ev_tx, ev_rx) = channel::<Event>();
+    std::thread::scope(|scope| -> Result<()> {
+        // Stop-waker: parks on the condvar (zero idle wakeups) and pokes
+        // the reactor out of its poller wait when the signal is raised.
+        {
+            let stop = stop.clone();
+            let notifier = notifier.clone();
+            scope.spawn(move || {
+                stop.wait();
+                notifier.wake();
+            });
+        }
+        // Pump: single consumer of the pool's shared event channel.
+        {
+            let hub = hub.clone();
+            let stop = stop.clone();
+            scope.spawn(move || pump_loop(ev_rx, &hub, &stop));
+        }
+        let poller = Poller::new()?;
+        poller.add(&listener, TOK_LISTENER, true, false)?;
+        poller.add(&wake_rx, TOK_WAKER, true, false)?;
+        let mut reactor = Reactor {
+            pool,
+            listener,
+            wake_rx,
+            notifier,
+            hub,
+            ev_tx,
+            cfg,
+            stop: stop.clone(),
+            poller,
+            conns: HashMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            next_req_id: 0,
+            scrape_baselines: HashMap::new(),
+            read_paused_count: 0,
+        };
+        let res = reactor.run();
+        // Every exit path raises stop so the waker and pump threads join
+        // and the scope can close.
+        stop.raise();
+        res
+    })
+}
+
+/// Drain the pool's shared event channel into the broadcast hub.  Blocking
+/// `recv` with a short timeout so a raised stop is noticed promptly; no
+/// busy polling.
+fn pump_loop(ev_rx: Receiver<Event>, hub: &Hub, stop: &StopSignal) {
+    loop {
+        if stop.raised() {
+            return;
+        }
+        match ev_rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(ev) => hub.publish(&ev),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+struct Reactor<'p> {
+    pool: &'p ServePool,
+    listener: TcpListener,
+    wake_rx: TcpStream,
+    notifier: Arc<Notifier>,
+    hub: Arc<Hub>,
+    ev_tx: Sender<Event>,
+    cfg: ServerConfig,
+    stop: Arc<StopSignal>,
+    poller: Poller,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    next_req_id: u64,
+    /// `{"op":"metrics"}` rate baselines, keyed by the caller-supplied
+    /// `"scraper"` tag (`""` for untagged scrapers) so concurrent scrapers
+    /// never corrupt each other's deltas.
+    scrape_baselines: HashMap<String, MetricsSnapshot>,
+    read_paused_count: usize,
+}
+
+impl Reactor<'_> {
+    fn run(&mut self) -> Result<()> {
+        loop {
+            let events = self.poller.wait(500)?;
+            if self.stop.raised() {
+                self.shutdown_conns();
+                return Ok(());
+            }
+            for ev in &events {
+                match ev.token {
+                    TOK_LISTENER => self.accept_ready()?,
+                    TOK_WAKER => self.drain_waker(),
+                    t => self.conn_event(t, *ev),
+                }
+            }
+            self.flush_dirty();
+        }
+    }
+
+    /// Accept until the backlog drains.  Transient errors log and
+    /// continue; fd pressure backs off; only a broken listener is fatal.
+    fn accept_ready(&mut self) -> Result<()> {
+        loop {
+            if self.stop.raised() {
+                return Ok(());
+            }
+            match self.listener.accept() {
+                Ok((stream, peer)) => self.admit(stream, peer),
+                Err(e) => match classify_accept_error(&e) {
+                    AcceptDisposition::Drained => return Ok(()),
+                    AcceptDisposition::Transient => {
+                        self.pool.metrics.accept_transient_errors.add(1);
+                        log::warn!("transient accept error: {e}");
+                    }
+                    AcceptDisposition::Backoff => {
+                        self.pool.metrics.accept_transient_errors.add(1);
+                        log::warn!("accept hit fd pressure ({e}); backing off");
+                        std::thread::sleep(Duration::from_millis(20));
+                        return Ok(());
+                    }
+                    AcceptDisposition::Fatal => {
+                        return Err(e).context("accept on frontend listener");
+                    }
+                },
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream, peer: SocketAddr) {
+        if self.conns.len() >= self.cfg.max_conns {
+            let mut s = stream;
+            let msg = Json::obj(vec![
+                (
+                    "error",
+                    Json::Str(format!("server at max connections ({})", self.cfg.max_conns)),
+                ),
+                ("code", Json::Str("max_conns".into())),
+            ])
+            .dump();
+            // Best-effort typed rejection; the socket drops either way.
+            let _ = s.write_all((msg + "\n").as_bytes());
+            log::warn!("rejecting connection from {peer}: at --max-conns");
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let t = self.next_token;
+        self.next_token += 1;
+        if let Err(e) = self.poller.add(&stream, t, true, false) {
+            log::warn!("poller add for {peer}: {e:#}");
+            return;
+        }
+        let q = ConnQueue::new(t, self.cfg.buffer);
+        self.conns.insert(t, Conn::new(stream, peer.to_string(), self.cfg.max_line_bytes, q));
+        self.pool.metrics.conns_open.set(self.conns.len() as u64);
+        log::info!("connection from {peer}");
+    }
+
+    /// Drain the waker socket (its bytes carry no data, only readiness).
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match self.wake_rx.read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => {}
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn conn_event(&mut self, t: u64, ev: poller::PollEvent) {
+        if !self.conns.contains_key(&t) {
+            return; // closed earlier in this dispatch round
+        }
+        if ev.readable {
+            self.conn_readable(t);
+        }
+        if !self.conns.contains_key(&t) {
+            return;
+        }
+        if ev.writable {
+            self.flush_conn(t);
+        }
+        if ev.hangup && !ev.readable && self.conns.contains_key(&t) {
+            self.close_conn(t, "peer hung up");
+        }
+    }
+
+    fn conn_readable(&mut self, t: u64) {
+        let mut line_events = Vec::new();
+        let closed = match self.conns.get_mut(&t) {
+            // A paused connection keeps no read interest, but the fallback
+            // poller (and a late epoll event) may still report readiness.
+            Some(c) if !c.read_paused => c.read_ready(&mut line_events),
+            _ => false,
+        };
+        for le in line_events {
+            match le {
+                LineEvent::Line(line) => self.process_line(t, &line),
+                LineEvent::Oversize => {
+                    let msg = Json::obj(vec![
+                        (
+                            "error",
+                            Json::Str(format!(
+                                "request line exceeds {} bytes",
+                                self.cfg.max_line_bytes
+                            )),
+                        ),
+                        ("code", Json::Str("line_too_long".into())),
+                    ])
+                    .dump();
+                    self.push_to(t, &msg);
+                }
+            }
+        }
+        if closed {
+            self.close_conn(t, "peer closed");
+            return;
+        }
+        self.flush_conn(t);
+    }
+
+    /// Dispatch one complete request line: admin op, watch, or inference
+    /// request.  Inference requests register their hub subscription BEFORE
+    /// submission so synchronously-published router-terminal events cannot
+    /// be lost.
+    fn process_line(&mut self, t: u64, raw: &str) {
+        let line = raw.trim();
+        if line.is_empty() {
+            return;
+        }
+        if let Some(op) = parse_admin_op(line) {
+            if op.str_or("op", "") == "watch" {
+                self.handle_watch(t, &op);
+            } else {
+                let reply = admin_response(self.pool, &op, &mut self.scrape_baselines);
+                self.push_to(t, &reply.dump());
+            }
+            return;
+        }
+        self.next_req_id += 1;
+        let id = self.next_req_id;
+        match parse_request(line, id) {
+            Err(e) => {
+                let msg = Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).dump();
+                self.push_to(t, &msg);
+            }
+            Ok((req, streaming)) => {
+                let Some(c) = self.conns.get(&t) else { return };
+                let q = c.out.clone();
+                let mode = if streaming { SubMode::Stream } else { SubMode::V1 };
+                self.hub.register(id, &q, mode);
+                let cancel = self.pool.submit_stream_with(req, &self.ev_tx);
+                self.hub.set_cancel(id, cancel);
+            }
+        }
+    }
+
+    /// `{"op":"watch","id":N}`: attach this connection to a live
+    /// generation's event stream (broadcast fan-out).
+    fn handle_watch(&mut self, t: u64, op: &Json) {
+        let id = op.get("id").and_then(Json::as_f64).map(|v| v as u64);
+        let reply = match id {
+            Some(id) => {
+                let Some(c) = self.conns.get(&t) else { return };
+                let q = c.out.clone();
+                if self.hub.watch(id, &q) {
+                    Json::obj(vec![
+                        ("op", Json::Str("watch".into())),
+                        ("ok", Json::Bool(true)),
+                        ("id", Json::Num(id as f64)),
+                    ])
+                } else {
+                    Json::obj(vec![
+                        ("op", Json::Str("watch".into())),
+                        ("ok", Json::Bool(false)),
+                        ("id", Json::Num(id as f64)),
+                        ("error", Json::Str(format!("no live generation {id}"))),
+                    ])
+                }
+            }
+            None => Json::obj(vec![
+                ("op", Json::Str("watch".into())),
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str("watch needs a numeric \"id\"".into())),
+            ]),
+        };
+        self.push_to(t, &reply.dump());
+    }
+
+    /// Queue a reactor-origin reply (never droppable).
+    fn push_to(&mut self, t: u64, line: &str) {
+        if let Some(c) = self.conns.get(&t) {
+            let _ = c.out.push(line, false);
+        }
+    }
+
+    /// Flush every connection the pump marked dirty since the last round.
+    /// Disarm-before-take ordering guarantees a mark landing mid-drain
+    /// still produces a wake.
+    fn flush_dirty(&mut self) {
+        self.notifier.disarm();
+        for t in self.notifier.take_dirty() {
+            if let Some(c) = self.conns.get(&t) {
+                c.out.clear_dirty();
+            }
+            self.flush_conn(t);
+        }
+    }
+
+    /// One write round for a connection, then recompute poller interest:
+    /// write interest iff bytes remain queued; read interest withdrawn
+    /// (backpressure) while the queue is above half its cap or too many
+    /// generations are in flight.
+    fn flush_conn(&mut self, t: u64) {
+        let res = match self.conns.get_mut(&t) {
+            Some(c) => c.flush(),
+            None => return,
+        };
+        let st = match res {
+            Ok(st) => st,
+            Err(e) => {
+                self.close_conn(t, &format!("write error: {e}"));
+                return;
+            }
+        };
+        if st.killed {
+            // Buffer policy condemned it; the goodbye frame had its write
+            // attempt (best effort — the client wasn't reading anyway).
+            self.close_conn(t, "slow reader hit the disconnect policy");
+            return;
+        }
+        let want_write = st.remaining > 0;
+        let subs = self.conns.get(&t).map_or(0, |c| c.out.subs());
+        let pause = st.remaining > self.cfg.buffer.max_bytes / 2 || subs >= MAX_CONN_SUBS;
+        self.set_interest(t, !pause, want_write);
+    }
+
+    /// Reconcile a connection's poller registration with the desired
+    /// read/write interest; no-op when nothing changed.
+    fn set_interest(&mut self, t: u64, read: bool, write: bool) {
+        let Some(c) = self.conns.get_mut(&t) else { return };
+        let paused = !read;
+        if c.read_paused == paused && c.want_write == write {
+            return;
+        }
+        if let Err(e) = self.poller.modify(&c.stream, t, read, write) {
+            log::warn!("poller modify for {}: {e:#}", c.peer);
+            return;
+        }
+        c.want_write = write;
+        if c.read_paused != paused {
+            c.read_paused = paused;
+            if paused {
+                self.read_paused_count += 1;
+            } else {
+                self.read_paused_count -= 1;
+            }
+            self.pool.metrics.conns_read_paused.set(self.read_paused_count as u64);
+        }
+    }
+
+    fn close_conn(&mut self, t: u64, why: &str) {
+        let Some(c) = self.conns.remove(&t) else { return };
+        let _ = self.poller.remove(&c.stream, t);
+        if c.read_paused {
+            self.read_paused_count -= 1;
+            self.pool.metrics.conns_read_paused.set(self.read_paused_count as u64);
+        }
+        // Detach from every generation; ones left without subscribers are
+        // cancelled upstream.
+        self.hub.drop_conn(&c.out);
+        self.pool.metrics.conns_open.set(self.conns.len() as u64);
+        log::info!("connection closed ({why}): {}", c.peer);
+    }
+
+    fn shutdown_conns(&mut self) {
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            self.close_conn(t, "server stopping");
+        }
+    }
+}
+
+/// One readiness event out of the poller.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct PollEvent {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub hangup: bool,
+}
+
+#[cfg(target_os = "linux")]
+mod poller {
+    //! Raw epoll, declared directly against libc (std links it already;
+    //! the workspace vendors no `libc` crate).
+
+    use std::os::raw::c_int;
+    use std::os::unix::io::{AsRawFd, RawFd};
+
+    use anyhow::{bail, Result};
+
+    pub(crate) use super::PollEvent;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const MAX_EVENTS: usize = 128;
+
+    // The kernel ABI packs epoll_event on x86-64 only.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    pub(crate) struct Poller {
+        epfd: c_int,
+    }
+
+    impl Poller {
+        pub fn new() -> Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                bail!("epoll_create1: {}", std::io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        fn ctl(&self, op: c_int, fd: RawFd, token: u64, read: bool, write: bool) -> Result<()> {
+            // Always watch for peer half-close so an idle paused connection
+            // still reports its death.
+            let mut events = EPOLLRDHUP;
+            if read {
+                events |= EPOLLIN;
+            }
+            if write {
+                events |= EPOLLOUT;
+            }
+            let mut ev = EpollEvent { events, data: token };
+            if unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
+                bail!("epoll_ctl(op={op}): {}", std::io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn add<T: AsRawFd>(&self, io: &T, token: u64, read: bool, write: bool) -> Result<()> {
+            self.ctl(EPOLL_CTL_ADD, io.as_raw_fd(), token, read, write)
+        }
+
+        pub fn modify<T: AsRawFd>(
+            &self,
+            io: &T,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> Result<()> {
+            self.ctl(EPOLL_CTL_MOD, io.as_raw_fd(), token, read, write)
+        }
+
+        pub fn remove<T: AsRawFd>(&self, io: &T, _token: u64) -> Result<()> {
+            let rc = unsafe {
+                epoll_ctl(self.epfd, EPOLL_CTL_DEL, io.as_raw_fd(), std::ptr::null_mut())
+            };
+            if rc < 0 {
+                bail!("epoll_ctl(DEL): {}", std::io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Wait up to `timeout_ms` for readiness; `EINTR` reports as an
+        /// empty round.
+        pub fn wait(&self, timeout_ms: i32) -> Result<Vec<PollEvent>> {
+            let mut buf: Vec<EpollEvent> = Vec::with_capacity(MAX_EVENTS);
+            let n = unsafe {
+                epoll_wait(self.epfd, buf.as_mut_ptr(), MAX_EVENTS as c_int, timeout_ms)
+            };
+            if n < 0 {
+                let e = std::io::Error::last_os_error();
+                if e.kind() == std::io::ErrorKind::Interrupted {
+                    return Ok(Vec::new());
+                }
+                bail!("epoll_wait: {e}");
+            }
+            // SAFETY: the kernel initialized the first n entries.
+            unsafe { buf.set_len(n as usize) };
+            Ok(buf
+                .iter()
+                .map(|e| {
+                    // Copy out of the (possibly packed) struct by value.
+                    let flags = e.events;
+                    let token = e.data;
+                    PollEvent {
+                        token,
+                        readable: flags & EPOLLIN != 0,
+                        writable: flags & EPOLLOUT != 0,
+                        hangup: flags & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                    }
+                })
+                .collect())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            let _ = unsafe { close(self.epfd) };
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod poller {
+    //! Portable fallback: no OS readiness facility, so every registered
+    //! interest is reported on a short fixed tick.  All sockets are
+    //! nonblocking, so a spurious report costs one `WouldBlock` syscall.
+    //! Functionally equivalent to the epoll poller, with idle CPU cost —
+    //! production deployments are Linux.
+
+    use std::collections::BTreeMap;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    use anyhow::Result;
+
+    pub(crate) use super::PollEvent;
+
+    pub(crate) struct Poller {
+        interests: Mutex<BTreeMap<u64, (bool, bool)>>,
+    }
+
+    impl Poller {
+        pub fn new() -> Result<Poller> {
+            Ok(Poller { interests: Mutex::new(BTreeMap::new()) })
+        }
+
+        pub fn add<T>(&self, _io: &T, token: u64, read: bool, write: bool) -> Result<()> {
+            self.interests.lock().unwrap().insert(token, (read, write));
+            Ok(())
+        }
+
+        pub fn modify<T>(&self, _io: &T, token: u64, read: bool, write: bool) -> Result<()> {
+            self.add(_io, token, read, write)
+        }
+
+        pub fn remove<T>(&self, _io: &T, token: u64) -> Result<()> {
+            self.interests.lock().unwrap().remove(&token);
+            Ok(())
+        }
+
+        pub fn wait(&self, timeout_ms: i32) -> Result<Vec<PollEvent>> {
+            let tick = i64::from(timeout_ms).clamp(1, 2) as u64;
+            std::thread::sleep(Duration::from_millis(tick));
+            Ok(self
+                .interests
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(&token, &(read, write))| PollEvent {
+                    token,
+                    readable: read,
+                    writable: write,
+                    hangup: false,
+                })
+                .collect())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_error_classification() {
+        let would_block = io::Error::new(io::ErrorKind::WouldBlock, "drained");
+        assert_eq!(classify_accept_error(&would_block), AcceptDisposition::Drained);
+        for kind in [
+            io::ErrorKind::Interrupted,
+            io::ErrorKind::ConnectionAborted,
+            io::ErrorKind::ConnectionReset,
+        ] {
+            let e = io::Error::new(kind, "blip");
+            assert_eq!(classify_accept_error(&e), AcceptDisposition::Transient, "{kind:?}");
+        }
+        // ECONNABORTED by raw errno resolves through its ErrorKind too.
+        let aborted = io::Error::from_raw_os_error(103);
+        assert_eq!(classify_accept_error(&aborted), AcceptDisposition::Transient);
+        // ENFILE / EMFILE: fd pressure backs off instead of dying.
+        for errno in [23, 24] {
+            let e = io::Error::from_raw_os_error(errno);
+            assert_eq!(classify_accept_error(&e), AcceptDisposition::Backoff, "errno {errno}");
+        }
+        // Anything else (here EBADF) is a broken listener.
+        let ebadf = io::Error::from_raw_os_error(9);
+        assert_eq!(classify_accept_error(&ebadf), AcceptDisposition::Fatal);
+    }
+
+    #[test]
+    fn server_config_defaults() {
+        let cfg = ServerConfig::default();
+        assert_eq!(cfg.max_conns, 10_000);
+        assert_eq!(cfg.max_line_bytes, 256 * 1024);
+        assert_eq!(cfg.buffer.max_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn waker_pair_carries_a_wake_byte() {
+        let (mut rx, tx) = waker_pair().unwrap();
+        let mut buf = [0u8; 8];
+        assert_eq!(
+            rx.read(&mut buf).unwrap_err().kind(),
+            io::ErrorKind::WouldBlock,
+            "no byte before a wake"
+        );
+        let notifier = Notifier::new(Some(tx));
+        notifier.wake();
+        notifier.wake(); // coalesced: at most one byte per disarm window
+        // Nonblocking read may race the loopback delivery; retry briefly.
+        let n = (0..100)
+            .find_map(|_| match rx.read(&mut buf) {
+                Ok(n) => Some(n),
+                Err(_) => {
+                    std::thread::sleep(Duration::from_millis(2));
+                    None
+                }
+            })
+            .expect("wake byte arrives");
+        assert_eq!(n, 1, "second wake was coalesced");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_poller_reports_listener_readiness() {
+        let poller = Poller::new().unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        poller.add(&listener, 42, true, false).unwrap();
+        assert!(
+            poller.wait(0).unwrap().is_empty(),
+            "no readiness before a client connects"
+        );
+        let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let events = poller.wait(2000).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 42 && e.readable),
+            "pending accept surfaces as read-readiness"
+        );
+        poller.remove(&listener, 42).unwrap();
+        let _ = TcpStream::connect(listener.local_addr().unwrap());
+        assert!(
+            poller.wait(10).unwrap().iter().all(|e| e.token != 42),
+            "deregistered fd reports nothing"
+        );
+    }
+}

@@ -1,0 +1,530 @@
+//! Frontend e2e: the epoll reactor, broadcast fan-out, and connection-path
+//! behavior — all over real TCP against a sim-backend pool, **no XLA
+//! runtime required**.
+//!
+//! Covers the v2.4 wire surface end to end: typed `line_too_long` and
+//! `max_conns` errors, per-scraper metrics rate baselines, `watch` fan-out
+//! sharing one upstream generation, the slow-reader buffer policy firing
+//! without stalling decode lanes, worker death under a pile of idle
+//! connections, and the flat-thread-count contract (threads are
+//! O(reactor + workers), not O(connections)).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cq::coordinator::{FaultPlan, Request, ServeConfig, ServePool, SimSpec};
+use cq::metrics::export::MetricsSnapshot;
+use cq::server::{
+    client_request_line, client_stream, serve_tcp, serve_tcp_cfg, BufferPolicy, OverflowPolicy,
+    ServerConfig, StopSignal,
+};
+use cq::util::json::Json;
+
+fn sim_cfg(plan: &Arc<FaultPlan>) -> ServeConfig {
+    ServeConfig {
+        model: "sim".into(),
+        cq: None,
+        batch: 4,
+        cache_budget: None,
+        codebook_path: None,
+        params_path: "/nonexistent/sim-has-no-params.bin".into(),
+        kernel: ServeConfig::default_kernel(),
+        block_tokens: 4,
+        prefix_sharing: true,
+        sim: Some(SimSpec::tiny()),
+        faults: Some(plan.clone()),
+        worker_index: 0,
+        session_cap: ServeConfig::default_session_cap(),
+        session_ttl: None,
+        prefill_chunk: ServeConfig::default_prefill_chunk(),
+        ttft_slo_chunks: None,
+        trace_ring: ServeConfig::default_trace_ring(),
+        encode_threads: ServeConfig::default_encode_threads(),
+        codec: None,
+        policies: Vec::new(),
+    }
+}
+
+/// One admin round-trip on a fresh connection; panics on a non-`ok` reply.
+fn admin(addr: &str, line: &str) -> Json {
+    let resp = client_request_line(addr, line).expect("admin roundtrip");
+    assert_eq!(
+        resp.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "{}",
+        resp.dump()
+    );
+    resp
+}
+
+/// Scrape `{"op":"metrics"}` and parse the frozen snapshot back.
+fn scrape(addr: &str) -> MetricsSnapshot {
+    let m = admin(addr, r#"{"op": "metrics"}"#);
+    MetricsSnapshot::from_json(m.get("snapshot").expect("snapshot"))
+        .expect("snapshot parses back into a MetricsSnapshot")
+}
+
+/// A raw NDJSON connection: write half + buffered read half on one socket.
+struct Wire {
+    tx: TcpStream,
+    rx: BufReader<TcpStream>,
+}
+
+impl Wire {
+    fn connect(addr: &str) -> Wire {
+        let tx = TcpStream::connect(addr).expect("connect");
+        tx.set_read_timeout(Some(Duration::from_secs(30))).expect("read timeout");
+        let rx = BufReader::new(tx.try_clone().expect("clone"));
+        Wire { tx, rx }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.tx, "{line}").expect("send");
+    }
+
+    /// Read one NDJSON frame; panics on EOF or a read timeout.
+    fn frame(&mut self) -> Json {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self.rx.read_line(&mut line).expect("read frame");
+            assert!(n > 0, "peer closed before a frame arrived");
+            if !line.trim().is_empty() {
+                return Json::parse(line.trim()).expect("frame parses");
+            }
+        }
+    }
+
+    /// Read frames until a terminal (`done`/`failed`) one; returns all of
+    /// them, terminal last.
+    fn drain_stream(&mut self) -> Vec<Json> {
+        let mut frames = Vec::new();
+        loop {
+            let f = self.frame();
+            let ev = f.str_or("event", "");
+            frames.push(f);
+            if ev == "done" || ev == "failed" {
+                return frames;
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn thread_count() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").expect("/proc/self/status");
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("Threads: line")
+}
+
+/// Satellite 1 — a request line over `--max-line-bytes` gets one typed
+/// `line_too_long` error, and the connection resyncs at the next newline
+/// instead of dying (or worse, parsing the tail as a fresh request).
+#[test]
+fn oversized_request_line_gets_typed_error_and_connection_survives() {
+    let plan = FaultPlan::new();
+    let pool = ServePool::start(sim_cfg(&plan), 1);
+    let stop = StopSignal::new();
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:17941";
+    let srv = ServerConfig { max_line_bytes: 256, ..ServerConfig::default() };
+
+    std::thread::scope(|scope| {
+        let p = &pool;
+        let server = scope.spawn(move || serve_tcp_cfg(p, addr, stop2, srv).unwrap());
+        std::thread::sleep(Duration::from_millis(300)); // wait for bind
+
+        let mut w = Wire::connect(addr);
+        w.send(&"x".repeat(1000));
+        let err = w.frame();
+        assert_eq!(err.str_or("code", ""), "line_too_long", "{}", err.dump());
+        assert!(err.str_or("error", "").contains("256"), "{}", err.dump());
+
+        // The oversized line was discarded through its newline; the same
+        // connection keeps answering.
+        w.send(r#"{"op": "health"}"#);
+        let h = w.frame();
+        assert_eq!(h.get("ok").and_then(Json::as_bool), Some(true), "{}", h.dump());
+
+        // And a well-formed inference request still flows on this conn.
+        w.send(r#"{"prompt": "still alive", "max_tokens": 3, "stream": true}"#);
+        let frames = w.drain_stream();
+        assert_eq!(frames.last().unwrap().str_or("event", ""), "done");
+
+        stop.raise();
+        server.join().unwrap();
+    });
+    pool.shutdown().unwrap();
+}
+
+/// Satellite 3 — two interleaved scrapers with distinct `"scraper"` tags
+/// keep independent rate baselines: each scraper's first scrape is
+/// baseline-less (null rates) even when another scraper already scraped,
+/// and each derives rates over its *own* window afterwards.
+#[test]
+fn interleaved_scrapers_keep_independent_rate_baselines() {
+    let plan = FaultPlan::new();
+    let pool = ServePool::start(sim_cfg(&plan), 2);
+    let stop = StopSignal::new();
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:17942";
+
+    std::thread::scope(|scope| {
+        let p = &pool;
+        let server = scope.spawn(move || serve_tcp(p, addr, stop2).unwrap());
+        std::thread::sleep(Duration::from_millis(300));
+
+        for id in 1..=4u64 {
+            pool.submit(Request::greedy(id, "scrape load", 4)).unwrap();
+        }
+        let a1 = admin(addr, r#"{"op": "metrics", "scraper": "a"}"#);
+        assert!(
+            matches!(a1.get("rates"), None | Some(Json::Null)),
+            "a's first scrape has no baseline: {}",
+            a1.dump()
+        );
+
+        std::thread::sleep(Duration::from_millis(40));
+        for id in 5..=6u64 {
+            pool.submit(Request::greedy(id, "scrape load", 4)).unwrap();
+        }
+        // b's FIRST scrape lands after a's: with a single shared baseline
+        // slot it would inherit a's snapshot and report rates here.
+        let b1 = admin(addr, r#"{"op": "metrics", "scraper": "b"}"#);
+        assert!(
+            matches!(b1.get("rates"), None | Some(Json::Null)),
+            "b's first scrape has no baseline of its own: {}",
+            b1.dump()
+        );
+
+        std::thread::sleep(Duration::from_millis(40));
+        for id in 7..=8u64 {
+            pool.submit(Request::greedy(id, "scrape load", 4)).unwrap();
+        }
+        let a2 = admin(addr, r#"{"op": "metrics", "scraper": "a"}"#);
+        let ra = a2.get("rates").expect("a's second scrape derives rates");
+        assert!(ra.num_or("window_s", -1.0) > 0.0, "{}", a2.dump());
+        assert!(ra.num_or("tok_per_s", -1.0) > 0.0, "{}", a2.dump());
+
+        std::thread::sleep(Duration::from_millis(40));
+        for id in 9..=10u64 {
+            pool.submit(Request::greedy(id, "scrape load", 4)).unwrap();
+        }
+        let b2 = admin(addr, r#"{"op": "metrics", "scraper": "b"}"#);
+        let rb = b2.get("rates").expect("b's second scrape derives rates");
+        assert!(rb.num_or("window_s", -1.0) > 0.0, "{}", b2.dump());
+        assert!(rb.num_or("tok_per_s", -1.0) > 0.0, "{}", b2.dump());
+
+        // An untagged scraper is a third independent slot, not b's.
+        let u1 = admin(addr, r#"{"op": "metrics"}"#);
+        assert!(
+            matches!(u1.get("rates"), None | Some(Json::Null)),
+            "untagged scraper starts from its own baseline: {}",
+            u1.dump()
+        );
+
+        stop.raise();
+        server.join().unwrap();
+    });
+    pool.shutdown().unwrap();
+}
+
+/// Tentpole — broadcast fan-out: a `watch` subscriber attaches to a live
+/// generation and both connections receive the identical frame stream from
+/// one upstream, terminal included; the fan-out gauge sees both.
+#[test]
+fn watchers_share_one_generation_and_all_get_the_terminal() {
+    let plan = FaultPlan::new();
+    let pool = ServePool::start(sim_cfg(&plan), 1);
+    let stop = StopSignal::new();
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:17943";
+
+    std::thread::scope(|scope| {
+        let p = &pool;
+        let server = scope.spawn(move || serve_tcp(p, addr, stop2).unwrap());
+        std::thread::sleep(Duration::from_millis(300));
+
+        // Freeze the only worker so the generation is provably still live
+        // while the watcher attaches.
+        plan.hold_worker(0);
+        plan.await_paused(0);
+
+        let mut a = Wire::connect(addr);
+        a.send(r#"{"prompt": "watch me", "max_tokens": 4, "stream": true}"#);
+
+        // Request ids are assigned per server starting at 1, so the first
+        // request is id 1.  Retry until the reactor has processed A's line.
+        let mut b = Wire::connect(addr);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            b.send(r#"{"op": "watch", "id": 1}"#);
+            let r = b.frame();
+            if r.get("ok").and_then(Json::as_bool) == Some(true) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "watch never attached: {}", r.dump());
+            std::thread::sleep(Duration::from_millis(20));
+        }
+
+        // Both subscribers are on the fan-out gauge.
+        assert_eq!(scrape(addr).pool_scalar("fanout_subscribers"), 2);
+
+        plan.release_worker(0);
+        let a_frames = a.drain_stream();
+        let b_frames = b.drain_stream();
+        for frames in [&a_frames, &b_frames] {
+            let done = frames.last().unwrap();
+            assert_eq!(done.str_or("event", ""), "done", "{}", done.dump());
+            assert_eq!(done.num_or("id", -1.0) as u64, 1);
+            let toks = frames.iter().filter(|f| f.str_or("event", "") == "token").count();
+            assert_eq!(toks, 4, "every token frame reached this subscriber");
+        }
+        assert_eq!(
+            a_frames.len(),
+            b_frames.len(),
+            "the watcher saw the identical stream, not a resynthesized one"
+        );
+
+        stop.raise();
+        server.join().unwrap();
+    });
+    pool.shutdown().unwrap();
+}
+
+/// Satellite 4 (chaos half) — kill the only worker mid-decode while 100
+/// idle connections sit registered: the reactor survives, the in-flight
+/// stream gets its terminal retryable `failed` frame, admin ops still
+/// answer, and the idle pile stays connected.  Also pins the tentpole's
+/// thread contract: 100 extra connections add ~zero threads.
+#[test]
+fn reactor_survives_worker_death_under_idle_connections() {
+    let plan = FaultPlan::new();
+    let pool = ServePool::start(sim_cfg(&plan), 1);
+    let stop = StopSignal::new();
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:17944";
+
+    std::thread::scope(|scope| {
+        let p = &pool;
+        let server = scope.spawn(move || serve_tcp(p, addr, stop2).unwrap());
+        std::thread::sleep(Duration::from_millis(300));
+
+        #[cfg(target_os = "linux")]
+        let threads_before = thread_count();
+
+        // 100 idle connections: accepted, registered, never written to.
+        let idle: Vec<TcpStream> =
+            (0..100).map(|_| TcpStream::connect(addr).expect("idle connect")).collect();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while scrape(addr).pool_scalar("conns_open") < 101 {
+            assert!(Instant::now() < deadline, "reactor never admitted the idle pile");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+
+        // Thread-per-connection would add >= 100 here.  Allow generous
+        // slack for concurrent tests in this process spawning pools.
+        #[cfg(target_os = "linux")]
+        {
+            let grown = thread_count().saturating_sub(threads_before);
+            assert!(grown < 32, "thread count grew by {grown} for 100 idle connections");
+        }
+
+        // Kill the only worker just before its 4th decode step, mid-stream.
+        plan.kill_worker_at_step(0, 3);
+        let mut a = Wire::connect(addr);
+        a.send(r#"{"prompt": "chaos stream", "max_tokens": 64, "stream": true}"#);
+        let frames = a.drain_stream();
+        let term = frames.last().unwrap();
+        assert_eq!(term.str_or("event", ""), "failed", "{}", term.dump());
+        assert!(term.str_or("error", "").contains("serve worker died"), "{}", term.dump());
+        assert_eq!(term.get("retryable").and_then(Json::as_bool), Some(true));
+        let toks = frames.iter().filter(|f| f.str_or("event", "") == "token").count();
+        assert_eq!(toks, 4, "prefill token + exactly 3 decode steps before the kill");
+
+        // The reactor outlives the worker: admin ops answer, idle pile is
+        // still registered.
+        let h = admin(addr, r#"{"op": "health"}"#);
+        assert_eq!(h.num_or("live_workers", -1.0) as i64, 0, "{}", h.dump());
+        assert!(scrape(addr).pool_scalar("conns_open") >= 101);
+
+        drop(idle);
+        stop.raise();
+        server.join().unwrap();
+    });
+    assert!(pool.shutdown().is_err(), "panicked worker surfaces at shutdown");
+}
+
+/// Tentpole — slow-reader handling: a watcher that never reads trips the
+/// `disconnect` buffer policy (bounded queue, typed goodbye, close) while a
+/// concurrent fast stream completes untouched.  No worker or reactor
+/// thread ever blocks on the dead socket.
+#[test]
+fn slow_reader_hits_disconnect_policy_without_stalling_decode() {
+    let plan = FaultPlan::new();
+    let mut cfg = sim_cfg(&plan);
+    // Big lanes: the stream must outrun kernel socket buffering (hundreds
+    // of KB) so the userspace outbound queue genuinely fills.
+    cfg.sim = Some(SimSpec { tmax: 60_000, max_prompt: 48, ..SimSpec::tiny() });
+    let pool = ServePool::start(cfg, 1);
+    let stop = StopSignal::new();
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:17945";
+    let srv = ServerConfig {
+        buffer: BufferPolicy { max_bytes: 8 * 1024, on_full: OverflowPolicy::Disconnect },
+        ..ServerConfig::default()
+    };
+
+    std::thread::scope(|scope| {
+        let p = &pool;
+        let server = scope.spawn(move || serve_tcp_cfg(p, addr, stop2, srv).unwrap());
+        std::thread::sleep(Duration::from_millis(300));
+
+        // The slow reader: starts a huge stream, then never reads.
+        let mut slow = TcpStream::connect(addr).expect("connect");
+        let line = r#"{"prompt": "slow", "max_tokens": 50000, "stream": true}"#;
+        writeln!(slow, "{line}").unwrap();
+
+        // A concurrent fast client completes while the slow stream jams:
+        // the buffer policy, not a blocked thread, absorbs the lag.
+        std::thread::sleep(Duration::from_millis(100));
+        let done = client_stream(
+            addr,
+            r#"{"prompt": "fast", "max_tokens": 6, "stream": true}"#,
+            |_| {},
+        )
+        .expect("fast stream");
+        assert_eq!(done.str_or("event", ""), "done", "{}", done.dump());
+
+        // The reactor kills the slow conn once its queue tops max_bytes.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while pool.metrics.conns_dropped_slow.get() == 0 {
+            assert!(Instant::now() < deadline, "slow reader was never disconnected");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+
+        // The server-side close reaches the client once it finally reads:
+        // buffered frames, then EOF (or a reset, if data was in flight).
+        slow.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut sink = [0u8; 64 * 1024];
+        loop {
+            match slow.read(&mut sink) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(_) => break,
+            }
+        }
+
+        stop.raise();
+        server.join().unwrap();
+    });
+    pool.shutdown().unwrap();
+}
+
+/// Satellite (admission control) — the `--max-conns` cap rejects the
+/// excess connection with a typed `max_conns` error and closes it; closing
+/// an admitted connection frees its slot.
+#[test]
+fn max_conns_rejection_is_typed_and_slots_free_on_close() {
+    let plan = FaultPlan::new();
+    let pool = ServePool::start(sim_cfg(&plan), 1);
+    let stop = StopSignal::new();
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:17946";
+    let srv = ServerConfig { max_conns: 2, ..ServerConfig::default() };
+
+    std::thread::scope(|scope| {
+        let p = &pool;
+        let server = scope.spawn(move || serve_tcp_cfg(p, addr, stop2, srv).unwrap());
+        std::thread::sleep(Duration::from_millis(300));
+
+        let c1 = Wire::connect(addr);
+        let mut c2 = Wire::connect(addr);
+        std::thread::sleep(Duration::from_millis(100)); // both admitted
+
+        let mut c3 = Wire::connect(addr);
+        let rej = c3.frame();
+        assert_eq!(rej.str_or("code", ""), "max_conns", "{}", rej.dump());
+        let mut rest = String::new();
+        match c3.rx.read_to_string(&mut rest) {
+            Ok(0) => {}
+            Ok(n) => panic!("unexpected {n} bytes after rejection: {rest:?}"),
+            Err(_) => {} // a reset is also a close
+        }
+
+        // Freeing a slot re-opens the door.
+        drop(c1);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if let Ok(h) = client_request_line(addr, r#"{"op": "health"}"#) {
+                if h.get("ok").and_then(Json::as_bool) == Some(true) {
+                    break;
+                }
+            }
+            assert!(Instant::now() < deadline, "slot never freed after c1 closed");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+
+        // c2 was admitted normally all along.
+        c2.send(r#"{"op": "health"}"#);
+        assert_eq!(c2.frame().get("ok").and_then(Json::as_bool), Some(true));
+
+        stop.raise();
+        server.join().unwrap();
+    });
+    pool.shutdown().unwrap();
+}
+
+/// Tentpole — one shared event channel multiplexes concurrent streams:
+/// every frame routes to the connection that owns its id, nothing bleeds
+/// across, both terminals arrive.
+#[test]
+fn one_event_channel_multiplexes_concurrent_streams_by_id() {
+    let plan = FaultPlan::new();
+    let pool = ServePool::start(sim_cfg(&plan), 2);
+    let stop = StopSignal::new();
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:17947";
+
+    std::thread::scope(|scope| {
+        let p = &pool;
+        let server = scope.spawn(move || serve_tcp(p, addr, stop2).unwrap());
+        std::thread::sleep(Duration::from_millis(300));
+
+        let run = |max_tokens: usize| {
+            let line =
+                format!(r#"{{"prompt": "mux", "max_tokens": {max_tokens}, "stream": true}}"#);
+            move || {
+                let mut frames = Vec::new();
+                let done = client_stream(addr, &line, |f| frames.push(f.clone()))
+                    .expect("multiplexed stream");
+                assert_eq!(done.str_or("event", ""), "done", "{}", done.dump());
+                frames
+            }
+        };
+        let ta = scope.spawn(run(6));
+        let tb = scope.spawn(run(3));
+        let fa = ta.join().unwrap();
+        let fb = tb.join().unwrap();
+
+        let id_of = |frames: &[Json]| {
+            let ids: Vec<u64> = frames.iter().map(|f| f.num_or("id", -1.0) as u64).collect();
+            assert!(ids.windows(2).all(|w| w[0] == w[1]), "mixed ids on one conn: {ids:?}");
+            ids[0]
+        };
+        assert_ne!(id_of(&fa), id_of(&fb), "each request got its own id");
+        let toks =
+            |frames: &[Json]| frames.iter().filter(|f| f.str_or("event", "") == "token").count();
+        assert_eq!(toks(&fa), 6);
+        assert_eq!(toks(&fb), 3);
+
+        stop.raise();
+        server.join().unwrap();
+    });
+    pool.shutdown().unwrap();
+}
